@@ -1,0 +1,56 @@
+//! Single-job anatomy: run one simulated MapReduce job and print the full
+//! trace — phase breakdown, counters, locality, waves — for the default and
+//! a hand-tuned configuration side by side. Demonstrates the substrate the
+//! tuners optimize against.
+//!
+//! ```bash
+//! cargo run --release --example cluster_trace [-- terasort]
+//! ```
+
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::ParameterSpace;
+use hadoop_spsa::sim::{simulate, SimOptions};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::util::units::fmt_bytes;
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "terasort".into());
+    let bench = Benchmark::from_name(&name).unwrap_or(Benchmark::Terasort);
+    let space = ParameterSpace::v1();
+    let cluster = ClusterSpec::paper_cluster();
+
+    let mut rng = Rng::seeded(1000);
+    let w = bench.paper_profile(&mut rng);
+    println!(
+        "== {bench} on the simulated 25-node cluster ==\n\
+         input {}  ({} map tasks of {} each)\n",
+        fmt_bytes(w.input_bytes),
+        w.input_bytes.div_ceil(128 << 20),
+        fmt_bytes(128 << 20),
+    );
+
+    let opts = SimOptions { seed: 7, noise: true };
+
+    println!("--- default configuration ---");
+    let r = simulate(&cluster, &space.default_config(), &w, &opts);
+    print!("{}", r.report());
+
+    println!("\n--- hand-tuned configuration ---");
+    let mut tuned = space.default_config();
+    tuned.io_sort_mb = 512;
+    tuned.spill_percent = 0.6;
+    tuned.sort_record_percent = 0.15;
+    tuned.sort_factor = 64;
+    tuned.reduce_tasks = 48;
+    tuned.shuffle_input_buffer_percent = 0.8;
+    tuned.compress_map_output = true;
+    let r2 = simulate(&cluster, &tuned, &w, &opts);
+    print!("{}", r2.report());
+
+    println!(
+        "\nspeedup: {:.1}× ({:.0}% decrease)",
+        r.exec_time_s / r2.exec_time_s,
+        100.0 * (r.exec_time_s - r2.exec_time_s) / r.exec_time_s
+    );
+}

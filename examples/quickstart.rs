@@ -1,0 +1,66 @@
+//! Quickstart: tune one benchmark with SPSA and print before/after.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! What happens:
+//! 1. The Bigram benchmark is *really executed* on a sampled synthetic
+//!    corpus to measure its data-flow profile.
+//! 2. SPSA (paper Algorithm 1) tunes the 11 Hadoop v1 parameters against
+//!    the simulated 25-node cluster, two observations per iteration.
+//! 3. The tuned configuration is evaluated and printed next to the
+//!    defaults.
+
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::ParameterSpace;
+use hadoop_spsa::coordinator::evaluate_theta;
+use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::util::table::Table;
+use hadoop_spsa::util::units::{fmt_bytes, fmt_secs};
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    let bench = Benchmark::Bigram;
+    let space = ParameterSpace::v1();
+    let cluster = ClusterSpec::paper_cluster();
+
+    // 1. profile by running the real job on sampled data
+    let mut rng = Rng::seeded(1000);
+    let w = bench.paper_profile(&mut rng);
+    println!(
+        "profiled {bench}: {} input, map selectivity {:.2} bytes/byte, \
+         combiner keeps {:.0}% of records\n",
+        fmt_bytes(w.input_bytes),
+        w.map_selectivity_bytes,
+        100.0 * w.combiner_reduction
+    );
+
+    // 2. tune with SPSA from the default configuration
+    let mut objective = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 42);
+    let spsa = Spsa::for_space(SpsaConfig::default(), &space);
+    let res = spsa.run(&mut objective, space.default_theta());
+    println!(
+        "SPSA: {} iterations, {} live observations, stop: {:?}",
+        res.iterations, res.observations, res.stop
+    );
+
+    // 3. evaluate tuned vs default
+    let (f_default, _) = evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 7);
+    let (f_tuned, sd) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, 7);
+    println!(
+        "\ndefault: {}   tuned: {} (±{:.0}s)   decrease: {:.0}%\n",
+        fmt_secs(f_default),
+        fmt_secs(f_tuned),
+        sd,
+        100.0 * (f_default - f_tuned) / f_default
+    );
+
+    let vals = space.to_hadoop_values(&res.best_theta);
+    let mut t = Table::new("tuned parameters").header(vec!["parameter", "default", "tuned"]);
+    for (i, p) in space.params().iter().enumerate() {
+        t.row(vec![p.name.to_string(), p.default_value().display(), vals[i].display()]);
+    }
+    print!("{}", t.to_ascii());
+}

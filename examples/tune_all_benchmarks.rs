@@ -1,0 +1,50 @@
+//! End-to-end driver (DESIGN.md deliverable): regenerate *every* paper
+//! table and figure on the full pipeline — real benchmark executions feed
+//! workload profiles, SPSA and all baselines tune against the simulated
+//! 25-node cluster, results land in `results/` as markdown + CSV, and the
+//! headline numbers are printed next to the paper's.
+//!
+//! ```bash
+//! cargo run --release --example tune_all_benchmarks            # full
+//! cargo run --release --example tune_all_benchmarks -- --quick # smoke
+//! ```
+//!
+//! This is the run recorded in EXPERIMENTS.md.
+
+use hadoop_spsa::config::HadoopVersion;
+use hadoop_spsa::coordinator::ResultsDir;
+use hadoop_spsa::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let out = ResultsDir::default_dir().expect("cannot create results/");
+    let opts = ExpOptions { quick, out: Some(out) };
+    let t0 = std::time::Instant::now();
+
+    println!("=== Table 1: tuned parameter values ===\n");
+    println!("{}", experiments::table1::run(&opts));
+
+    println!("=== Fig 6: SPSA convergence (Hadoop v1) ===\n");
+    println!("{}", experiments::convergence::run(HadoopVersion::V1, &opts));
+
+    println!("=== Fig 7: SPSA convergence (Hadoop v2) ===\n");
+    println!("{}", experiments::convergence::run(HadoopVersion::V2, &opts));
+
+    println!("=== Fig 8: Default vs Starfish vs SPSA (Hadoop v1) ===\n");
+    println!("{}", experiments::comparison::run(HadoopVersion::V1, &opts));
+
+    println!("=== Fig 9: Default vs SPSA vs PPABS (Hadoop v2) ===\n");
+    println!("{}", experiments::comparison::run(HadoopVersion::V2, &opts));
+
+    println!("=== Table 2: method comparison + overheads ===\n");
+    println!("{}", experiments::table2::run(&opts));
+
+    println!("=== Headline ===\n");
+    let (_, report) = experiments::headline::compute(&opts);
+    println!("{report}");
+
+    println!(
+        "\nall experiments regenerated in {:.1?}; tables under results/",
+        t0.elapsed()
+    );
+}

@@ -1,0 +1,94 @@
+//! The AOT-compiled JAX/Pallas cost model on the rust hot path:
+//!
+//! 1. load `artifacts/*.hlo.txt` through PJRT (`make artifacts` first);
+//! 2. cross-check the artifact against the independent rust what-if model;
+//! 3. run a Starfish-style RRS optimization with the *artifact* as the
+//!    what-if engine;
+//! 4. run surrogate-SPSA entirely inside the compiled graph
+//!    (`spsa_step.hlo.txt`) and deploy its answer on the simulator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example whatif_engine
+//! ```
+
+use hadoop_spsa::baselines::{rrs, CostEvaluator, RrsConfig};
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
+use hadoop_spsa::runtime::{ArtifactSpsaStep, ArtifactWhatIf, Runtime, ARTIFACT_K};
+use hadoop_spsa::sim::{simulate, SimOptions};
+use hadoop_spsa::tuner::Spsa;
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::util::units::fmt_secs;
+use hadoop_spsa::whatif::{cost_for_theta, ClusterFeatures};
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() -> anyhow::Result<()> {
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::default_dir()?;
+    println!("PJRT platform: {}\n", rt.platform());
+
+    let space = ParameterSpace::v1();
+    let cluster_spec = ClusterSpec::paper_cluster();
+    let features = ClusterFeatures::from_spec(&cluster_spec, HadoopVersion::V1);
+    let mut rng = Rng::seeded(5);
+    let w = Benchmark::Terasort.profile_scaled(512 << 10, 30 << 30, &mut rng);
+
+    // --- 2. artifact vs rust cross-check -----------------------------------
+    let mut artifact = ArtifactWhatIf::new(&rt, space.clone(), &w, &features)?;
+    let thetas: Vec<Vec<f64>> = (0..512).map(|_| space.sample_uniform(&mut rng)).collect();
+    let got = artifact.eval_batch(&thetas);
+    let mut worst = 0.0f64;
+    for (t, a) in thetas.iter().zip(&got) {
+        let r = cost_for_theta(&space, t, &w, &features);
+        worst = worst.max(((a - r) / r.max(1.0)).abs());
+    }
+    println!("artifact vs rust what-if: 512 random configs, max rel err {worst:.2e}");
+
+    // --- 3. Starfish CBO with the artifact as what-if engine ----------------
+    let res = rrs(&mut artifact, &RrsConfig::default());
+    let sim_opts = SimOptions { seed: 3, noise: false };
+    let f_default =
+        simulate(&cluster_spec, &space.default_config(), &w, &sim_opts).exec_time_s;
+    let f_rrs =
+        simulate(&cluster_spec, &space.materialize(&res.best_theta), &w, &sim_opts).exec_time_s;
+    println!(
+        "RRS over artifact: {} model evals → config scores {} on the simulator \
+         (default {})",
+        res.evals,
+        fmt_secs(f_rrs),
+        fmt_secs(f_default),
+    );
+
+    // --- 4. surrogate SPSA inside the compiled graph ------------------------
+    let stepper = ArtifactSpsaStep::new(&rt, &space, &w, &features)?;
+    let c_scales = Spsa::scales_for(&space);
+    let mut theta = space.default_theta();
+    let mut f_first = None;
+    let mut f_last = 0.0;
+    for _ in 0..60 {
+        let signs: Vec<Vec<f64>> = (0..ARTIFACT_K)
+            .map(|_| (0..space.dim()).map(|_| rng.rademacher()).collect())
+            .collect();
+        let out = stepper.step(&theta, &signs, &c_scales, 0.01, 0.15)?;
+        theta = out.theta_next;
+        f_first.get_or_insert(out.f_theta);
+        f_last = out.f_theta;
+    }
+    let f_sim =
+        simulate(&cluster_spec, &space.materialize(&theta), &w, &sim_opts).exec_time_s;
+    println!(
+        "surrogate SPSA (60 compiled steps, K={ARTIFACT_K}): model {} → {}; deployed \
+         config scores {} on the simulator",
+        fmt_secs(f_first.unwrap()),
+        fmt_secs(f_last),
+        fmt_secs(f_sim),
+    );
+    println!(
+        "\n(the gap between model score and simulator score IS the paper's §3.1 \
+         argument for tuning on the real system)"
+    );
+    Ok(())
+}

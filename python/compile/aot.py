@@ -1,0 +1,79 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Run via ``make artifacts``:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+    artifacts/whatif_batch.hlo.txt  — [256,11]×[11]×[10] → ([256],)
+    artifacts/spsa_step.hlo.txt     — surrogate-SPSA iteration → ([23],)
+    artifacts/meta.json             — shape/ABI metadata for the rust loader
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower both exported computations; returns {name: hlo_text}."""
+    out = {}
+    out["whatif_batch"] = to_hlo_text(
+        jax.jit(model.whatif_batch).lower(*model.example_args_whatif())
+    )
+    out["spsa_step"] = to_hlo_text(
+        jax.jit(model.spsa_step).lower(*model.example_args_spsa())
+    )
+    return out
+
+
+def metadata() -> dict:
+    return {
+        "batch": model.BATCH,
+        "n_params": model.N,
+        "n_perturbations": model.N_PERTURBATIONS,
+        "n_workload_features": len(model.WORKLOAD_FEATURES),
+        "n_cluster_features": 10,
+        "workload_features": list(model.WORKLOAD_FEATURES),
+        "spsa_step_output_len": 2 * model.N + 1,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(metadata(), f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

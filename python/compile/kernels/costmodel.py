@@ -1,0 +1,195 @@
+"""L1 — Pallas kernel for the batched MapReduce cost model.
+
+The compute hot-spot of the what-if engine: evaluate the analytic cost
+model for a tile of candidate configurations at once. The kernel is tiled
+over the batch dimension with `BlockSpec((TILE, N_PARAMS))`; workload and
+cluster feature vectors are broadcast to every tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the model is elementwise
+over configurations — on a real TPU each (TILE, 11) tile streams
+HBM→VMEM and the VPU evaluates all phases in registers; there is no
+matmul so the MXU is idle by design. VMEM footprint per tile:
+TILE×(11+1)×4 B ≈ 12 KiB at TILE=256 — far under the ~16 MiB budget, so
+the schedule is bandwidth-bound and TILE can grow to 64k if needed.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Batch tile evaluated per kernel invocation.
+TILE = 256
+
+
+def _cost_kernel(params_ref, workload_ref, cluster_ref, out_ref):
+    """Kernel body: one (TILE, 11) tile of parameter rows → (TILE,) times.
+
+    Independent implementation of the model (same constants as `ref`, but
+    written kernel-style with boolean masks instead of sign arithmetic) so
+    the pytest ref-vs-kernel comparison is meaningful.
+    """
+    p = params_ref[...]
+    w = workload_ref[...]
+    c = cluster_ref[...]
+    f32 = jnp.float32
+
+    # parameter row
+    io_sort_mb = jnp.maximum(p[:, 0], 1.0)
+    spill_pct = jnp.clip(p[:, 1], 0.01, 0.99)
+    sort_factor = jnp.maximum(p[:, 2], 2.0)
+    shuf_in_pct = jnp.clip(p[:, 3], 0.01, 0.99)
+    shuf_merge_pct = jnp.clip(p[:, 4], 0.01, 0.99)
+    inmem_thresh = jnp.maximum(p[:, 5], 2.0)
+    red_in_pct = jnp.clip(p[:, 6], 0.0, 0.9)
+    n_red = jnp.maximum(p[:, 7], 1.0)
+
+    w_input, w_avg_in_rec, w_sel_b, w_sel_r = w[0], w[1], w[2], w[3]
+    w_avg_map_rec, w_comb_red, w_red_sel, w_skew = w[4], w[5], w[6], w[7]
+    w_cratio, w_map_ops, w_red_ops = w[8], w[9], w[10]
+    c_workers, c_mspn, c_rspn, c_disk, c_net = c[0], c[1], c[2], c[3], c[4]
+    c_cpu, c_block, c_heap, c_repl, is_v1 = c[5], c[6], c[7], c[8], c[9]
+    v1 = is_v1 > 0.5
+
+    rec_pct = jnp.where(v1, jnp.clip(p[:, 8], 0.01, 0.5), 0.05)
+    compress_map = jnp.where(v1, (p[:, 9] > 0.5).astype(f32), 0.0)
+    out_compress = jnp.where(v1, (p[:, 10] > 0.5).astype(f32), 0.0)
+    slowstart = jnp.where(v1, 0.05, jnp.clip(p[:, 8], 0.0, 1.0))
+    jvm_reuse = jnp.where(v1, 1.0, jnp.maximum(p[:, 9], 1.0))
+    job_maps = jnp.where(v1, 2.0, jnp.maximum(p[:, 10], 2.0))
+
+    has_comb = (w_comb_red < 0.999).astype(f32)
+
+    # layout
+    n_maps_nat = jnp.maximum(w_input / c_block, 1.0)
+    n_maps = jnp.where(v1, n_maps_nat, jnp.maximum(n_maps_nat, job_maps))
+    split = w_input / n_maps
+    map_waves = jnp.maximum(n_maps / (c_workers * c_mspn), 1.0)
+    red_waves = jnp.maximum(n_red / (c_workers * c_rspn), 1.0)
+    # blind spot 1: uncontended bandwidth (see ref.py / rust model)
+    mdisk = c_disk
+    rdisk = c_disk
+    rnet = c_net
+    cpu = c_cpu
+
+    # map task
+    read = split / mdisk
+    recs = split / w_avg_in_rec
+    map_cpu = recs * w_map_ops / cpu
+    out_b = split * w_sel_b
+    out_r = recs * w_sel_r
+
+    buf = io_sort_mb * f32(1 << 20)
+    data_frac = jnp.where(v1, 1.0 - rec_pct, 0.95)
+    data_cap = jnp.maximum(buf * data_frac * spill_pct, 1.0)
+    rec_cap_total = jnp.where(v1, buf * rec_pct / 16.0, buf / 16.0)
+    rec_cap = jnp.maximum(rec_cap_total * spill_pct, 1.0)
+    n_spills = jnp.maximum(jnp.maximum(out_b / data_cap, out_r / rec_cap), 1.0)
+
+    # blind spot 2: constant combiner ratio
+    r_eff = 1.0 - has_comb * (1.0 - w_comb_red)
+    sort_cpu = out_r * jnp.log2(jnp.maximum(out_r / n_spills, 2.0)) \
+        * ref.SORT_OPS_PER_CMP / cpu
+    comb_cpu = has_comb * out_r * ref.COMBINE_OPS_PER_REC / cpu
+    surv_b = out_b * r_eff
+    disk_b = jnp.where(compress_map > 0.5, surv_b * w_cratio, surv_b)
+    comp_cpu = compress_map * surv_b * ref.COMPRESS_OPS_PER_BYTE / cpu
+    spill_io = disk_b / mdisk + n_spills * ref.SPILL_FILE_S
+    spill_side = sort_cpu + comb_cpu + comp_cpu + spill_io
+    # blind spot 5: perfect map/spill overlap
+    phase = jnp.maximum(map_cpu, spill_side)
+
+    merge_gate = jnp.clip((n_spills - 1.0) / 0.5, 0.0, 1.0)
+    passes = jnp.maximum(jnp.log(n_spills) / jnp.log(sort_factor), 1.0)
+    streams = jnp.minimum(sort_factor, n_spills)
+    # blind spot 4: seek-free merges
+    merge = merge_gate * (passes * disk_b * 2.0 / mdisk
+                          + passes * surv_b * ref.MERGE_OPS_PER_BYTE / cpu
+                          + (n_spills + passes * streams) * ref.FILE_OPEN_S)
+
+    setup = (ref.JVM_START_S + (jvm_reuse - 1.0) * ref.TASK_LAUNCH_S) / jvm_reuse
+    map_total = map_waves * (setup + read + phase + merge)
+
+    # reduce task
+    tot_raw = n_maps * surv_b
+    # blind spot 3: uniform partitions
+    _ = w_skew
+    hot_vol = tot_raw / n_red
+
+    wire = jnp.where(compress_map > 0.5, hot_vol * w_cratio, hot_vol)
+    fetch = wire / rnet + compress_map * wire * ref.DECOMPRESS_OPS_PER_BYTE / cpu
+
+    buffer = c_heap * shuf_in_pct
+    byte_trig = jnp.maximum(buffer * shuf_merge_pct, 1.0)
+    segs = n_maps
+    avg_seg = hot_vol / segs
+    fits = ((byte_trig >= hot_vol) & (inmem_thresh >= segs)
+            & (buffer >= hot_vol)).astype(f32)
+    segs_per_flush = jnp.minimum(
+        inmem_thresh, jnp.maximum(byte_trig / jnp.maximum(avg_seg, 1.0), 1.0))
+    n_flush = (1.0 - fits) * jnp.maximum(segs / segs_per_flush, 1.0)
+    retained = c_heap * red_in_pct
+    disk_bytes = (1.0 - fits) * jnp.maximum(hot_vol - retained, 0.0)
+
+    extra_passes = jnp.maximum(
+        jnp.log(jnp.maximum(n_flush, 1.0)) / jnp.log(sort_factor), 1.0) - 1.0
+    rstreams = jnp.minimum(sort_factor, jnp.maximum(n_flush, 1.0))
+    # blind spot 4 again: seek-free reduce-side merges
+    merge_r = jnp.clip(n_flush, 0.0, 1.0) * (
+        disk_bytes / rdisk
+        + n_flush * ref.SPILL_FILE_S
+        + hot_vol * ref.MERGE_OPS_PER_BYTE / cpu
+        + extra_passes * disk_bytes * 2.0 / rdisk
+        + (n_flush + extra_passes * rstreams) * ref.FILE_OPEN_S
+        + disk_bytes / rdisk)
+
+    red_recs = hot_vol / jnp.maximum(w_avg_map_rec, 1.0)
+    # blind spot 6: no memory-pressure penalty
+    red_cpu = red_recs * w_red_ops / cpu
+
+    out_raw = hot_vol * w_red_sel
+    out_b2 = jnp.where(out_compress > 0.5, out_raw * w_cratio, out_raw)
+    comp_cpu2 = out_compress * out_raw * ref.COMPRESS_OPS_PER_BYTE / cpu
+    write = jnp.maximum(out_b2 / rdisk, out_b2 * (c_repl - 1.0) / rnet) + comp_cpu2
+
+    red_task = setup + fetch + merge_r + red_cpu + write
+    credit = jnp.minimum((1.0 - slowstart) * map_total * ref.FETCH_OVERLAP_EFF,
+                         fetch * 0.5)
+
+    out_ref[...] = ref.JOB_OVERHEAD_S + map_total + red_waves * red_task - credit
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def cost_pallas(params, workload, cluster, tile=TILE):
+    """Batched cost model via the Pallas kernel.
+
+    Pads the batch to a multiple of `tile`, runs the tiled kernel, and
+    slices the padding off.
+    """
+    params = jnp.asarray(params, jnp.float32)
+    workload = jnp.asarray(workload, jnp.float32)
+    cluster = jnp.asarray(cluster, jnp.float32)
+    b = params.shape[0]
+    padded = (b + tile - 1) // tile * tile
+    if padded != b:
+        pad = jnp.tile(params[:1], (padded - b, 1))
+        params = jnp.concatenate([params, pad], axis=0)
+    out = pl.pallas_call(
+        _cost_kernel,
+        grid=(padded // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, ref.N_PARAMS), lambda i: (i, 0)),
+            pl.BlockSpec((ref.N_WORKLOAD_FEATURES,), lambda i: (0,)),
+            pl.BlockSpec((ref.N_CLUSTER_FEATURES,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=True,
+    )(params, workload, cluster)
+    return out[:b]

@@ -1,0 +1,185 @@
+"""Pure-jnp reference implementation of the analytic MapReduce cost model.
+
+This is the correctness oracle for the Pallas kernel
+(`costmodel.py`) and the term-for-term mirror of the rust reference
+(`rust/src/whatif/costmodel.rs`). All three implementations share:
+
+* the parameter-row layout   (11 values, `ParameterSpace` order),
+* the workload-feature layout (11 values, `WorkloadProfile::to_features`),
+* the cluster-feature layout  (10 values, `ClusterFeatures::to_features`),
+* the framework constants below.
+
+Keep the math in the same order as the rust file — reviews diff them
+side by side.
+"""
+
+import jax.numpy as jnp
+
+# Framework constants (mirror rust/src/whatif/costmodel.rs).
+JVM_START_S = 1.4
+TASK_LAUNCH_S = 0.15
+JOB_OVERHEAD_S = 8.0
+SPILL_FILE_S = 0.006
+FILE_OPEN_S = 0.003
+SORT_OPS_PER_CMP = 12.0
+COMBINE_OPS_PER_REC = 18.0
+COMPRESS_OPS_PER_BYTE = 5.0
+DECOMPRESS_OPS_PER_BYTE = 1.5
+MERGE_OPS_PER_BYTE = 0.4
+MERGE_STREAM_SWEET_SPOT = 48.0
+MERGE_STREAM_PENALTY_DIV = 96.0
+REDUCE_MEM_PRESSURE_COEFF = 0.6
+FETCH_OVERLAP_EFF = 0.5
+
+N_PARAMS = 11
+N_WORKLOAD_FEATURES = 11
+N_CLUSTER_FEATURES = 10
+
+
+def cost_ref(params, workload, cluster):
+    """Analytic job time for a batch of parameter rows.
+
+    Args:
+      params:   [B, 11] Hadoop-space parameter rows.
+      workload: [11] workload features.
+      cluster:  [10] cluster features.
+
+    Returns:
+      [B] predicted job execution time in seconds.
+    """
+    p = jnp.asarray(params, jnp.float32)
+    w = jnp.asarray(workload, jnp.float32)
+    c = jnp.asarray(cluster, jnp.float32)
+
+    # ---- unpack parameter row (ParameterSpace order) ----------------------
+    io_sort_mb = jnp.maximum(p[:, 0], 1.0)
+    spill_pct = jnp.clip(p[:, 1], 0.01, 0.99)
+    sort_factor = jnp.maximum(p[:, 2], 2.0)
+    shuf_in_pct = jnp.clip(p[:, 3], 0.01, 0.99)
+    shuf_merge_pct = jnp.clip(p[:, 4], 0.01, 0.99)
+    inmem_thresh = jnp.maximum(p[:, 5], 2.0)
+    red_in_pct = jnp.clip(p[:, 6], 0.0, 0.9)
+    n_red = jnp.maximum(p[:, 7], 1.0)
+
+    # ---- unpack workload / cluster features ---------------------------------
+    (w_input, w_avg_in_rec, w_sel_b, w_sel_r, w_avg_map_rec, w_comb_red,
+     w_red_sel, w_skew, w_cratio, w_map_ops, w_red_ops) = [w[i] for i in range(11)]
+    (c_workers, c_mspn, c_rspn, c_disk, c_net, c_cpu, c_block, c_heap,
+     c_repl, is_v1) = [c[i] for i in range(10)]
+
+    # version-dependent parameter tail
+    rec_pct = is_v1 * jnp.clip(p[:, 8], 0.01, 0.5) + (1.0 - is_v1) * 0.05
+    compress_map = is_v1 * (p[:, 9] > 0.5).astype(jnp.float32)
+    out_compress = is_v1 * (p[:, 10] > 0.5).astype(jnp.float32)
+    slowstart = is_v1 * 0.05 + (1.0 - is_v1) * jnp.clip(p[:, 8], 0.0, 1.0)
+    jvm_reuse = is_v1 + (1.0 - is_v1) * jnp.maximum(p[:, 9], 1.0)
+    job_maps = is_v1 * 2.0 + (1.0 - is_v1) * jnp.maximum(p[:, 10], 2.0)
+
+    has_comb = (w_comb_red < 0.999).astype(jnp.float32)
+
+    # ---- layout -------------------------------------------------------------
+    n_maps_nat = jnp.maximum(w_input / c_block, 1.0)
+    n_maps = is_v1 * n_maps_nat + (1.0 - is_v1) * jnp.maximum(n_maps_nat, job_maps)
+    split = w_input / n_maps
+    map_slots = c_workers * c_mspn
+    red_slots = c_workers * c_rspn
+    map_waves = jnp.maximum(n_maps / map_slots, 1.0)
+    red_waves = jnp.maximum(n_red / red_slots, 1.0)
+
+    # blind spot 1 (see rust/src/whatif/costmodel.rs): uncontended bandwidth
+    mdisk = c_disk
+    cpu = c_cpu
+    rdisk = c_disk
+    rnet = c_net
+    _ = (c_mspn, c_rspn)  # used only for slot counts above
+
+    # ---- map task -----------------------------------------------------------
+    read = split / mdisk
+    recs = split / w_avg_in_rec
+    map_cpu = recs * w_map_ops / cpu
+    out_b = split * w_sel_b
+    out_r = recs * w_sel_r
+
+    buf = io_sort_mb * float(1 << 20)
+    data_frac = is_v1 * (1.0 - rec_pct) + (1.0 - is_v1) * 0.95
+    data_cap = jnp.maximum(buf * data_frac * spill_pct, 1.0)
+    rec_cap_total = is_v1 * (buf * rec_pct / 16.0) + (1.0 - is_v1) * (buf / 16.0)
+    rec_cap = jnp.maximum(rec_cap_total * spill_pct, 1.0)
+    n_spills = jnp.maximum(jnp.maximum(out_b / data_cap, out_r / rec_cap), 1.0)
+
+    # blind spot 2: constant combiner ratio (no spill dilution)
+    r_eff = 1.0 - has_comb * (1.0 - w_comb_red)
+    sort_cpu = out_r * jnp.log2(jnp.maximum(out_r / n_spills, 2.0)) * SORT_OPS_PER_CMP / cpu
+    comb_cpu = has_comb * out_r * COMBINE_OPS_PER_REC / cpu
+    surv_b = out_b * r_eff
+    disk_b = surv_b * (compress_map * w_cratio + (1.0 - compress_map))
+    comp_cpu = compress_map * surv_b * COMPRESS_OPS_PER_BYTE / cpu
+    spill_io = disk_b / mdisk + n_spills * SPILL_FILE_S
+    spill_side = sort_cpu + comb_cpu + comp_cpu + spill_io
+    # blind spot 5: perfect map/spill overlap
+    phase = jnp.maximum(map_cpu, spill_side)
+
+    merge_gate = jnp.clip((n_spills - 1.0) / 0.5, 0.0, 1.0)
+    passes = jnp.maximum(jnp.log(n_spills) / jnp.log(sort_factor), 1.0)
+    streams = jnp.minimum(sort_factor, n_spills)
+    # blind spot 4: seek-free merges
+    merge = merge_gate * (
+        passes * disk_b * 2.0 / mdisk
+        + passes * surv_b * MERGE_OPS_PER_BYTE / cpu
+        + (n_spills + passes * streams) * FILE_OPEN_S
+    )
+
+    setup = (JVM_START_S + (jvm_reuse - 1.0) * TASK_LAUNCH_S) / jvm_reuse
+    map_task = setup + read + phase + merge
+    map_total = map_waves * map_task
+
+    # ---- reduce task (critical path = hot partition) --------------------------
+    tot_raw = n_maps * surv_b
+    # blind spot 3: uniform partitions (skew ignored)
+    _ = w_skew
+    hot_vol = tot_raw / n_red
+
+    wire = hot_vol * (compress_map * w_cratio + (1.0 - compress_map))
+    fetch = wire / rnet + compress_map * wire * DECOMPRESS_OPS_PER_BYTE / cpu
+
+    buffer = c_heap * shuf_in_pct
+    byte_trig = jnp.maximum(buffer * shuf_merge_pct, 1.0)
+    segs = n_maps
+    avg_seg = hot_vol / segs
+    fits = (jnp.maximum(jnp.sign(byte_trig - hot_vol), 0.0)
+            * jnp.maximum(jnp.sign(inmem_thresh - segs), 0.0)
+            * jnp.maximum(jnp.sign(buffer - hot_vol), 0.0))
+    segs_per_flush = jnp.minimum(inmem_thresh,
+                                 jnp.maximum(byte_trig / jnp.maximum(avg_seg, 1.0), 1.0))
+    n_flush = (1.0 - fits) * jnp.maximum(segs / segs_per_flush, 1.0)
+    retained = c_heap * red_in_pct
+    disk_bytes = (1.0 - fits) * jnp.maximum(hot_vol - retained, 0.0)
+
+    extra_passes = jnp.maximum(
+        jnp.log(jnp.maximum(n_flush, 1.0)) / jnp.log(sort_factor), 1.0) - 1.0
+    rstreams = jnp.minimum(sort_factor, jnp.maximum(n_flush, 1.0))
+    merge_gate_r = jnp.clip(n_flush, 0.0, 1.0)
+    # blind spot 4 again: seek-free reduce-side merges
+    merge_r = merge_gate_r * (
+        disk_bytes / rdisk
+        + n_flush * SPILL_FILE_S
+        + hot_vol * MERGE_OPS_PER_BYTE / cpu
+        + extra_passes * disk_bytes * 2.0 / rdisk
+        + (n_flush + extra_passes * rstreams) * FILE_OPEN_S
+        + disk_bytes / rdisk
+    )
+
+    red_recs = hot_vol / jnp.maximum(w_avg_map_rec, 1.0)
+    # blind spot 6: no memory-pressure penalty
+    red_cpu = red_recs * w_red_ops / cpu
+
+    out_raw = hot_vol * w_red_sel
+    out_b2 = out_raw * (out_compress * w_cratio + (1.0 - out_compress))
+    comp_cpu2 = out_compress * out_raw * COMPRESS_OPS_PER_BYTE / cpu
+    write = jnp.maximum(out_b2 / rdisk, out_b2 * (c_repl - 1.0) / rnet) + comp_cpu2
+
+    red_task = setup + fetch + merge_r + red_cpu + write
+
+    credit = jnp.minimum((1.0 - slowstart) * map_total * FETCH_OVERLAP_EFF, fetch * 0.5)
+
+    return JOB_OVERHEAD_S + map_total + red_waves * red_task - credit

@@ -1,0 +1,109 @@
+"""L2 — JAX compute graphs built on the L1 Pallas cost-model kernel.
+
+Two exported computations (AOT-lowered by `aot.py`, executed from rust via
+PJRT — Python never runs on the request path):
+
+* ``whatif_batch`` — what-if engine: [B, 11] Hadoop-space parameter rows →
+  [B] predicted job times. Powers the Starfish-style CBO's RRS rounds.
+* ``spsa_step`` — one surrogate-SPSA iteration evaluated entirely on the
+  model: maps θ_A through μ, prices θ and K simultaneous perturbations with
+  one batched kernel call, and returns the averaged gradient estimate plus
+  the updated, projected θ (packed flat for a stable rust ABI).
+
+Feature layouts are shared with rust (see `kernels/ref.py` docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import costmodel, ref
+
+# Shapes baked into the AOT artifacts (rust pads to these).
+BATCH = 256
+N_PERTURBATIONS = 8
+N = ref.N_PARAMS
+
+# Order of the workload feature vector (documentation of the ABI; the rust
+# side builds it in WorkloadProfile::to_features).
+WORKLOAD_FEATURES = (
+    "input_bytes", "avg_input_record_bytes", "map_selectivity_bytes",
+    "map_selectivity_records", "avg_map_record_bytes", "combiner_reduction",
+    "reduce_selectivity_bytes", "partition_skew", "compress_ratio",
+    "map_cpu_ops_per_record", "reduce_cpu_ops_per_record",
+)
+
+
+def whatif_batch(params, workload, cluster):
+    """[B, 11] Hadoop rows → [B] seconds, through the Pallas kernel."""
+    return (costmodel.cost_pallas(params, workload, cluster),)
+
+
+def mu(theta, space_spec):
+    """The paper's §5.1 mapping μ: θ_A ∈ [0,1]^n → Hadoop values.
+
+    ``space_spec`` is a [4, n] matrix of rows (min, width, is_int, is_bool).
+    Integer parameters are floored; booleans thresholded at 0.5.
+    """
+    mins, widths, is_int, is_bool = (space_spec[i] for i in range(4))
+    t = jnp.clip(theta, 0.0, 1.0)
+    v = mins + widths * t
+    v = jnp.where(is_int > 0.5, jnp.floor(v), v)
+    v = jnp.where(is_bool > 0.5, (t >= 0.5).astype(jnp.float32), v)
+    return v
+
+
+def spsa_step(theta, signs, c_scales, workload, cluster, space_spec, hyper):
+    """One surrogate-SPSA iteration on the analytic model.
+
+    Args:
+      theta:      [n]   current iterate in [0,1]^n.
+      signs:      [K,n] Rademacher ±1 perturbation directions.
+      c_scales:   [n]   per-coordinate perturbation magnitudes c(i).
+      workload:   [11]  workload features.
+      cluster:    [10]  cluster features.
+      space_spec: [4,n] μ-mapping spec (min, width, is_int, is_bool).
+      hyper:      [2]   (alpha, max_step).
+
+    Returns:
+      One flat [2n+1] vector: (θ_next[n], f(θ)[1], ĝ[n]).
+    """
+    theta = jnp.clip(jnp.asarray(theta, jnp.float32), 0.0, 1.0)
+    signs = jnp.asarray(signs, jnp.float32)
+    alpha, max_step = hyper[0], hyper[1]
+
+    # candidate points: θ plus K perturbations, padded to the kernel batch
+    pert = jnp.clip(theta[None, :] + signs * c_scales[None, :], 0.0, 1.0)
+    points = jnp.concatenate([theta[None, :], pert], axis=0)  # [K+1, n]
+    rows = jax.vmap(lambda t: mu(t, space_spec))(points)
+    costs = costmodel.cost_pallas(rows, workload, cluster)  # [K+1]
+
+    f0 = costs[0]
+    df = (costs[1:] - f0) / jnp.maximum(f0, 1e-9)  # [K], normalized
+    # ĝ(i) = mean_k df_k / (s_ki · c_i)
+    ghat = jnp.mean(df[:, None] / (signs * c_scales[None, :]), axis=0)
+
+    step = jnp.clip(alpha * ghat, -max_step, max_step)
+    theta_next = jnp.clip(theta - step, 0.0, 1.0)
+    return (jnp.concatenate([theta_next, f0[None], ghat]),)
+
+
+def example_args_whatif():
+    """Example shapes for AOT lowering of whatif_batch."""
+    return (
+        jax.ShapeDtypeStruct((BATCH, N), jnp.float32),
+        jax.ShapeDtypeStruct((ref.N_WORKLOAD_FEATURES,), jnp.float32),
+        jax.ShapeDtypeStruct((ref.N_CLUSTER_FEATURES,), jnp.float32),
+    )
+
+
+def example_args_spsa():
+    """Example shapes for AOT lowering of spsa_step."""
+    return (
+        jax.ShapeDtypeStruct((N,), jnp.float32),
+        jax.ShapeDtypeStruct((N_PERTURBATIONS, N), jnp.float32),
+        jax.ShapeDtypeStruct((N,), jnp.float32),
+        jax.ShapeDtypeStruct((ref.N_WORKLOAD_FEATURES,), jnp.float32),
+        jax.ShapeDtypeStruct((ref.N_CLUSTER_FEATURES,), jnp.float32),
+        jax.ShapeDtypeStruct((4, N), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+    )

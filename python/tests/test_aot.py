@@ -1,0 +1,35 @@
+"""AOT lowering tests: both exported computations lower to valid HLO text
+with the shapes the rust loader expects (the ABI of the artifacts)."""
+
+from compile import aot, model
+
+
+def test_lower_all_produces_hlo_text():
+    out = aot.lower_all()
+    assert set(out) == {"whatif_batch", "spsa_step"}
+    for name, text in out.items():
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_whatif_entry_signature():
+    text = aot.lower_all()["whatif_batch"]
+    # entry layout: [256,11] x [11] x [10] -> ([256],)
+    assert "f32[256,11]" in text
+    assert "f32[256]" in text
+
+
+def test_spsa_step_entry_signature():
+    text = aot.lower_all()["spsa_step"]
+    # theta[11], signs[8,11], ..., output packed [23]
+    assert "f32[8,11]" in text
+    assert f"f32[{2 * model.N + 1}]" in text
+
+
+def test_metadata_matches_model():
+    meta = aot.metadata()
+    assert meta["batch"] == model.BATCH == 256
+    assert meta["n_params"] == model.N == 11
+    assert meta["n_perturbations"] == model.N_PERTURBATIONS == 8
+    assert meta["spsa_step_output_len"] == 23
+    assert len(meta["workload_features"]) == 11

@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle (`ref.cost_ref`).
+
+The CORE correctness signal of the compile path: hypothesis sweeps random
+parameter rows, workload mixes, batch sizes and both Hadoop versions, and
+the kernel must match the reference to float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import costmodel, ref
+
+RNG = np.random.default_rng(0)
+
+
+def cluster_features(is_v1=1.0):
+    return np.array(
+        [24, 3, 2, 120e6, 117e6, 2e8, 128 << 20, 1 << 30, 2, is_v1],
+        dtype=np.float32,
+    )
+
+
+def workload_features(
+    input_gb=8.0, sel_b=1.0, sel_r=1.0, comb=1.0, skew=1.1,
+    map_ops=60.0, red_ops=50.0, cratio=0.4,
+):
+    return np.array(
+        [input_gb * (1 << 30), 100.0, sel_b, sel_r, 100.0, comb, 1.0, skew,
+         cratio, map_ops, red_ops],
+        dtype=np.float32,
+    )
+
+
+def random_params(n_rows, rng=RNG):
+    """Random Hadoop-space rows within the ParameterSpace ranges."""
+    cols = [
+        rng.uniform(50, 2000, n_rows),      # io.sort.mb
+        rng.uniform(0.05, 0.95, n_rows),    # spill.percent
+        rng.uniform(5, 500, n_rows),        # sort.factor
+        rng.uniform(0.1, 0.95, n_rows),     # shuffle.input.buffer
+        rng.uniform(0.1, 0.95, n_rows),     # shuffle.merge.percent
+        rng.uniform(10, 10000, n_rows),     # inmem.merge.threshold
+        rng.uniform(0.0, 0.8, n_rows),      # reduce.input.buffer
+        rng.uniform(1, 100, n_rows),        # reduce.tasks
+        rng.uniform(0.0, 1.0, n_rows),      # record% / slowstart
+        rng.integers(0, 2, n_rows),         # compress / jvm (small)
+        rng.integers(0, 2, n_rows),         # out compress / job.maps
+    ]
+    return np.stack(cols, axis=1).astype(np.float32)
+
+
+def test_kernel_matches_ref_v1():
+    p = random_params(256)
+    w, c = workload_features(), cluster_features(1.0)
+    got = np.asarray(costmodel.cost_pallas(p, w, c))
+    want = np.asarray(ref.cost_ref(p, w, c))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+def test_kernel_matches_ref_v2():
+    p = random_params(256)
+    p[:, 9] = RNG.uniform(1, 30, 256)   # jvm.numtasks
+    p[:, 10] = RNG.uniform(2, 50, 256)  # job.maps
+    w, c = workload_features(), cluster_features(0.0)
+    got = np.asarray(costmodel.cost_pallas(p, w, c))
+    want = np.asarray(ref.cost_ref(p, w, c))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("batch", [1, 7, 255, 256, 257, 1000])
+def test_padding_handles_any_batch(batch):
+    p = random_params(batch)
+    w, c = workload_features(), cluster_features(1.0)
+    got = np.asarray(costmodel.cost_pallas(p, w, c))
+    assert got.shape == (batch,)
+    want = np.asarray(ref.cost_ref(p, w, c))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    input_gb=st.floats(0.1, 128.0),
+    sel_b=st.floats(0.01, 4.0),
+    sel_r=st.floats(0.05, 16.0),
+    comb=st.floats(0.05, 1.0),
+    skew=st.floats(1.0, 5.0),
+    map_ops=st.floats(10.0, 5000.0),
+    red_ops=st.floats(10.0, 5000.0),
+    cratio=st.floats(0.05, 1.0),
+    is_v1=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_hypothesis(
+    input_gb, sel_b, sel_r, comb, skew, map_ops, red_ops, cratio, is_v1, seed
+):
+    rng = np.random.default_rng(seed)
+    p = random_params(64, rng)
+    w = workload_features(input_gb, sel_b, sel_r, comb, skew, map_ops,
+                          red_ops, cratio)
+    c = cluster_features(is_v1)
+    got = np.asarray(costmodel.cost_pallas(p, w, c))
+    want = np.asarray(ref.cost_ref(p, w, c))
+    assert np.all(np.isfinite(got))
+    assert np.all(got > 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_costs_positive_and_reducers_matter():
+    # heavy-shuffle workload: the 1-reducer default must be far more
+    # expensive than ~90 reducers (the headline mechanism).
+    w, c = workload_features(input_gb=30.0), cluster_features(1.0)
+    base = random_params(2)
+    base[0, 7] = 1.0
+    base[1, 7] = 90.0
+    got = np.asarray(costmodel.cost_pallas(base, w, c))
+    assert got[0] > 2.0 * got[1], got

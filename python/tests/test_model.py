@@ -1,0 +1,110 @@
+"""L2 tests: μ mapping semantics and the surrogate-SPSA step graph."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from .test_kernel import cluster_features, workload_features
+
+# ParameterSpace v1 spec (min, width, is_int, is_bool) — mirrors
+# rust/src/config/space.rs.
+V1_SPEC = np.array(
+    [
+        # io.sort.mb, spill%, sort.factor, shuf.in%, shuf.merge%,
+        # inmem.thresh, red.in%, reducers, record%, compress, out.compress
+        [50, 0.05, 5, 0.1, 0.1, 10, 0.0, 1, 0.01, 0, 0],            # mins
+        [1950, 0.90, 495, 0.85, 0.85, 9990, 0.8, 99, 0.49, 1, 1],   # widths
+        [1, 0, 1, 0, 0, 1, 0, 1, 0, 0, 0],                          # is_int
+        [0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 1],                          # is_bool
+    ],
+    dtype=np.float32,
+)
+
+
+def test_mu_defaults():
+    # default θ_A for v1 reproduces the Table-1 default values
+    theta = np.array(
+        [(100 - 50) / 1950, (0.08 - 0.05) / 0.9, (10 - 5) / 495,
+         (0.7 - 0.1) / 0.85, (0.66 - 0.1) / 0.85, (1000 - 10) / 9990,
+         0.0, 0.0, (0.05 - 0.01) / 0.49, 0.25, 0.25],
+        dtype=np.float32,
+    )
+    v = np.asarray(model.mu(theta, V1_SPEC))
+    assert v[0] == 100            # io.sort.mb
+    assert abs(v[1] - 0.08) < 1e-6
+    assert v[2] == 10             # sort.factor
+    assert v[7] == 1              # reducers
+    assert v[9] == 0 and v[10] == 0  # compression off
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=11, max_size=11))
+def test_mu_in_range(theta):
+    v = np.asarray(model.mu(np.array(theta, np.float32), V1_SPEC))
+    mins, widths = V1_SPEC[0], V1_SPEC[1]
+    assert np.all(v >= mins - 1e-5)
+    assert np.all(v <= mins + widths + 1e-5)
+    # integer params are integral
+    for i in np.nonzero(V1_SPEC[2])[0]:
+        assert v[i] == np.floor(v[i])
+    # booleans are 0/1
+    for i in np.nonzero(V1_SPEC[3])[0]:
+        assert v[i] in (0.0, 1.0)
+
+
+def spsa_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    theta = rng.uniform(0, 1, model.N).astype(np.float32)
+    signs = rng.choice([-1.0, 1.0],
+                       (model.N_PERTURBATIONS, model.N)).astype(np.float32)
+    c = np.full(model.N, 0.05, np.float32)
+    hyper = np.array([0.01, 0.15], np.float32)
+    return theta, signs, c, workload_features(), cluster_features(1.0), \
+        V1_SPEC, hyper
+
+
+def unpack(out):
+    out = np.asarray(out[0])
+    n = model.N
+    return out[:n], out[n], out[n + 1:]
+
+
+def test_spsa_step_shapes_and_box():
+    (out,) = (model.spsa_step(*spsa_inputs()),)
+    theta_next, f0, ghat = unpack(out)
+    assert theta_next.shape == (model.N,)
+    assert ghat.shape == (model.N,)
+    assert np.isfinite(f0) and f0 > 0
+    assert np.all(theta_next >= 0.0) and np.all(theta_next <= 1.0)
+
+
+def test_spsa_step_respects_max_step():
+    theta, signs, c, w, cl, spec, _ = spsa_inputs(3)
+    hyper = np.array([100.0, 0.05], np.float32)  # huge alpha, small clip
+    (out,) = (model.spsa_step(theta, signs, c, w, cl, spec, hyper),)
+    theta_next, _, _ = unpack(out)
+    moved = np.abs(theta_next - np.clip(theta, 0, 1))
+    assert np.all(moved <= 0.05 + 1e-6)
+
+
+def test_spsa_step_descends_on_average():
+    # Iterating the surrogate step from the default must reduce model cost.
+    theta = np.array(
+        [(100 - 50) / 1950, (0.08 - 0.05) / 0.9, (10 - 5) / 495,
+         (0.7 - 0.1) / 0.85, (0.66 - 0.1) / 0.85, (1000 - 10) / 9990,
+         0.0, 0.0, (0.05 - 0.01) / 0.49, 0.25, 0.25],
+        dtype=np.float32,
+    )
+    rng = np.random.default_rng(7)
+    _, _, c, w, cl, spec, hyper = spsa_inputs()
+    f_first = None
+    f_last = None
+    for _ in range(40):
+        signs = rng.choice(
+            [-1.0, 1.0], (model.N_PERTURBATIONS, model.N)).astype(np.float32)
+        (out,) = (model.spsa_step(theta, signs, c, w, cl, spec, hyper),)
+        theta, f0, _ = unpack(out)
+        if f_first is None:
+            f_first = float(f0)
+        f_last = float(f0)
+    assert f_last < 0.7 * f_first, (f_first, f_last)

@@ -1,0 +1,11 @@
+//! Bench: SPSA design-choice ablation table (DESIGN.md §5 extension).
+use hadoop_spsa::experiments::{ablation, ExpOptions};
+use hadoop_spsa::util::bench::bench;
+
+fn main() {
+    let mut last = String::new();
+    bench("ablation campaign (quick)", 0, 2, 0.0, || {
+        last = ablation::run(&ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 6 (SPSA convergence, Hadoop v1) and time it.
+use hadoop_spsa::config::HadoopVersion;
+use hadoop_spsa::experiments::{convergence, ExpOptions};
+use hadoop_spsa::util::bench::quick;
+
+fn main() {
+    let mut last = String::new();
+    quick("fig6 campaign (quick)", || {
+        last = convergence::run(HadoopVersion::V1, &ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

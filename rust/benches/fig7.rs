@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 7 (SPSA convergence, Hadoop v2) and time it.
+use hadoop_spsa::config::HadoopVersion;
+use hadoop_spsa::experiments::{convergence, ExpOptions};
+use hadoop_spsa::util::bench::quick;
+
+fn main() {
+    let mut last = String::new();
+    quick("fig7 campaign (quick)", || {
+        last = convergence::run(HadoopVersion::V2, &ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 8 (Default vs Starfish vs SPSA, Hadoop v1).
+use hadoop_spsa::config::HadoopVersion;
+use hadoop_spsa::experiments::{comparison, ExpOptions};
+use hadoop_spsa::util::bench::quick;
+
+fn main() {
+    let mut last = String::new();
+    quick("fig8 campaign (quick)", || {
+        last = comparison::run(HadoopVersion::V1, &ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 9 (Default vs SPSA vs PPABS, Hadoop v2).
+use hadoop_spsa::config::HadoopVersion;
+use hadoop_spsa::experiments::{comparison, ExpOptions};
+use hadoop_spsa::util::bench::quick;
+
+fn main() {
+    let mut last = String::new();
+    quick("fig9 campaign (quick)", || {
+        last = comparison::run(HadoopVersion::V2, &ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

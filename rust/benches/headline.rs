@@ -1,0 +1,12 @@
+//! Bench: regenerate the headline claim (66% vs default / 45% vs prior).
+use hadoop_spsa::experiments::{headline, ExpOptions};
+use hadoop_spsa::util::bench::bench;
+
+fn main() {
+    let mut last = String::new();
+    bench("headline campaign (quick)", 0, 2, 0.0, || {
+        let (_, report) = headline::compute(&ExpOptions::quick());
+        last = report;
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,11 @@
+//! Bench: holistic (Hadoop+OS) tuning comparison (paper §7 future work).
+use hadoop_spsa::experiments::{holistic, ExpOptions};
+use hadoop_spsa::util::bench::bench;
+
+fn main() {
+    let mut last = String::new();
+    bench("holistic campaign (quick)", 0, 2, 0.0, || {
+        last = holistic::run(&ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,52 @@
+//! Perf bench: the PJRT artifact hot path — batched what-if evaluations
+//! per second (configs/s) and compiled surrogate-SPSA steps per second.
+//! Target (DESIGN.md §8): ≥ 1e5 configs/s through the batch artifact.
+use hadoop_spsa::baselines::CostEvaluator;
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
+use hadoop_spsa::runtime::{ArtifactSpsaStep, ArtifactWhatIf, Runtime, ARTIFACT_BATCH, ARTIFACT_K};
+use hadoop_spsa::tuner::Spsa;
+use hadoop_spsa::util::bench::{black_box, quick};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::whatif::{cost_model_batch, ClusterFeatures};
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("SKIP perf_runtime: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::default_dir().expect("PJRT client");
+    let space = ParameterSpace::v1();
+    let features = ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), HadoopVersion::V1);
+    let mut rng = Rng::seeded(9);
+    let w = Benchmark::Terasort.profile_scaled(256 << 10, 30 << 30, &mut rng);
+
+    let thetas: Vec<Vec<f64>> =
+        (0..ARTIFACT_BATCH).map(|_| space.sample_uniform(&mut rng)).collect();
+    let rows: Vec<Vec<f64>> = thetas
+        .iter()
+        .map(|t| space.to_hadoop_values(t).iter().map(|v| v.as_f64()).collect())
+        .collect();
+
+    let mut artifact = ArtifactWhatIf::new(&rt, space.clone(), &w, &features).unwrap();
+    let r = quick("artifact whatif_batch (256 configs)", || {
+        black_box(artifact.eval_batch(&thetas));
+    });
+    println!("  → {:.0} configs/s through PJRT", 256.0 * r.per_sec());
+
+    let r2 = quick("rust whatif batch (256 configs)", || {
+        black_box(cost_model_batch(&rows, &w, &features));
+    });
+    println!("  → {:.0} configs/s in pure rust", 256.0 * r2.per_sec());
+
+    let stepper = ArtifactSpsaStep::new(&rt, &space, &w, &features).unwrap();
+    let c = Spsa::scales_for(&space);
+    let theta = space.default_theta();
+    let signs: Vec<Vec<f64>> = (0..ARTIFACT_K)
+        .map(|_| (0..space.dim()).map(|_| rng.rademacher()).collect())
+        .collect();
+    quick("artifact spsa_step (K=8)", || {
+        black_box(stepper.step(&theta, &signs, &c, 0.01, 0.15).unwrap());
+    });
+}

@@ -1,0 +1,34 @@
+//! Perf bench: the DES hot path — simulated job runs per second across
+//! benchmark profiles and configurations. Target (DESIGN.md §8): ≥ 2,000
+//! partial-workload runs/s.
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::ParameterSpace;
+use hadoop_spsa::sim::{simulate, SimOptions};
+use hadoop_spsa::util::bench::{black_box, quick};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let space = ParameterSpace::v1();
+    let mut rng = Rng::seeded(1000);
+    for bench in Benchmark::all() {
+        let w = bench.paper_profile(&mut rng);
+        let default = space.default_config();
+        let mut seed = 0u64;
+        quick(&format!("simulate/{}", bench.label()), || {
+            seed += 1;
+            black_box(simulate(&cluster, &default, &w, &SimOptions { seed, noise: true }));
+        });
+    }
+    // tuned configuration (more reducers = more events)
+    let w = Benchmark::Terasort.paper_profile(&mut rng);
+    let mut tuned = space.default_config();
+    tuned.reduce_tasks = 95;
+    tuned.io_sort_mb = 500;
+    let mut seed = 0u64;
+    quick("simulate/Terasort-95reducers", || {
+        seed += 1;
+        black_box(simulate(&cluster, &tuned, &w, &SimOptions { seed, noise: true }));
+    });
+}

@@ -1,0 +1,30 @@
+//! Perf bench: full SPSA tuning campaigns per second (30 iterations,
+//! 2-3 observations each) and the profile-measurement path.
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::ParameterSpace;
+use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig};
+use hadoop_spsa::util::bench::{black_box, quick};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    let space = ParameterSpace::v1();
+    let cluster = ClusterSpec::paper_cluster();
+    let mut rng = Rng::seeded(1000);
+    let w = Benchmark::Terasort.paper_profile(&mut rng);
+
+    let mut seed = 0u64;
+    quick("spsa/30-iter campaign (terasort)", || {
+        seed += 1;
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+        let spsa = Spsa::for_space(SpsaConfig { seed, ..Default::default() }, &space);
+        black_box(spsa.run(&mut obj, space.default_theta()));
+    });
+
+    let mut s = 0u64;
+    quick("profile/grep 2MB real execution", || {
+        s += 1;
+        let mut r = Rng::seeded(s);
+        black_box(Benchmark::Grep.profile_scaled(2 << 20, 22 << 30, &mut r));
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Table 1 (quick mode) and time the campaign.
+use hadoop_spsa::experiments::{table1, ExpOptions};
+use hadoop_spsa::util::bench::quick;
+
+fn main() {
+    let mut last = String::new();
+    quick("table1 campaign (quick)", || {
+        last = table1::run(&ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Table 2 (method comparison + measured overheads).
+use hadoop_spsa::experiments::{table2, ExpOptions};
+use hadoop_spsa::util::bench::quick;
+
+fn main() {
+    let mut last = String::new();
+    quick("table2 campaign (quick)", || {
+        last = table2::run(&ExpOptions::quick());
+    });
+    println!("\n{last}");
+}

@@ -1,0 +1,77 @@
+//! Cost-evaluator abstraction for the model-based baselines: Starfish's
+//! what-if engine evaluates *candidate configurations against a model*, not
+//! the live system. Implementations: the rust analytic model (here) and the
+//! AOT-compiled JAX/Pallas artifact via PJRT (`crate::runtime`).
+
+use crate::config::ParameterSpace;
+use crate::whatif::{cost_for_theta, ClusterFeatures};
+use crate::workloads::WorkloadProfile;
+
+/// Batched what-if evaluation of θ_A points (algorithm space, [0,1]^n).
+pub trait CostEvaluator {
+    fn dim(&self) -> usize;
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64>;
+    /// Number of model evaluations so far (profiling-overhead accounting).
+    fn model_evals(&self) -> u64;
+}
+
+/// The rust analytic what-if model.
+pub struct RustWhatIf {
+    pub space: ParameterSpace,
+    pub workload: WorkloadProfile,
+    pub cluster: ClusterFeatures,
+    evals: u64,
+}
+
+impl RustWhatIf {
+    pub fn new(space: ParameterSpace, workload: WorkloadProfile, cluster: ClusterFeatures) -> Self {
+        RustWhatIf { space, workload, cluster, evals: 0 }
+    }
+}
+
+impl CostEvaluator for RustWhatIf {
+    fn dim(&self) -> usize {
+        self.space.dim()
+    }
+
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        self.evals += thetas.len() as u64;
+        thetas
+            .iter()
+            .map(|t| cost_for_theta(&self.space, t, &self.workload, &self.cluster))
+            .collect()
+    }
+
+    fn model_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::HadoopVersion;
+    use crate::util::rng::Rng;
+    use crate::workloads::Benchmark;
+
+    pub fn test_whatif() -> RustWhatIf {
+        let mut rng = Rng::seeded(4);
+        let w = Benchmark::Terasort.profile_scaled(100_000, 8 << 30, &mut rng);
+        RustWhatIf::new(
+            ParameterSpace::v1(),
+            w,
+            ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), HadoopVersion::V1),
+        )
+    }
+
+    #[test]
+    fn batch_eval_counts() {
+        let mut e = test_whatif();
+        let pts = vec![vec![0.5; 11], vec![0.2; 11]];
+        let costs = e.eval_batch(&pts);
+        assert_eq!(costs.len(), 2);
+        assert!(costs.iter().all(|c| c.is_finite() && *c > 0.0));
+        assert_eq!(e.model_evals(), 2);
+    }
+}

@@ -1,0 +1,108 @@
+//! MROnline-style hill climbing (Li et al., HPDC'14; paper §3): an online
+//! tuner that moves one parameter at a time on the *live system*, keeping a
+//! change only if the observed execution time improves.
+//!
+//! Contrast with SPSA: hill climbing needs O(n) observations to probe all
+//! coordinates once, and its axis-aligned moves cannot follow
+//! cross-parameter interactions — the paper's Table 2 "Parameter
+//! Dependency" column.
+
+use crate::tuner::Objective;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct HillClimbConfig {
+    /// Live-system observation budget (comparable to SPSA's 2 × iters).
+    pub budget: u64,
+    /// Step size per coordinate move (algorithm space).
+    pub step: f64,
+    /// Step shrink factor after a full unproductive sweep.
+    pub shrink: f64,
+    pub seed: u64,
+}
+
+impl Default for HillClimbConfig {
+    fn default() -> Self {
+        HillClimbConfig { budget: 60, step: 0.15, shrink: 0.6, seed: 17 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HillClimbResult {
+    pub best_theta: Vec<f64>,
+    pub best_f: f64,
+    pub observations: u64,
+}
+
+pub fn hill_climb(
+    objective: &mut dyn Objective,
+    theta0: Vec<f64>,
+    cfg: &HillClimbConfig,
+) -> HillClimbResult {
+    let n = objective.dim();
+    let mut rng = Rng::seeded(cfg.seed);
+    let mut theta = theta0;
+    let mut f_cur = objective.eval(&theta);
+    let mut used = 1u64;
+    let mut step = cfg.step;
+
+    'outer: loop {
+        let mut improved_any = false;
+        // visit coordinates in random order each sweep
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            for dir in [1.0, -1.0] {
+                if used >= cfg.budget {
+                    break 'outer;
+                }
+                let mut cand = theta.clone();
+                cand[i] = (cand[i] + dir * step).clamp(0.0, 1.0);
+                if cand[i] == theta[i] {
+                    continue;
+                }
+                let f = objective.eval(&cand);
+                used += 1;
+                if f < f_cur {
+                    theta = cand;
+                    f_cur = f;
+                    improved_any = true;
+                    break; // keep direction for next sweep via random order
+                }
+            }
+        }
+        if !improved_any {
+            step *= cfg.shrink;
+            if step < 0.01 {
+                break;
+            }
+        }
+    }
+
+    HillClimbResult { best_theta: theta, best_f: f_cur, observations: used }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::QuadraticObjective;
+
+    #[test]
+    fn climbs_smooth_surface() {
+        let mut obj = QuadraticObjective::new(vec![0.8, 0.2, 0.5], 0.0, 1);
+        let cfg = HillClimbConfig { budget: 200, ..Default::default() };
+        let res = hill_climb(&mut obj, vec![0.5; 3], &cfg);
+        for (a, b) in res.best_theta.iter().zip(&[0.8, 0.2, 0.5]) {
+            assert!((a - b).abs() < 0.15, "{:?}", res.best_theta);
+        }
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut obj = QuadraticObjective::new(vec![0.5; 5], 0.1, 2);
+        let cfg = HillClimbConfig { budget: 30, ..Default::default() };
+        let res = hill_climb(&mut obj, vec![0.1; 5], &cfg);
+        assert!(res.observations <= 30);
+        assert_eq!(obj.evals(), res.observations);
+    }
+}

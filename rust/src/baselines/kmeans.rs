@@ -1,0 +1,166 @@
+//! Small k-means (k-means++ seeding, Lloyd iterations) for PPABS's job
+//! signature clustering (paper §3: "the jobs are clustered (using variants
+//! of k-means) according to their respective signatures").
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub centroids: Vec<Vec<f64>>,
+    pub assignment: Vec<usize>,
+    pub inertia: f64,
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Cluster `points` into `k` groups. Deterministic per seed.
+pub fn kmeans(points: &[Vec<f64>], k: usize, iters: u64, seed: u64) -> KmeansResult {
+    assert!(!points.is_empty());
+    let k = k.min(points.len()).max(1);
+    let dim = points[0].len();
+    let mut rng = Rng::seeded(seed);
+
+    // k-means++ seeding
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(points.len() as u64) as usize].clone());
+    while centroids.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .map(|c| dist2(p, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            centroids.push(points[rng.below(points.len() as u64) as usize].clone());
+            continue;
+        }
+        let mut pick = rng.f64() * total;
+        let mut chosen = 0;
+        for (i, d) in d2.iter().enumerate() {
+            pick -= d;
+            if pick <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        centroids.push(points[chosen].clone());
+    }
+
+    // Lloyd iterations
+    let mut assignment = vec![0usize; points.len()];
+    for _ in 0..iters {
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let best = (0..centroids.len())
+                .min_by(|&a, &b| {
+                    dist2(p, &centroids[a])
+                        .partial_cmp(&dist2(p, &centroids[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // recompute centroids
+        let mut sums = vec![vec![0.0; dim]; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        for (p, &a) in points.iter().zip(&assignment) {
+            counts[a] += 1;
+            for (s, x) in sums[a].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for (c, (s, n)) in centroids.iter_mut().zip(sums.iter().zip(&counts)) {
+            if *n > 0 {
+                *c = s.iter().map(|x| x / *n as f64).collect();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .zip(&assignment)
+        .map(|(p, &a)| dist2(p, &centroids[a]))
+        .sum();
+    KmeansResult { centroids, assignment, inertia }
+}
+
+/// Index of the centroid nearest to `point`.
+pub fn nearest(centroids: &[Vec<f64>], point: &[f64]) -> usize {
+    (0..centroids.len())
+        .min_by(|&a, &b| {
+            dist2(point, &centroids[a])
+                .partial_cmp(&dist2(point, &centroids[b]))
+                .unwrap()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> Vec<Vec<f64>> {
+        let mut pts = Vec::new();
+        let mut rng = Rng::seeded(3);
+        for c in [[0.1, 0.1], [0.9, 0.9], [0.1, 0.9]] {
+            for _ in 0..20 {
+                pts.push(vec![
+                    c[0] + rng.range_f64(-0.05, 0.05),
+                    c[1] + rng.range_f64(-0.05, 0.05),
+                ]);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let pts = blobs();
+        let res = kmeans(&pts, 3, 50, 1);
+        assert_eq!(res.centroids.len(), 3);
+        // points within a blob share an assignment
+        for blob in 0..3 {
+            let first = res.assignment[blob * 20];
+            for i in 0..20 {
+                assert_eq!(res.assignment[blob * 20 + i], first, "blob {blob}");
+            }
+        }
+        assert!(res.inertia < 1.0);
+    }
+
+    #[test]
+    fn nearest_assigns_to_own_centroid() {
+        let pts = blobs();
+        let res = kmeans(&pts, 3, 50, 2);
+        for (p, &a) in pts.iter().zip(&res.assignment) {
+            assert_eq!(nearest(&res.centroids, p), a);
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_points() {
+        let pts = vec![vec![0.0, 0.0], vec![1.0, 1.0]];
+        let res = kmeans(&pts, 10, 10, 1);
+        assert_eq!(res.centroids.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let pts = blobs();
+        let a = kmeans(&pts, 3, 50, 7);
+        let b = kmeans(&pts, 3, 50, 7);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline tuners the paper compares against (§3, §6.6): Starfish-style
+//! profile + what-if + RRS, PPABS-style signature clustering + simulated
+//! annealing on a reduced space, MROnline-style hill climbing, and pure
+//! random search as the ablation anchor.
+
+pub mod annealing;
+pub mod evaluator;
+pub mod hill_climbing;
+pub mod kmeans;
+pub mod ppabs;
+pub mod random_search;
+pub mod rrs;
+pub mod starfish;
+
+pub use annealing::{simulated_annealing, SaConfig, SaResult};
+pub use evaluator::{CostEvaluator, RustWhatIf};
+pub use hill_climbing::{hill_climb, HillClimbConfig, HillClimbResult};
+pub use kmeans::{kmeans, nearest, KmeansResult};
+pub use ppabs::{training_corpus, Ppabs};
+pub use random_search::{random_search, RandomSearchResult};
+pub use rrs::{rrs, RrsConfig, RrsResult};
+pub use starfish::{starfish_tune, StarfishResult};

@@ -1,0 +1,198 @@
+//! PPABS-style baseline (Wu & Gokhale, HiPC'13), as described in the
+//! paper's §3 and §6.6:
+//!
+//! * **Offline** — profile a corpus of jobs on the live (simulated) system
+//!   to extract *signatures* (resource-utilization feature vectors),
+//!   cluster them with k-means, then find one tuned configuration per
+//!   cluster with simulated annealing over a *reduced* parameter space.
+//! * **Online** — assign a new job to the nearest cluster and run it with
+//!   that cluster's configuration.
+//!
+//! PPABS's two structural handicaps, which the paper's Fig. 9 exposes, are
+//! faithfully reproduced: the parameter-space reduction and the fact that a
+//! job gets its *cluster's* configuration, not its own optimum.
+
+use crate::cluster::ClusterSpec;
+use crate::config::ParameterSpace;
+use crate::sim::{simulate, SimOptions};
+use crate::whatif::ClusterFeatures;
+use crate::workloads::WorkloadProfile;
+
+use super::annealing::{simulated_annealing, SaConfig};
+use super::evaluator::RustWhatIf;
+use super::kmeans::{kmeans, nearest};
+
+/// The reduced parameter space PPABS tunes: io.sort.mb, spill.percent,
+/// sort.factor, shuffle.input.buffer.percent, inmem.merge.threshold and
+/// mapred.reduce.tasks; everything else stays at the default.
+pub fn reduced_mask(dim: usize) -> Vec<bool> {
+    let mut m = vec![false; dim];
+    for i in [0, 1, 2, 3, 5, 7] {
+        if i < dim {
+            m[i] = true;
+        }
+    }
+    m
+}
+
+/// A job signature: scale-free data-flow + CPU features (what PPABS mines
+/// from job history logs).
+pub fn signature(w: &WorkloadProfile) -> Vec<f64> {
+    vec![
+        w.map_selectivity_bytes.min(4.0) / 4.0,
+        (w.map_selectivity_records.min(16.0)) / 16.0,
+        w.combiner_reduction,
+        w.reduce_selectivity_bytes.min(2.0) / 2.0,
+        w.compress_ratio,
+        (w.map_cpu_ops_per_record.max(1.0).ln()) / 10.0,
+        (w.reduce_cpu_ops_per_record.max(1.0).ln()) / 10.0,
+        (w.partition_skew.min(5.0) - 1.0) / 4.0,
+    ]
+}
+
+/// The trained PPABS system.
+pub struct Ppabs {
+    pub space: ParameterSpace,
+    pub centroids: Vec<Vec<f64>>,
+    /// Tuned θ_A per cluster.
+    pub cluster_theta: Vec<Vec<f64>>,
+    /// Simulated seconds spent profiling the training corpus.
+    pub profiling_overhead_s: f64,
+    pub model_evals: u64,
+}
+
+impl Ppabs {
+    /// Offline phase: profile `corpus` jobs, cluster signatures, anneal one
+    /// configuration per cluster.
+    pub fn train(
+        space: &ParameterSpace,
+        cluster_spec: &ClusterSpec,
+        corpus: &[WorkloadProfile],
+        k: usize,
+        seed: u64,
+    ) -> Ppabs {
+        assert!(!corpus.is_empty());
+        let version = space.version;
+
+        // 1. profile every corpus job once (live-system overhead)
+        let mut profiling = 0.0;
+        for (i, w) in corpus.iter().enumerate() {
+            let run = simulate(
+                cluster_spec,
+                &space.default_config(),
+                w,
+                &SimOptions { seed: seed ^ (i as u64 + 1), noise: true },
+            );
+            profiling += run.exec_time_s;
+        }
+
+        // 2. cluster signatures
+        let sigs: Vec<Vec<f64>> = corpus.iter().map(signature).collect();
+        let km = kmeans(&sigs, k, 100, seed);
+
+        // 3. per-cluster SA over the reduced space on a representative
+        //    member (the job nearest the centroid)
+        let mut cluster_theta = Vec::new();
+        let mut model_evals = 0;
+        for (ci, centroid) in km.centroids.iter().enumerate() {
+            let rep = sigs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| km.assignment[*i] == ci)
+                .min_by(|(_, a), (_, b)| {
+                    let da: f64 = a.iter().zip(centroid).map(|(x, y)| (x - y) * (x - y)).sum();
+                    let db: f64 = b.iter().zip(centroid).map(|(x, y)| (x - y) * (x - y)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let mut evaluator = RustWhatIf::new(
+                space.clone(),
+                corpus[rep].clone(),
+                ClusterFeatures::from_spec(cluster_spec, version),
+            );
+            let sa_cfg = SaConfig {
+                active: Some(reduced_mask(space.dim())),
+                seed: seed ^ (0xA5A5 + ci as u64),
+                ..Default::default()
+            };
+            let res =
+                simulated_annealing(&mut evaluator, space.default_theta(), &sa_cfg);
+            model_evals += res.evals;
+            cluster_theta.push(res.best_theta);
+        }
+
+        Ppabs {
+            space: space.clone(),
+            centroids: km.centroids,
+            cluster_theta,
+            profiling_overhead_s: profiling,
+            model_evals,
+        }
+    }
+
+    /// Online phase: configuration for a new job.
+    pub fn configure(&self, w: &WorkloadProfile) -> Vec<f64> {
+        let c = nearest(&self.centroids, &signature(w));
+        self.cluster_theta[c].clone()
+    }
+}
+
+/// Build the training corpus the paper's §6.6 describes ("we collect
+/// datasets as described in [32]"): the five benchmarks at several scales,
+/// profiled by really running them on sampled data.
+pub fn training_corpus(seed: u64) -> Vec<WorkloadProfile> {
+    use crate::workloads::Benchmark;
+    let mut rng = crate::util::rng::Rng::seeded(seed);
+    let mut corpus = Vec::new();
+    for b in Benchmark::all() {
+        for scale in [1u64, 4, 16] {
+            let target = b.paper_partial_bytes() / 8 * scale;
+            corpus.push(b.profile_scaled(512 << 10, target.max(64 << 20), &mut rng));
+        }
+    }
+    corpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workloads::Benchmark;
+
+    #[test]
+    fn signatures_separate_benchmark_families() {
+        let mut rng = Rng::seeded(5);
+        let tera = signature(&Benchmark::Terasort.profile_scaled(100_000, 1 << 30, &mut rng));
+        let grep = signature(&Benchmark::Grep.profile_scaled(100_000, 1 << 30, &mut rng));
+        let d2: f64 = tera.iter().zip(&grep).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(d2 > 0.05, "terasort and grep signatures too close: {d2}");
+    }
+
+    #[test]
+    fn reduced_mask_freezes_compression_flags() {
+        let m = reduced_mask(11);
+        assert!(m[0] && m[7]);
+        assert!(!m[9] && !m[10]);
+        assert_eq!(m.iter().filter(|&&b| b).count(), 6);
+    }
+
+    #[test]
+    fn train_and_configure_beats_default() {
+        let space = ParameterSpace::v2();
+        let cluster = ClusterSpec::paper_cluster();
+        let corpus = training_corpus(1);
+        let ppabs = Ppabs::train(&space, &cluster, &corpus, 3, 11);
+        assert_eq!(ppabs.cluster_theta.len(), ppabs.centroids.len());
+        assert!(ppabs.profiling_overhead_s > 0.0);
+
+        // a new terasort-like job
+        let mut rng = Rng::seeded(9);
+        let w = Benchmark::Terasort.profile_scaled(100_000, 8 << 30, &mut rng);
+        let theta = ppabs.configure(&w);
+        let opts = SimOptions { seed: 3, noise: false };
+        let f_def = simulate(&cluster, &space.default_config(), &w, &opts).exec_time_s;
+        let f_ppabs = simulate(&cluster, &space.materialize(&theta), &w, &opts).exec_time_s;
+        assert!(f_ppabs < f_def, "ppabs {f_ppabs} default {f_def}");
+    }
+}

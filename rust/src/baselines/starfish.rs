@@ -1,0 +1,104 @@
+//! Starfish-style baseline (Herodotou et al., CIDR'11), as described in the
+//! paper's §3: *profile → what-if engine → cost-based optimizer (RRS)*.
+//!
+//! * **Profiler** — runs the job once with the default configuration on the
+//!   live (simulated) cluster, instrumented; this is the expensive
+//!   profiling pass the paper's §6.8(6) measures in hours. We charge its
+//!   wall-clock as `profiling_overhead_s`.
+//! * **What-if engine** — the analytic cost model (rust or the AOT
+//!   JAX/Pallas artifact through PJRT).
+//! * **CBO** — recursive random search over the what-if surface.
+//!
+//! The deliberate model-vs-system gap means Starfish's chosen configuration
+//! is good but not optimal on the real system — the structural reason SPSA
+//! wins in Fig. 8 (see DESIGN.md §1).
+
+use crate::cluster::ClusterSpec;
+use crate::config::ParameterSpace;
+use crate::sim::{simulate, SimOptions};
+use crate::workloads::WorkloadProfile;
+
+use super::evaluator::CostEvaluator;
+use super::rrs::{rrs, RrsConfig, RrsResult};
+
+/// Result of a Starfish-style tuning pass.
+#[derive(Clone, Debug)]
+pub struct StarfishResult {
+    pub best_theta: Vec<f64>,
+    /// Model-predicted cost at the chosen configuration.
+    pub model_cost: f64,
+    /// Simulated seconds spent profiling (one default-config run).
+    pub profiling_overhead_s: f64,
+    /// What-if model evaluations consumed by the CBO.
+    pub model_evals: u64,
+}
+
+/// Run the Starfish pipeline. `evaluator` supplies the what-if engine
+/// (rust model or PJRT artifact); the profiler runs on the DES.
+pub fn starfish_tune(
+    space: &ParameterSpace,
+    cluster: &ClusterSpec,
+    workload: &WorkloadProfile,
+    evaluator: &mut dyn CostEvaluator,
+    rrs_cfg: &RrsConfig,
+    seed: u64,
+) -> StarfishResult {
+    // 1. profile: one instrumented run at the default configuration
+    let default_cfg = space.default_config();
+    let profile_run = simulate(
+        cluster,
+        &default_cfg,
+        workload,
+        &SimOptions { seed, noise: true },
+    );
+
+    // 2+3. what-if + CBO
+    let RrsResult { best_theta, best_cost, evals } = rrs(evaluator, rrs_cfg);
+
+    StarfishResult {
+        best_theta,
+        model_cost: best_cost,
+        profiling_overhead_s: profile_run.exec_time_s,
+        model_evals: evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::evaluator::RustWhatIf;
+    use crate::config::HadoopVersion;
+    use crate::util::rng::Rng;
+    use crate::whatif::ClusterFeatures;
+    use crate::workloads::Benchmark;
+
+    fn setup() -> (ParameterSpace, ClusterSpec, WorkloadProfile, RustWhatIf) {
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut rng = Rng::seeded(2);
+        let w = Benchmark::Terasort.profile_scaled(100_000, 8 << 30, &mut rng);
+        let eval = RustWhatIf::new(
+            space.clone(),
+            w.clone(),
+            ClusterFeatures::from_spec(&cluster, HadoopVersion::V1),
+        );
+        (space, cluster, w, eval)
+    }
+
+    #[test]
+    fn starfish_beats_default_on_live_system() {
+        let (space, cluster, w, mut eval) = setup();
+        let res = starfish_tune(&space, &cluster, &w, &mut eval, &RrsConfig::default(), 3);
+        let opts = SimOptions { seed: 77, noise: false };
+        let f_default =
+            simulate(&cluster, &space.default_config(), &w, &opts).exec_time_s;
+        let f_starfish =
+            simulate(&cluster, &space.materialize(&res.best_theta), &w, &opts).exec_time_s;
+        assert!(
+            f_starfish < f_default * 0.7,
+            "starfish {f_starfish} default {f_default}"
+        );
+        assert!(res.profiling_overhead_s > 0.0);
+        assert!(res.model_evals > 100);
+    }
+}

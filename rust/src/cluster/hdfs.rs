@@ -1,0 +1,137 @@
+//! HDFS model: files are split into blocks, blocks are placed on DataNodes
+//! with replication, and the scheduler asks for the locality of a split
+//! (node-local / rack-local / remote) — which decides whether a map task
+//! reads from local disk or across the network.
+
+use crate::util::rng::Rng;
+
+/// One HDFS block with its replica placement.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub id: u64,
+    pub size: u64,
+    /// Worker indices holding a replica.
+    pub replicas: Vec<u32>,
+}
+
+/// A file laid out on the simulated HDFS.
+#[derive(Clone, Debug)]
+pub struct HdfsFile {
+    pub name: String,
+    pub blocks: Vec<Block>,
+}
+
+impl HdfsFile {
+    pub fn total_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.size).sum()
+    }
+}
+
+/// NameNode-equivalent: block placement and lookup.
+#[derive(Clone, Debug)]
+pub struct Namenode {
+    workers: u32,
+    replication: u32,
+    next_block: u64,
+}
+
+impl Namenode {
+    pub fn new(workers: u32, replication: u32) -> Self {
+        assert!(workers >= 1);
+        Namenode { workers, replication: replication.clamp(1, workers), next_block: 0 }
+    }
+
+    /// Write a file of `bytes` split by `block_size`, choosing replica sets
+    /// round-robin with a random rotation (mirrors HDFS's pipeline
+    /// placement well enough for locality statistics).
+    pub fn create_file(&mut self, name: &str, bytes: u64, block_size: u64, rng: &mut Rng) -> HdfsFile {
+        assert!(block_size > 0);
+        let mut blocks = Vec::new();
+        let mut remaining = bytes;
+        while remaining > 0 {
+            let size = remaining.min(block_size);
+            let primary = rng.below(self.workers as u64) as u32;
+            let mut replicas = Vec::with_capacity(self.replication as usize);
+            for r in 0..self.replication {
+                replicas.push((primary + r) % self.workers);
+            }
+            blocks.push(Block { id: self.next_block, size, replicas });
+            self.next_block += 1;
+            remaining -= size;
+        }
+        HdfsFile { name: name.to_string(), blocks }
+    }
+
+    /// Is any replica of `block` on `worker`?
+    pub fn is_local(&self, block: &Block, worker: u32) -> bool {
+        block.replicas.contains(&worker)
+    }
+
+    /// Fraction of a file's blocks that have a replica on the given worker —
+    /// the expected data-local hit rate if all its splits ran there.
+    pub fn locality_fraction(&self, file: &HdfsFile, worker: u32) -> f64 {
+        if file.blocks.is_empty() {
+            return 0.0;
+        }
+        let hits = file.blocks.iter().filter(|b| self.is_local(b, worker)).count();
+        hits as f64 / file.blocks.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_file_into_blocks() {
+        let mut nn = Namenode::new(24, 2);
+        let mut rng = Rng::seeded(1);
+        let f = nn.create_file("input", 300 << 20, 128 << 20, &mut rng);
+        assert_eq!(f.blocks.len(), 3);
+        assert_eq!(f.blocks[0].size, 128 << 20);
+        assert_eq!(f.blocks[2].size, 44 << 20);
+        assert_eq!(f.total_bytes(), 300 << 20);
+    }
+
+    #[test]
+    fn replication_respected() {
+        let mut nn = Namenode::new(24, 2);
+        let mut rng = Rng::seeded(2);
+        let f = nn.create_file("x", 1 << 30, 128 << 20, &mut rng);
+        for b in &f.blocks {
+            assert_eq!(b.replicas.len(), 2);
+            assert_ne!(b.replicas[0], b.replicas[1]);
+            assert!(b.replicas.iter().all(|&w| w < 24));
+        }
+    }
+
+    #[test]
+    fn replication_clamped_to_workers() {
+        let nn = Namenode::new(2, 5);
+        assert_eq!(nn.replication, 2);
+    }
+
+    #[test]
+    fn locality_fraction_sane() {
+        let mut nn = Namenode::new(10, 2);
+        let mut rng = Rng::seeded(3);
+        let f = nn.create_file("y", 100 * (128 << 20), 128 << 20, &mut rng);
+        // With 100 blocks × 2 replicas over 10 workers, each worker holds
+        // ~20% of blocks.
+        let frac = nn.locality_fraction(&f, 0);
+        assert!(frac > 0.05 && frac < 0.45, "frac {frac}");
+    }
+
+    #[test]
+    fn block_ids_unique_across_files() {
+        let mut nn = Namenode::new(4, 1);
+        let mut rng = Rng::seeded(4);
+        let a = nn.create_file("a", 256 << 20, 128 << 20, &mut rng);
+        let b = nn.create_file("b", 256 << 20, 128 << 20, &mut rng);
+        let mut ids: Vec<u64> =
+            a.blocks.iter().chain(b.blocks.iter()).map(|x| x.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Simulated cluster substrate: topology (the paper's 25-node testbed),
+//! HDFS block placement, and shared-resource contention.
+
+pub mod hdfs;
+pub mod resources;
+pub mod topology;
+
+pub use hdfs::{Block, HdfsFile, Namenode};
+pub use resources::{transfer_time, Resource, ResourceTracker};
+pub use topology::{ClusterSpec, NodeSpec};

@@ -1,0 +1,156 @@
+//! Shared-resource contention model.
+//!
+//! Disk and NIC bandwidth on a node are shared by every concurrently-running
+//! task on it. The simulator uses a quasi-static processor-sharing
+//! approximation: a task's IO phase is priced at `bw / users` with `users`
+//! sampled when the phase starts. This captures the first-order effect the
+//! paper's knobs interact with (e.g. more reducers per node ⇒ slower
+//! per-reducer shuffle) without a full fluid-flow solver.
+
+use super::topology::ClusterSpec;
+
+/// Resource classes a task phase can occupy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resource {
+    Disk,
+    Net,
+    Cpu,
+}
+
+/// Tracks per-node active users of each resource class.
+#[derive(Clone, Debug)]
+pub struct ResourceTracker {
+    disk_users: Vec<u32>,
+    net_users: Vec<u32>,
+    cpu_users: Vec<u32>,
+    spec: ClusterSpec,
+}
+
+impl ResourceTracker {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let n = spec.workers() as usize;
+        ResourceTracker {
+            disk_users: vec![0; n],
+            net_users: vec![0; n],
+            cpu_users: vec![0; n],
+            spec: spec.clone(),
+        }
+    }
+
+    fn slot(&mut self, r: Resource) -> &mut Vec<u32> {
+        match r {
+            Resource::Disk => &mut self.disk_users,
+            Resource::Net => &mut self.net_users,
+            Resource::Cpu => &mut self.cpu_users,
+        }
+    }
+
+    pub fn acquire(&mut self, node: u32, r: Resource) {
+        let v = self.slot(r);
+        v[node as usize] += 1;
+    }
+
+    pub fn release(&mut self, node: u32, r: Resource) {
+        let v = self.slot(r);
+        debug_assert!(v[node as usize] > 0, "release without acquire");
+        v[node as usize] = v[node as usize].saturating_sub(1);
+    }
+
+    pub fn users(&self, node: u32, r: Resource) -> u32 {
+        match r {
+            Resource::Disk => self.disk_users[node as usize],
+            Resource::Net => self.net_users[node as usize],
+            Resource::Cpu => self.cpu_users[node as usize],
+        }
+    }
+
+    /// Effective disk bandwidth for one task on `node`, *including* itself
+    /// as a user (call after `acquire`).
+    pub fn disk_bw(&self, node: u32) -> f64 {
+        let users = self.disk_users[node as usize].max(1) as f64;
+        self.spec.node.disk_bw / users
+    }
+
+    /// Effective NIC bandwidth for one task on `node`.
+    pub fn net_bw(&self, node: u32) -> f64 {
+        let users = self.net_users[node as usize].max(1) as f64;
+        self.spec.node.net_bw / users
+    }
+
+    /// Effective CPU rate for one task on `node` — cores are dedicated up to
+    /// the core count, then shared.
+    pub fn cpu_rate(&self, node: u32) -> f64 {
+        let users = self.cpu_users[node as usize].max(1) as f64;
+        let cores = self.spec.node.cores as f64;
+        if users <= cores {
+            self.spec.node.cpu_ops_per_sec
+        } else {
+            self.spec.node.cpu_ops_per_sec * cores / users
+        }
+    }
+}
+
+/// RAII-free scoped helper: compute a transfer duration under current
+/// contention.
+pub fn transfer_time(bytes: u64, bw: f64) -> f64 {
+    if bw <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> ResourceTracker {
+        ResourceTracker::new(&ClusterSpec::tiny())
+    }
+
+    #[test]
+    fn bandwidth_divides_by_users() {
+        let mut t = tracker();
+        t.acquire(0, Resource::Disk);
+        let solo = t.disk_bw(0);
+        t.acquire(0, Resource::Disk);
+        t.acquire(0, Resource::Disk);
+        let shared = t.disk_bw(0);
+        assert!((solo / shared - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn release_restores() {
+        let mut t = tracker();
+        t.acquire(1, Resource::Net);
+        t.acquire(1, Resource::Net);
+        t.release(1, Resource::Net);
+        assert_eq!(t.users(1, Resource::Net), 1);
+    }
+
+    #[test]
+    fn cpu_free_until_core_count() {
+        let mut t = tracker();
+        let full = t.cpu_rate(0);
+        for _ in 0..8 {
+            t.acquire(0, Resource::Cpu);
+        }
+        assert_eq!(t.cpu_rate(0), full); // 8 users on 8 cores
+        t.acquire(0, Resource::Cpu);
+        assert!(t.cpu_rate(0) < full); // 9th shares
+    }
+
+    #[test]
+    fn nodes_are_independent() {
+        let mut t = tracker();
+        t.acquire(0, Resource::Disk);
+        t.acquire(0, Resource::Disk);
+        t.acquire(1, Resource::Disk);
+        assert!(t.disk_bw(1) > t.disk_bw(0));
+    }
+
+    #[test]
+    fn transfer_time_math() {
+        assert!((transfer_time(100, 50.0) - 2.0).abs() < 1e-12);
+        assert!(transfer_time(1, 0.0).is_infinite());
+    }
+}

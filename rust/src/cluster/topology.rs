@@ -1,0 +1,128 @@
+//! Cluster topology: the 25-node testbed of the paper's §6.2, generalized.
+//!
+//! One node acts as NameNode / ResourceManager (the paper runs the SPSA
+//! process there too); the rest are DataNodes with fixed map/reduce slots
+//! (v1) or an equivalent container capacity (v2 — the paper sets 3 map + 2
+//! reduce slots per node for both, which we mirror).
+
+/// Static description of one worker node.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    /// CPU throughput per core, in "record-cost units" per second. The
+    /// workload descriptors express map/reduce CPU cost in the same units,
+    /// so this calibrates absolute simulated times.
+    pub cpu_ops_per_sec: f64,
+    /// Cores available to tasks.
+    pub cores: u32,
+    /// Sequential disk bandwidth in bytes/s (shared by all tasks on the node).
+    pub disk_bw: f64,
+    /// NIC bandwidth in bytes/s (full duplex, shared).
+    pub net_bw: f64,
+    /// Memory per node in bytes.
+    pub memory: u64,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        // Paper §6.2: 8-core Xeon E3 2.5 GHz, 16 GB RAM, HDD, 1 GbE.
+        NodeSpec {
+            cpu_ops_per_sec: 2.0e8,
+            cores: 8,
+            disk_bw: 120.0e6,  // ~120 MB/s HDD sequential
+            net_bw: 117.0e6,   // ~1 GbE effective
+            memory: 16 << 30,
+        }
+    }
+}
+
+/// Whole-cluster specification.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Total nodes including the master.
+    pub nodes: u32,
+    /// Map slots per worker node (paper: 3).
+    pub map_slots_per_node: u32,
+    /// Reduce slots per worker node (paper: 2).
+    pub reduce_slots_per_node: u32,
+    pub node: NodeSpec,
+}
+
+impl ClusterSpec {
+    /// The paper's 25-node cluster (§6.2).
+    pub fn paper_cluster() -> Self {
+        ClusterSpec {
+            nodes: 25,
+            map_slots_per_node: 3,
+            reduce_slots_per_node: 2,
+            node: NodeSpec::default(),
+        }
+    }
+
+    /// A reduced cluster for fast unit tests.
+    pub fn tiny() -> Self {
+        ClusterSpec {
+            nodes: 3,
+            map_slots_per_node: 2,
+            reduce_slots_per_node: 1,
+            node: NodeSpec::default(),
+        }
+    }
+
+    /// Worker (DataNode) count: one node is the dedicated master.
+    pub fn workers(&self) -> u32 {
+        self.nodes.saturating_sub(1).max(1)
+    }
+
+    /// Cluster-wide map slots: paper §6.2 — 24 × 3 = 72.
+    pub fn total_map_slots(&self) -> u32 {
+        self.workers() * self.map_slots_per_node
+    }
+
+    /// Cluster-wide reduce slots: paper §6.2 — 24 × 2 = 48.
+    pub fn total_reduce_slots(&self) -> u32 {
+        self.workers() * self.reduce_slots_per_node
+    }
+
+    /// The paper's partial-workload sizing rule (§6.4): twice the number of
+    /// map slots times the HDFS block size ⇒ exactly two waves of maps.
+    pub fn partial_workload_bytes(&self, dfs_block_size: u64) -> u64 {
+        2 * self.total_map_slots() as u64 * dfs_block_size
+    }
+
+    /// Cross-rack aggregate network bisection (bytes/s). Single-switch
+    /// fabric: bounded by the sum of NIC bandwidths on either side.
+    pub fn bisection_bw(&self) -> f64 {
+        self.workers() as f64 * self.node.net_bw / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_slot_math() {
+        let c = ClusterSpec::paper_cluster();
+        assert_eq!(c.workers(), 24);
+        assert_eq!(c.total_map_slots(), 72);
+        assert_eq!(c.total_reduce_slots(), 48);
+    }
+
+    #[test]
+    fn partial_workload_is_two_waves() {
+        let c = ClusterSpec::paper_cluster();
+        let block = 128u64 << 20;
+        let bytes = c.partial_workload_bytes(block);
+        assert_eq!(bytes, 2 * 72 * block);
+        // Two waves: splits == 2 × slots
+        assert_eq!(bytes / block, 144);
+    }
+
+    #[test]
+    fn tiny_cluster_nonzero() {
+        let c = ClusterSpec::tiny();
+        assert!(c.total_map_slots() > 0);
+        assert!(c.total_reduce_slots() > 0);
+        assert!(c.bisection_bw() > 0.0);
+    }
+}

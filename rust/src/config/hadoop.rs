@@ -1,0 +1,300 @@
+//! Typed Hadoop job configuration — the θ_H the simulator consumes.
+//!
+//! `HadoopConfig` carries the 11 tuned knobs (per version) plus the fixed
+//! framework constants the paper does not tune (JVM heap sizes, replication)
+//! so the simulator reads everything from one place.
+
+use super::param::ParamValue;
+use super::space::*;
+
+/// Which MapReduce architecture is simulated (paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HadoopVersion {
+    /// MapReduce v1: JobTracker/TaskTracker, fixed map/reduce slots.
+    V1,
+    /// YARN: ResourceManager/NodeManager, containers, slowstart/JVM reuse.
+    V2,
+}
+
+impl HadoopVersion {
+    pub fn label(&self) -> &'static str {
+        match self {
+            HadoopVersion::V1 => "v1.0.3",
+            HadoopVersion::V2 => "v2.6.3",
+        }
+    }
+}
+
+impl std::fmt::Display for HadoopVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// OS-layer tunables (paper §7 future work: "the SPSA algorithm based
+/// tuning can include parameters from other layers such OS, System,
+/// Hardware" — the *holistic* space). Defaults are stock Linux values;
+/// the extended parameter space (`ParameterSpace::extended`) exposes them
+/// to the tuner. The what-if cost model deliberately cannot see them —
+/// model-based tuners don't cross the OS boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OsTuning {
+    /// Block-device readahead in KB (`blockdev --setra`); helps sequential
+    /// reads up to a point, thrashes the page cache when oversized under
+    /// concurrency.
+    pub readahead_kb: u64,
+    /// TCP receive buffer ceiling in KB (`net.core.rmem_max`); caps the
+    /// effective per-flow bandwidth at window/RTT.
+    pub net_rmem_kb: u64,
+    /// `vm.dirty_ratio`-style writeback threshold in (0,1); absorbs small
+    /// spill bursts but causes writeback storms when too high.
+    pub dirty_ratio: f64,
+}
+
+impl Default for OsTuning {
+    fn default() -> Self {
+        OsTuning { readahead_kb: 128, net_rmem_kb: 208, dirty_ratio: 0.2 }
+    }
+}
+
+impl OsTuning {
+    /// Sequential-read throughput multiplier from readahead (≥ 1, saturates
+    /// ~1.3× at 4 MB, degrades slightly beyond from cache pressure).
+    pub fn readahead_boost(&self) -> f64 {
+        let steps = (self.readahead_kb.max(128) as f64 / 128.0).log2();
+        let boost = 1.0 + 0.06 * steps.min(5.0);
+        if self.readahead_kb > 4096 {
+            boost - 0.04 * ((self.readahead_kb as f64 / 4096.0).log2())
+        } else {
+            boost
+        }
+        .max(1.0)
+    }
+
+    /// Per-flow bandwidth ceiling from the TCP window (bytes/s, 2 ms RTT).
+    pub fn net_window_bw(&self) -> f64 {
+        (self.net_rmem_kb as f64 * 1024.0) / 0.002
+    }
+
+    /// Multiplier on the per-spill-file constant cost: page-cache
+    /// absorption vs writeback storms — optimum near dirty_ratio ≈ 0.6.
+    pub fn spill_overhead_factor(&self) -> f64 {
+        let d = self.dirty_ratio.clamp(0.0, 1.0);
+        (1.0 - 0.6 * d + 0.5 * d * d).max(0.2)
+    }
+}
+
+/// A fully-materialized Hadoop configuration (θ_H plus fixed constants).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HadoopConfig {
+    pub version: HadoopVersion,
+
+    // -- tuned, common to both versions ------------------------------------
+    /// io.sort.mb — map-side sort buffer (MB).
+    pub io_sort_mb: u64,
+    /// io.sort.spill.percent — buffer fraction triggering a spill.
+    pub spill_percent: f64,
+    /// io.sort.factor — streams merged per merge round.
+    pub sort_factor: u64,
+    /// shuffle.input.buffer.percent — reducer heap fraction for shuffle.
+    pub shuffle_input_buffer_percent: f64,
+    /// shuffle.merge.percent — shuffle buffer fill fraction forcing merge.
+    pub shuffle_merge_percent: f64,
+    /// inmem.merge.threshold — in-memory segment count forcing merge.
+    pub inmem_merge_threshold: u64,
+    /// reduce.input.buffer.percent — heap fraction retaining map output
+    /// during the reduce function itself.
+    pub reduce_input_buffer_percent: f64,
+    /// mapred.reduce.tasks — number of reducers.
+    pub reduce_tasks: u64,
+
+    // -- tuned, v1 only -----------------------------------------------------
+    /// io.sort.record.percent — metadata share of the sort buffer.
+    pub sort_record_percent: f64,
+    /// mapred.compress.map.output.
+    pub compress_map_output: bool,
+    /// mapred.output.compress.
+    pub output_compress: bool,
+
+    // -- tuned, v2 only -----------------------------------------------------
+    /// reduce.slowstart.completedmaps.
+    pub slowstart: f64,
+    /// mapreduce.job.jvm.numtasks (JVM reuse).
+    pub jvm_numtasks: u64,
+    /// mapreduce.job.maps (map-count hint).
+    pub job_maps: u64,
+
+    // -- fixed framework constants (not tuned; paper §6.2 cluster) ----------
+    /// HDFS block size in bytes (128 MB).
+    pub dfs_block_size: u64,
+    /// Reducer task heap in bytes (1 GB) — basis of the *.percent knobs.
+    pub reduce_task_heap: u64,
+    /// HDFS replication factor (paper: 2).
+    pub dfs_replication: u64,
+
+    /// OS-layer tunables (defaults unless the extended space is used).
+    pub os: OsTuning,
+}
+
+impl HadoopConfig {
+    /// Assemble from the ordered value vector produced by
+    /// [`ParameterSpace::to_hadoop_values`].
+    pub fn from_values(version: HadoopVersion, vals: &[ParamValue]) -> Self {
+        assert_eq!(vals.len(), N_PARAMS);
+        let mut c = HadoopConfig {
+            version,
+            io_sort_mb: vals[P_IO_SORT_MB].as_i64() as u64,
+            spill_percent: vals[P_SPILL_PERCENT].as_f64(),
+            sort_factor: vals[P_SORT_FACTOR].as_i64().max(2) as u64,
+            shuffle_input_buffer_percent: vals[P_SHUFFLE_INPUT_BUFFER].as_f64(),
+            shuffle_merge_percent: vals[P_SHUFFLE_MERGE_PERCENT].as_f64(),
+            inmem_merge_threshold: vals[P_INMEM_MERGE_THRESHOLD].as_i64().max(2) as u64,
+            reduce_input_buffer_percent: vals[P_REDUCE_INPUT_BUFFER].as_f64(),
+            reduce_tasks: vals[P_REDUCE_TASKS].as_i64().max(1) as u64,
+            // version-specific tails filled below
+            sort_record_percent: 0.05,
+            compress_map_output: false,
+            output_compress: false,
+            slowstart: 0.05,
+            jvm_numtasks: 1,
+            job_maps: 2,
+            dfs_block_size: 128 << 20,
+            reduce_task_heap: 1 << 30,
+            dfs_replication: 2,
+            os: OsTuning::default(),
+        };
+        match version {
+            HadoopVersion::V1 => {
+                c.sort_record_percent = vals[P_SORT_RECORD_PERCENT].as_f64();
+                c.compress_map_output = vals[P_COMPRESS_MAP_OUTPUT].as_bool();
+                c.output_compress = vals[P_OUTPUT_COMPRESS].as_bool();
+            }
+            HadoopVersion::V2 => {
+                c.slowstart = vals[P_SLOWSTART].as_f64();
+                c.jvm_numtasks = vals[P_JVM_NUMTASKS].as_i64().max(1) as u64;
+                c.job_maps = vals[P_JOB_MAPS].as_i64().max(1) as u64;
+            }
+        }
+        c
+    }
+
+    /// Map-side sort buffer in bytes.
+    pub fn sort_buffer_bytes(&self) -> u64 {
+        self.io_sort_mb << 20
+    }
+
+    /// Bytes of the sort buffer available for record *data* (v1 splits the
+    /// buffer into data + record-metadata regions via io.sort.record.percent;
+    /// v2 accounts metadata inline, modelled as a fixed 5 % overhead).
+    pub fn sort_buffer_data_bytes(&self) -> u64 {
+        let frac = match self.version {
+            HadoopVersion::V1 => 1.0 - self.sort_record_percent,
+            HadoopVersion::V2 => 0.95,
+        };
+        (self.sort_buffer_bytes() as f64 * frac) as u64
+    }
+
+    /// Record-metadata capacity of the sort buffer, in records. Each record
+    /// costs 16 bytes of accounting space in v1.
+    pub fn sort_buffer_record_capacity(&self) -> u64 {
+        match self.version {
+            HadoopVersion::V1 => {
+                ((self.sort_buffer_bytes() as f64 * self.sort_record_percent) / 16.0) as u64
+            }
+            // v2: accounting space is carved per-record from the same
+            // buffer; effectively bounded by data capacity / 16.
+            HadoopVersion::V2 => self.sort_buffer_bytes() / 16,
+        }
+        .max(1)
+    }
+
+    /// Shuffle buffer capacity in bytes on a reducer.
+    pub fn shuffle_buffer_bytes(&self) -> u64 {
+        (self.reduce_task_heap as f64 * self.shuffle_input_buffer_percent) as u64
+    }
+
+    /// Effective slowstart fraction (v1 has the fixed Hadoop default 0.05).
+    pub fn effective_slowstart(&self) -> f64 {
+        match self.version {
+            HadoopVersion::V1 => 0.05,
+            HadoopVersion::V2 => self.slowstart,
+        }
+    }
+
+    /// Effective JVM-reuse count (v1: one task per JVM).
+    pub fn effective_jvm_reuse(&self) -> u64 {
+        match self.version {
+            HadoopVersion::V1 => 1,
+            HadoopVersion::V2 => self.jvm_numtasks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::ParameterSpace;
+
+    #[test]
+    fn default_v1_config_fields() {
+        let c = ParameterSpace::v1().default_config();
+        assert_eq!(c.version, HadoopVersion::V1);
+        assert_eq!(c.io_sort_mb, 100);
+        assert_eq!(c.reduce_tasks, 1);
+        assert!((c.sort_record_percent - 0.05).abs() < 1e-9);
+        assert_eq!(c.effective_jvm_reuse(), 1);
+        assert!((c.effective_slowstart() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_v2_config_fields() {
+        let c = ParameterSpace::v2().default_config();
+        assert_eq!(c.version, HadoopVersion::V2);
+        assert_eq!(c.jvm_numtasks, 1);
+        assert_eq!(c.job_maps, 2);
+        assert!((c.slowstart - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buffer_byte_math() {
+        let mut c = ParameterSpace::v1().default_config();
+        c.io_sort_mb = 100;
+        c.sort_record_percent = 0.05;
+        assert_eq!(c.sort_buffer_bytes(), 100 << 20);
+        let data = c.sort_buffer_data_bytes();
+        assert!(data < c.sort_buffer_bytes());
+        assert!((data as f64 / c.sort_buffer_bytes() as f64 - 0.95).abs() < 1e-6);
+        // 5 MB of accounting space at 16 B/record
+        assert_eq!(c.sort_buffer_record_capacity(), (5 << 20) / 16);
+    }
+
+    #[test]
+    fn shuffle_buffer_follows_percent() {
+        let mut c = ParameterSpace::v2().default_config();
+        c.shuffle_input_buffer_percent = 0.5;
+        assert_eq!(c.shuffle_buffer_bytes(), (1u64 << 30) / 2);
+    }
+
+    #[test]
+    fn guards_against_degenerate_values() {
+        // Even if the raw vector carries zeros, the config clamps to sane
+        // minima (merge factor ≥ 2, ≥ 1 reducer).
+        let vals = vec![
+            ParamValue::Int(50),
+            ParamValue::Real(0.05),
+            ParamValue::Int(0),
+            ParamValue::Real(0.1),
+            ParamValue::Real(0.1),
+            ParamValue::Int(0),
+            ParamValue::Real(0.0),
+            ParamValue::Int(0),
+            ParamValue::Real(0.01),
+            ParamValue::Bool(false),
+            ParamValue::Bool(false),
+        ];
+        let c = HadoopConfig::from_values(HadoopVersion::V1, &vals);
+        assert!(c.sort_factor >= 2);
+        assert!(c.inmem_merge_threshold >= 2);
+        assert!(c.reduce_tasks >= 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Hadoop parameter model: specs (§5.1), the tunable spaces of the paper's
+//! Table 1 for Hadoop v1 and v2, and the typed configuration the simulator
+//! consumes.
+
+pub mod hadoop;
+pub mod param;
+pub mod space;
+
+pub use hadoop::{HadoopConfig, HadoopVersion};
+pub use param::{ParamKind, ParamSpec, ParamValue};
+pub use space::{ParameterSpace, N_PARAMS};

@@ -1,0 +1,213 @@
+//! Parameter specifications: one [`ParamSpec`] per Hadoop knob, with the
+//! min / max / default triple the paper's §5.1 mapping μ is built on.
+
+/// How a Hadoop parameter value is typed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Integer-valued: μ floors the affine map (paper §5.1).
+    Int,
+    /// Real-valued: μ is the plain affine map.
+    Real,
+    /// Boolean: thresholded at 0.5 in algorithm space.
+    Bool,
+}
+
+/// A concrete Hadoop parameter value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    Real(f64),
+    Bool(bool),
+}
+
+impl ParamValue {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            ParamValue::Int(v) => *v as f64,
+            ParamValue::Real(v) => *v,
+            ParamValue::Bool(b) => {
+                if *b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            ParamValue::Int(v) => *v,
+            ParamValue::Real(v) => *v as i64,
+            ParamValue::Bool(b) => *b as i64,
+        }
+    }
+
+    pub fn as_bool(&self) -> bool {
+        match self {
+            ParamValue::Bool(b) => *b,
+            ParamValue::Int(v) => *v != 0,
+            ParamValue::Real(v) => *v >= 0.5,
+        }
+    }
+
+    /// Table-friendly rendering (matches the paper's Table 1 style).
+    pub fn display(&self) -> String {
+        match self {
+            ParamValue::Int(v) => format!("{v}"),
+            ParamValue::Real(v) => format!("{v:.2}"),
+            ParamValue::Bool(b) => format!("{b}"),
+        }
+    }
+}
+
+/// Specification of one tunable Hadoop parameter.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    /// Short name as used in the paper's Table 1 (e.g. "io.sort.mb").
+    pub name: &'static str,
+    pub kind: ParamKind,
+    /// Minimum of the Hadoop-value range S_i.
+    pub min: f64,
+    /// Maximum of the Hadoop-value range S_i.
+    pub max: f64,
+    /// Hadoop's default value θ_H^d(i).
+    pub default: f64,
+    /// One-line description for --help / docs.
+    pub doc: &'static str,
+}
+
+impl ParamSpec {
+    pub const fn new(
+        name: &'static str,
+        kind: ParamKind,
+        min: f64,
+        max: f64,
+        default: f64,
+        doc: &'static str,
+    ) -> Self {
+        ParamSpec { name, kind, min, max, default, doc }
+    }
+
+    /// Width of the Hadoop range (max − min); the paper's perturbation and
+    /// minimum-useful-step scale is 1/width.
+    pub fn width(&self) -> f64 {
+        self.max - self.min
+    }
+
+    /// The paper's μ for this coordinate: affine map from algorithm space
+    /// [0,1] into the Hadoop range, floored for integers, thresholded for
+    /// booleans.
+    pub fn to_hadoop(&self, theta_a: f64) -> ParamValue {
+        let t = theta_a.clamp(0.0, 1.0);
+        match self.kind {
+            ParamKind::Int => {
+                let v = (self.width() * t + self.min).floor();
+                ParamValue::Int(v.clamp(self.min, self.max) as i64)
+            }
+            ParamKind::Real => ParamValue::Real(self.width() * t + self.min),
+            ParamKind::Bool => ParamValue::Bool(t >= 0.5),
+        }
+    }
+
+    /// Inverse of μ (used to seed SPSA at the default configuration):
+    /// maps a Hadoop value back into [0,1].
+    pub fn to_algo(&self, hadoop_value: f64) -> f64 {
+        match self.kind {
+            ParamKind::Bool => {
+                if hadoop_value >= 0.5 {
+                    0.75
+                } else {
+                    0.25
+                }
+            }
+            _ => {
+                if self.width() <= 0.0 {
+                    0.0
+                } else {
+                    ((hadoop_value - self.min) / self.width()).clamp(0.0, 1.0)
+                }
+            }
+        }
+    }
+
+    /// Default position in algorithm space.
+    pub fn default_algo(&self) -> f64 {
+        self.to_algo(self.default)
+    }
+
+    pub fn default_value(&self) -> ParamValue {
+        match self.kind {
+            ParamKind::Int => ParamValue::Int(self.default as i64),
+            ParamKind::Real => ParamValue::Real(self.default),
+            ParamKind::Bool => ParamValue::Bool(self.default >= 0.5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn int_spec() -> ParamSpec {
+        ParamSpec::new("io.sort.mb", ParamKind::Int, 50.0, 2000.0, 100.0, "")
+    }
+
+    fn real_spec() -> ParamSpec {
+        ParamSpec::new("spill", ParamKind::Real, 0.05, 0.95, 0.8, "")
+    }
+
+    fn bool_spec() -> ParamSpec {
+        ParamSpec::new("compress", ParamKind::Bool, 0.0, 1.0, 0.0, "")
+    }
+
+    #[test]
+    fn mu_endpoints_int() {
+        let s = int_spec();
+        assert_eq!(s.to_hadoop(0.0), ParamValue::Int(50));
+        assert_eq!(s.to_hadoop(1.0), ParamValue::Int(2000));
+    }
+
+    #[test]
+    fn mu_floors_int() {
+        let s = ParamSpec::new("x", ParamKind::Int, 0.0, 10.0, 0.0, "");
+        assert_eq!(s.to_hadoop(0.55), ParamValue::Int(5)); // floor(5.5)
+    }
+
+    #[test]
+    fn mu_real_affine() {
+        let s = real_spec();
+        let v = s.to_hadoop(0.5);
+        assert!((v.as_f64() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mu_clamps_out_of_range() {
+        let s = real_spec();
+        assert!((s.to_hadoop(-0.5).as_f64() - 0.05).abs() < 1e-12);
+        assert!((s.to_hadoop(1.5).as_f64() - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bool_threshold() {
+        let s = bool_spec();
+        assert!(!s.to_hadoop(0.49).as_bool());
+        assert!(s.to_hadoop(0.5).as_bool());
+    }
+
+    #[test]
+    fn inverse_roundtrip_real() {
+        let s = real_spec();
+        for t in [0.0, 0.3, 0.77, 1.0] {
+            let h = s.to_hadoop(t).as_f64();
+            assert!((s.to_algo(h) - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn default_algo_maps_back_to_default() {
+        let s = int_spec();
+        let v = s.to_hadoop(s.default_algo());
+        assert_eq!(v, ParamValue::Int(100));
+    }
+}

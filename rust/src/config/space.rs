@@ -1,0 +1,413 @@
+//! The tunable parameter spaces: 11 parameters for Hadoop v1 and 11 for
+//! Hadoop v2, exactly the sets of the paper's Table 1 (the v2 space swaps
+//! the three v1-only knobs for `reduce.slowstart.completedmaps`,
+//! `jvm.numtasks` and `job.maps`).
+//!
+//! The space owns the paper's §5.1 mapping μ : [0,1]^n → S₁ × … × Sₙ and the
+//! §5.2 perturbation scaling δΔ(i) = ±1/(θ_H^max(i) − θ_H^min(i)).
+
+use super::hadoop::{HadoopConfig, HadoopVersion};
+use super::param::{ParamKind, ParamSpec, ParamValue};
+use crate::util::rng::Rng;
+
+/// Parameter indices shared by both versions (first 8 coordinates).
+pub const P_IO_SORT_MB: usize = 0;
+pub const P_SPILL_PERCENT: usize = 1;
+pub const P_SORT_FACTOR: usize = 2;
+pub const P_SHUFFLE_INPUT_BUFFER: usize = 3;
+pub const P_SHUFFLE_MERGE_PERCENT: usize = 4;
+pub const P_INMEM_MERGE_THRESHOLD: usize = 5;
+pub const P_REDUCE_INPUT_BUFFER: usize = 6;
+pub const P_REDUCE_TASKS: usize = 7;
+/// v1-only tail.
+pub const P_SORT_RECORD_PERCENT: usize = 8;
+pub const P_COMPRESS_MAP_OUTPUT: usize = 9;
+pub const P_OUTPUT_COMPRESS: usize = 10;
+/// v2-only tail.
+pub const P_SLOWSTART: usize = 8;
+pub const P_JVM_NUMTASKS: usize = 9;
+pub const P_JOB_MAPS: usize = 10;
+
+/// Number of tuned parameters (both versions).
+pub const N_PARAMS: usize = 11;
+
+fn common_params() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec::new(
+            "io.sort.mb",
+            ParamKind::Int,
+            50.0,
+            2000.0,
+            100.0,
+            "map-side circular sort buffer size (MB)",
+        ),
+        ParamSpec::new(
+            "io.sort.spill.percent",
+            ParamKind::Real,
+            0.05,
+            0.95,
+            0.08,
+            "buffer fill fraction that triggers a spill (paper Table 1 default)",
+        ),
+        ParamSpec::new(
+            "io.sort.factor",
+            ParamKind::Int,
+            5.0,
+            500.0,
+            10.0,
+            "number of streams merged at once during sorts",
+        ),
+        ParamSpec::new(
+            "shuffle.input.buffer.percent",
+            ParamKind::Real,
+            0.1,
+            0.95,
+            0.7,
+            "fraction of reducer heap for holding fetched map outputs",
+        ),
+        ParamSpec::new(
+            "shuffle.merge.percent",
+            ParamKind::Real,
+            0.1,
+            0.95,
+            0.66,
+            "shuffle-buffer fill fraction that triggers in-memory merge",
+        ),
+        ParamSpec::new(
+            "inmem.merge.threshold",
+            ParamKind::Int,
+            10.0,
+            10000.0,
+            1000.0,
+            "number of in-memory map outputs that triggers merge",
+        ),
+        ParamSpec::new(
+            "reduce.input.buffer.percent",
+            ParamKind::Real,
+            0.0,
+            0.8,
+            0.0,
+            "fraction of heap to retain map outputs during reduce",
+        ),
+        ParamSpec::new(
+            "mapred.reduce.tasks",
+            ParamKind::Int,
+            1.0,
+            100.0,
+            1.0,
+            "number of reduce tasks for the job",
+        ),
+    ]
+}
+
+fn v1_params() -> Vec<ParamSpec> {
+    let mut p = common_params();
+    p.push(ParamSpec::new(
+        "io.sort.record.percent",
+        ParamKind::Real,
+        0.01,
+        0.5,
+        0.05,
+        "fraction of sort buffer reserved for record metadata (v1)",
+    ));
+    p.push(ParamSpec::new(
+        "mapred.compress.map.output",
+        ParamKind::Bool,
+        0.0,
+        1.0,
+        0.0,
+        "compress intermediate map output",
+    ));
+    p.push(ParamSpec::new(
+        "mapred.output.compress",
+        ParamKind::Bool,
+        0.0,
+        1.0,
+        0.0,
+        "compress final job output",
+    ));
+    p
+}
+
+fn v2_params() -> Vec<ParamSpec> {
+    let mut p = common_params();
+    p.push(ParamSpec::new(
+        "reduce.slowstart.completedmaps",
+        ParamKind::Real,
+        0.0,
+        1.0,
+        0.05,
+        "map-completion fraction before reducers may start (v2)",
+    ));
+    p.push(ParamSpec::new(
+        "mapreduce.job.jvm.numtasks",
+        ParamKind::Int,
+        1.0,
+        30.0,
+        1.0,
+        "tasks per JVM before it is recycled (v2)",
+    ));
+    p.push(ParamSpec::new(
+        "mapreduce.job.maps",
+        ParamKind::Int,
+        2.0,
+        50.0,
+        2.0,
+        "hint for the number of map tasks (v2)",
+    ));
+    p
+}
+
+/// OS-layer extension parameters (paper §7 future work; appended after the
+/// 11 Hadoop knobs when [`ParameterSpace::extended`] is used).
+fn os_params() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec::new(
+            "os.readahead.kb",
+            ParamKind::Int,
+            128.0,
+            8192.0,
+            128.0,
+            "block-device readahead (blockdev --setra), KB",
+        ),
+        ParamSpec::new(
+            "os.net.rmem.kb",
+            ParamKind::Int,
+            64.0,
+            16384.0,
+            208.0,
+            "TCP receive buffer ceiling (net.core.rmem_max), KB",
+        ),
+        ParamSpec::new(
+            "os.dirty.ratio",
+            ParamKind::Real,
+            0.05,
+            0.9,
+            0.2,
+            "writeback threshold (vm.dirty_ratio analogue)",
+        ),
+    ]
+}
+
+/// Number of OS-extension parameters.
+pub const N_OS_PARAMS: usize = 3;
+
+/// A full tunable space: the ordered parameter list for one Hadoop version,
+/// optionally extended with the OS layer (paper §7's holistic tuning).
+#[derive(Clone, Debug)]
+pub struct ParameterSpace {
+    pub version: HadoopVersion,
+    /// True when the 3 OS-layer knobs are appended (dim 14 instead of 11).
+    pub extended: bool,
+    params: Vec<ParamSpec>,
+}
+
+impl ParameterSpace {
+    pub fn for_version(version: HadoopVersion) -> Self {
+        let params = match version {
+            HadoopVersion::V1 => v1_params(),
+            HadoopVersion::V2 => v2_params(),
+        };
+        debug_assert_eq!(params.len(), N_PARAMS);
+        ParameterSpace { version, extended: false, params }
+    }
+
+    /// The holistic space: Hadoop + OS layers (14 parameters).
+    pub fn extended(version: HadoopVersion) -> Self {
+        let mut s = Self::for_version(version);
+        s.params.extend(os_params());
+        s.extended = true;
+        s
+    }
+
+    pub fn v1() -> Self {
+        Self::for_version(HadoopVersion::V1)
+    }
+
+    pub fn v2() -> Self {
+        Self::for_version(HadoopVersion::V2)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn spec(&self, i: usize) -> &ParamSpec {
+        &self.params[i]
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.params.iter().map(|p| p.name).collect()
+    }
+
+    /// θ_A for Hadoop's default configuration — SPSA's starting point
+    /// (paper §6.5: "we use the default configuration as the initial point").
+    pub fn default_theta(&self) -> Vec<f64> {
+        self.params.iter().map(|p| p.default_algo()).collect()
+    }
+
+    /// μ(θ_A): materialize an algorithm-space point into Hadoop values.
+    pub fn to_hadoop_values(&self, theta: &[f64]) -> Vec<ParamValue> {
+        assert_eq!(theta.len(), self.dim(), "theta dimension mismatch");
+        self.params
+            .iter()
+            .zip(theta)
+            .map(|(p, &t)| p.to_hadoop(t))
+            .collect()
+    }
+
+    /// μ(θ_A) into the typed config consumed by the simulator. For the
+    /// extended space the tail values populate [`crate::config::hadoop::OsTuning`].
+    pub fn materialize(&self, theta: &[f64]) -> HadoopConfig {
+        let vals = self.to_hadoop_values(theta);
+        let mut cfg = HadoopConfig::from_values(self.version, &vals[..N_PARAMS]);
+        if self.extended {
+            cfg.os.readahead_kb = vals[N_PARAMS].as_i64().max(128) as u64;
+            cfg.os.net_rmem_kb = vals[N_PARAMS + 1].as_i64().max(64) as u64;
+            cfg.os.dirty_ratio = vals[N_PARAMS + 2].as_f64();
+        }
+        cfg
+    }
+
+    /// The default Hadoop configuration.
+    pub fn default_config(&self) -> HadoopConfig {
+        self.materialize(&self.default_theta())
+    }
+
+    /// Paper §5.2 perturbation: δΔ with δΔ(i) = ±1/(max−min), p = ½ each —
+    /// the magnitude guarantees integer parameters move by ≥ 1.
+    pub fn sample_perturbation(&self, rng: &mut Rng) -> Vec<f64> {
+        self.params
+            .iter()
+            .map(|p| {
+                let scale = 1.0 / p.width().max(1.0);
+                rng.rademacher() * scale
+            })
+            .collect()
+    }
+
+    /// Rademacher signs only (Δ without the δ scaling); used where the
+    /// gradient estimator divides by δΔ(i) explicitly.
+    pub fn sample_signs(&self, rng: &mut Rng) -> Vec<f64> {
+        self.params.iter().map(|_| rng.rademacher()).collect()
+    }
+
+    /// Per-coordinate δ scale 1/(max−min).
+    pub fn delta_scales(&self) -> Vec<f64> {
+        self.params.iter().map(|p| 1.0 / p.width().max(1.0)).collect()
+    }
+
+    /// Projection Γ: clip every coordinate into [0,1] (paper Algorithm 1).
+    pub fn project(&self, theta: &mut [f64]) {
+        for t in theta.iter_mut() {
+            *t = t.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Uniform random point in the space (baselines: random search / RRS).
+    pub fn sample_uniform(&self, rng: &mut Rng) -> Vec<f64> {
+        (0..self.dim()).map(|_| rng.f64()).collect()
+    }
+
+    /// The feature-vector layout consumed by the AOT cost-model artifact:
+    /// the 11 Hadoop-space values, fixed order, booleans encoded 0/1. The
+    /// OS-extension tail is intentionally dropped — the what-if model
+    /// cannot see below the framework boundary (paper §7).
+    pub fn to_feature_row(&self, theta: &[f64]) -> Vec<f32> {
+        self.to_hadoop_values(theta)
+            .iter()
+            .take(N_PARAMS)
+            .map(|v| v.as_f64() as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_spaces_have_11_params() {
+        assert_eq!(ParameterSpace::v1().dim(), 11);
+        assert_eq!(ParameterSpace::v2().dim(), 11);
+    }
+
+    #[test]
+    fn v1_v2_share_first_eight() {
+        let a = ParameterSpace::v1();
+        let b = ParameterSpace::v2();
+        for i in 0..8 {
+            assert_eq!(a.spec(i).name, b.spec(i).name);
+        }
+        assert_ne!(a.spec(8).name, b.spec(8).name);
+    }
+
+    #[test]
+    fn default_theta_materializes_to_defaults() {
+        for space in [ParameterSpace::v1(), ParameterSpace::v2()] {
+            let vals = space.to_hadoop_values(&space.default_theta());
+            for (v, p) in vals.iter().zip(space.params()) {
+                match p.kind {
+                    ParamKind::Int => assert_eq!(v.as_i64(), p.default as i64, "{}", p.name),
+                    ParamKind::Real => {
+                        assert!((v.as_f64() - p.default).abs() < 1e-9, "{}", p.name)
+                    }
+                    ParamKind::Bool => assert_eq!(v.as_bool(), p.default >= 0.5, "{}", p.name),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perturbation_moves_integer_params() {
+        // Paper §5.2: the ±1/(max−min) magnitude must change integer params
+        // by at least 1 when applied from a mid-range point.
+        let space = ParameterSpace::v1();
+        let mut rng = Rng::seeded(1);
+        let theta: Vec<f64> = vec![0.5; space.dim()];
+        let delta = space.sample_perturbation(&mut rng);
+        let base = space.to_hadoop_values(&theta);
+        let pert: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t + d).collect();
+        let moved = space.to_hadoop_values(&pert);
+        for (i, p) in space.params().iter().enumerate() {
+            if p.kind == ParamKind::Int {
+                assert_ne!(
+                    base[i].as_i64(),
+                    moved[i].as_i64(),
+                    "integer param {} did not move",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn projection_clips() {
+        let space = ParameterSpace::v1();
+        let mut theta = vec![-0.2, 1.4, 0.5, 0.0, 1.0, 2.0, -1.0, 0.3, 0.9, 0.1, 0.7];
+        space.project(&mut theta);
+        assert!(theta.iter().all(|t| (0.0..=1.0).contains(t)));
+        assert_eq!(theta[2], 0.5);
+    }
+
+    #[test]
+    fn default_config_matches_paper_defaults() {
+        let c = ParameterSpace::v1().default_config();
+        assert_eq!(c.io_sort_mb, 100);
+        assert!((c.spill_percent - 0.08).abs() < 1e-9);
+        assert_eq!(c.sort_factor, 10);
+        assert_eq!(c.reduce_tasks, 1);
+        assert!(!c.compress_map_output);
+    }
+
+    #[test]
+    fn feature_row_has_dim_entries() {
+        let space = ParameterSpace::v2();
+        let row = space.to_feature_row(&space.default_theta());
+        assert_eq!(row.len(), space.dim());
+    }
+}

@@ -1,0 +1,351 @@
+//! Tuning campaigns: the orchestration layer that runs a tuner against a
+//! benchmark on the simulated cluster and evaluates the outcome — the
+//! equivalent of the SPSA process the paper runs on the NameNode (§6),
+//! generalized over the comparison algorithms of §6.6.
+
+use crate::baselines::{
+    hill_climb, random_search, starfish_tune, training_corpus, HillClimbConfig, Ppabs,
+    RrsConfig, RustWhatIf,
+};
+use crate::cluster::ClusterSpec;
+use crate::config::{HadoopVersion, ParameterSpace};
+use crate::sim::{simulate, SimOptions};
+use crate::tuner::{IterRecord, Objective, SimObjective, Spsa, SpsaConfig};
+use crate::util::rng::Rng;
+use crate::util::stats::{mean, stddev};
+use crate::whatif::ClusterFeatures;
+use crate::workloads::{Benchmark, WorkloadProfile};
+
+use super::pool::{default_workers, run_parallel};
+
+/// Tuning algorithm under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// No tuning: Hadoop defaults (the paper's baseline row).
+    Default,
+    /// The paper's contribution (Algorithm 1).
+    Spsa,
+    /// SPSA on the AOT surrogate model instead of the live system
+    /// (extension; runs through the PJRT artifact when available).
+    SpsaSurrogate,
+    /// Starfish: profile + what-if (analytic model) + RRS.
+    Starfish,
+    /// PPABS: signature clustering + SA on a reduced space.
+    Ppabs,
+    /// MROnline-style hill climbing on the live system.
+    HillClimb,
+    /// Random search on the live system (ablation anchor).
+    Random,
+}
+
+impl Algo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::Default => "Default",
+            Algo::Spsa => "SPSA",
+            Algo::SpsaSurrogate => "SPSA-surrogate",
+            Algo::Starfish => "Starfish",
+            Algo::Ppabs => "PPABS",
+            Algo::HillClimb => "HillClimb",
+            Algo::Random => "Random",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "default" => Some(Algo::Default),
+            "spsa" => Some(Algo::Spsa),
+            "spsa-surrogate" | "surrogate" => Some(Algo::SpsaSurrogate),
+            "starfish" => Some(Algo::Starfish),
+            "ppabs" => Some(Algo::Ppabs),
+            "hill" | "hillclimb" | "mronline" => Some(Algo::HillClimb),
+            "random" => Some(Algo::Random),
+            _ => None,
+        }
+    }
+}
+
+/// One tuning trial: algorithm × benchmark × Hadoop version × seed.
+#[derive(Clone, Debug)]
+pub struct TrialSpec {
+    pub benchmark: Benchmark,
+    pub version: HadoopVersion,
+    pub algo: Algo,
+    pub seed: u64,
+    /// SPSA iteration budget (other live-system tuners get 2× this many
+    /// observations so budgets are comparable).
+    pub iters: u64,
+}
+
+impl TrialSpec {
+    pub fn new(benchmark: Benchmark, version: HadoopVersion, algo: Algo, seed: u64) -> Self {
+        TrialSpec { benchmark, version, algo, seed, iters: 30 }
+    }
+}
+
+/// Outcome of one trial.
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    pub spec: TrialSpec,
+    pub tuned_theta: Vec<f64>,
+    /// Mean / stddev execution time at the tuned configuration (5 noisy
+    /// runs on the simulator).
+    pub tuned_mean_s: f64,
+    pub tuned_std_s: f64,
+    /// Same for the default configuration.
+    pub default_mean_s: f64,
+    /// Live-system observations consumed while tuning.
+    pub observations: u64,
+    /// What-if model evaluations (model-based tuners only).
+    pub model_evals: u64,
+    /// Simulated profiling overhead (Starfish/PPABS; 0 for SPSA).
+    pub profiling_overhead_s: f64,
+    /// Tuner wall-clock on this machine.
+    pub tuning_wall_ms: f64,
+    /// SPSA per-iteration history (empty for other algorithms).
+    pub history: Vec<IterRecord>,
+}
+
+impl TrialOutcome {
+    /// The paper's headline metric: % decrease vs. the default config.
+    pub fn pct_decrease(&self) -> f64 {
+        100.0 * (self.default_mean_s - self.tuned_mean_s) / self.default_mean_s
+    }
+}
+
+/// Measurement error of a single-shot job profile (lognormal sigma applied
+/// to each data-flow feature). Profiling-based tuners see the workload
+/// through this lens; SPSA never needs a profile.
+pub const PROFILE_NOISE_SIGMA: f64 = 0.35;
+
+/// Build the workload profile for a benchmark by really running it on
+/// sampled data. Profiles are cached per (benchmark, seed): the engine run
+/// costs ~150 ms and campaigns request the same profile for every trial
+/// (§Perf optimization 1 — see EXPERIMENTS.md).
+pub fn profile_for(benchmark: Benchmark, seed: u64) -> WorkloadProfile {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<(Benchmark, u64), WorkloadProfile>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(p) = cache.lock().unwrap().get(&(benchmark, seed)) {
+        return p.clone();
+    }
+    let mut rng = Rng::seeded(seed);
+    let p = benchmark.paper_profile(&mut rng);
+    cache.lock().unwrap().insert((benchmark, seed), p.clone());
+    p
+}
+
+/// Evaluate a θ on the simulator with `n` noisy runs; returns (mean, std).
+pub fn evaluate_theta(
+    space: &ParameterSpace,
+    cluster: &ClusterSpec,
+    w: &WorkloadProfile,
+    theta: &[f64],
+    n: u64,
+    seed: u64,
+) -> (f64, f64) {
+    let cfg = space.materialize(theta);
+    let runs: Vec<f64> = (0..n)
+        .map(|i| {
+            simulate(cluster, &cfg, w, &SimOptions { seed: seed ^ (i + 1), noise: true })
+                .exec_time_s
+        })
+        .collect();
+    (mean(&runs), stddev(&runs))
+}
+
+/// Run one tuning trial end to end.
+pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
+    let space = ParameterSpace::for_version(spec.version);
+    let cluster = ClusterSpec::paper_cluster();
+    // fixed profiling seed: all algorithms tune the *same* workload
+    let w = profile_for(spec.benchmark, 1000);
+    let features = ClusterFeatures::from_spec(&cluster, spec.version);
+    let t0 = std::time::Instant::now();
+
+    let mut observations = 0;
+    let mut model_evals = 0;
+    let mut profiling_overhead_s = 0.0;
+    let mut history = Vec::new();
+
+    let tuned_theta = match spec.algo {
+        Algo::Default => space.default_theta(),
+        Algo::Spsa => {
+            let mut obj =
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed);
+            let spsa = Spsa::for_space(
+                SpsaConfig { max_iters: spec.iters, seed: spec.seed, ..Default::default() },
+                &space,
+            );
+            let res = spsa.run(&mut obj, space.default_theta());
+            observations = res.observations;
+            history = res.history;
+            // Deploy the best configuration observed during learning: the
+            // coordinator has every iterate's measured time at hand, and
+            // the final iterate still carries the last noisy step.
+            res.best_theta
+        }
+        Algo::SpsaSurrogate => {
+            // surrogate SPSA: iterate on the analytic model only, then
+            // deploy. Uses the rust what-if here; the artifact-backed
+            // variant lives in examples/whatif_engine.rs.
+            let mut evaluator = RustWhatIf::new(space.clone(), w.clone(), features.clone());
+            let mut theta = space.default_theta();
+            let spsa = Spsa::for_space(
+                SpsaConfig { max_iters: spec.iters * 4, seed: spec.seed, ..Default::default() },
+                &space,
+            );
+            struct ModelObjective<'a> {
+                inner: &'a mut RustWhatIf,
+                evals: u64,
+            }
+            impl Objective for ModelObjective<'_> {
+                fn dim(&self) -> usize {
+                    self.inner.space.dim()
+                }
+                fn eval(&mut self, theta: &[f64]) -> f64 {
+                    use crate::baselines::CostEvaluator;
+                    self.evals += 1;
+                    self.inner.eval_batch(std::slice::from_ref(&theta.to_vec()))[0]
+                }
+                fn evals(&self) -> u64 {
+                    self.evals
+                }
+            }
+            let mut obj = ModelObjective { inner: &mut evaluator, evals: 0 };
+            let res = spsa.run(&mut obj, theta.clone());
+            model_evals = obj.evals;
+            theta = res.best_theta;
+            theta
+        }
+        Algo::Starfish => {
+            // Starfish characterizes the job from ONE instrumented run: its
+            // what-if engine sees a single-shot noisy profile (§6.8 pt 4).
+            let mut prof_rng = Rng::seeded(spec.seed ^ 0x5F15);
+            let noisy_w = w.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA);
+            let mut evaluator = RustWhatIf::new(space.clone(), noisy_w, features.clone());
+            let res = starfish_tune(
+                &space,
+                &cluster,
+                &w,
+                &mut evaluator,
+                &RrsConfig { seed: spec.seed, ..Default::default() },
+                spec.seed,
+            );
+            model_evals = res.model_evals;
+            profiling_overhead_s = res.profiling_overhead_s;
+            observations = 1; // the single profiled run
+            res.best_theta
+        }
+        Algo::Ppabs => {
+            // PPABS likewise profiles each corpus job once.
+            let mut prof_rng = Rng::seeded(spec.seed ^ 0x99AB);
+            let corpus: Vec<WorkloadProfile> = training_corpus(2000)
+                .iter()
+                .map(|c| c.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA))
+                .collect();
+            let ppabs = Ppabs::train(&space, &cluster, &corpus, 4, spec.seed);
+            model_evals = ppabs.model_evals;
+            profiling_overhead_s = ppabs.profiling_overhead_s;
+            observations = corpus.len() as u64;
+            ppabs.configure(&w)
+        }
+        Algo::HillClimb => {
+            let mut obj =
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed);
+            let res = hill_climb(
+                &mut obj,
+                space.default_theta(),
+                &HillClimbConfig { budget: spec.iters * 2, seed: spec.seed, ..Default::default() },
+            );
+            observations = res.observations;
+            res.best_theta
+        }
+        Algo::Random => {
+            let mut obj =
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed);
+            let res =
+                random_search(&mut obj, space.default_theta(), spec.iters * 2, spec.seed);
+            observations = res.observations;
+            res.best_theta
+        }
+    };
+    let tuning_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    const EVAL_SEED: u64 = 0xE7A1;
+    let (tuned_mean_s, tuned_std_s) =
+        evaluate_theta(&space, &cluster, &w, &tuned_theta, 5, spec.seed ^ EVAL_SEED);
+    let (default_mean_s, _) =
+        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, spec.seed ^ EVAL_SEED);
+
+    TrialOutcome {
+        spec: spec.clone(),
+        tuned_theta,
+        tuned_mean_s,
+        tuned_std_s,
+        default_mean_s,
+        observations,
+        model_evals,
+        profiling_overhead_s,
+        tuning_wall_ms,
+        history,
+    }
+}
+
+/// Run many trials across the worker pool (leader/worker topology).
+pub fn run_campaign(specs: Vec<TrialSpec>) -> Vec<TrialOutcome> {
+    let jobs: Vec<Box<dyn FnOnce() -> TrialOutcome + Send>> = specs
+        .into_iter()
+        .map(|s| Box::new(move || run_trial(&s)) as _)
+        .collect();
+    run_parallel(jobs, default_workers())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spsa_trial_beats_default() {
+        let spec = TrialSpec::new(Benchmark::Terasort, HadoopVersion::V1, Algo::Spsa, 5);
+        let out = run_trial(&spec);
+        assert!(out.pct_decrease() > 30.0, "decrease {:.1}%", out.pct_decrease());
+        assert_eq!(out.history.len() as u64, out.spec.iters);
+        assert!(out.observations >= 2 * out.spec.iters);
+        assert_eq!(out.profiling_overhead_s, 0.0);
+    }
+
+    #[test]
+    fn default_trial_is_identity() {
+        let spec = TrialSpec::new(Benchmark::Grep, HadoopVersion::V2, Algo::Default, 1);
+        let out = run_trial(&spec);
+        assert!((out.pct_decrease()).abs() < 1e-9);
+        assert_eq!(out.observations, 0);
+    }
+
+    #[test]
+    fn campaign_runs_parallel_trials() {
+        let specs = vec![
+            TrialSpec::new(Benchmark::Bigram, HadoopVersion::V1, Algo::Spsa, 1),
+            TrialSpec::new(Benchmark::Bigram, HadoopVersion::V1, Algo::Random, 1),
+            TrialSpec::new(Benchmark::Bigram, HadoopVersion::V1, Algo::Default, 1),
+        ];
+        let out = run_campaign(specs);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].spec.algo, Algo::Spsa);
+        assert_eq!(out[2].spec.algo, Algo::Default);
+        // both live-system tuners improve on the default for bigram
+        assert!(out[0].pct_decrease() > 20.0, "spsa {:.1}%", out[0].pct_decrease());
+        assert!(out[1].pct_decrease() > 0.0, "random {:.1}%", out[1].pct_decrease());
+    }
+
+    #[test]
+    fn starfish_trial_reports_overheads() {
+        let spec = TrialSpec::new(Benchmark::InvertedIndex, HadoopVersion::V1, Algo::Starfish, 2);
+        let out = run_trial(&spec);
+        assert!(out.profiling_overhead_s > 0.0);
+        assert!(out.model_evals > 100);
+        assert!(out.pct_decrease() > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Campaign orchestration: the leader process that fans tuning trials over
+//! worker threads, evaluates outcomes on the simulator, and persists
+//! results — the operational shell around the SPSA process of paper §6.
+
+pub mod campaign;
+pub mod pool;
+pub mod results;
+
+pub use campaign::{
+    evaluate_theta, profile_for, run_campaign, run_trial, Algo, TrialOutcome, TrialSpec,
+};
+pub use pool::{default_workers, run_parallel};
+pub use results::{outcome_json, ResultsDir};

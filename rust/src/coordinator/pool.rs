@@ -1,0 +1,98 @@
+//! Leader/worker thread pool for fanning simulated tuning trials across
+//! cores (tokio is unavailable offline; the workload is CPU-bound
+//! simulation, so std threads + channels are the right tool anyway).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `jobs` on up to `workers` threads; results return in job order.
+pub fn run_parallel<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+
+    // shared queue of (index, job)
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let job = queue.lock().expect("queue poisoned").pop();
+            match job {
+                Some((i, f)) => {
+                    let out = f();
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, out) in rx {
+        slots[i] = Some(out);
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    slots.into_iter().map(|s| s.expect("missing result")).collect()
+}
+
+/// Default worker count: physical parallelism minus one leader core.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0usize..32).map(|i| Box::new(move || i * i) as _).collect();
+        let out = run_parallel(jobs, 4);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
+            (0u32..5).map(|i| Box::new(move || i + 1) as _).collect();
+        assert_eq!(run_parallel(jobs, 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<Box<dyn FnOnce() -> () + Send>> = vec![];
+        assert!(run_parallel(jobs, 4).is_empty());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::time::{Duration, Instant};
+        let jobs: Vec<Box<dyn FnOnce() -> () + Send>> = (0..8)
+            .map(|_| Box::new(|| thread::sleep(Duration::from_millis(50))) as _)
+            .collect();
+        let t0 = Instant::now();
+        run_parallel(jobs, 8);
+        assert!(t0.elapsed() < Duration::from_millis(350));
+    }
+}

@@ -1,0 +1,88 @@
+//! Result persistence: write experiment tables to `results/` as markdown +
+//! CSV, and campaign outcomes as JSON — the files EXPERIMENTS.md cites.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::campaign::TrialOutcome;
+
+/// Writer rooted at a results directory.
+pub struct ResultsDir {
+    root: PathBuf,
+}
+
+impl ResultsDir {
+    pub fn new(root: impl AsRef<Path>) -> Result<Self> {
+        fs::create_dir_all(root.as_ref())
+            .with_context(|| format!("creating {}", root.as_ref().display()))?;
+        Ok(ResultsDir { root: root.as_ref().to_path_buf() })
+    }
+
+    pub fn default_dir() -> Result<Self> {
+        Self::new("results")
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Write a table as both `<name>.md` and `<name>.csv`.
+    pub fn write_table(&self, name: &str, table: &Table) -> Result<()> {
+        fs::write(self.path(&format!("{name}.md")), table.to_markdown())?;
+        fs::write(self.path(&format!("{name}.csv")), table.to_csv())?;
+        Ok(())
+    }
+
+    pub fn write_text(&self, name: &str, text: &str) -> Result<()> {
+        fs::write(self.path(name), text)?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, name: &str, json: &Json) -> Result<()> {
+        fs::write(self.path(name), json.to_pretty())?;
+        Ok(())
+    }
+}
+
+/// Serialize a trial outcome (without the bulky history) for results JSON.
+pub fn outcome_json(o: &TrialOutcome) -> Json {
+    let mut j = Json::obj();
+    j.set("benchmark", Json::Str(o.spec.benchmark.label().into()))
+        .set("version", Json::Str(o.spec.version.label().into()))
+        .set("algo", Json::Str(o.spec.algo.label().into()))
+        .set("seed", Json::Num(o.spec.seed as f64))
+        .set("tuned_mean_s", Json::Num(o.tuned_mean_s))
+        .set("tuned_std_s", Json::Num(o.tuned_std_s))
+        .set("default_mean_s", Json::Num(o.default_mean_s))
+        .set("pct_decrease", Json::Num(o.pct_decrease()))
+        .set("observations", Json::Num(o.observations as f64))
+        .set("model_evals", Json::Num(o.model_evals as f64))
+        .set("profiling_overhead_s", Json::Num(o.profiling_overhead_s))
+        .set("tuning_wall_ms", Json::Num(o.tuning_wall_ms))
+        .set("tuned_theta", Json::from_f64_slice(&o.tuned_theta));
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_all_formats() {
+        let dir = std::env::temp_dir().join(format!("hspsa-results-{}", std::process::id()));
+        let rd = ResultsDir::new(&dir).unwrap();
+        let mut t = Table::new("t").header(vec!["a"]);
+        t.row(vec!["1"]);
+        rd.write_table("demo", &t).unwrap();
+        rd.write_text("note.txt", "hello").unwrap();
+        assert!(dir.join("demo.md").exists());
+        assert!(dir.join("demo.csv").exists());
+        assert!(dir.join("note.txt").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

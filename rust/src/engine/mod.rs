@@ -1,0 +1,13 @@
+//! Mini MapReduce execution engine (substrate).
+//!
+//! Runs real map/combine/reduce programs over real byte data to (a) validate
+//! benchmark semantics and (b) measure the [`stats::DataStats`] that
+//! parameterize the discrete-event simulator in [`crate::sim`].
+
+pub mod job;
+pub mod stats;
+pub mod types;
+
+pub use job::{run_job, Emit, IdentityReducer, JobOutput, JobSpec, Mapper, Reducer, Split, SumReducer};
+pub use stats::{compress_ratio, DataStats};
+pub use types::{HashPartitioner, Partitioner, RangePartitioner, Rec};

@@ -1,0 +1,154 @@
+//! Data-flow statistics measured from a real execution of a MapReduce job —
+//! the coupling between the execution engine and the discrete-event
+//! simulator. A real Hadoop cluster derives its timing from these same
+//! quantities; the DES consumes them via [`crate::workloads::WorkloadProfile`].
+
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::Write;
+
+/// Everything the simulator needs to know about a job's data flow,
+/// measured (not assumed) by running the job on sample data.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DataStats {
+    pub input_bytes: u64,
+    pub input_records: u64,
+    pub map_output_records: u64,
+    pub map_output_bytes: u64,
+    /// Records surviving one combiner pass over a full map output
+    /// (`map_output_records` if there is no combiner).
+    pub combine_output_records: u64,
+    pub combine_output_bytes: u64,
+    pub distinct_keys: u64,
+    /// Bytes per reduce partition (skew measurement).
+    pub partition_bytes: Vec<u64>,
+    pub reduce_output_records: u64,
+    pub reduce_output_bytes: u64,
+    /// Measured zlib ratio of map output (compressed / raw, in (0,1]).
+    pub map_output_compress_ratio: f64,
+}
+
+impl DataStats {
+    /// Map selectivity in bytes: map output bytes / input bytes.
+    pub fn map_selectivity_bytes(&self) -> f64 {
+        if self.input_bytes == 0 {
+            return 0.0;
+        }
+        self.map_output_bytes as f64 / self.input_bytes as f64
+    }
+
+    /// Map selectivity in records.
+    pub fn map_selectivity_records(&self) -> f64 {
+        if self.input_records == 0 {
+            return 0.0;
+        }
+        self.map_output_records as f64 / self.input_records as f64
+    }
+
+    /// Combiner record-reduction factor in (0,1]; 1.0 = no reduction.
+    pub fn combiner_reduction(&self) -> f64 {
+        if self.map_output_records == 0 {
+            return 1.0;
+        }
+        (self.combine_output_records as f64 / self.map_output_records as f64).clamp(0.0, 1.0)
+    }
+
+    /// Reduce selectivity: output bytes per shuffled byte.
+    pub fn reduce_selectivity_bytes(&self) -> f64 {
+        let shuffled = self.combine_output_bytes.max(1);
+        self.reduce_output_bytes as f64 / shuffled as f64
+    }
+
+    /// Average map-output record size in bytes.
+    pub fn avg_map_record_bytes(&self) -> f64 {
+        if self.map_output_records == 0 {
+            return 0.0;
+        }
+        self.map_output_bytes as f64 / self.map_output_records as f64
+    }
+
+    /// Partition skew: max partition bytes / mean partition bytes (≥ 1).
+    pub fn partition_skew(&self) -> f64 {
+        if self.partition_bytes.is_empty() {
+            return 1.0;
+        }
+        let max = *self.partition_bytes.iter().max().unwrap() as f64;
+        let mean = self.partition_bytes.iter().sum::<u64>() as f64
+            / self.partition_bytes.len() as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            (max / mean).max(1.0)
+        }
+    }
+}
+
+/// Measure the zlib compressibility of a byte sample: returns
+/// compressed/raw in (0, 1]. Used to set the simulator's compression
+/// ratio from *real* data rather than a guess.
+pub fn compress_ratio(sample: &[u8]) -> f64 {
+    if sample.is_empty() {
+        return 1.0;
+    }
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(sample).expect("in-memory compression cannot fail");
+    let compressed = enc.finish().expect("in-memory compression cannot fail");
+    (compressed.len() as f64 / sample.len() as f64).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selectivities() {
+        let s = DataStats {
+            input_bytes: 1000,
+            input_records: 10,
+            map_output_bytes: 500,
+            map_output_records: 50,
+            combine_output_records: 25,
+            combine_output_bytes: 250,
+            reduce_output_bytes: 100,
+            ..Default::default()
+        };
+        assert!((s.map_selectivity_bytes() - 0.5).abs() < 1e-12);
+        assert!((s.map_selectivity_records() - 5.0).abs() < 1e-12);
+        assert!((s.combiner_reduction() - 0.5).abs() < 1e-12);
+        assert!((s.reduce_selectivity_bytes() - 0.4).abs() < 1e-12);
+        assert!((s.avg_map_record_bytes() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_of_uniform_is_one() {
+        let s = DataStats { partition_bytes: vec![100, 100, 100], ..Default::default() };
+        assert!((s.partition_skew() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_detects_hot_partition() {
+        let s = DataStats { partition_bytes: vec![300, 100, 100, 100], ..Default::default() };
+        assert!(s.partition_skew() > 1.9);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = DataStats::default();
+        assert_eq!(s.map_selectivity_bytes(), 0.0);
+        assert_eq!(s.combiner_reduction(), 1.0);
+        assert_eq!(s.partition_skew(), 1.0);
+    }
+
+    #[test]
+    fn text_compresses_well_random_does_not() {
+        let text = "the quick brown fox jumps over the lazy dog ".repeat(200);
+        let r_text = compress_ratio(text.as_bytes());
+        assert!(r_text < 0.3, "text ratio {r_text}");
+
+        // pseudo-random bytes barely compress
+        let mut rng = crate::util::rng::Rng::seeded(1);
+        let rand: Vec<u8> = (0..8192).map(|_| rng.next_u64() as u8).collect();
+        let r_rand = compress_ratio(&rand);
+        assert!(r_rand > 0.9, "random ratio {r_rand}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Ablations over SPSA's design choices (paper §6.5 discussion):
+//!
+//! * gradient estimator: one-sided (paper) vs two-sided vs one-measurement
+//!   ("it has been shown that standard two function measurement form … is
+//!   more efficient … than the one evaluation variant");
+//! * gradient averaging: 1 / 2 / 4 estimates per iteration (the paper cites
+//!   [28] for averaging under high noise);
+//! * step clip `max_step` (the stability guard, DESIGN.md).
+//!
+//! Each cell reports the deployed configuration's mean execution time at an
+//! *equal live-observation budget*, so cheaper estimators get more
+//! iterations.
+
+use crate::cluster::ClusterSpec;
+use crate::config::ParameterSpace;
+use crate::coordinator::evaluate_theta;
+use crate::tuner::{SimObjective, Spsa, SpsaConfig, SpsaVariant};
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+/// Observation budget per tuning run (comparable to the paper's 40–60).
+const BUDGET: u64 = 90;
+
+fn run_cell(cfg: SpsaConfig, seeds: &[u64]) -> (f64, f64) {
+    let space = ParameterSpace::v1();
+    let cluster = ClusterSpec::paper_cluster();
+    let mut rng = Rng::seeded(1000);
+    let w = Benchmark::Terasort.paper_profile(&mut rng);
+    let mut times = Vec::new();
+    let mut obs = Vec::new();
+    for &seed in seeds {
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+        let spsa = Spsa::for_space(SpsaConfig { seed, ..cfg.clone() }, &space);
+        let res = spsa.run(&mut obj, space.default_theta());
+        let (t, _) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, seed ^ 0xAB);
+        times.push(t);
+        obs.push(res.observations as f64);
+    }
+    (mean(&times), mean(&obs))
+}
+
+pub fn run(opts: &ExpOptions) -> String {
+    let seeds = opts.seeds();
+    let mut table = Table::new(
+        "Ablation — SPSA design choices on Terasort v1 (equal observation budget)",
+    )
+    .header(vec!["variant", "grad_avg", "max_step", "iters", "mean obs", "tuned time (s)"]);
+
+    let base = SpsaConfig { grad_tol: 0.0, patience: u64::MAX, ..Default::default() };
+
+    // estimator variants at equal budget
+    let cells: Vec<(&str, SpsaConfig)> = vec![
+        (
+            "one-sided (paper)",
+            SpsaConfig {
+                variant: SpsaVariant::OneSided,
+                grad_avg: 2,
+                max_iters: BUDGET / 3,
+                ..base.clone()
+            },
+        ),
+        (
+            "two-sided",
+            SpsaConfig {
+                variant: SpsaVariant::TwoSided,
+                grad_avg: 1,
+                max_iters: BUDGET / 3,
+                ..base.clone()
+            },
+        ),
+        (
+            "one-measurement",
+            SpsaConfig {
+                variant: SpsaVariant::OneMeasurement,
+                grad_avg: 1,
+                max_iters: BUDGET / 2,
+                ..base.clone()
+            },
+        ),
+        (
+            "one-sided, no averaging",
+            SpsaConfig {
+                variant: SpsaVariant::OneSided,
+                grad_avg: 1,
+                max_iters: BUDGET / 2,
+                ..base.clone()
+            },
+        ),
+        (
+            "one-sided, heavy averaging",
+            SpsaConfig {
+                variant: SpsaVariant::OneSided,
+                grad_avg: 4,
+                max_iters: BUDGET / 5,
+                ..base.clone()
+            },
+        ),
+        (
+            "RDSA (gaussian directions)",
+            SpsaConfig {
+                variant: SpsaVariant::Rdsa,
+                grad_avg: 2,
+                max_iters: BUDGET / 3,
+                ..base.clone()
+            },
+        ),
+        (
+            "small step clip (0.05)",
+            SpsaConfig {
+                variant: SpsaVariant::OneSided,
+                grad_avg: 2,
+                max_iters: BUDGET / 3,
+                max_step: 0.05,
+                ..base.clone()
+            },
+        ),
+        (
+            "large step clip (0.4)",
+            SpsaConfig {
+                variant: SpsaVariant::OneSided,
+                grad_avg: 2,
+                max_iters: BUDGET / 3,
+                max_step: 0.4,
+                ..base.clone()
+            },
+        ),
+    ];
+
+    for (label, cfg) in cells {
+        let (t, obs) = run_cell(cfg.clone(), &seeds);
+        table.row(vec![
+            label.to_string(),
+            cfg.grad_avg.to_string(),
+            format!("{}", cfg.max_step),
+            cfg.max_iters.to_string(),
+            format!("{obs:.0}"),
+            format!("{t:.0}"),
+        ]);
+    }
+
+    let report = table.to_ascii();
+    opts.persist("ablation", &table);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_produces_all_cells() {
+        let report = run(&ExpOptions::quick());
+        assert!(report.contains("one-sided (paper)"));
+        assert!(report.contains("one-measurement"));
+        assert!(report.contains("large step clip"));
+        assert_eq!(report.lines().filter(|l| l.contains("0.")).count() >= 5, true);
+    }
+}

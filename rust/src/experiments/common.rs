@@ -1,0 +1,108 @@
+//! Shared experiment infrastructure: options, campaign helpers and
+//! formatting used by every table/figure regeneration module.
+
+use crate::config::HadoopVersion;
+use crate::coordinator::{run_campaign, Algo, ResultsDir, TrialOutcome, TrialSpec};
+use crate::util::stats::mean;
+use crate::workloads::Benchmark;
+
+/// Experiment options.
+pub struct ExpOptions {
+    /// Quick mode: fewer seeds/iterations — used by `cargo bench` smoke
+    /// passes; full mode regenerates the EXPERIMENTS.md numbers.
+    pub quick: bool,
+    /// Where to persist tables (None = stdout only).
+    pub out: Option<ResultsDir>,
+}
+
+impl ExpOptions {
+    pub fn quick() -> Self {
+        ExpOptions { quick: true, out: None }
+    }
+
+    pub fn full_to(dir: ResultsDir) -> Self {
+        ExpOptions { quick: false, out: Some(dir) }
+    }
+
+    pub fn seeds(&self) -> Vec<u64> {
+        if self.quick {
+            vec![11]
+        } else {
+            vec![11, 23, 37]
+        }
+    }
+
+    pub fn iters(&self) -> u64 {
+        if self.quick {
+            20
+        } else {
+            30
+        }
+    }
+
+    /// Persist a table if an output directory is configured.
+    pub fn persist(&self, name: &str, table: &crate::util::table::Table) {
+        if let Some(dir) = &self.out {
+            if let Err(e) = dir.write_table(name, table) {
+                eprintln!("warning: failed to write {name}: {e}");
+            }
+        }
+    }
+
+    pub fn persist_text(&self, name: &str, text: &str) {
+        if let Some(dir) = &self.out {
+            if let Err(e) = dir.write_text(name, text) {
+                eprintln!("warning: failed to write {name}: {e}");
+            }
+        }
+    }
+}
+
+/// Run `algo` on every benchmark for one Hadoop version across the option
+/// seeds; returns outcomes grouped by benchmark (mean-aggregated helper
+/// below).
+pub fn campaign_for(
+    algos: &[Algo],
+    version: HadoopVersion,
+    opts: &ExpOptions,
+) -> Vec<TrialOutcome> {
+    let mut specs = Vec::new();
+    for &algo in algos {
+        for bench in Benchmark::all() {
+            for &seed in &opts.seeds() {
+                let mut s = TrialSpec::new(bench, version, algo, seed);
+                s.iters = opts.iters();
+                specs.push(s);
+            }
+        }
+    }
+    run_campaign(specs)
+}
+
+/// Mean tuned execution time for (benchmark, algo) across seeds.
+pub fn mean_time(outcomes: &[TrialOutcome], bench: Benchmark, algo: Algo) -> f64 {
+    let xs: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.spec.benchmark == bench && o.spec.algo == algo)
+        .map(|o| o.tuned_mean_s)
+        .collect();
+    mean(&xs)
+}
+
+/// Mean % decrease vs default for (benchmark, algo).
+pub fn mean_decrease(outcomes: &[TrialOutcome], bench: Benchmark, algo: Algo) -> f64 {
+    let xs: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.spec.benchmark == bench && o.spec.algo == algo)
+        .map(|o| o.pct_decrease())
+        .collect();
+    mean(&xs)
+}
+
+pub fn fmt_s(x: f64) -> String {
+    format!("{x:.0}")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{x:.0}%")
+}

@@ -1,0 +1,80 @@
+//! Fig. 8 / Fig. 9 regeneration: per-benchmark execution-time comparison of
+//! tuning methods.
+//!
+//! * Fig. 8 (Hadoop v1): Default vs Starfish vs SPSA.
+//! * Fig. 9 (Hadoop v2): Default vs SPSA vs PPABS.
+//!
+//! Expected shape (paper §6.7): SPSA ≤ Starfish ≤ Default and
+//! SPSA ≤ PPABS ≤ Default on every benchmark, with the largest margins on
+//! the shuffle-heavy jobs.
+
+use crate::config::HadoopVersion;
+use crate::coordinator::Algo;
+use crate::util::table::{bar_chart, Table};
+use crate::workloads::Benchmark;
+
+use super::common::{campaign_for, fmt_pct, fmt_s, mean_decrease, mean_time, ExpOptions};
+
+pub fn run(version: HadoopVersion, opts: &ExpOptions) -> String {
+    let (fig, algos): (&str, Vec<Algo>) = match version {
+        HadoopVersion::V1 => ("fig8", vec![Algo::Default, Algo::Starfish, Algo::Spsa]),
+        HadoopVersion::V2 => ("fig9", vec![Algo::Default, Algo::Spsa, Algo::Ppabs]),
+    };
+    let outcomes = campaign_for(&algos, version, opts);
+
+    let mut header = vec!["Benchmark".to_string()];
+    for a in &algos {
+        header.push(format!("{} (s)", a.label()));
+    }
+    for a in &algos[1..] {
+        header.push(format!("{} vs default", a.label()));
+    }
+    let mut table = Table::new(&format!(
+        "{} — execution time by tuning method, Hadoop {}",
+        fig.to_uppercase(),
+        version
+    ))
+    .header(header);
+
+    let mut report = String::new();
+    for bench in Benchmark::all() {
+        let mut row = vec![bench.label().to_string()];
+        for a in &algos {
+            row.push(fmt_s(mean_time(&outcomes, bench, *a)));
+        }
+        for a in &algos[1..] {
+            row.push(fmt_pct(mean_decrease(&outcomes, bench, *a)));
+        }
+        table.row(row);
+
+        let entries: Vec<(String, f64)> = algos
+            .iter()
+            .map(|a| (a.label().to_string(), mean_time(&outcomes, bench, *a)))
+            .collect();
+        report.push_str(&bar_chart(&format!("{} — {}", fig.to_uppercase(), bench), &entries, 50));
+        report.push('\n');
+    }
+    report.push_str(&table.to_ascii());
+    opts.persist(fig, &table);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_ordering_holds_on_terasort() {
+        let opts = ExpOptions::quick();
+        let outcomes = campaign_for(
+            &[Algo::Default, Algo::Starfish, Algo::Spsa],
+            HadoopVersion::V1,
+            &opts,
+        );
+        let d = mean_time(&outcomes, Benchmark::Terasort, Algo::Default);
+        let s = mean_time(&outcomes, Benchmark::Terasort, Algo::Starfish);
+        let p = mean_time(&outcomes, Benchmark::Terasort, Algo::Spsa);
+        assert!(s < d, "starfish {s} vs default {d}");
+        assert!(p < d * 0.6, "spsa {p} vs default {d}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig. 6 / Fig. 7 regeneration: SPSA convergence — job execution time
+//! f(θ_n) per iteration for each benchmark, on Hadoop v1 (Fig. 6) and v2
+//! (Fig. 7). The "jumps in the plots" the paper's §6.7 discusses come from
+//! the noisy gradient estimate; they must be visible here too.
+
+use crate::config::HadoopVersion;
+use crate::coordinator::{run_campaign, Algo, TrialSpec};
+use crate::util::table::{curve, Table};
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+pub fn run(version: HadoopVersion, opts: &ExpOptions) -> String {
+    let fig = if version == HadoopVersion::V1 { "fig6" } else { "fig7" };
+    let seed = opts.seeds()[0];
+    let specs: Vec<TrialSpec> = Benchmark::all()
+        .iter()
+        .map(|b| {
+            let mut s = TrialSpec::new(*b, version, Algo::Spsa, seed);
+            s.iters = opts.iters();
+            s
+        })
+        .collect();
+    let outcomes = run_campaign(specs);
+
+    let mut report = format!(
+        "== {} — SPSA convergence on Hadoop {} ==\n",
+        fig.to_uppercase(),
+        version
+    );
+    let mut table = Table::new(&format!(
+        "{} — f(θ_n) per SPSA iteration (seconds), Hadoop {}",
+        fig.to_uppercase(),
+        version
+    ))
+    .header({
+        let mut h = vec!["iter".to_string()];
+        h.extend(Benchmark::all().iter().map(|b| b.label().to_string()));
+        h
+    });
+
+    let iters = outcomes.iter().map(|o| o.history.len()).max().unwrap_or(0);
+    for i in 0..iters {
+        let mut row = vec![i.to_string()];
+        for o in &outcomes {
+            row.push(
+                o.history
+                    .get(i)
+                    .map(|r| format!("{:.0}", r.f_theta))
+                    .unwrap_or_default(),
+            );
+        }
+        table.row(row);
+    }
+
+    for o in &outcomes {
+        let values: Vec<f64> = o.history.iter().map(|r| r.f_theta).collect();
+        report.push_str(&curve(
+            &format!("{} ({} iters, 2 obs/iter)", o.spec.benchmark, o.history.len()),
+            &values,
+            8,
+        ));
+        let first = values.first().copied().unwrap_or(0.0);
+        let last = values.last().copied().unwrap_or(0.0);
+        report.push_str(&format!(
+            "  start {first:.0}s → end {last:.0}s ({:.0}% decrease)\n\n",
+            100.0 * (first - last) / first.max(1e-9)
+        ));
+    }
+    report.push_str(&table.to_ascii());
+    opts.persist(fig, &table);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_converges_downward_for_terasort() {
+        let report = run(HadoopVersion::V1, &ExpOptions::quick());
+        assert!(report.contains("Terasort"));
+        assert!(report.contains("2 obs/iter"));
+        // terasort must show a large decrease
+        let tera_line = report
+            .lines()
+            .skip_while(|l| !l.contains("Terasort"))
+            .find(|l| l.contains("decrease"))
+            .expect("terasort decrease line");
+        let pct: f64 = tera_line
+            .split('(')
+            .nth(1)
+            .unwrap()
+            .split('%')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(pct > 30.0, "terasort only {pct}% in fig6");
+    }
+}

@@ -1,0 +1,89 @@
+//! Headline-claim regeneration (paper §1.1 / §7): "66 % decrease in
+//! execution time vs. default on average, and 45 % vs. prior methods".
+//!
+//! Aggregates the Fig-8 (v1: SPSA vs Starfish) and Fig-9 (v2: SPSA vs
+//! PPABS) campaigns into the two averages the abstract quotes.
+
+use crate::config::HadoopVersion;
+use crate::coordinator::Algo;
+use crate::util::stats::mean;
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::{campaign_for, mean_time, ExpOptions};
+
+pub struct Headline {
+    /// Mean % decrease of SPSA vs default across benchmarks and versions.
+    pub vs_default_pct: f64,
+    /// Mean % decrease of SPSA vs the prior method (Starfish on v1, PPABS
+    /// on v2) across benchmarks.
+    pub vs_prior_pct: f64,
+}
+
+pub fn compute(opts: &ExpOptions) -> (Headline, String) {
+    let v1 = campaign_for(&[Algo::Default, Algo::Starfish, Algo::Spsa], HadoopVersion::V1, opts);
+    let v2 = campaign_for(&[Algo::Default, Algo::Ppabs, Algo::Spsa], HadoopVersion::V2, opts);
+
+    let mut vs_default = Vec::new();
+    let mut vs_prior = Vec::new();
+    let mut table = Table::new("Headline — SPSA vs default and vs prior methods").header(vec![
+        "Benchmark",
+        "Version",
+        "Default (s)",
+        "Prior (s)",
+        "SPSA (s)",
+        "vs default",
+        "vs prior",
+    ]);
+
+    for (outcomes, version, prior) in
+        [(&v1, HadoopVersion::V1, Algo::Starfish), (&v2, HadoopVersion::V2, Algo::Ppabs)]
+    {
+        for bench in Benchmark::all() {
+            let d = mean_time(outcomes, bench, Algo::Default);
+            let p = mean_time(outcomes, bench, prior);
+            let s = mean_time(outcomes, bench, Algo::Spsa);
+            let dd = 100.0 * (d - s) / d;
+            let dp = 100.0 * (p - s) / p;
+            vs_default.push(dd);
+            vs_prior.push(dp);
+            table.row(vec![
+                bench.label().to_string(),
+                version.label().to_string(),
+                format!("{d:.0}"),
+                format!("{p:.0}"),
+                format!("{s:.0}"),
+                format!("{dd:.0}%"),
+                format!("{dp:.0}%"),
+            ]);
+        }
+    }
+
+    let headline =
+        Headline { vs_default_pct: mean(&vs_default), vs_prior_pct: mean(&vs_prior) };
+    let mut report = table.to_ascii();
+    report.push_str(&format!(
+        "\npaper:    66% mean decrease vs default, 45% vs prior methods\n\
+         measured: {:.0}% mean decrease vs default, {:.0}% vs prior methods\n",
+        headline.vs_default_pct, headline.vs_prior_pct
+    ));
+    opts.persist("headline", &table);
+    opts.persist_text("headline.txt", &report);
+    (headline, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_direction_matches_paper() {
+        let (h, report) = compute(&ExpOptions::quick());
+        assert!(
+            h.vs_default_pct > 40.0,
+            "vs default only {:.0}%\n{report}",
+            h.vs_default_pct
+        );
+        assert!(h.vs_prior_pct > 0.0, "vs prior {:.0}%\n{report}", h.vs_prior_pct);
+    }
+}

@@ -1,0 +1,105 @@
+//! Holistic tuning (paper §7 future work): extend SPSA's search space with
+//! OS-layer parameters (readahead, TCP rmem, dirty ratio) and compare
+//! against framework-only tuning at the same iteration budget.
+//!
+//! Key property: the *what-if model cannot see the OS layer* — only a
+//! direct-feedback tuner like SPSA can exploit it, which is the paper's
+//! closing argument for the approach.
+
+use crate::cluster::ClusterSpec;
+use crate::config::{HadoopVersion, ParameterSpace};
+use crate::coordinator::evaluate_theta;
+use crate::tuner::{SimObjective, Spsa, SpsaConfig};
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+fn tune(space: &ParameterSpace, bench: Benchmark, iters: u64, seed: u64) -> f64 {
+    let cluster = ClusterSpec::paper_cluster();
+    let mut rng = Rng::seeded(1000);
+    let w = bench.paper_profile(&mut rng);
+    let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+    let spsa = Spsa::for_space(SpsaConfig { max_iters: iters, seed, ..Default::default() }, space);
+    let res = spsa.run(&mut obj, space.default_theta());
+    let (t, _) = evaluate_theta(space, &cluster, &w, &res.best_theta, 5, seed ^ 0xC0);
+    t
+}
+
+pub fn run(opts: &ExpOptions) -> String {
+    let seeds = opts.seeds();
+    let iters = opts.iters() + 10; // 3 extra dims → slightly longer budget
+    let mut table = Table::new(
+        "Holistic tuning — SPSA over Hadoop-only (11 params) vs Hadoop+OS (14 params)",
+    )
+    .header(vec![
+        "Benchmark",
+        "default (s)",
+        "Hadoop-only SPSA (s)",
+        "Hadoop+OS SPSA (s)",
+        "extra gain",
+    ]);
+
+    let mut report = String::new();
+    for bench in [Benchmark::Terasort, Benchmark::Bigram, Benchmark::InvertedIndex] {
+        let base_space = ParameterSpace::for_version(HadoopVersion::V1);
+        let ext_space = ParameterSpace::extended(HadoopVersion::V1);
+        let cluster = ClusterSpec::paper_cluster();
+        let mut rng = Rng::seeded(1000);
+        let w = bench.paper_profile(&mut rng);
+        let (f_default, _) =
+            evaluate_theta(&base_space, &cluster, &w, &base_space.default_theta(), 5, 9);
+
+        let f_base = mean(
+            &seeds.iter().map(|&s| tune(&base_space, bench, iters, s)).collect::<Vec<_>>(),
+        );
+        let f_ext = mean(
+            &seeds.iter().map(|&s| tune(&ext_space, bench, iters, s)).collect::<Vec<_>>(),
+        );
+        let extra = 100.0 * (f_base - f_ext) / f_base;
+        table.row(vec![
+            bench.label().to_string(),
+            format!("{f_default:.0}"),
+            format!("{f_base:.0}"),
+            format!("{f_ext:.0}"),
+            format!("{extra:+.0}%"),
+        ]);
+    }
+    report.push_str(&table.to_ascii());
+    opts.persist("holistic", &table);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extended_space_tunes_at_least_as_well() {
+        // At an adequate budget, adding OS knobs should not hurt (and the
+        // OS landscape offers some headroom: readahead boost + TCP window).
+        let base = ParameterSpace::for_version(HadoopVersion::V1);
+        let ext = ParameterSpace::extended(HadoopVersion::V1);
+        assert_eq!(ext.dim(), base.dim() + 3);
+        let f_base = tune(&base, Benchmark::Bigram, 30, 5);
+        let f_ext = tune(&ext, Benchmark::Bigram, 40, 5);
+        assert!(
+            f_ext < f_base * 1.15,
+            "holistic tuning regressed badly: {f_ext} vs {f_base}"
+        );
+    }
+
+    #[test]
+    fn os_defaults_are_noop() {
+        // The extended space at default θ produces exactly the same config
+        // behaviour as the base space (OS defaults = stock Linux).
+        let base = ParameterSpace::for_version(HadoopVersion::V1);
+        let ext = ParameterSpace::extended(HadoopVersion::V1);
+        let cb = base.materialize(&base.default_theta());
+        let ce = ext.materialize(&ext.default_theta());
+        assert_eq!(cb.os, ce.os);
+        assert_eq!(cb.io_sort_mb, ce.io_sort_mb);
+    }
+}

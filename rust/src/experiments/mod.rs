@@ -1,0 +1,14 @@
+//! Experiment regeneration: one module per table/figure of the paper's
+//! evaluation (DESIGN.md §5 experiment index). Each produces terminal
+//! output and, in full mode, persists markdown/CSV into `results/`.
+
+pub mod ablation;
+pub mod common;
+pub mod comparison;
+pub mod convergence;
+pub mod headline;
+pub mod holistic;
+pub mod table1;
+pub mod table2;
+
+pub use common::ExpOptions;

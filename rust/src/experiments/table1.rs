@@ -1,0 +1,78 @@
+//! Table 1 regeneration: default parameter values vs. the values SPSA
+//! converges to, per benchmark, for Hadoop v1 and v2.
+//!
+//! Expected shape vs. the paper: SPSA lands on *large* reducer counts for
+//! shuffle-heavy jobs (Terasort/Inverted-Index), grows io.sort.mb for
+//! spill-bound jobs, and leaves Grep close to defaults — the qualitative
+//! pattern of the paper's Table 1 (exact values differ; the landscape is a
+//! simulator and SPSA is stochastic).
+
+use crate::config::{HadoopVersion, ParameterSpace};
+use crate::coordinator::{run_campaign, Algo, TrialSpec};
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+pub fn run(opts: &ExpOptions) -> String {
+    let seed = opts.seeds()[0];
+    let mut specs = Vec::new();
+    for version in [HadoopVersion::V1, HadoopVersion::V2] {
+        for bench in Benchmark::all() {
+            let mut s = TrialSpec::new(bench, version, Algo::Spsa, seed);
+            s.iters = opts.iters();
+            specs.push(s);
+        }
+    }
+    let outcomes = run_campaign(specs);
+
+    let mut report = String::new();
+    for version in [HadoopVersion::V1, HadoopVersion::V2] {
+        let space = ParameterSpace::for_version(version);
+        let mut header: Vec<String> = vec!["Parameter".into(), "Default".into()];
+        for b in Benchmark::all() {
+            header.push(b.label().to_string());
+        }
+        let mut table = Table::new(&format!(
+            "Table 1 — SPSA-tuned parameter values (Hadoop {version})"
+        ))
+        .header(header);
+
+        let tuned: Vec<Vec<crate::config::ParamValue>> = Benchmark::all()
+            .iter()
+            .map(|b| {
+                let o = outcomes
+                    .iter()
+                    .find(|o| o.spec.benchmark == *b && o.spec.version == version)
+                    .expect("missing outcome");
+                space.to_hadoop_values(&o.tuned_theta)
+            })
+            .collect();
+
+        for (i, p) in space.params().iter().enumerate() {
+            let mut row = vec![p.name.to_string(), p.default_value().display()];
+            for t in &tuned {
+                row.push(t[i].display());
+            }
+            table.row(row);
+        }
+        report.push_str(&table.to_ascii());
+        report.push('\n');
+        opts.persist(&format!("table1_{}", if version == HadoopVersion::V1 { "v1" } else { "v2" }), &table);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_table1_has_both_versions() {
+        let report = run(&ExpOptions::quick());
+        assert!(report.contains("Hadoop v1.0.3"));
+        assert!(report.contains("Hadoop v2.6.3"));
+        assert!(report.contains("io.sort.mb"));
+        assert!(report.contains("mapreduce.job.jvm.numtasks"));
+    }
+}

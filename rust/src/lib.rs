@@ -1,0 +1,36 @@
+//! # hadoop-spsa
+//!
+//! Production-style reproduction of *“Performance Tuning of Hadoop
+//! MapReduce: A Noisy Gradient Approach”* (Kumar et al., 2016) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the SPSA tuner (paper Algorithm 1), the baseline
+//!   tuners it is compared against (Starfish-style what-if optimizer,
+//!   PPABS-style clustering + simulated annealing, hill climbing, random
+//!   search), and every substrate the evaluation needs: a 25-node cluster
+//!   model, an HDFS block-placement model, a real mini-MapReduce execution
+//!   engine running the five paper benchmarks on synthetic corpora, and a
+//!   discrete-event simulator of the full MapReduce data path whose job
+//!   execution time is the objective `f(θ)`.
+//! * **L2/L1 (python/, build-time only)** — a differentiable analytic
+//!   MapReduce cost model written in JAX with its batched hot loop as a
+//!   Pallas kernel, AOT-lowered to HLO text and executed from rust through
+//!   PJRT (`runtime`). It powers the Starfish-style what-if engine and the
+//!   surrogate-SPSA extension; `whatif` holds the independent rust
+//!   implementation used to cross-check artifact numerics.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod runtime;
+pub mod sim;
+pub mod tuner;
+pub mod util;
+pub mod whatif;
+pub mod workloads;

@@ -1,0 +1,333 @@
+//! `repro` — CLI for the hadoop-spsa reproduction.
+//!
+//! Subcommands:
+//!   run         simulate one job and print the trace
+//!   tune        run a tuning algorithm on a benchmark
+//!   experiment  regenerate a paper table/figure (table1 | fig6 | fig7 |
+//!               fig8 | fig9 | table2 | headline | all)
+//!   whatif      evaluate a configuration on the analytic model /
+//!               AOT artifact and compare with the simulator
+//!   list        show benchmarks, parameters and algorithms
+
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
+use hadoop_spsa::coordinator::{profile_for, run_trial, Algo, ResultsDir, TrialSpec};
+use hadoop_spsa::experiments::{self, ExpOptions};
+use hadoop_spsa::runtime::{ArtifactWhatIf, Runtime};
+use hadoop_spsa::sim::{simulate, SimOptions};
+use hadoop_spsa::util::cli::Args;
+use hadoop_spsa::util::table::Table;
+use hadoop_spsa::util::units::fmt_secs;
+use hadoop_spsa::whatif::{cost_for_theta, ClusterFeatures};
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rc = match cmd {
+        "run" => cmd_run(),
+        "tune" => cmd_tune(),
+        "experiment" => cmd_experiment(),
+        "whatif" => cmd_whatif(),
+        "list" => cmd_list(),
+        _ => {
+            println!(
+                "repro — Performance Tuning of Hadoop MapReduce: A Noisy Gradient Approach\n\n\
+                 USAGE: repro <run|tune|experiment|whatif|list> [flags]\n\
+                 Run `repro <cmd> --help` for per-command flags."
+            );
+            0
+        }
+    };
+    std::process::exit(rc);
+}
+
+fn parse_version(s: &str) -> HadoopVersion {
+    if s.contains('2') {
+        HadoopVersion::V2
+    } else {
+        HadoopVersion::V1
+    }
+}
+
+fn parse_benchmark(s: &str) -> Benchmark {
+    Benchmark::from_name(s).unwrap_or_else(|| {
+        eprintln!("unknown benchmark '{s}' (see `repro list`)");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_run() -> i32 {
+    let parsed = Args::new("repro run", "simulate one job and print its trace")
+        .flag("benchmark", Some("terasort"), "benchmark name")
+        .flag("version", Some("v1"), "hadoop version (v1|v2)")
+        .flag("seed", Some("1"), "simulation seed")
+        .switch("no-noise", "disable stochastic task noise")
+        .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let bench = parse_benchmark(&p.get_str("benchmark"));
+    let version = parse_version(&p.get_str("version"));
+    let space = ParameterSpace::for_version(version);
+    let w = profile_for(bench, 1000);
+    let r = simulate(
+        &ClusterSpec::paper_cluster(),
+        &space.default_config(),
+        &w,
+        &SimOptions { seed: p.get_u64("seed").unwrap_or(1), noise: !p.get_bool("no-noise") },
+    );
+    println!(
+        "benchmark: {bench} ({} input)",
+        hadoop_spsa::util::units::fmt_bytes(w.input_bytes)
+    );
+    print!("{}", r.report());
+    0
+}
+
+fn cmd_tune() -> i32 {
+    let parsed = Args::new("repro tune", "tune a benchmark with one algorithm")
+        .flag("benchmark", Some("terasort"), "benchmark name")
+        .flag("version", Some("v1"), "hadoop version (v1|v2)")
+        .flag("algo", Some("spsa"), "spsa|starfish|ppabs|hill|random|surrogate")
+        .flag("iters", Some("30"), "SPSA iteration budget")
+        .flag("seed", Some("7"), "tuner seed")
+        .flag("metric", Some("time"), "objective: time|spills|shuffle|reduce-spill (spsa only)")
+        .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let algo = Algo::from_name(&p.get_str("algo")).unwrap_or_else(|| {
+        eprintln!("unknown algo (see `repro list`)");
+        std::process::exit(2);
+    });
+    let mut spec = TrialSpec::new(
+        parse_benchmark(&p.get_str("benchmark")),
+        parse_version(&p.get_str("version")),
+        algo,
+        p.get_u64("seed").unwrap_or(7),
+    );
+    spec.iters = p.get_u64("iters").unwrap_or(30);
+
+    // alternative objective metrics (paper §4.2) — SPSA path only
+    let metric = hadoop_spsa::tuner::Metric::from_name(&p.get_str("metric"))
+        .unwrap_or(hadoop_spsa::tuner::Metric::ExecTime);
+    if metric != hadoop_spsa::tuner::Metric::ExecTime {
+        use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig};
+        let space = ParameterSpace::for_version(spec.version);
+        let w = profile_for(spec.benchmark, 1000);
+        let cluster = ClusterSpec::paper_cluster();
+        let mut obj = SimObjective::new(space.clone(), cluster, w, spec.seed)
+            .with_metric(metric);
+        let f0 = {
+            use hadoop_spsa::tuner::Objective;
+            obj.eval(&space.default_theta())
+        };
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: spec.iters, seed: spec.seed, ..Default::default() },
+            &space,
+        );
+        let res = spsa.run(&mut obj, space.default_theta());
+        println!(
+            "SPSA minimizing {}: default {:.3e} → best {:.3e} ({} iterations, {} observations)",
+            metric.label(),
+            f0,
+            res.best_f,
+            res.iterations,
+            res.observations
+        );
+        return 0;
+    }
+
+    let o = run_trial(&spec);
+    println!(
+        "{} on {} ({}): default {} → tuned {} (±{:.0}s)  [{:.0}% decrease]",
+        algo.label(),
+        spec.benchmark,
+        spec.version,
+        fmt_secs(o.default_mean_s),
+        fmt_secs(o.tuned_mean_s),
+        o.tuned_std_s,
+        o.pct_decrease()
+    );
+    println!(
+        "observations: {}   model evals: {}   profiling: {}   tuner wall: {:.0} ms",
+        o.observations,
+        o.model_evals,
+        if o.profiling_overhead_s > 0.0 {
+            fmt_secs(o.profiling_overhead_s)
+        } else {
+            "none".into()
+        },
+        o.tuning_wall_ms
+    );
+    let space = ParameterSpace::for_version(spec.version);
+    let vals = space.to_hadoop_values(&o.tuned_theta);
+    let mut t = Table::new("tuned configuration").header(vec!["parameter", "default", "tuned"]);
+    for (i, param) in space.params().iter().enumerate() {
+        t.row(vec![
+            param.name.to_string(),
+            param.default_value().display(),
+            vals[i].display(),
+        ]);
+    }
+    print!("{}", t.to_ascii());
+    0
+}
+
+fn cmd_experiment() -> i32 {
+    let parsed = Args::new(
+        "repro experiment",
+        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 headline ablation holistic all)",
+    )
+    .switch("quick", "reduced seeds/iterations")
+    .flag("out", Some("results"), "output directory for md/csv")
+    .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let which = p.positional().first().map(|s| s.as_str()).unwrap_or("all").to_string();
+    let out = ResultsDir::new(p.get_str("out")).expect("results dir");
+    let opts = ExpOptions { quick: p.get_bool("quick"), out: Some(out) };
+
+    let mut ran = false;
+    let sel = |name: &str| which == name || which == "all";
+    if sel("table1") {
+        println!("{}", experiments::table1::run(&opts));
+        ran = true;
+    }
+    if sel("fig6") {
+        println!("{}", experiments::convergence::run(HadoopVersion::V1, &opts));
+        ran = true;
+    }
+    if sel("fig7") {
+        println!("{}", experiments::convergence::run(HadoopVersion::V2, &opts));
+        ran = true;
+    }
+    if sel("fig8") {
+        println!("{}", experiments::comparison::run(HadoopVersion::V1, &opts));
+        ran = true;
+    }
+    if sel("fig9") {
+        println!("{}", experiments::comparison::run(HadoopVersion::V2, &opts));
+        ran = true;
+    }
+    if sel("table2") {
+        println!("{}", experiments::table2::run(&opts));
+        ran = true;
+    }
+    if sel("holistic") {
+        println!("{}", experiments::holistic::run(&opts));
+        ran = true;
+    }
+    if sel("ablation") {
+        println!("{}", experiments::ablation::run(&opts));
+        ran = true;
+    }
+    if sel("headline") {
+        let (_, report) = experiments::headline::compute(&opts);
+        println!("{report}");
+        ran = true;
+    }
+    if !ran {
+        eprintln!("unknown experiment '{which}'");
+        return 2;
+    }
+    0
+}
+
+fn cmd_whatif() -> i32 {
+    let parsed = Args::new(
+        "repro whatif",
+        "evaluate a θ on the analytic model, the AOT artifact and the simulator",
+    )
+    .flag("benchmark", Some("terasort"), "benchmark name")
+    .flag("version", Some("v1"), "hadoop version")
+    .flag("theta", None, "comma-separated θ_A in [0,1]^11 (default: defaults)")
+    .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let bench = parse_benchmark(&p.get_str("benchmark"));
+    let version = parse_version(&p.get_str("version"));
+    let space = ParameterSpace::for_version(version);
+    let theta: Vec<f64> = match p.get("theta") {
+        Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+        None => space.default_theta(),
+    };
+    if theta.len() != space.dim() {
+        eprintln!("theta needs {} coordinates", space.dim());
+        return 2;
+    }
+    let w = profile_for(bench, 1000);
+    let cluster = ClusterSpec::paper_cluster();
+    let features = ClusterFeatures::from_spec(&cluster, version);
+
+    let model = cost_for_theta(&space, &theta, &w, &features);
+    let sim = simulate(
+        &cluster,
+        &space.materialize(&theta),
+        &w,
+        &SimOptions { seed: 1, noise: false },
+    )
+    .exec_time_s;
+    println!("rust what-if model  : {}", fmt_secs(model));
+    println!("simulator (no noise): {}", fmt_secs(sim));
+
+    if Runtime::artifacts_present("artifacts") {
+        let rt = Runtime::default_dir().expect("PJRT client");
+        let mut art = ArtifactWhatIf::new(&rt, space.clone(), &w, &features).expect("artifact");
+        use hadoop_spsa::baselines::CostEvaluator;
+        let got = art.eval_batch(std::slice::from_ref(&theta));
+        println!("AOT artifact (PJRT) : {}", fmt_secs(got[0]));
+    } else {
+        println!("AOT artifact        : skipped (run `make artifacts`)");
+    }
+    0
+}
+
+fn cmd_list() -> i32 {
+    println!("benchmarks:");
+    for b in Benchmark::all() {
+        println!(
+            "  {:<20} partial workload {}",
+            b.label(),
+            hadoop_spsa::util::units::fmt_bytes(b.paper_partial_bytes())
+        );
+    }
+    println!("\nalgorithms: default spsa surrogate starfish ppabs hill random");
+    for version in [HadoopVersion::V1, HadoopVersion::V2] {
+        let space = ParameterSpace::for_version(version);
+        let mut t = Table::new(&format!("parameters (Hadoop {version})")).header(vec![
+            "name", "kind", "min", "max", "default", "doc",
+        ]);
+        for p in space.params() {
+            t.row(vec![
+                p.name.to_string(),
+                format!("{:?}", p.kind),
+                format!("{}", p.min),
+                format!("{}", p.max),
+                format!("{}", p.default),
+                p.doc.to_string(),
+            ]);
+        }
+        print!("\n{}", t.to_ascii());
+    }
+    0
+}

@@ -1,0 +1,107 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client — the rust half of the AOT bridge (see `python/compile/aot.py`
+//! and /opt/xla-example/load_hlo for the reference wiring).
+//!
+//! One [`Runtime`] owns the PJRT client; each artifact compiles once into a
+//! [`LoadedComputation`] that the hot path executes repeatedly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Owns the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// A compiled executable plus its entry metadata.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifact_dir`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Create with the default `artifacts/` directory.
+    pub fn default_dir() -> Result<Runtime> {
+        Self::new(DEFAULT_ARTIFACT_DIR)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// True if the artifact files exist (lets tests skip gracefully when
+    /// `make artifacts` has not run).
+    pub fn artifacts_present(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("whatif_batch.hlo.txt").exists()
+            && dir.as_ref().join("spsa_step.hlo.txt").exists()
+    }
+
+    /// Load and compile `<name>.hlo.txt` from the artifact directory.
+    pub fn load(&self, name: &str) -> Result<LoadedComputation> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        Ok(LoadedComputation { exe, name: name.to_string() })
+    }
+}
+
+impl LoadedComputation {
+    /// Execute with f32 tensor inputs given as (data, dims) pairs; returns
+    /// the flattened f32 contents of the first tuple element.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims)
+                    .with_context(|| format!("reshape to {dims:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer from {}", self.name))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: outputs are 1-tuples
+        let inner = out.to_tuple1().context("unwrapping output tuple")?;
+        Ok(inner.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_present_detects_missing() {
+        assert!(!Runtime::artifacts_present("/nonexistent"));
+    }
+
+    // Full load/execute coverage lives in rust/tests/integration_runtime.rs
+    // (needs `make artifacts`).
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and serves them
+//! on the rust hot path. Python never runs at request time.
+
+pub mod client;
+pub mod whatif_artifact;
+
+pub use client::{LoadedComputation, Runtime, DEFAULT_ARTIFACT_DIR};
+pub use whatif_artifact::{
+    ArtifactSpsaStep, ArtifactWhatIf, SpsaStepOut, ARTIFACT_BATCH, ARTIFACT_K,
+};

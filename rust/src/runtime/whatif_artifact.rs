@@ -1,0 +1,171 @@
+//! The AOT cost-model artifact as a [`CostEvaluator`]: Starfish's what-if
+//! engine served by the compiled JAX/Pallas graph through PJRT — this is
+//! the L1/L2 compute on the L3 hot path.
+
+use anyhow::Result;
+
+use crate::baselines::CostEvaluator;
+use crate::config::ParameterSpace;
+use crate::whatif::ClusterFeatures;
+use crate::workloads::WorkloadProfile;
+
+use super::client::{LoadedComputation, Runtime};
+
+/// Batch size baked into the artifact (`python/compile/model.py::BATCH`).
+pub const ARTIFACT_BATCH: usize = 256;
+/// Perturbations baked into the SPSA-step artifact.
+pub const ARTIFACT_K: usize = 8;
+const N: usize = 11;
+
+/// What-if engine backed by the `whatif_batch` artifact.
+pub struct ArtifactWhatIf {
+    comp: LoadedComputation,
+    pub space: ParameterSpace,
+    workload_features: Vec<f32>,
+    cluster_features: Vec<f32>,
+    evals: u64,
+}
+
+impl ArtifactWhatIf {
+    pub fn new(
+        runtime: &Runtime,
+        space: ParameterSpace,
+        workload: &WorkloadProfile,
+        cluster: &ClusterFeatures,
+    ) -> Result<Self> {
+        Ok(ArtifactWhatIf {
+            comp: runtime.load("whatif_batch")?,
+            space,
+            workload_features: workload.to_features(),
+            cluster_features: cluster.to_features(),
+            evals: 0,
+        })
+    }
+
+    /// Evaluate a batch of Hadoop-space rows (padded internally to the
+    /// artifact batch size).
+    pub fn eval_rows(&mut self, rows: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(ARTIFACT_BATCH) {
+            let mut flat = vec![0f32; ARTIFACT_BATCH * N];
+            for (i, row) in chunk.iter().enumerate() {
+                assert_eq!(row.len(), N);
+                flat[i * N..(i + 1) * N].copy_from_slice(row);
+            }
+            // pad with copies of the first row (cost discarded)
+            for i in chunk.len()..ARTIFACT_BATCH {
+                let src: Vec<f32> = flat[..N].to_vec();
+                flat[i * N..(i + 1) * N].copy_from_slice(&src);
+            }
+            let res = self.comp.run_f32(&[
+                (&flat, &[ARTIFACT_BATCH as i64, N as i64]),
+                (&self.workload_features, &[11]),
+                (&self.cluster_features, &[10]),
+            ])?;
+            out.extend(res[..chunk.len()].iter().map(|&x| x as f64));
+        }
+        self.evals += rows.len() as u64;
+        Ok(out)
+    }
+}
+
+impl CostEvaluator for ArtifactWhatIf {
+    fn dim(&self) -> usize {
+        self.space.dim()
+    }
+
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        let rows: Vec<Vec<f32>> =
+            thetas.iter().map(|t| self.space.to_feature_row(t)).collect();
+        self.eval_rows(&rows)
+            .expect("artifact execution failed on the hot path")
+    }
+
+    fn model_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Surrogate-SPSA step served by the `spsa_step` artifact.
+pub struct ArtifactSpsaStep {
+    comp: LoadedComputation,
+    space_spec: Vec<f32>,
+    workload_features: Vec<f32>,
+    cluster_features: Vec<f32>,
+}
+
+/// Decoded output of one surrogate step.
+#[derive(Clone, Debug)]
+pub struct SpsaStepOut {
+    pub theta_next: Vec<f64>,
+    pub f_theta: f64,
+    pub ghat: Vec<f64>,
+}
+
+impl ArtifactSpsaStep {
+    pub fn new(
+        runtime: &Runtime,
+        space: &ParameterSpace,
+        workload: &WorkloadProfile,
+        cluster: &ClusterFeatures,
+    ) -> Result<Self> {
+        // [4, n] spec rows: min, width, is_int, is_bool
+        let mut spec = Vec::with_capacity(4 * N);
+        for p in space.params() {
+            spec.push(p.min as f32);
+        }
+        for p in space.params() {
+            spec.push(p.width() as f32);
+        }
+        for p in space.params() {
+            spec.push((p.kind == crate::config::ParamKind::Int) as u8 as f32);
+        }
+        for p in space.params() {
+            spec.push((p.kind == crate::config::ParamKind::Bool) as u8 as f32);
+        }
+        Ok(ArtifactSpsaStep {
+            comp: runtime.load("spsa_step")?,
+            space_spec: spec,
+            workload_features: workload.to_features(),
+            cluster_features: cluster.to_features(),
+        })
+    }
+
+    /// One iteration: θ, K sign rows, c scales, (α, max_step) → decoded out.
+    pub fn step(
+        &self,
+        theta: &[f64],
+        signs: &[Vec<f64>],
+        c_scales: &[f64],
+        alpha: f64,
+        max_step: f64,
+    ) -> Result<SpsaStepOut> {
+        assert_eq!(theta.len(), N);
+        assert_eq!(signs.len(), ARTIFACT_K);
+        let theta32: Vec<f32> = theta.iter().map(|&x| x as f32).collect();
+        let mut signs32 = Vec::with_capacity(ARTIFACT_K * N);
+        for row in signs {
+            assert_eq!(row.len(), N);
+            signs32.extend(row.iter().map(|&x| x as f32));
+        }
+        let c32: Vec<f32> = c_scales.iter().map(|&x| x as f32).collect();
+        let hyper = [alpha as f32, max_step as f32];
+        let out = self.comp.run_f32(&[
+            (&theta32, &[N as i64]),
+            (&signs32, &[ARTIFACT_K as i64, N as i64]),
+            (&c32, &[N as i64]),
+            (&self.workload_features, &[11]),
+            (&self.cluster_features, &[10]),
+            (&self.space_spec, &[4, N as i64]),
+            (&hyper, &[2]),
+        ])?;
+        assert_eq!(out.len(), 2 * N + 1, "spsa_step output length");
+        Ok(SpsaStepOut {
+            theta_next: out[..N].iter().map(|&x| x as f64).collect(),
+            f_theta: out[N] as f64,
+            ghat: out[N + 1..].iter().map(|&x| x as f64).collect(),
+        })
+    }
+}
+
+// Execution-level tests live in rust/tests/integration_runtime.rs.

@@ -1,0 +1,58 @@
+//! Calibration constants of the simulator's cost model. These are the
+//! "physics" of the simulated Hadoop installation: fixed framework costs a
+//! real deployment would exhibit but the paper does not tune.
+
+/// Seconds to cold-start a task JVM (v1 always pays this; v2 amortizes it
+/// over `jvm.numtasks` tasks).
+pub const JVM_START_S: f64 = 1.4;
+
+/// Residual per-task scheduling/launch overhead when a JVM is reused.
+pub const TASK_LAUNCH_S: f64 = 0.15;
+
+/// Fixed job setup (split computation, staging) + cleanup time in seconds.
+pub const JOB_SETUP_S: f64 = 5.0;
+pub const JOB_CLEANUP_S: f64 = 3.0;
+
+/// Per-spill-file constant cost (file create + fsync + seek), seconds.
+pub const SPILL_FILE_S: f64 = 0.006;
+
+/// Per-file open cost during merges, seconds.
+pub const FILE_OPEN_S: f64 = 0.003;
+
+/// CPU ops per record-comparison in the sort (k·log₂k model).
+pub const SORT_OPS_PER_CMP: f64 = 12.0;
+
+/// CPU ops per record for one combiner application.
+pub const COMBINE_OPS_PER_REC: f64 = 18.0;
+
+/// CPU ops per byte for zlib-class compression / decompression.
+pub const COMPRESS_OPS_PER_BYTE: f64 = 5.0;
+pub const DECOMPRESS_OPS_PER_BYTE: f64 = 1.5;
+
+/// CPU ops per byte for the merge copy path.
+pub const MERGE_OPS_PER_BYTE: f64 = 0.4;
+
+/// Number of concurrently-merged streams a disk handles before seek
+/// thrashing degrades throughput.
+pub const MERGE_STREAM_SWEET_SPOT: f64 = 48.0;
+
+/// Throughput degradation slope beyond the sweet spot: rate divisor grows
+/// by (streams - sweet)/this.
+pub const MERGE_STREAM_PENALTY_DIV: f64 = 96.0;
+
+/// Fraction of a reduce task's shuffle that can start only after the last
+/// map wave produces its output (the non-overlappable tail).
+pub const SHUFFLE_TAIL_FRACTION: f64 = 0.5;
+
+/// Reduce-function memory-pressure penalty coefficient: reduce CPU is
+/// multiplied by (1 + coeff · riB²) where riB = reduce.input.buffer.percent.
+/// Retaining map outputs in the heap squeezes the reduce function.
+pub const REDUCE_MEM_PRESSURE_COEFF: f64 = 0.6;
+
+/// Lognormal sigma for per-task multiplicative noise — the run-to-run
+/// variance SPSA must filter (paper §4.2).
+pub const TASK_NOISE_SIGMA: f64 = 0.10;
+
+/// Straggler probability and slowdown factor.
+pub const STRAGGLER_P: f64 = 0.015;
+pub const STRAGGLER_FACTOR: f64 = 2.2;

@@ -1,0 +1,353 @@
+//! Map-task cost model: the paper's §2.3.1 data path priced in seconds.
+//!
+//! read → map function → circular buffer → {sort, combine, compress, spill}
+//! cycles → multi-pass merge of spill files. Pure function of
+//! (config, workload, split size, effective bandwidths) so it is testable in
+//! isolation; the scheduler supplies contention-adjusted bandwidths.
+
+use super::constants::*;
+use crate::config::HadoopConfig;
+use crate::workloads::WorkloadProfile;
+
+/// Effective resource rates seen by one task (after contention sharing).
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRates {
+    pub disk_bw: f64,
+    pub net_bw: f64,
+    pub cpu_ops_per_sec: f64,
+}
+
+/// Cost breakdown of one map task.
+#[derive(Clone, Debug, Default)]
+pub struct MapTaskCost {
+    pub read_s: f64,
+    pub map_cpu_s: f64,
+    /// Spill-side work: sort + combine + compress + spill writes.
+    pub spill_s: f64,
+    pub merge_s: f64,
+    /// Map phase wall time accounting for map/spill overlap (excludes read
+    /// and merge).
+    pub overlapped_phase_s: f64,
+    pub n_spills: u64,
+    pub spilled_records: u64,
+    /// Bytes of final map output on disk (post combine, post compression).
+    pub output_bytes: u64,
+    /// Post-combiner output bytes *before* compression — the logical volume
+    /// reducers must process.
+    pub output_bytes_raw: u64,
+    /// Map output records after the (per-spill) combiner.
+    pub output_records: u64,
+}
+
+/// Size of one map task's output (data only, no timing): used by the
+/// scheduler to know total shuffle volume before reducers launch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MapOutputSize {
+    /// Post-combiner, pre-compression bytes.
+    pub raw_bytes: f64,
+    /// On-disk / on-wire bytes (compressed if configured).
+    pub wire_bytes: f64,
+    pub records: f64,
+    pub n_spills: u64,
+}
+
+/// Compute a map task's output volume for a split — pure data-flow, no
+/// resource rates involved.
+pub fn map_output_for_split(
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    split_bytes: u64,
+) -> MapOutputSize {
+    let records = split_bytes as f64 / w.avg_input_record_bytes;
+    let out_bytes = split_bytes as f64 * w.map_selectivity_bytes;
+    let out_records = records * w.map_selectivity_records;
+    if out_bytes <= 0.0 {
+        return MapOutputSize::default();
+    }
+    let n_spills = spill_count(config, out_bytes, out_records);
+    let r_eff = if w.has_combiner {
+        effective_combiner_reduction(w.combiner_reduction, n_spills)
+    } else {
+        1.0
+    };
+    let raw = out_bytes * r_eff;
+    let wire = if config.compress_map_output { raw * w.compress_ratio } else { raw };
+    MapOutputSize { raw_bytes: raw, wire_bytes: wire, records: out_records * r_eff, n_spills }
+}
+
+impl MapTaskCost {
+    /// Total task wall time excluding setup.
+    pub fn wall_s(&self) -> f64 {
+        self.read_s + self.overlapped_phase_s + self.merge_s
+    }
+}
+
+/// Effective combiner survival ratio when the map output is cut into
+/// `n_spills` pieces: a combiner over many small spills sees fewer duplicate
+/// keys, so its measured whole-output reduction `r` degrades toward 1.
+pub fn effective_combiner_reduction(r: f64, n_spills: u64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&r));
+    if n_spills <= 1 {
+        return r;
+    }
+    let dilution = 1.0 + (n_spills as f64).ln();
+    1.0 - (1.0 - r) / dilution
+}
+
+/// Number of spills produced by one map task (paper §2.3.1: triggered by
+/// either the data threshold or — v1 — the record-metadata threshold).
+pub fn spill_count(config: &HadoopConfig, out_bytes: f64, out_records: f64) -> u64 {
+    if out_bytes <= 0.0 {
+        return 0;
+    }
+    let data_trigger = (config.sort_buffer_data_bytes() as f64 * config.spill_percent).max(1.0);
+    let record_trigger =
+        (config.sort_buffer_record_capacity() as f64 * config.spill_percent).max(1.0);
+    let by_data = (out_bytes / data_trigger).ceil() as u64;
+    let by_records = (out_records / record_trigger).ceil() as u64;
+    by_data.max(by_records).max(1)
+}
+
+/// Overlap efficiency between the map function and the spill thread.
+/// A low spill threshold starts spilling early (good overlap); a high
+/// threshold means the buffer is nearly full when spilling starts and the
+/// map blocks (paper §2.3.1: "If any time the buffer becomes full, the Map
+/// task is blocked till spill finishes").
+pub fn spill_overlap_efficiency(spill_percent: f64) -> f64 {
+    ((1.0 - spill_percent) * 1.6).clamp(0.05, 1.0)
+}
+
+/// Price one map task processing `split_bytes` of input.
+pub fn map_task_cost(
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    split_bytes: u64,
+    local_read: bool,
+    rates: &TaskRates,
+) -> MapTaskCost {
+    let mut c = MapTaskCost::default();
+    let cpu = rates.cpu_ops_per_sec;
+
+    // ---- read (OS layer: readahead boosts sequential reads; the TCP
+    // window caps remote-flow bandwidth) --------------------------------
+    let read_bw = if local_read {
+        rates.disk_bw * config.os.readahead_boost()
+    } else {
+        rates.net_bw.min(config.os.net_window_bw())
+    };
+    c.read_s = split_bytes as f64 / read_bw.max(1.0);
+
+    // ---- map function ------------------------------------------------------
+    let records = split_bytes as f64 / w.avg_input_record_bytes;
+    c.map_cpu_s = records * w.map_cpu_ops_per_record / cpu;
+
+    let out_bytes = split_bytes as f64 * w.map_selectivity_bytes;
+    let out_records = records * w.map_selectivity_records;
+    if out_bytes <= 0.0 {
+        // map-only-style task with no output (degenerate; still valid)
+        c.overlapped_phase_s = c.map_cpu_s;
+        return c;
+    }
+
+    // ---- spill cycles ------------------------------------------------------
+    let size = map_output_for_split(config, w, split_bytes);
+    let n_spills = size.n_spills;
+    c.n_spills = n_spills;
+    // Hadoop's "Spilled Records" counter: every record written to local
+    // disk, including re-writes by multi-pass merges.
+    c.spilled_records = out_records as u64;
+
+    // sort: records · log2(records-per-spill) comparisons
+    let per_spill_records = (out_records / n_spills as f64).max(2.0);
+    let sort_cpu_s = out_records * per_spill_records.log2() * SORT_OPS_PER_CMP / cpu;
+
+    // combiner (per spill)
+    let combine_cpu_s = if w.has_combiner { out_records * COMBINE_OPS_PER_REC / cpu } else { 0.0 };
+    let surviving_bytes = size.raw_bytes;
+    let surviving_records = size.records;
+
+    // compression of spill output
+    let disk_bytes = size.wire_bytes;
+    let compress_cpu_s = if config.compress_map_output {
+        surviving_bytes * COMPRESS_OPS_PER_BYTE / cpu
+    } else {
+        0.0
+    };
+
+    let spill_io_s = disk_bytes / rates.disk_bw.max(1.0)
+        + n_spills as f64 * SPILL_FILE_S * config.os.spill_overhead_factor();
+    c.spill_s = sort_cpu_s + combine_cpu_s + compress_cpu_s + spill_io_s;
+
+    // ---- overlap of map-side and spill-side work ---------------------------
+    let overlap = spill_overlap_efficiency(config.spill_percent);
+    let a = c.map_cpu_s;
+    let b = c.spill_s;
+    c.overlapped_phase_s = a.max(b) + (1.0 - overlap) * a.min(b);
+
+    // ---- merge spills into the final map output ----------------------------
+    if n_spills > 1 {
+        let factor = config.sort_factor.max(2) as f64;
+        let passes = ((n_spills as f64).ln() / factor.ln()).ceil().max(1.0);
+        // each pass reads + writes the full surviving output
+        let streams = factor.min(n_spills as f64);
+        let seek_divisor = 1.0 + ((streams - MERGE_STREAM_SWEET_SPOT).max(0.0)) / MERGE_STREAM_PENALTY_DIV;
+        let merge_rate = rates.disk_bw.max(1.0) / seek_divisor;
+        let merge_io_s = passes * disk_bytes * 2.0 / merge_rate;
+        let merge_cpu_s = passes * surviving_bytes * MERGE_OPS_PER_BYTE / cpu;
+        let open_s = (n_spills as f64 + passes * streams) * FILE_OPEN_S;
+        c.merge_s = merge_io_s + merge_cpu_s + open_s;
+        // merge passes re-write every surviving record
+        c.spilled_records += (surviving_records * passes) as u64;
+    }
+
+    c.output_bytes = disk_bytes as u64;
+    c.output_bytes_raw = surviving_bytes as u64;
+    c.output_records = surviving_records as u64;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParameterSpace;
+
+    fn rates() -> TaskRates {
+        TaskRates { disk_bw: 40e6, net_bw: 40e6, cpu_ops_per_sec: 2e8 }
+    }
+
+    fn terasort_like() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "tera".into(),
+            input_bytes: 30 << 30,
+            avg_input_record_bytes: 100.0,
+            map_selectivity_bytes: 1.0,
+            map_selectivity_records: 1.0,
+            avg_map_record_bytes: 100.0,
+            combiner_reduction: 1.0,
+            has_combiner: false,
+            reduce_selectivity_bytes: 1.0,
+            partition_skew: 1.1,
+            compress_ratio: 0.4,
+            map_cpu_ops_per_record: 60.0,
+            reduce_cpu_ops_per_record: 50.0,
+        }
+    }
+
+    fn grep_like() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "grep".into(),
+            input_bytes: 22 << 30,
+            avg_input_record_bytes: 80.0,
+            map_selectivity_bytes: 0.05,
+            map_selectivity_records: 0.3,
+            avg_map_record_bytes: 14.0,
+            combiner_reduction: 0.3,
+            has_combiner: true,
+            reduce_selectivity_bytes: 0.5,
+            partition_skew: 1.5,
+            compress_ratio: 0.35,
+            map_cpu_ops_per_record: 2600.0,
+            reduce_cpu_ops_per_record: 120.0,
+        }
+    }
+
+    #[test]
+    fn default_config_spills_a_lot() {
+        // paper Table 1 defaults: io.sort.mb=100, spill%=0.08 ⇒ a 128 MB
+        // terasort split spills many times.
+        let cfg = ParameterSpace::v1().default_config();
+        let c = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        assert!(c.n_spills > 10, "spills {}", c.n_spills);
+        assert!(c.merge_s > 0.0);
+    }
+
+    #[test]
+    fn bigger_buffer_fewer_spills() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        let base = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        cfg.io_sort_mb = 1024;
+        cfg.spill_percent = 0.8;
+        cfg.sort_record_percent = 0.2;
+        let tuned = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        assert!(tuned.n_spills < base.n_spills);
+        assert!(tuned.wall_s() < base.wall_s(), "tuned {} base {}", tuned.wall_s(), base.wall_s());
+    }
+
+    #[test]
+    fn spill_count_record_trigger_dominates_small_records() {
+        // tiny records: the v1 record-metadata limit binds before the data
+        // limit — the cross-parameter interaction the paper highlights.
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.io_sort_mb = 100;
+        cfg.sort_record_percent = 0.01; // tiny accounting space
+        cfg.spill_percent = 0.8;
+        let by_both = spill_count(&cfg, 10e6, 1_000_000.0);
+        cfg.sort_record_percent = 0.4;
+        let relaxed = spill_count(&cfg, 10e6, 1_000_000.0);
+        assert!(by_both > relaxed);
+    }
+
+    #[test]
+    fn compression_cuts_spill_io_but_costs_cpu() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.io_sort_mb = 512;
+        cfg.spill_percent = 0.8;
+        let plain = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        cfg.compress_map_output = true;
+        let compressed = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        assert!(compressed.output_bytes < plain.output_bytes);
+    }
+
+    #[test]
+    fn remote_read_slower_than_local() {
+        let cfg = ParameterSpace::v1().default_config();
+        let slow_net = TaskRates { disk_bw: 80e6, net_bw: 20e6, cpu_ops_per_sec: 2e8 };
+        let local = map_task_cost(&cfg, &grep_like(), 128 << 20, true, &slow_net);
+        let remote = map_task_cost(&cfg, &grep_like(), 128 << 20, false, &slow_net);
+        assert!(remote.read_s > local.read_s * 3.0);
+    }
+
+    #[test]
+    fn combiner_dilution_monotone() {
+        let r = 0.3;
+        let mut last = effective_combiner_reduction(r, 1);
+        assert!((last - r).abs() < 1e-12);
+        for n in [2, 4, 16, 64, 1024] {
+            let e = effective_combiner_reduction(r, n);
+            assert!(e >= last, "not monotone at {n}");
+            assert!(e <= 1.0);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn overlap_better_at_low_threshold() {
+        assert!(spill_overlap_efficiency(0.1) > spill_overlap_efficiency(0.9));
+        assert!(spill_overlap_efficiency(0.05) <= 1.0);
+        assert!(spill_overlap_efficiency(0.95) >= 0.05);
+    }
+
+    #[test]
+    fn grep_output_is_small() {
+        let cfg = ParameterSpace::v1().default_config();
+        let c = map_task_cost(&cfg, &grep_like(), 128 << 20, true, &rates());
+        assert!(c.output_bytes < (128 << 20) / 10);
+        // CPU-bound: map cpu dominates spill-side work
+        assert!(c.map_cpu_s > c.spill_s);
+    }
+
+    #[test]
+    fn huge_sort_factor_pays_seek_penalty() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.io_sort_mb = 60;
+        cfg.spill_percent = 0.1; // many spills
+        cfg.sort_factor = 16;
+        let modest = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        cfg.sort_factor = 500;
+        let huge = map_task_cost(&cfg, &terasort_like(), 128 << 20, true, &rates());
+        // 500-way merge does one pass but thrashes; 16-way does more passes.
+        // Neither dominates universally — just check both priced sanely.
+        assert!(modest.merge_s > 0.0 && huge.merge_s > 0.0);
+        assert!(huge.merge_s != modest.merge_s);
+    }
+}

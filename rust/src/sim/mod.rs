@@ -1,0 +1,19 @@
+//! Discrete-event simulator of a Hadoop MapReduce cluster — the substrate
+//! standing in for the paper's 25-node testbed (DESIGN.md §1).
+//!
+//! `simulate(cluster, config, workload, opts)` plays one job through the
+//! full §2.3 data path and returns the wall-clock execution time (the SPSA
+//! objective) plus a phase/counter trace.
+
+pub mod constants;
+pub mod event;
+pub mod map_task;
+pub mod reduce_task;
+pub mod simulator;
+pub mod trace;
+
+pub use event::{EventQueue, SimTime};
+pub use map_task::{map_output_for_split, map_task_cost, MapTaskCost, TaskRates};
+pub use reduce_task::{reduce_task_cost, ReduceTaskCost};
+pub use simulator::{simulate, SimOptions};
+pub use trace::{JobRunResult, PhaseBreakdown, SimCounters};

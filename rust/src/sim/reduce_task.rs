@@ -1,0 +1,253 @@
+//! Reduce-task cost model: the paper's §2.3.2 data path priced in seconds.
+//!
+//! shuffle fetch → in-memory segment buffer → {threshold,percent}-triggered
+//! in-memory merges → on-disk merge passes → reduce function → HDFS write.
+//! Pure function of (config, workload, per-reducer volume, bandwidths).
+
+use super::constants::*;
+use super::map_task::TaskRates;
+use crate::config::HadoopConfig;
+use crate::workloads::WorkloadProfile;
+
+/// Cost breakdown of one reduce task.
+#[derive(Clone, Debug, Default)]
+pub struct ReduceTaskCost {
+    /// Network fetch time for this reducer's partition.
+    pub shuffle_s: f64,
+    /// In-memory + on-disk merge work before the reduce function.
+    pub merge_s: f64,
+    pub reduce_cpu_s: f64,
+    pub write_s: f64,
+    /// Bytes spilled to the reducer's local disk during shuffle/merge.
+    pub spilled_bytes: u64,
+    /// Final output bytes written to HDFS.
+    pub output_bytes: u64,
+}
+
+impl ReduceTaskCost {
+    pub fn wall_s(&self) -> f64 {
+        self.shuffle_s + self.merge_s + self.reduce_cpu_s + self.write_s
+    }
+}
+
+/// How many in-memory merge flushes the shuffle performs, and how much data
+/// reaches disk. Returns (n_flushes, disk_bytes).
+///
+/// Segments arrive into a buffer of `shuffle.input.buffer.percent × heap`;
+/// a flush fires when accumulated segments exceed `inmem.merge.threshold`
+/// count or `shuffle.merge.percent` of the buffer (paper §2.3.2). After the
+/// shuffle, `reduce.input.buffer.percent × heap` bytes may stay in memory.
+pub fn inmem_merge_plan(
+    config: &HadoopConfig,
+    volume_bytes: f64,
+    n_segments: f64,
+) -> (u64, f64) {
+    if volume_bytes <= 0.0 || n_segments <= 0.0 {
+        return (0, 0.0);
+    }
+    let buffer = config.shuffle_buffer_bytes() as f64;
+    let byte_trigger = (buffer * config.shuffle_merge_percent).max(1.0);
+    let seg_trigger = config.inmem_merge_threshold as f64;
+
+    // Everything fits and never crosses a trigger: no disk at all.
+    let retained = config.reduce_task_heap as f64 * config.reduce_input_buffer_percent;
+    if volume_bytes <= byte_trigger && n_segments <= seg_trigger && volume_bytes <= buffer {
+        return (0, 0.0);
+    }
+
+    let avg_segment = volume_bytes / n_segments;
+    let segs_per_flush_by_bytes = (byte_trigger / avg_segment.max(1.0)).max(1.0);
+    let segs_per_flush = seg_trigger.min(segs_per_flush_by_bytes).max(1.0);
+    let n_flushes = (n_segments / segs_per_flush).ceil().max(1.0);
+    // reduce.input.buffer.percent lets the tail stay in memory
+    let disk_bytes = (volume_bytes - retained).max(0.0);
+    (n_flushes as u64, disk_bytes)
+}
+
+/// Price one reduce task fetching `volume_bytes` (post-combiner map output,
+/// compressed on the wire if map compression is on) from `n_maps` mappers.
+pub fn reduce_task_cost(
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    volume_bytes: u64,
+    n_maps: u64,
+    rates: &TaskRates,
+) -> ReduceTaskCost {
+    let mut c = ReduceTaskCost::default();
+    let cpu = rates.cpu_ops_per_sec;
+    let vol = volume_bytes as f64;
+    if vol <= 0.0 {
+        return c;
+    }
+
+    // Wire volume: map outputs travel compressed if map compression is on.
+    let wire_bytes = if config.compress_map_output { vol * w.compress_ratio } else { vol };
+
+    // ---- shuffle fetch (TCP window caps per-flow bandwidth) ---------------
+    let fetch_s = wire_bytes / rates.net_bw.min(config.os.net_window_bw()).max(1.0);
+    let decompress_s = if config.compress_map_output {
+        wire_bytes * DECOMPRESS_OPS_PER_BYTE / cpu
+    } else {
+        0.0
+    };
+    c.shuffle_s = fetch_s + decompress_s;
+
+    // ---- in-memory merge flushes -------------------------------------------
+    let (n_flushes, disk_bytes) = inmem_merge_plan(config, vol, n_maps as f64);
+    c.spilled_bytes = disk_bytes as u64;
+    let mut merge_s = 0.0;
+    if n_flushes > 0 {
+        // each flush sorts/merges its segments and writes to disk
+        let write_io = disk_bytes / rates.disk_bw.max(1.0);
+        let flush_overhead =
+            n_flushes as f64 * SPILL_FILE_S * config.os.spill_overhead_factor();
+        let merge_cpu = vol * MERGE_OPS_PER_BYTE / cpu;
+        merge_s += write_io + flush_overhead + merge_cpu;
+
+        // ---- on-disk merge passes ------------------------------------------
+        // n_flushes files on disk; the final merge streams into the reduce,
+        // so only passes beyond the first re-read/re-write data.
+        let factor = config.sort_factor.max(2) as f64;
+        let extra_passes = ((n_flushes as f64).ln() / factor.ln()).ceil().max(1.0) - 1.0;
+        if extra_passes > 0.0 && disk_bytes > 0.0 {
+            let streams = factor.min(n_flushes as f64);
+            let seek_divisor =
+                1.0 + ((streams - MERGE_STREAM_SWEET_SPOT).max(0.0)) / MERGE_STREAM_PENALTY_DIV;
+            merge_s += extra_passes * disk_bytes * 2.0 / (rates.disk_bw.max(1.0) / seek_divisor);
+            merge_s += (n_flushes as f64 + extra_passes * streams) * FILE_OPEN_S;
+        }
+        // final read of on-disk data into the reduce function
+        merge_s += disk_bytes / rates.disk_bw.max(1.0);
+    }
+    c.merge_s = merge_s;
+
+    // ---- reduce function -----------------------------------------------------
+    let records = vol / w.avg_map_record_bytes.max(1.0);
+    // retaining map outputs in the heap pressures the reduce function
+    let mem_pressure =
+        1.0 + REDUCE_MEM_PRESSURE_COEFF * config.reduce_input_buffer_percent.powi(2);
+    c.reduce_cpu_s = records * w.reduce_cpu_ops_per_record * mem_pressure / cpu;
+
+    // ---- output write (HDFS, pipelined replication) --------------------------
+    let mut out_bytes = vol * w.reduce_selectivity_bytes;
+    let mut compress_cpu = 0.0;
+    if config.output_compress {
+        compress_cpu = out_bytes * COMPRESS_OPS_PER_BYTE / cpu;
+        out_bytes *= w.compress_ratio;
+    }
+    c.output_bytes = out_bytes as u64;
+    let local_write = out_bytes / rates.disk_bw.max(1.0);
+    let replica_send = out_bytes * (config.dfs_replication.saturating_sub(1)) as f64
+        / rates.net_bw.max(1.0);
+    // pipeline: local write and replica transfer overlap
+    c.write_s = local_write.max(replica_send) + compress_cpu;
+
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParameterSpace;
+
+    fn rates() -> TaskRates {
+        TaskRates { disk_bw: 60e6, net_bw: 60e6, cpu_ops_per_sec: 2e8 }
+    }
+
+    fn wl() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "t".into(),
+            input_bytes: 1 << 30,
+            avg_input_record_bytes: 100.0,
+            map_selectivity_bytes: 1.0,
+            map_selectivity_records: 1.0,
+            avg_map_record_bytes: 100.0,
+            combiner_reduction: 1.0,
+            has_combiner: false,
+            reduce_selectivity_bytes: 1.0,
+            partition_skew: 1.0,
+            compress_ratio: 0.4,
+            map_cpu_ops_per_record: 60.0,
+            reduce_cpu_ops_per_record: 200.0,
+        }
+    }
+
+    #[test]
+    fn small_volume_stays_in_memory() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.shuffle_input_buffer_percent = 0.7; // 716 MB buffer
+        cfg.shuffle_merge_percent = 0.9;
+        cfg.inmem_merge_threshold = 10_000;
+        let (flushes, disk) = inmem_merge_plan(&cfg, 100e6, 50.0);
+        assert_eq!(flushes, 0);
+        assert_eq!(disk, 0.0);
+    }
+
+    #[test]
+    fn low_threshold_forces_many_flushes() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.inmem_merge_threshold = 10;
+        let (flushes_low, _) = inmem_merge_plan(&cfg, 2e9, 500.0);
+        cfg.inmem_merge_threshold = 400;
+        let (flushes_high, _) = inmem_merge_plan(&cfg, 2e9, 500.0);
+        assert!(flushes_low > flushes_high);
+    }
+
+    #[test]
+    fn retained_memory_cuts_disk_bytes() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.reduce_input_buffer_percent = 0.0;
+        let (_, disk0) = inmem_merge_plan(&cfg, 2e9, 500.0);
+        cfg.reduce_input_buffer_percent = 0.5;
+        let (_, disk1) = inmem_merge_plan(&cfg, 2e9, 500.0);
+        assert!(disk1 < disk0);
+        assert!((disk0 - disk1 - 0.5 * (1u64 << 30) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn map_compression_cuts_wire_time() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        let plain = reduce_task_cost(&cfg, &wl(), 1 << 30, 100, &rates());
+        cfg.compress_map_output = true;
+        let comp = reduce_task_cost(&cfg, &wl(), 1 << 30, 100, &rates());
+        assert!(comp.shuffle_s < plain.shuffle_s);
+    }
+
+    #[test]
+    fn output_compress_trades_write_for_cpu() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        let plain = reduce_task_cost(&cfg, &wl(), 1 << 30, 100, &rates());
+        cfg.output_compress = true;
+        let comp = reduce_task_cost(&cfg, &wl(), 1 << 30, 100, &rates());
+        assert!(comp.output_bytes < plain.output_bytes);
+    }
+
+    #[test]
+    fn mem_pressure_penalizes_reduce_cpu() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.reduce_input_buffer_percent = 0.0;
+        let lean = reduce_task_cost(&cfg, &wl(), 1 << 28, 100, &rates());
+        cfg.reduce_input_buffer_percent = 0.8;
+        let fat = reduce_task_cost(&cfg, &wl(), 1 << 28, 100, &rates());
+        assert!(fat.reduce_cpu_s > lean.reduce_cpu_s);
+    }
+
+    #[test]
+    fn zero_volume_is_free() {
+        let cfg = ParameterSpace::v1().default_config();
+        let c = reduce_task_cost(&cfg, &wl(), 0, 100, &rates());
+        assert_eq!(c.wall_s(), 0.0);
+    }
+
+    #[test]
+    fn bigger_shuffle_buffer_less_disk() {
+        let mut cfg = ParameterSpace::v1().default_config();
+        cfg.inmem_merge_threshold = 10_000;
+        cfg.shuffle_merge_percent = 0.9;
+        cfg.shuffle_input_buffer_percent = 0.1;
+        let small = reduce_task_cost(&cfg, &wl(), 600 << 20, 200, &rates());
+        cfg.shuffle_input_buffer_percent = 0.9;
+        let big = reduce_task_cost(&cfg, &wl(), 600 << 20, 200, &rates());
+        assert!(big.merge_s <= small.merge_s);
+    }
+}

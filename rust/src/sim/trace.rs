@@ -1,0 +1,163 @@
+//! Simulation outputs: per-phase time breakdown, data-flow counters and the
+//! job-level result — the "job history" a real Hadoop run would leave behind
+//! (and what profiling-based baselines like Starfish consume).
+
+use crate::util::units::{fmt_bytes, fmt_secs};
+
+/// Aggregate time spent in each pipeline phase, summed over tasks.
+/// (Wall-clock job time is shorter because tasks run in parallel.)
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub task_setup: f64,
+    pub map_read: f64,
+    pub map_cpu: f64,
+    /// Spill-side work on the map: sort + combine + compress + write.
+    pub map_spill: f64,
+    pub map_merge: f64,
+    pub shuffle: f64,
+    pub reduce_merge: f64,
+    pub reduce_cpu: f64,
+    pub output_write: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.task_setup
+            + self.map_read
+            + self.map_cpu
+            + self.map_spill
+            + self.map_merge
+            + self.shuffle
+            + self.reduce_merge
+            + self.reduce_cpu
+            + self.output_write
+    }
+
+    pub fn add(&mut self, other: &PhaseBreakdown) {
+        self.task_setup += other.task_setup;
+        self.map_read += other.map_read;
+        self.map_cpu += other.map_cpu;
+        self.map_spill += other.map_spill;
+        self.map_merge += other.map_merge;
+        self.shuffle += other.shuffle;
+        self.reduce_merge += other.reduce_merge;
+        self.reduce_cpu += other.reduce_cpu;
+        self.output_write += other.output_write;
+    }
+
+    /// (label, seconds) rows for display, largest first.
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        let mut v = vec![
+            ("task setup", self.task_setup),
+            ("map read", self.map_read),
+            ("map cpu", self.map_cpu),
+            ("map spill (sort+combine+write)", self.map_spill),
+            ("map merge", self.map_merge),
+            ("shuffle", self.shuffle),
+            ("reduce merge", self.reduce_merge),
+            ("reduce cpu", self.reduce_cpu),
+            ("output write", self.output_write),
+        ];
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// Data-flow counters, mirroring Hadoop's job counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimCounters {
+    pub n_maps: u64,
+    pub n_reduces: u64,
+    pub map_waves: u64,
+    pub reduce_waves: u64,
+    /// Total spill files written by all map tasks.
+    pub spilled_files: u64,
+    /// Records written to spill files (Hadoop's "Spilled Records").
+    pub spilled_records: u64,
+    pub map_output_bytes: u64,
+    /// Bytes moved map→reduce over the network.
+    pub shuffled_bytes: u64,
+    /// Reduce-side bytes written to disk before the reduce function.
+    pub reduce_spilled_bytes: u64,
+    pub output_bytes: u64,
+    /// Map tasks that read their split from a local replica.
+    pub data_local_maps: u64,
+}
+
+/// Result of one simulated job execution.
+#[derive(Clone, Debug)]
+pub struct JobRunResult {
+    /// The objective f(θ): wall-clock job execution time in seconds.
+    pub exec_time_s: f64,
+    pub phases: PhaseBreakdown,
+    pub counters: SimCounters,
+    /// Time the last map task finished (start of the reduce-only tail).
+    pub maps_done_s: f64,
+}
+
+impl JobRunResult {
+    /// Human-readable run report (used by `repro run` and cluster_trace).
+    pub fn report(&self) -> String {
+        let c = &self.counters;
+        let mut s = String::new();
+        s.push_str(&format!("job time: {}\n", fmt_secs(self.exec_time_s)));
+        s.push_str(&format!(
+            "maps: {} ({} waves, {} data-local)   reduces: {} ({} waves)\n",
+            c.n_maps, c.map_waves, c.data_local_maps, c.n_reduces, c.reduce_waves
+        ));
+        s.push_str(&format!(
+            "map output: {}   shuffled: {}   spill files: {}   spilled records: {}\n",
+            fmt_bytes(c.map_output_bytes),
+            fmt_bytes(c.shuffled_bytes),
+            c.spilled_files,
+            c.spilled_records,
+        ));
+        s.push_str(&format!(
+            "reduce-side spill: {}   output: {}\n",
+            fmt_bytes(c.reduce_spilled_bytes),
+            fmt_bytes(c.output_bytes)
+        ));
+        s.push_str("phase breakdown (task-seconds):\n");
+        for (label, secs) in self.phases.rows() {
+            if secs > 0.0 {
+                s.push_str(&format!("  {:<32} {}\n", label, fmt_secs(secs)));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_add() {
+        let mut a = PhaseBreakdown { map_cpu: 1.0, shuffle: 2.0, ..Default::default() };
+        let b = PhaseBreakdown { map_cpu: 0.5, output_write: 1.5, ..Default::default() };
+        a.add(&b);
+        assert!((a.total() - 5.0).abs() < 1e-12);
+        assert!((a.map_cpu - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_sorted_descending() {
+        let p = PhaseBreakdown { map_cpu: 1.0, shuffle: 5.0, map_read: 3.0, ..Default::default() };
+        let rows = p.rows();
+        assert_eq!(rows[0].0, "shuffle");
+        assert!(rows.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn report_mentions_key_counters() {
+        let r = JobRunResult {
+            exec_time_s: 123.0,
+            phases: PhaseBreakdown::default(),
+            counters: SimCounters { n_maps: 10, n_reduces: 4, ..Default::default() },
+            maps_done_s: 100.0,
+        };
+        let rep = r.report();
+        assert!(rep.contains("maps: 10"));
+        assert!(rep.contains("reduces: 4"));
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's contribution: SPSA-based Hadoop parameter tuning
+//! (Algorithm 1 + the §5 adaptations), with a pluggable noisy objective.
+
+pub mod objective;
+pub mod spsa;
+
+pub use objective::{Metric, Objective, QuadraticObjective, SimObjective};
+pub use spsa::{
+    IterRecord, Spsa, SpsaConfig, SpsaState, SpsaVariant, StopReason, TuningResult,
+};

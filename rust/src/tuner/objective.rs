@@ -1,0 +1,261 @@
+//! Objective abstraction: `f(θ_A)` — one *noisy* observation of system
+//! performance per call (paper Fig. 3's system-in-the-loop box).
+
+use crate::cluster::ClusterSpec;
+use crate::config::ParameterSpace;
+use crate::sim::{simulate, SimOptions};
+use crate::workloads::WorkloadProfile;
+
+/// A tunable system observed through its scalar performance.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    /// One observation of f at θ_A ∈ [0,1]^n. Observations are noisy; the
+    /// same θ may return different values (run-to-run variance).
+    fn eval(&mut self, theta: &[f64]) -> f64;
+    /// Total observations made so far (the paper's cost metric: 2/iter).
+    fn evals(&self) -> u64;
+}
+
+/// Which job statistic the tuner minimizes. The paper's experiments use
+/// execution time, and §4.2 notes "we can also have other performance
+/// metrics — like number of records spilled to disk, memory and heap
+/// usage or number of failed jobs".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Wall-clock job execution time in seconds (the paper's metric).
+    ExecTime,
+    /// Records written to map-side spill files ("Spilled Records").
+    SpilledRecords,
+    /// Bytes moved map→reduce over the network.
+    ShuffledBytes,
+    /// Reduce-side bytes hitting disk before the reduce function.
+    ReduceSpill,
+}
+
+impl Metric {
+    pub fn from_name(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "exectime" | "time" => Some(Metric::ExecTime),
+            "spilledrecords" | "spills" => Some(Metric::SpilledRecords),
+            "shuffledbytes" | "shuffle" => Some(Metric::ShuffledBytes),
+            "reducespill" => Some(Metric::ReduceSpill),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Metric::ExecTime => "execution time (s)",
+            Metric::SpilledRecords => "spilled records",
+            Metric::ShuffledBytes => "shuffled bytes",
+            Metric::ReduceSpill => "reduce-side spilled bytes",
+        }
+    }
+
+    /// Extract the metric from a run result. A +1 offset keeps byte/record
+    /// metrics strictly positive for relative normalization.
+    pub fn extract(&self, r: &crate::sim::JobRunResult) -> f64 {
+        match self {
+            Metric::ExecTime => r.exec_time_s,
+            Metric::SpilledRecords => r.counters.spilled_records as f64 + 1.0,
+            Metric::ShuffledBytes => r.counters.shuffled_bytes as f64 + 1.0,
+            Metric::ReduceSpill => r.counters.reduce_spilled_bytes as f64 + 1.0,
+        }
+    }
+}
+
+/// The real objective: a job statistic of the workload on the simulated
+/// cluster, exactly as the SPSA process on the NameNode observes it
+/// (paper §6: job execution time is the default performance metric).
+pub struct SimObjective {
+    pub space: ParameterSpace,
+    pub cluster: ClusterSpec,
+    pub workload: WorkloadProfile,
+    /// Base seed: each observation derives an independent run seed, so
+    /// repeated evaluations at the same θ differ — as on a real cluster.
+    pub base_seed: u64,
+    /// Noise on/off (off only for landscape dumps / tests).
+    pub noise: bool,
+    /// Statistic to minimize.
+    pub metric: Metric,
+    evals: u64,
+}
+
+impl SimObjective {
+    pub fn new(
+        space: ParameterSpace,
+        cluster: ClusterSpec,
+        workload: WorkloadProfile,
+        base_seed: u64,
+    ) -> Self {
+        SimObjective {
+            space,
+            cluster,
+            workload,
+            base_seed,
+            noise: true,
+            metric: Metric::ExecTime,
+            evals: 0,
+        }
+    }
+
+    pub fn noise_free(mut self) -> Self {
+        self.noise = false;
+        self
+    }
+
+    pub fn with_metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
+    }
+}
+
+impl Objective for SimObjective {
+    fn dim(&self) -> usize {
+        self.space.dim()
+    }
+
+    fn eval(&mut self, theta: &[f64]) -> f64 {
+        self.evals += 1;
+        let config = self.space.materialize(theta);
+        let seed = self
+            .base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(self.evals);
+        let opts = SimOptions { seed, noise: self.noise };
+        self.metric
+            .extract(&simulate(&self.cluster, &config, &self.workload, &opts))
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Noisy quadratic test objective: f(θ) = Σ wᵢ (θᵢ − θ*ᵢ)² + noise.
+/// Used by the convergence tests (the landscape SPSA provably descends).
+pub struct QuadraticObjective {
+    pub target: Vec<f64>,
+    pub weights: Vec<f64>,
+    pub noise_sigma: f64,
+    rng: crate::util::rng::Rng,
+    evals: u64,
+}
+
+impl QuadraticObjective {
+    pub fn new(target: Vec<f64>, noise_sigma: f64, seed: u64) -> Self {
+        let weights = vec![1.0; target.len()];
+        QuadraticObjective {
+            target,
+            weights,
+            noise_sigma,
+            rng: crate::util::rng::Rng::seeded(seed),
+            evals: 0,
+        }
+    }
+}
+
+impl Objective for QuadraticObjective {
+    fn dim(&self) -> usize {
+        self.target.len()
+    }
+
+    fn eval(&mut self, theta: &[f64]) -> f64 {
+        self.evals += 1;
+        let f: f64 = theta
+            .iter()
+            .zip(&self.target)
+            .zip(&self.weights)
+            .map(|((t, s), w)| w * (t - s) * (t - s))
+            .sum();
+        // offset keeps f positive so relative normalization is stable
+        1.0 + f + self.noise_sigma * self.rng.gaussian()
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Benchmark;
+
+    fn objective() -> SimObjective {
+        let mut rng = crate::util::rng::Rng::seeded(1);
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut rng);
+        SimObjective::new(ParameterSpace::v1(), ClusterSpec::paper_cluster(), w, 42)
+    }
+
+    #[test]
+    fn sim_objective_observes_noisy_f() {
+        let mut o = objective();
+        let theta = o.space.default_theta();
+        let a = o.eval(&theta);
+        let b = o.eval(&theta);
+        assert!(a > 0.0 && b > 0.0);
+        assert_ne!(a, b, "repeated observations must differ (noise)");
+        assert!((a / b - 1.0).abs() < 0.8);
+        assert_eq!(o.evals(), 2);
+    }
+
+    #[test]
+    fn noise_free_is_repeatable_per_eval_index() {
+        // noise-free still advances the eval counter/seed but the sim noise
+        // is off, so values at identical theta coincide.
+        let mut o = objective().noise_free();
+        let theta = o.space.default_theta();
+        let a = o.eval(&theta);
+        let b = o.eval(&theta);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alternative_metrics_differ_from_time() {
+        let base = objective();
+        let theta = base.space.default_theta();
+        let mut time_obj = objective();
+        let mut spill_obj = objective().with_metric(Metric::SpilledRecords);
+        let t = time_obj.eval(&theta);
+        let s = spill_obj.eval(&theta);
+        assert!(t > 0.0 && s > 0.0);
+        assert_ne!(t, s, "metrics should measure different things");
+    }
+
+    #[test]
+    fn tuning_spilled_records_reduces_spills() {
+        use crate::tuner::{Spsa, SpsaConfig};
+        let mut obj = objective().with_metric(Metric::SpilledRecords);
+        let theta0 = obj.space.default_theta();
+        let f0 = obj.eval(&theta0);
+        let space = obj.space.clone();
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: 15, ..Default::default() },
+            &space,
+        );
+        let res = spsa.run(&mut obj, theta0);
+        assert!(
+            res.best_f <= f0,
+            "spill-metric tuning got worse: {f0} -> {}",
+            res.best_f
+        );
+    }
+
+    #[test]
+    fn metric_parsing() {
+        assert_eq!(Metric::from_name("time"), Some(Metric::ExecTime));
+        assert_eq!(Metric::from_name("spilled-records"), Some(Metric::SpilledRecords));
+        assert_eq!(Metric::from_name("shuffle"), Some(Metric::ShuffledBytes));
+        assert_eq!(Metric::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn quadratic_minimum_at_target() {
+        let mut o = QuadraticObjective::new(vec![0.3, 0.7], 0.0, 1);
+        let at_target = o.eval(&[0.3, 0.7]);
+        let away = o.eval(&[0.9, 0.1]);
+        assert!(at_target < away);
+        assert!((at_target - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,589 @@
+//! Simultaneous Perturbation Stochastic Approximation — the paper's
+//! Algorithm 1, with the §5 Hadoop-specific adaptations:
+//!
+//! * θ_A ∈ [0,1]^n with the projection Γ clipping coordinates (§5.1);
+//! * Bernoulli ±1 perturbations Δ (Example 2), coordinate-scaled so integer
+//!   Hadoop parameters move by ≥ 1 per perturbation (§5.2);
+//! * constant step size α (§5.2), two observations per iteration;
+//! * optional gradient averaging over several Δs (§6.5, citing [28]) and a
+//!   one-measurement variant (§6.5);
+//! * pause/resume via JSON checkpoints (§6.8 point 3);
+//! * termination on negligible gradient change or max iterations (§6.5).
+//!
+//! **Stability guard (documented deviation).** The observed objective is
+//! normalized by the *current* observation (f/f(θₙ), so relative
+//! sensitivity — and hence step size — is preserved as the objective drops
+//! by orders of magnitude), and per-coordinate steps are clipped to
+//! `max_step` per iteration. The paper's raw update
+//! θ(i) − α·(f(θ+δΔ)−f(θ))/(δΔ(i)) has magnitude α·Δf·(θᴴmax−θᴴmin) which
+//! for wide integer ranges (e.g. inmem.merge.threshold, width 9990) exceeds
+//! the whole [0,1] box for any measurable Δf; unclipped it degenerates to
+//! boundary bang-bang. The clip preserves the gradient's *sign and relative
+//! magnitude* across coordinates — exactly the cross-parameter information
+//! SPSA is prized for — while keeping iterates inside the region the paper's
+//! own plots show (smooth descent with noise jumps, Fig. 6/7).
+
+use crate::config::ParameterSpace;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::objective::Objective;
+
+/// Which gradient estimator to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpsaVariant {
+    /// Paper's estimator (eq. 3): (f(θ+δΔ) − f(θ)) / δΔ(i) — 2 obs/iter.
+    OneSided,
+    /// Classical Spall: (f(θ+δΔ) − f(θ−δΔ)) / 2δΔ(i) — 2 obs/iter.
+    TwoSided,
+    /// One-measurement form (§6.5): f(θ+δΔ)/δΔ(i) — 1 obs/iter, noisier.
+    OneMeasurement,
+    /// Random-directions SA (paper §7 future work, citing Prashanth et
+    /// al. [26]): gaussian direction d, ĝ(i) = d(i)·(f(θ+cd) − f(θ))/c.
+    Rdsa,
+}
+
+/// SPSA hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct SpsaConfig {
+    /// Maximum iterations (paper: convergence within 20–30).
+    pub max_iters: u64,
+    /// Constant step size α (paper §5.2: 0.01).
+    pub alpha: f64,
+    /// Per-coordinate per-iteration step clip (stability guard).
+    pub max_step: f64,
+    /// Gradient estimates averaged per iteration (paper §6.5; 1 = off).
+    pub grad_avg: u64,
+    pub variant: SpsaVariant,
+    /// Stop when the relative change of the gradient-estimate norm stays
+    /// below this for `patience` consecutive iterations.
+    pub grad_tol: f64,
+    pub patience: u64,
+    /// RNG seed for the perturbation sequence.
+    pub seed: u64,
+}
+
+impl Default for SpsaConfig {
+    fn default() -> Self {
+        SpsaConfig {
+            max_iters: 30,
+            alpha: 0.01,
+            max_step: 0.15,
+            grad_avg: 2,
+            variant: SpsaVariant::OneSided,
+            grad_tol: 0.02,
+            patience: 4,
+            seed: 7,
+        }
+    }
+}
+
+/// One iteration's record (feeds the Fig-6/7 convergence curves).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: u64,
+    /// Observation at θ_n (un-normalized seconds).
+    pub f_theta: f64,
+    /// Observation at the perturbed point.
+    pub f_pert: f64,
+    /// ∞-norm of the (normalized) gradient estimate.
+    pub grad_norm: f64,
+    pub theta: Vec<f64>,
+}
+
+/// Resumable tuner state — serializable for pause/resume (paper §6.8).
+#[derive(Clone, Debug)]
+pub struct SpsaState {
+    pub theta: Vec<f64>,
+    pub iter: u64,
+    /// Normalization constant: the first observation f(θ₀).
+    pub f0: Option<f64>,
+    pub prev_grad_norm: Option<f64>,
+    pub calm_iters: u64,
+    pub best_theta: Vec<f64>,
+    pub best_f: f64,
+    pub history: Vec<IterRecord>,
+}
+
+impl SpsaState {
+    pub fn fresh(theta0: Vec<f64>) -> Self {
+        SpsaState {
+            best_theta: theta0.clone(),
+            theta: theta0,
+            iter: 0,
+            f0: None,
+            prev_grad_norm: None,
+            calm_iters: 0,
+            best_f: f64::INFINITY,
+            history: Vec::new(),
+        }
+    }
+
+    /// Serialize for checkpointing.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("theta", Json::from_f64_slice(&self.theta))
+            .set("iter", Json::Num(self.iter as f64))
+            .set(
+                "f0",
+                self.f0.map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set(
+                "prev_grad_norm",
+                self.prev_grad_norm.map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set("calm_iters", Json::Num(self.calm_iters as f64))
+            .set("best_theta", Json::from_f64_slice(&self.best_theta))
+            .set("best_f", Json::Num(self.best_f))
+            .set(
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|r| {
+                            let mut o = Json::obj();
+                            o.set("iter", Json::Num(r.iter as f64))
+                                .set("f_theta", Json::Num(r.f_theta))
+                                .set("f_pert", Json::Num(r.f_pert))
+                                .set("grad_norm", Json::Num(r.grad_norm))
+                                .set("theta", Json::from_f64_slice(&r.theta));
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let theta = j
+            .get("theta")
+            .and_then(|x| x.to_f64_vec())
+            .ok_or("missing theta")?;
+        let best_theta = j
+            .get("best_theta")
+            .and_then(|x| x.to_f64_vec())
+            .ok_or("missing best_theta")?;
+        let history = j
+            .get("history")
+            .and_then(|h| h.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|r| {
+                        Some(IterRecord {
+                            iter: r.get("iter")?.as_f64()? as u64,
+                            f_theta: r.get("f_theta")?.as_f64()?,
+                            f_pert: r.get("f_pert")?.as_f64()?,
+                            grad_norm: r.get("grad_norm")?.as_f64()?,
+                            theta: r.get("theta")?.to_f64_vec()?,
+                        })
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(SpsaState {
+            theta,
+            iter: j.get("iter").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            f0: j.get("f0").and_then(|x| x.as_f64()),
+            prev_grad_norm: j.get("prev_grad_norm").and_then(|x| x.as_f64()),
+            calm_iters: j.get("calm_iters").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            best_theta,
+            best_f: j.get("best_f").and_then(|x| x.as_f64()).unwrap_or(f64::INFINITY),
+            history,
+        })
+    }
+}
+
+/// Why the run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    MaxIters,
+    GradientCalm,
+    Paused,
+}
+
+/// Result of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuningResult {
+    /// θ_{N+1} — the paper's returned iterate.
+    pub final_theta: Vec<f64>,
+    /// Best observed iterate (practical deployments keep this).
+    pub best_theta: Vec<f64>,
+    pub best_f: f64,
+    pub stop: StopReason,
+    pub iterations: u64,
+    pub observations: u64,
+    pub history: Vec<IterRecord>,
+}
+
+/// The SPSA tuner.
+pub struct Spsa {
+    pub config: SpsaConfig,
+    /// Per-coordinate perturbation magnitude c(i) in algorithm space.
+    pub c: Vec<f64>,
+}
+
+impl Spsa {
+    /// Perturbation scales for a Hadoop parameter space: the paper's
+    /// δΔ(i) = 1/(max−min), clamped into [0.05, 0.25] so real-valued
+    /// coordinates (width < 1) stay inside the unit box, very wide integer
+    /// ranges still move ≥ 1 Hadoop unit, and narrow-impact coordinates
+    /// probe far enough to rise above the run-to-run noise floor.
+    pub fn scales_for(space: &ParameterSpace) -> Vec<f64> {
+        space
+            .params()
+            .iter()
+            .map(|p| (1.0 / p.width().max(1e-9)).clamp(0.05, 0.25))
+            .collect()
+    }
+
+    pub fn new(config: SpsaConfig, c: Vec<f64>) -> Self {
+        assert!(!c.is_empty());
+        Spsa { config, c }
+    }
+
+    pub fn for_space(config: SpsaConfig, space: &ParameterSpace) -> Self {
+        Self::new(config, Self::scales_for(space))
+    }
+
+    /// Run from a fresh state at θ₀.
+    pub fn run(&self, objective: &mut dyn Objective, theta0: Vec<f64>) -> TuningResult {
+        let state = SpsaState::fresh(theta0);
+        self.run_from(objective, state, None)
+    }
+
+    /// Run (or resume) from an explicit state; `pause_after` optionally
+    /// stops after that many *additional* iterations (pause/resume demo).
+    pub fn run_from(
+        &self,
+        objective: &mut dyn Objective,
+        mut state: SpsaState,
+        pause_after: Option<u64>,
+    ) -> TuningResult {
+        let n = objective.dim();
+        assert_eq!(self.c.len(), n, "perturbation scale dimension mismatch");
+        let cfg = &self.config;
+        let start_iter = state.iter;
+        let mut stop = StopReason::MaxIters;
+
+        while state.iter < cfg.max_iters {
+            if let Some(p) = pause_after {
+                if state.iter - start_iter >= p {
+                    stop = StopReason::Paused;
+                    break;
+                }
+            }
+            // Deterministic per-iteration RNG ⇒ checkpoint/resume replays
+            // the same perturbation sequence.
+            let mut rng = Rng::seeded(cfg.seed ^ (state.iter.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+
+            // f(θ_n)
+            let f_theta = objective.eval(&state.theta);
+            let f0 = *state.f0.get_or_insert(f_theta.max(1e-9));
+            // Adaptive normalization: gradients are scaled by the *current*
+            // observation, so the relative sensitivity (and hence step
+            // size) stays constant as the objective shrinks by orders of
+            // magnitude during descent. (f0 remains the one-measurement
+            // variant's denominator, which has no current observation.)
+            let f_norm = f_theta.max(1e-9);
+            if f_theta < state.best_f {
+                state.best_f = f_theta;
+                state.best_theta = state.theta.clone();
+            }
+
+            // averaged gradient estimate (cfg.grad_avg independent Δs)
+            let mut grad = vec![0.0; n];
+            let mut f_pert_last = f_theta;
+            for _ in 0..cfg.grad_avg.max(1) {
+                let signs: Vec<f64> = (0..n).map(|_| rng.rademacher()).collect();
+                let pert: Vec<f64> = state
+                    .theta
+                    .iter()
+                    .zip(&signs)
+                    .zip(&self.c)
+                    .map(|((t, s), c)| (t + s * c).clamp(0.0, 1.0))
+                    .collect();
+
+                match cfg.variant {
+                    SpsaVariant::OneSided => {
+                        let f_pert = objective.eval(&pert);
+                        f_pert_last = f_pert;
+                        let df = (f_pert - f_theta) / f_norm;
+                        for i in 0..n {
+                            grad[i] += df / (signs[i] * self.c[i]);
+                        }
+                    }
+                    SpsaVariant::TwoSided => {
+                        let pert_minus: Vec<f64> = state
+                            .theta
+                            .iter()
+                            .zip(&signs)
+                            .zip(&self.c)
+                            .map(|((t, s), c)| (t - s * c).clamp(0.0, 1.0))
+                            .collect();
+                        let f_plus = objective.eval(&pert);
+                        let f_minus = objective.eval(&pert_minus);
+                        f_pert_last = f_plus;
+                        let df = (f_plus - f_minus) / (2.0 * f_norm);
+                        for i in 0..n {
+                            grad[i] += df / (signs[i] * self.c[i]);
+                        }
+                    }
+                    SpsaVariant::OneMeasurement => {
+                        let f_pert = objective.eval(&pert);
+                        f_pert_last = f_pert;
+                        let fv = f_pert / f0;
+                        for i in 0..n {
+                            grad[i] += fv / (signs[i] * self.c[i]);
+                        }
+                    }
+                    SpsaVariant::Rdsa => {
+                        // gaussian direction instead of Bernoulli signs
+                        let dirs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                        let pert_g: Vec<f64> = state
+                            .theta
+                            .iter()
+                            .zip(&dirs)
+                            .zip(&self.c)
+                            .map(|((t, d), c)| (t + d * c).clamp(0.0, 1.0))
+                            .collect();
+                        let f_pert = objective.eval(&pert_g);
+                        f_pert_last = f_pert;
+                        let df = (f_pert - f_theta) / f_norm;
+                        for i in 0..n {
+                            grad[i] += dirs[i] * df / self.c[i];
+                        }
+                    }
+                }
+            }
+            let avg = cfg.grad_avg.max(1) as f64;
+            for g in grad.iter_mut() {
+                *g /= avg;
+            }
+
+            // Γ(θ − α·ĝ) with the per-coordinate step clip
+            for i in 0..n {
+                let step = (cfg.alpha * grad[i]).clamp(-cfg.max_step, cfg.max_step);
+                state.theta[i] = (state.theta[i] - step).clamp(0.0, 1.0);
+            }
+
+            let grad_norm = grad.iter().fold(0.0f64, |m, g| m.max(g.abs()));
+            state.history.push(IterRecord {
+                iter: state.iter,
+                f_theta,
+                f_pert: f_pert_last,
+                grad_norm,
+                theta: state.theta.clone(),
+            });
+
+            // termination: negligible change in the gradient estimate
+            if let Some(prev) = state.prev_grad_norm {
+                let rel = (grad_norm - prev).abs() / prev.max(1e-9);
+                if rel < cfg.grad_tol {
+                    state.calm_iters += 1;
+                } else {
+                    state.calm_iters = 0;
+                }
+            }
+            state.prev_grad_norm = Some(grad_norm);
+            state.iter += 1;
+
+            if state.calm_iters >= cfg.patience {
+                stop = StopReason::GradientCalm;
+                break;
+            }
+        }
+
+        TuningResult {
+            final_theta: state.theta.clone(),
+            best_theta: state.best_theta.clone(),
+            best_f: state.best_f,
+            stop,
+            iterations: state.iter,
+            observations: objective.evals(),
+            history: state.history,
+        }
+    }
+
+    /// Run with pause support, returning the checkpointable state instead
+    /// of a final result (used by the pause/resume example).
+    pub fn run_paused(
+        &self,
+        objective: &mut dyn Objective,
+        state: SpsaState,
+        iters: u64,
+    ) -> SpsaState {
+        let mut st = state;
+        let res = self.run_from(objective, st.clone(), Some(iters));
+        // rebuild state from the result (run_from consumed a clone)
+        st.theta = res.final_theta;
+        st.iter = res.iterations;
+        st.best_theta = res.best_theta;
+        st.best_f = res.best_f;
+        st.history = res.history;
+        if st.f0.is_none() {
+            st.f0 = st.history.first().map(|r| r.f_theta);
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::objective::QuadraticObjective;
+
+    fn quad_spsa(seed: u64) -> Spsa {
+        Spsa::new(
+            SpsaConfig {
+                max_iters: 150,
+                alpha: 0.05,
+                max_step: 0.08,
+                grad_avg: 2,
+                grad_tol: 0.0, // disable calm stopping for the descent tests
+                patience: u64::MAX,
+                seed,
+                variant: SpsaVariant::OneSided,
+            },
+            vec![0.05; 4],
+        )
+    }
+
+    #[test]
+    fn descends_noisy_quadratic() {
+        let target = vec![0.25, 0.75, 0.5, 0.9];
+        let mut obj = QuadraticObjective::new(target.clone(), 0.02, 3);
+        let res = quad_spsa(1).run(&mut obj, vec![0.5; 4]);
+        let err: f64 = res
+            .final_theta
+            .iter()
+            .zip(&target)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / 4.0;
+        assert!(err < 0.15, "mean abs error {err}, theta {:?}", res.final_theta);
+    }
+
+    #[test]
+    fn two_obs_per_iteration_one_sided() {
+        let mut obj = QuadraticObjective::new(vec![0.5; 4], 0.0, 1);
+        let spsa = quad_spsa(2);
+        let res = spsa.run(&mut obj, vec![0.2; 4]);
+        // one-sided with grad_avg=2: 1 + 2 observations per iteration
+        assert_eq!(res.observations, res.iterations * 3);
+    }
+
+    #[test]
+    fn one_measurement_variant_uses_fewer_obs() {
+        let mut cfg = quad_spsa(3).config;
+        cfg.variant = SpsaVariant::OneMeasurement;
+        cfg.grad_avg = 1;
+        let spsa = Spsa::new(cfg, vec![0.05; 4]);
+        let mut obj = QuadraticObjective::new(vec![0.5; 4], 0.0, 1);
+        let res = spsa.run(&mut obj, vec![0.2; 4]);
+        assert_eq!(res.observations, res.iterations * 2); // f(θ) + 1 pert
+    }
+
+    #[test]
+    fn projection_keeps_unit_box() {
+        let mut obj = QuadraticObjective::new(vec![0.0, 1.0, 0.0, 1.0], 0.1, 5);
+        let res = quad_spsa(4).run(&mut obj, vec![0.5; 4]);
+        for r in &res.history {
+            assert!(r.theta.iter().all(|t| (0.0..=1.0).contains(t)));
+        }
+    }
+
+    #[test]
+    fn history_records_every_iteration() {
+        let mut obj = QuadraticObjective::new(vec![0.5; 4], 0.01, 6);
+        let res = quad_spsa(5).run(&mut obj, vec![0.1; 4]);
+        assert_eq!(res.history.len() as u64, res.iterations);
+        assert_eq!(res.history[0].iter, 0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut obj = QuadraticObjective::new(vec![0.5; 4], 0.01, 7);
+        let spsa = quad_spsa(6);
+        let st = spsa.run_paused(&mut obj, SpsaState::fresh(vec![0.2; 4]), 10);
+        let json = st.to_json();
+        let back = SpsaState::from_json(&json).unwrap();
+        assert_eq!(back.theta, st.theta);
+        assert_eq!(back.iter, st.iter);
+        assert_eq!(back.history.len(), st.history.len());
+        assert_eq!(back.best_theta, st.best_theta);
+    }
+
+    #[test]
+    fn pause_resume_matches_straight_run() {
+        // identical perturbation sequence per iteration index ⇒ pausing and
+        // resuming yields the same trajectory as an uninterrupted run on a
+        // noise-free objective.
+        let spsa = Spsa::new(
+            SpsaConfig {
+                max_iters: 20,
+                grad_tol: 0.0,
+                patience: u64::MAX,
+                ..quad_spsa(9).config
+            },
+            vec![0.05; 4],
+        );
+        let mut obj1 = QuadraticObjective::new(vec![0.6; 4], 0.0, 1);
+        let full = spsa.run(&mut obj1, vec![0.2; 4]);
+
+        let mut obj2 = QuadraticObjective::new(vec![0.6; 4], 0.0, 1);
+        let st = spsa.run_paused(&mut obj2, SpsaState::fresh(vec![0.2; 4]), 8);
+        let resumed = spsa.run_from(&mut obj2, st, None);
+        for (a, b) in full.final_theta.iter().zip(&resumed.final_theta) {
+            assert!((a - b).abs() < 1e-9, "{:?} vs {:?}", full.final_theta, resumed.final_theta);
+        }
+    }
+
+    #[test]
+    fn rdsa_variant_descends() {
+        let mut cfg = quad_spsa(11).config;
+        cfg.variant = SpsaVariant::Rdsa;
+        let spsa = Spsa::new(cfg, vec![0.05; 4]);
+        let target = vec![0.3, 0.7, 0.4, 0.6];
+        let mut obj = QuadraticObjective::new(target.clone(), 0.02, 5);
+        let res = spsa.run(&mut obj, vec![0.5; 4]);
+        let err: f64 = res
+            .final_theta
+            .iter()
+            .zip(&target)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / 4.0;
+        assert!(err < 0.2, "RDSA error {err}: {:?}", res.final_theta);
+    }
+
+    #[test]
+    fn calm_gradient_stops_early() {
+        let spsa = Spsa::new(
+            SpsaConfig {
+                max_iters: 500,
+                grad_tol: 0.5,
+                patience: 3,
+                ..quad_spsa(10).config
+            },
+            vec![0.05; 4],
+        );
+        let mut obj = QuadraticObjective::new(vec![0.5; 4], 0.0, 2);
+        let res = spsa.run(&mut obj, vec![0.5; 4]); // start at optimum
+        assert_eq!(res.stop, StopReason::GradientCalm);
+        assert!(res.iterations < 500);
+    }
+
+    #[test]
+    fn scales_respect_integer_movement() {
+        let space = ParameterSpace::v1();
+        let c = Spsa::scales_for(&space);
+        for (ci, p) in c.iter().zip(space.params()) {
+            assert!(*ci >= 0.02 && *ci <= 0.25, "{}: {}", p.name, ci);
+            if p.width() >= 5.0 {
+                // moving by c in algo space moves ≥ 1 Hadoop unit
+                assert!(ci * p.width() >= 1.0 - 1e-9, "{}", p.name);
+            }
+        }
+    }
+}

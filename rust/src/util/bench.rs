@@ -1,0 +1,113 @@
+//! Micro-bench harness used by the `harness = false` bench targets
+//! (criterion is unavailable offline, DESIGN.md §7). Measures wall-clock
+//! over warmup + timed iterations and prints mean ± stddev and throughput.
+
+use std::time::Instant;
+
+use super::stats::OnlineStats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn summary(&self) -> String {
+        let (val, unit) = humanize_ns(self.mean_ns);
+        format!(
+            "{:<40} {:>10.3} {}  (±{:.1}%, {} iters, {:.1}/s)",
+            self.name,
+            val,
+            unit,
+            100.0 * self.stddev_ns / self.mean_ns.max(1e-12),
+            self.iters,
+            self.per_sec()
+        )
+    }
+}
+
+fn humanize_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until `min_time_s` of cumulative measurement (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, min_iters: u64, min_time_s: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let mut total = 0.0;
+    let mut iters = 0u64;
+    while iters < min_iters || total < min_time_s {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        stats.push(dt * 1e9);
+        total += dt;
+        iters += 1;
+        if iters > 10_000_000 {
+            break; // safety valve
+        }
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: stats.mean(),
+        stddev_ns: stats.stddev(),
+        iters,
+    };
+    println!("{}", r.summary());
+    r
+}
+
+/// Convenience harness: standard settings for project benches.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 2, 5, 0.5, f)
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let r = bench("noop", 1, 10, 0.0, || {
+            n += 1;
+            black_box(n);
+        });
+        assert!(r.iters >= 10);
+        assert!(n >= r.iters);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize_ns(500.0).1, "ns");
+        assert_eq!(humanize_ns(5_000.0).1, "µs");
+        assert_eq!(humanize_ns(5_000_000.0).1, "ms");
+        assert_eq!(humanize_ns(5e9).1, "s");
+    }
+}

@@ -1,0 +1,220 @@
+//! Tiny declarative command-line flag parser (clap is unavailable offline,
+//! DESIGN.md §7). Supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! positional arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Clone, Debug)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn flag(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (defaults to false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n", self.program, self.about, self.program);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, true) => " (switch)".to_string(),
+                (None, false) => String::new(),
+            };
+            s.push_str(&format!("  --{:<24} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw argument list. Returns Err with a usage string on bad
+    /// input or `--help`.
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, String> {
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                self.values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let val = if spec.is_bool {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("flag --{name} expects a value"))?
+                };
+                self.values.insert(name, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+
+    /// Parse from `std::env::args()`, skipping the binary name (and an
+    /// optional subcommand that the caller has already consumed).
+    pub fn parse_env(self, skip: usize) -> Result<Parsed, String> {
+        let argv: Vec<String> = std::env::args().skip(skip).collect();
+        self.parse(&argv)
+    }
+}
+
+/// Result of parsing.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.get(name).unwrap_or("").to_string()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .flag("benchmark", Some("grep"), "which benchmark")
+            .flag("iters", Some("30"), "iterations")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&argv(&[])).unwrap();
+        assert_eq!(p.get_str("benchmark"), "grep");
+        assert_eq!(p.get_u64("iters").unwrap(), 30);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = spec().parse(&argv(&["--benchmark", "terasort", "--iters=5"])).unwrap();
+        assert_eq!(p.get_str("benchmark"), "terasort");
+        assert_eq!(p.get_u64("iters").unwrap(), 5);
+    }
+
+    #[test]
+    fn switch_sets_true() {
+        let p = spec().parse(&argv(&["--verbose"])).unwrap();
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(spec().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&argv(&["--iters"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = spec().parse(&argv(&["pos1", "--verbose", "pos2"])).unwrap();
+        assert_eq!(p.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = spec().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--benchmark"));
+    }
+}

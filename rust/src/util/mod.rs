@@ -1,0 +1,15 @@
+//! Shared infrastructure: RNG, statistics, JSON, tables, CLI parsing, the
+//! micro-bench harness, and the mini property-testing framework.
+//!
+//! These exist because the offline build has no access to `rand`, `serde`,
+//! `clap`, `criterion` or `proptest` (see DESIGN.md §7); each submodule is a
+//! small, tested stand-in scoped to exactly what this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

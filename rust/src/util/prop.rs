@@ -1,0 +1,202 @@
+//! Mini property-based testing framework (proptest is unavailable offline,
+//! DESIGN.md §7). Provides seeded generators, a `forall` runner with
+//! counterexample reporting, and bounded shrinking for scalar inputs.
+//!
+//! Usage:
+//! ```ignore
+//! prop::forall("mu stays in range", 500, |g| {
+//!     let x = g.f64_in(0.0, 1.0);
+//!     let v = mu(x);
+//!     prop::assert_that(v >= min && v <= max, format!("v={v}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper producing a `PropResult`.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality assertion.
+pub fn assert_close(a: f64, b: f64, tol: f64) -> PropResult {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+/// Generator handle passed to each property trial.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated scalars this trial, for the failure report.
+    trace: Vec<(String, f64)>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::seeded(seed), trace: Vec::new() }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// f64 uniform in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.trace.push(("f64".into(), v));
+        v
+    }
+
+    /// u64 uniform in [lo, hi] inclusive.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = self.rng.range_u64(lo, hi);
+        self.trace.push(("u64".into(), v as f64));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.bool();
+        self.trace.push(("bool".into(), v as u64 as f64));
+        v
+    }
+
+    /// A unit-hypercube point of dimension n (the SPSA θ_A domain).
+    pub fn unit_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(0.0, 1.0)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize_in(0, xs.len() - 1);
+        &xs[i]
+    }
+}
+
+/// Run `trials` checks of `property`, each with a distinct deterministic
+/// seed. Panics with a replayable report on the first failure.
+///
+/// Set `PROP_SEED` in the environment to replay one specific trial.
+pub fn forall<F>(name: &str, trials: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base = fnv1a(name.as_bytes());
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().expect("PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        if let Err(msg) = property(&mut g) {
+            panic!("property '{name}' failed under PROP_SEED={seed}: {msg}\ninputs: {:?}", g.trace);
+        }
+        return;
+    }
+    for t in 0..trials {
+        let seed = base.wrapping_add(t.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed at trial {t}/{trials}: {msg}\n\
+                 inputs: {:?}\nreplay with PROP_SEED={seed}",
+                g.trace
+            );
+        }
+    }
+}
+
+/// Shrink a failing f64 input toward `anchor` while the predicate keeps
+/// failing; returns the smallest failing value found. Used by tests that
+/// want a minimal counterexample for a scalar property.
+pub fn shrink_f64<F>(mut failing: f64, anchor: f64, mut still_fails: F) -> f64
+where
+    F: FnMut(f64) -> bool,
+{
+    for _ in 0..64 {
+        let candidate = anchor + (failing - anchor) / 2.0;
+        if (candidate - failing).abs() < 1e-12 {
+            break;
+        }
+        if still_fails(candidate) {
+            failing = candidate;
+        } else {
+            break;
+        }
+    }
+    failing
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum commutative", 200, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            assert_close(a + b, b + a, 1e-12)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_report() {
+        forall("always fails", 5, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert_that(false, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn shrink_converges() {
+        // failing iff x > 3.0; shrink from 100 toward 0 should approach 3.
+        let min = shrink_f64(100.0, 0.0, |x| x > 3.0);
+        assert!(min > 3.0 && min < 3.2, "min {min}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("gen ranges", 200, |g| {
+            let f = g.f64_in(2.0, 5.0);
+            let u = g.u64_in(3, 9);
+            assert_that((2.0..5.0).contains(&f) && (3..=9).contains(&u), "range")
+        });
+    }
+
+    #[test]
+    fn trials_are_deterministic() {
+        let mut first: Vec<f64> = Vec::new();
+        forall("det", 10, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        forall("det", 10, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,310 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment ships no `rand` crate, so this module
+//! provides the small set of distributions the project needs on top of a
+//! [xoshiro256++][xo] generator seeded through SplitMix64. Determinism per
+//! seed is a hard requirement: every experiment records its seed and every
+//! simulated job run must be exactly reproducible.
+//!
+//! [xo]: https://prng.di.unimi.it/
+
+/// SplitMix64 step used to expand a single `u64` seed into generator state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG. Small, fast, and with a 2^256-1 period — more than
+/// enough for millions of simulated task durations.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent child generator (used to give each simulated
+    /// task / tuning run its own stream without correlation).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mixed = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::seeded(mixed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 top bits → double in [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift (unbiased enough
+    /// for simulation purposes; n is always far below 2^32 here).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // widening multiply rejection-free variant; bias < 2^-64 * n.
+        let x = self.next_u64();
+        ((x as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Fair coin.
+    #[inline]
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Rademacher variable: ±1 with probability ½ each — the SPSA
+    /// perturbation distribution of the paper's Example 2.
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.bool() {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Standard normal via Box–Muller (with spare caching).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Log-normal multiplicative noise with mean ≈ 1 and the given sigma of
+    /// the underlying normal. Used for task-duration jitter (heavy right
+    /// tail, like real stragglers).
+    pub fn lognormal_unit_mean(&mut self, sigma: f64) -> f64 {
+        // E[exp(N(mu, sigma^2))] = exp(mu + sigma^2/2) == 1  ⇒  mu = -sigma^2/2
+        let mu = -0.5 * sigma * sigma;
+        (mu + sigma * self.gaussian()).exp()
+    }
+
+    /// Sample a Zipf(s)-distributed rank in [1, n]. Used by the synthetic
+    /// corpus generator to reproduce natural-language key skew.
+    /// Rejection-inversion sampler (Hörmann & Derflinger).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        if n == 1 {
+            return 1;
+        }
+        // For s == 1 the H function degenerates; nudge slightly.
+        let s = if (s - 1.0).abs() < 1e-9 { 1.0 + 1e-9 } else { s };
+        let h = |x: f64| -> f64 { ((x + 0.5).powf(1.0 - s) - 1.0) / (1.0 - s) };
+        let h_inv = |x: f64| -> f64 { (1.0 + x * (1.0 - s)).powf(1.0 / (1.0 - s)) - 0.5 };
+        let hx0 = h(0.5) - 1.0; // h(x0) - f(1)
+        let hn = h(n as f64 + 0.5);
+        loop {
+            let u = hx0 + self.f64() * (hn - hx0);
+            let x = h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(n as f64) as u64;
+            // accept
+            let fk = (k as f64).powf(-s);
+            if u >= h(k as f64 + 0.5) - fk {
+                return k;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element (panics on empty slice).
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::seeded(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::seeded(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10) as usize;
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rademacher_is_pm_one_and_balanced() {
+        let mut r = Rng::seeded(5);
+        let n = 100_000;
+        let sum: f64 = (0..n)
+            .map(|_| {
+                let v = r.rademacher();
+                assert!(v == 1.0 || v == -1.0);
+                v
+            })
+            .sum();
+        assert!(sum.abs() / (n as f64) < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::seeded(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_unit_mean_is_unit_mean() {
+        let mut r = Rng::seeded(13);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.lognormal_unit_mean(0.2)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Rng::seeded(17);
+        let n = 50_000;
+        let mut count_1 = 0u64;
+        let mut count_tail = 0u64;
+        for _ in 0..n {
+            let k = r.zipf(1000, 1.1);
+            assert!((1..=1000).contains(&k));
+            if k == 1 {
+                count_1 += 1;
+            }
+            if k > 500 {
+                count_tail += 1;
+            }
+        }
+        // rank 1 must dominate any individual deep-tail rank.
+        assert!(count_1 > n / 50, "rank-1 count {count_1}");
+        assert!(count_1 > count_tail / 10);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seeded(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::seeded(1);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,219 @@
+//! ASCII / markdown table rendering for the experiment harnesses — every
+//! paper table and figure is regenerated as rows printed through this module.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), header: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn header<S: Into<String>>(mut self, cols: Vec<S>) -> Self {
+        self.header = cols.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let ncol = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn to_ascii(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, width) in w.iter().enumerate() {
+                let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+                line.push_str(&format!("{:<width$}  ", cell, width = width));
+            }
+            line.trim_end().to_string()
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        if !self.header.is_empty() {
+            out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+            out.push_str(&format!(
+                "|{}|\n",
+                self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+            ));
+        }
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting outside the repo).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            out.push_str(&self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render a simple horizontal-bar chart into text — used by the fig6–fig9
+/// harnesses so the "figure" is visible directly in terminal output.
+pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let max = entries.iter().map(|(_, v)| *v).fold(0.0_f64, f64::max);
+    let label_w = entries.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = format!("== {title} ==\n");
+    for (label, v) in entries {
+        let n = if max > 0.0 { ((v / max) * width as f64).round() as usize } else { 0 };
+        out.push_str(&format!(
+            "{:<label_w$}  {:>10.1}  {}\n",
+            label,
+            v,
+            "#".repeat(n),
+            label_w = label_w
+        ));
+    }
+    out
+}
+
+/// Render a convergence curve (iteration → value) as a text sparkline block.
+pub fn curve(title: &str, values: &[f64], height: usize) -> String {
+    if values.is_empty() {
+        return format!("== {title} == (empty)\n");
+    }
+    let min = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (max - min).max(1e-12);
+    let mut rows = vec![String::new(); height];
+    for &v in values {
+        let level = (((v - min) / span) * (height - 1) as f64).round() as usize;
+        for (h, row) in rows.iter_mut().enumerate() {
+            // rows[0] is the top of the chart
+            let y = height - 1 - h;
+            row.push(if y == level { '*' } else if y < level { ' ' } else { ' ' });
+        }
+    }
+    let mut out = format!("== {title} ==  (min {min:.1}, max {max:.1})\n");
+    for row in rows {
+        out.push_str(&format!("|{row}\n"));
+    }
+    out.push_str(&format!("+{}\n", "-".repeat(values.len())));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo").header(vec!["a", "bb", "ccc"]);
+        t.row(vec!["1", "2", "3"]);
+        t.row(vec!["10", "20", "30"]);
+        t
+    }
+
+    #[test]
+    fn ascii_alignment() {
+        let s = sample().to_ascii();
+        assert!(s.contains("== demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header, rule, two rows, plus the title line
+        assert_eq!(lines.len(), 5);
+        assert!(lines[1].starts_with("a "));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("| a | bb | ccc |"));
+        assert!(md.contains("|---|---|---|"));
+        assert!(md.contains("| 10 | 20 | 30 |"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("").header(vec!["x"]);
+        t.row(vec!["a,b"]);
+        t.row(vec!["q\"q"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("b", &[("x".into(), 10.0), ("y".into(), 5.0)], 20);
+        let x_bars = s.lines().find(|l| l.starts_with('x')).unwrap().matches('#').count();
+        let y_bars = s.lines().find(|l| l.starts_with('y')).unwrap().matches('#').count();
+        assert_eq!(x_bars, 20);
+        assert_eq!(y_bars, 10);
+    }
+
+    #[test]
+    fn curve_renders() {
+        let s = curve("c", &[3.0, 2.0, 1.0, 1.0], 3);
+        assert!(s.contains("== c =="));
+        assert_eq!(s.lines().filter(|l| l.starts_with('|')).count(), 3);
+    }
+}

@@ -1,0 +1,108 @@
+//! Byte / time unit helpers: parsing ("30GB", "128MB") and humanized
+//! formatting for tables and logs.
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+pub const TB: u64 = 1 << 40;
+
+/// Parse a size string: bare bytes, or suffixed with KB/MB/GB/TB (case
+/// insensitive, optional 'B', decimal values allowed: "1.5GB").
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_uppercase();
+    let (num, mult) = if let Some(p) = t.strip_suffix("TB") {
+        (p, TB)
+    } else if let Some(p) = t.strip_suffix("GB") {
+        (p, GB)
+    } else if let Some(p) = t.strip_suffix("MB") {
+        (p, MB)
+    } else if let Some(p) = t.strip_suffix("KB") {
+        (p, KB)
+    } else if let Some(p) = t.strip_suffix('T') {
+        (p, TB)
+    } else if let Some(p) = t.strip_suffix('G') {
+        (p, GB)
+    } else if let Some(p) = t.strip_suffix('M') {
+        (p, MB)
+    } else if let Some(p) = t.strip_suffix('K') {
+        (p, KB)
+    } else if let Some(p) = t.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (t.as_str(), 1)
+    };
+    let v: f64 = num.trim().parse().map_err(|e| format!("bad size '{s}': {e}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size '{s}'"));
+    }
+    Ok((v * mult as f64).round() as u64)
+}
+
+/// Humanize a byte count ("1.5 GB").
+pub fn fmt_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if b >= TB {
+        format!("{:.2} TB", bf / TB as f64)
+    } else if b >= GB {
+        format!("{:.2} GB", bf / GB as f64)
+    } else if b >= MB {
+        format!("{:.1} MB", bf / MB as f64)
+    } else if b >= KB {
+        format!("{:.1} KB", bf / KB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Humanize a duration in seconds ("2m 13s", "1h 02m").
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "∞".to_string();
+    }
+    if s < 1.0 {
+        format!("{:.0} ms", s * 1e3)
+    } else if s < 60.0 {
+        format!("{s:.1} s")
+    } else if s < 3600.0 {
+        format!("{}m {:02.0}s", (s / 60.0) as u64, s % 60.0)
+    } else {
+        format!("{}h {:02}m", (s / 3600.0) as u64, ((s % 3600.0) / 60.0) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_suffixes() {
+        assert_eq!(parse_bytes("128MB").unwrap(), 128 * MB);
+        assert_eq!(parse_bytes("30gb").unwrap(), 30 * GB);
+        assert_eq!(parse_bytes("1.5GB").unwrap(), (1.5 * GB as f64) as u64);
+        assert_eq!(parse_bytes("200 MB").unwrap(), 200 * MB);
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 * KB);
+        assert_eq!(parse_bytes("512B").unwrap(), 512);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-5MB").is_err());
+    }
+
+    #[test]
+    fn fmt_roundtrip_scales() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * MB), "2.0 MB");
+        assert!(fmt_bytes(3 * GB).contains("GB"));
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(0.5), "500 ms");
+        assert_eq!(fmt_secs(12.34), "12.3 s");
+        assert!(fmt_secs(130.0).starts_with("2m"));
+        assert!(fmt_secs(3725.0).starts_with("1h"));
+    }
+}

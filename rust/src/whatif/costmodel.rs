@@ -1,0 +1,403 @@
+//! Analytic MapReduce cost model — the "what-if engine" of the
+//! Starfish-style baseline and the reference semantics for the AOT-compiled
+//! JAX/Pallas artifact (`python/compile/model.py` mirrors these formulas
+//! term for term; `tests/integration_runtime.rs` asserts the two agree).
+//!
+//! The model is a *smooth* (ceil-free, branch-light) approximation of the
+//! discrete-event simulator with the blind spots documented for
+//! Starfish-class cost models — this approximation gap is exactly the
+//! model-vs-reality gap the paper argues makes model-based tuners
+//! (Starfish, PPABS) underperform direct-feedback SPSA (§3.1):
+//!
+//! 1. **Uncontended bandwidth** — prices IO at the node's full disk/NIC
+//!    rate; the real cluster shares them across concurrent task slots.
+//! 2. **Constant combiner ratio** — uses the profiled reduction verbatim;
+//!    really the combiner dilutes as spills shrink (fewer duplicate keys
+//!    per spill).
+//! 3. **Uniform partitions** — ignores key skew; the real job's tail is
+//!    its hottest reducer.
+//! 4. **Free merge fan-in** — ignores the seek penalty of wide merges.
+//! 5. **Perfect map/spill overlap** — ignores the map blocking when the
+//!    buffer fills at high spill thresholds.
+//! 6. **No memory pressure** — ignores the reduce-function slowdown when
+//!    reduce.input.buffer.percent retains map outputs in the heap.
+//!
+//! Plus no locality misses, no queueing jitter, no noise, real-valued
+//! wave counts.
+//!
+//! All three feature layouts are fixed and shared with the Python side:
+//! * `params`   — 11 Hadoop values in [`crate::config::ParameterSpace`] order;
+//! * `workload` — 11 features from [`crate::workloads::WorkloadProfile::to_features`];
+//! * `cluster`  — 10 features from [`ClusterFeatures::to_features`].
+
+use crate::cluster::ClusterSpec;
+use crate::config::{HadoopVersion, ParameterSpace};
+use crate::workloads::WorkloadProfile;
+
+/// Framework constants (mirror `sim::constants`; duplicated into
+/// `python/compile/model.py` — keep all three in sync).
+pub const JVM_START_S: f64 = 1.4;
+pub const TASK_LAUNCH_S: f64 = 0.15;
+pub const JOB_OVERHEAD_S: f64 = 8.0; // setup + cleanup
+pub const SPILL_FILE_S: f64 = 0.006;
+pub const FILE_OPEN_S: f64 = 0.003;
+pub const SORT_OPS_PER_CMP: f64 = 12.0;
+pub const COMBINE_OPS_PER_REC: f64 = 18.0;
+pub const COMPRESS_OPS_PER_BYTE: f64 = 5.0;
+pub const DECOMPRESS_OPS_PER_BYTE: f64 = 1.5;
+pub const MERGE_OPS_PER_BYTE: f64 = 0.4;
+pub const MERGE_STREAM_SWEET_SPOT: f64 = 48.0;
+pub const MERGE_STREAM_PENALTY_DIV: f64 = 96.0;
+pub const REDUCE_MEM_PRESSURE_COEFF: f64 = 0.6;
+pub const FETCH_OVERLAP_EFF: f64 = 0.5;
+
+/// Number of cluster features in the shared layout.
+pub const N_CLUSTER_FEATURES: usize = 10;
+
+/// Cluster-side inputs of the cost model.
+#[derive(Clone, Debug)]
+pub struct ClusterFeatures {
+    pub workers: f64,
+    pub map_slots_per_node: f64,
+    pub reduce_slots_per_node: f64,
+    pub disk_bw: f64,
+    pub net_bw: f64,
+    pub cpu_ops_per_sec: f64,
+    pub block_size: f64,
+    pub heap_bytes: f64,
+    pub replication: f64,
+    /// 1.0 for Hadoop v1 semantics, 0.0 for v2.
+    pub is_v1: f64,
+}
+
+impl ClusterFeatures {
+    pub fn from_spec(spec: &ClusterSpec, version: HadoopVersion) -> Self {
+        ClusterFeatures {
+            workers: spec.workers() as f64,
+            map_slots_per_node: spec.map_slots_per_node as f64,
+            reduce_slots_per_node: spec.reduce_slots_per_node as f64,
+            disk_bw: spec.node.disk_bw,
+            net_bw: spec.node.net_bw,
+            cpu_ops_per_sec: spec.node.cpu_ops_per_sec,
+            block_size: (128u64 << 20) as f64,
+            heap_bytes: (1u64 << 30) as f64,
+            replication: 2.0,
+            is_v1: if version == HadoopVersion::V1 { 1.0 } else { 0.0 },
+        }
+    }
+
+    pub fn to_features(&self) -> Vec<f32> {
+        vec![
+            self.workers as f32,
+            self.map_slots_per_node as f32,
+            self.reduce_slots_per_node as f32,
+            self.disk_bw as f32,
+            self.net_bw as f32,
+            self.cpu_ops_per_sec as f32,
+            self.block_size as f32,
+            self.heap_bytes as f32,
+            self.replication as f32,
+            self.is_v1 as f32,
+        ]
+    }
+}
+
+#[inline]
+fn smooth_max(a: f64, b: f64) -> f64 {
+    a.max(b)
+}
+
+/// Evaluate the analytic job time (seconds) for one parameter row.
+///
+/// `params` is the 11-value Hadoop-space row (ParameterSpace order),
+/// `w` the workload features, `c` the cluster features.
+pub fn cost_model(params: &[f64], w: &WorkloadProfile, c: &ClusterFeatures) -> f64 {
+    assert_eq!(params.len(), 11);
+    // ---- unpack parameter row (ParameterSpace order) ----------------------
+    let io_sort_mb = params[0].max(1.0);
+    let spill_pct = params[1].clamp(0.01, 0.99);
+    let sort_factor = params[2].max(2.0);
+    let shuf_in_pct = params[3].clamp(0.01, 0.99);
+    let shuf_merge_pct = params[4].clamp(0.01, 0.99);
+    let inmem_thresh = params[5].max(2.0);
+    let red_in_pct = params[6].clamp(0.0, 0.9);
+    let n_red = params[7].max(1.0);
+    let is_v1 = c.is_v1;
+    // version-dependent tail: v1 = [record%, compress_map, out_compress];
+    // v2 = [slowstart, jvm_numtasks, job_maps]
+    let rec_pct = is_v1 * params[8].clamp(0.01, 0.5) + (1.0 - is_v1) * 0.05;
+    let compress_map = is_v1 * (params[9] > 0.5) as u8 as f64;
+    let out_compress = is_v1 * (params[10] > 0.5) as u8 as f64;
+    let slowstart = is_v1 * 0.05 + (1.0 - is_v1) * params[8].clamp(0.0, 1.0);
+    let jvm_reuse = is_v1 + (1.0 - is_v1) * params[9].max(1.0);
+    let job_maps = is_v1 * 2.0 + (1.0 - is_v1) * params[10].max(2.0);
+
+    let has_comb = (w.combiner_reduction < 0.999) as u8 as f64;
+
+    // ---- layout -------------------------------------------------------------
+    let input = w.input_bytes as f64;
+    let n_maps_nat = smooth_max(input / c.block_size, 1.0);
+    let n_maps = is_v1 * n_maps_nat + (1.0 - is_v1) * smooth_max(n_maps_nat, job_maps);
+    let split = input / n_maps;
+    let map_slots = c.workers * c.map_slots_per_node;
+    let red_slots = c.workers * c.reduce_slots_per_node;
+    let map_waves = smooth_max(n_maps / map_slots, 1.0);
+    let red_waves = smooth_max(n_red / red_slots, 1.0);
+
+    // blind spot 1: the model assumes each task enjoys the node's full
+    // disk/NIC bandwidth (the real cluster divides it across busy slots)
+    let mdisk = c.disk_bw;
+    let cpu = c.cpu_ops_per_sec;
+    let rdisk = c.disk_bw;
+    let rnet = c.net_bw;
+
+    // ---- map task -----------------------------------------------------------
+    let read = split / mdisk;
+    let recs = split / w.avg_input_record_bytes;
+    let map_cpu = recs * w.map_cpu_ops_per_record / cpu;
+    let out_b = split * w.map_selectivity_bytes;
+    let out_r = recs * w.map_selectivity_records;
+
+    let buf = io_sort_mb * (1u64 << 20) as f64;
+    let data_frac = is_v1 * (1.0 - rec_pct) + (1.0 - is_v1) * 0.95;
+    let data_cap = (buf * data_frac * spill_pct).max(1.0);
+    let rec_cap_total = is_v1 * (buf * rec_pct / 16.0) + (1.0 - is_v1) * (buf / 16.0);
+    let rec_cap = (rec_cap_total * spill_pct).max(1.0);
+    let n_spills = smooth_max(smooth_max(out_b / data_cap, out_r / rec_cap), 1.0);
+
+    // blind spot 2: profiled combiner ratio applied verbatim (no spill
+    // dilution)
+    let r_eff = 1.0 - has_comb * (1.0 - w.combiner_reduction);
+    let sort_cpu = out_r * (out_r / n_spills).max(2.0).log2() * SORT_OPS_PER_CMP / cpu;
+    let comb_cpu = has_comb * out_r * COMBINE_OPS_PER_REC / cpu;
+    let surv_b = out_b * r_eff;
+    let disk_b = surv_b * (compress_map * w.compress_ratio + (1.0 - compress_map));
+    let comp_cpu = compress_map * surv_b * COMPRESS_OPS_PER_BYTE / cpu;
+    let spill_io = disk_b / mdisk + n_spills * SPILL_FILE_S;
+    let spill_side = sort_cpu + comb_cpu + comp_cpu + spill_io;
+    // blind spot 5: perfect map/spill pipeline overlap assumed
+    let phase = map_cpu.max(spill_side);
+
+    // merge (active when n_spills > 1; smooth gate)
+    let merge_gate = ((n_spills - 1.0) / 0.5).clamp(0.0, 1.0);
+    let passes = smooth_max(n_spills.ln() / sort_factor.ln(), 1.0);
+    let streams = sort_factor.min(n_spills);
+    // blind spot 4: merge fan-in priced seek-free
+    let merge = merge_gate
+        * (passes * disk_b * 2.0 / mdisk
+            + passes * surv_b * MERGE_OPS_PER_BYTE / cpu
+            + (n_spills + passes * streams) * FILE_OPEN_S);
+
+    let setup = (JVM_START_S + (jvm_reuse - 1.0) * TASK_LAUNCH_S) / jvm_reuse;
+    let map_task = setup + read + phase + merge;
+    let map_total = map_waves * map_task;
+
+    // ---- reduce task (critical path = hot partition) --------------------------
+    let tot_raw = n_maps * surv_b;
+    // blind spot 3: partitions assumed uniform (key skew ignored)
+    let hot_vol = tot_raw / n_red;
+
+    let wire = hot_vol * (compress_map * w.compress_ratio + (1.0 - compress_map));
+    let fetch = wire / rnet + compress_map * wire * DECOMPRESS_OPS_PER_BYTE / cpu;
+
+    let buffer = c.heap_bytes * shuf_in_pct;
+    let byte_trig = (buffer * shuf_merge_pct).max(1.0);
+    let segs = n_maps;
+    let avg_seg = hot_vol / segs;
+    let fits = ((byte_trig - hot_vol).signum().max(0.0))
+        * ((inmem_thresh - segs).signum().max(0.0))
+        * ((buffer - hot_vol).signum().max(0.0));
+    let segs_per_flush = inmem_thresh.min((byte_trig / avg_seg.max(1.0)).max(1.0));
+    let n_flush = (1.0 - fits) * smooth_max(segs / segs_per_flush, 1.0);
+    let retained = c.heap_bytes * red_in_pct;
+    let disk_bytes = (1.0 - fits) * (hot_vol - retained).max(0.0);
+
+    let extra_passes = (n_flush.max(1.0).ln() / sort_factor.ln()).max(1.0) - 1.0;
+    let rstreams = sort_factor.min(n_flush.max(1.0));
+    let merge_gate_r = (n_flush / 1.0).clamp(0.0, 1.0);
+    // blind spot 4 again: reduce-side merges priced seek-free
+    let merge_r = merge_gate_r
+        * (disk_bytes / rdisk
+            + n_flush * SPILL_FILE_S
+            + hot_vol * MERGE_OPS_PER_BYTE / cpu
+            + extra_passes * disk_bytes * 2.0 / rdisk
+            + (n_flush + extra_passes * rstreams) * FILE_OPEN_S
+            + disk_bytes / rdisk);
+
+    let red_recs = hot_vol / w.avg_map_record_bytes.max(1.0);
+    // blind spot 6: no reduce-side memory-pressure penalty
+    let red_cpu = red_recs * w.reduce_cpu_ops_per_record / cpu;
+
+    let out_raw = hot_vol * w.reduce_selectivity_bytes;
+    let out_b2 = out_raw * (out_compress * w.compress_ratio + (1.0 - out_compress));
+    let comp_cpu2 = out_compress * out_raw * COMPRESS_OPS_PER_BYTE / cpu;
+    let write = (out_b2 / rdisk).max(out_b2 * (c.replication - 1.0) / rnet) + comp_cpu2;
+
+    let red_task = setup + fetch + merge_r + red_cpu + write;
+
+    // slowstart overlap credit: the first reduce wave fetches during the map
+    // phase from the slowstart point, at reduced efficiency.
+    let credit = ((1.0 - slowstart) * map_total * FETCH_OVERLAP_EFF).min(fetch * 0.5);
+
+    JOB_OVERHEAD_S + map_total + red_waves * red_task - credit
+}
+
+/// Evaluate a batch of parameter rows (the artifact's native shape).
+pub fn cost_model_batch(rows: &[Vec<f64>], w: &WorkloadProfile, c: &ClusterFeatures) -> Vec<f64> {
+    rows.iter().map(|r| cost_model(r, w, c)).collect()
+}
+
+/// Convenience: evaluate a θ_A point through a parameter space.
+pub fn cost_for_theta(
+    space: &ParameterSpace,
+    theta: &[f64],
+    w: &WorkloadProfile,
+    c: &ClusterFeatures,
+) -> f64 {
+    // the model sees only the 11 framework knobs — the OS-extension tail
+    // (if any) is below its modelling boundary (paper §7)
+    let row: Vec<f64> = space
+        .to_hadoop_values(theta)
+        .iter()
+        .take(crate::config::N_PARAMS)
+        .map(|v| v.as_f64())
+        .collect();
+    cost_model(&row, w, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ParameterSpace;
+
+    fn wl() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "tera".into(),
+            input_bytes: 30 << 30,
+            avg_input_record_bytes: 100.0,
+            map_selectivity_bytes: 1.0,
+            map_selectivity_records: 1.0,
+            avg_map_record_bytes: 100.0,
+            combiner_reduction: 1.0,
+            has_combiner: false,
+            reduce_selectivity_bytes: 1.0,
+            partition_skew: 1.1,
+            compress_ratio: 0.4,
+            map_cpu_ops_per_record: 60.0,
+            reduce_cpu_ops_per_record: 50.0,
+        }
+    }
+
+    fn features(version: HadoopVersion) -> ClusterFeatures {
+        ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), version)
+    }
+
+    fn row_for(space: &ParameterSpace, theta: &[f64]) -> Vec<f64> {
+        space.to_hadoop_values(theta).iter().map(|v| v.as_f64()).collect()
+    }
+
+    #[test]
+    fn default_config_is_expensive() {
+        let space = ParameterSpace::v1();
+        let c = features(HadoopVersion::V1);
+        let t = cost_model(&row_for(&space, &space.default_theta()), &wl(), &c);
+        assert!(t > 300.0, "default cost {t}");
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    fn more_reducers_cheaper_for_heavy_shuffle() {
+        let space = ParameterSpace::v1();
+        let c = features(HadoopVersion::V1);
+        let mut theta = space.default_theta();
+        let base = cost_for_theta(&space, &theta, &wl(), &c);
+        theta[7] = 0.9; // ~90 reducers
+        let many = cost_for_theta(&space, &theta, &wl(), &c);
+        assert!(many < base * 0.5, "many {many} base {base}");
+    }
+
+    #[test]
+    fn bigger_sort_buffer_cheaper_map_phase() {
+        let space = ParameterSpace::v1();
+        let c = features(HadoopVersion::V1);
+        let mut theta = space.default_theta();
+        theta[7] = 0.5;
+        let small = cost_for_theta(&space, &theta, &wl(), &c);
+        theta[0] = 0.3; // 635 MB buffer
+        theta[1] = 0.7; // sane spill threshold
+        theta[8] = 0.3;
+        let big = cost_for_theta(&space, &theta, &wl(), &c);
+        assert!(big < small, "big {big} small {small}");
+    }
+
+    #[test]
+    fn tracks_simulator_ordering() {
+        // The what-if model need not match the DES in absolute terms, but
+        // it must rank clearly-better configurations above clearly-worse
+        // ones (otherwise Starfish could not optimize at all).
+        use crate::sim::{simulate, SimOptions};
+        let space = ParameterSpace::v1();
+        let c = features(HadoopVersion::V1);
+        let cluster = ClusterSpec::paper_cluster();
+        let w = wl();
+        let opts = SimOptions { seed: 9, noise: false };
+
+        let mut bad = space.default_theta();
+        bad[7] = 0.0; // 1 reducer
+        let mut good = space.default_theta();
+        good[0] = 0.25;
+        good[1] = 0.6;
+        good[7] = 0.9;
+        good[8] = 0.3;
+
+        let model_bad = cost_for_theta(&space, &bad, &w, &c);
+        let model_good = cost_for_theta(&space, &good, &w, &c);
+        let sim_bad = simulate(&cluster, &space.materialize(&bad), &w, &opts).exec_time_s;
+        let sim_good = simulate(&cluster, &space.materialize(&good), &w, &opts).exec_time_s;
+        assert!(model_good < model_bad);
+        assert!(sim_good < sim_bad);
+        // and the model is within a factor-3 band of the DES on both
+        for (m, s) in [(model_bad, sim_bad), (model_good, sim_good)] {
+            let ratio = m / s;
+            assert!(ratio > 0.2 && ratio < 5.0, "model {m} sim {s}");
+        }
+    }
+
+    #[test]
+    fn v2_params_take_effect() {
+        let space = ParameterSpace::v2();
+        let c = features(HadoopVersion::V2);
+        let mut theta = space.default_theta();
+        theta[7] = 0.5;
+        let fresh = cost_for_theta(&space, &theta, &wl(), &c);
+        theta[9] = 1.0; // jvm reuse 30
+        let reused = cost_for_theta(&space, &theta, &wl(), &c);
+        assert!(reused < fresh);
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let space = ParameterSpace::v1();
+        let c = features(HadoopVersion::V1);
+        let rows: Vec<Vec<f64>> = (0..8)
+            .map(|i| {
+                let t: Vec<f64> = (0..11).map(|j| ((i * 11 + j) as f64 * 0.083) % 1.0).collect();
+                row_for(&space, &t)
+            })
+            .collect();
+        let batch = cost_model_batch(&rows, &wl(), &c);
+        for (r, b) in rows.iter().zip(&batch) {
+            assert_eq!(cost_model(r, &wl(), &c), *b);
+        }
+    }
+
+    #[test]
+    fn cluster_features_layout() {
+        let c = features(HadoopVersion::V1);
+        let f = c.to_features();
+        assert_eq!(f.len(), N_CLUSTER_FEATURES);
+        assert_eq!(f[0], 24.0);
+        assert_eq!(f[9], 1.0);
+    }
+}

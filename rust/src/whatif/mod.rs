@@ -1,0 +1,9 @@
+//! Analytic "what-if" cost model: rust reference implementation of the
+//! AOT-compiled JAX/Pallas cost model (see `python/compile/model.py`).
+//! Powers the Starfish-style baseline and cross-checks artifact numerics.
+
+pub mod costmodel;
+
+pub use costmodel::{
+    cost_for_theta, cost_model, cost_model_batch, ClusterFeatures, N_CLUSTER_FEATURES,
+};

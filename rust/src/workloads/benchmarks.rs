@@ -1,0 +1,435 @@
+//! The paper's five benchmark applications (§6.3), implemented as real
+//! MapReduce programs for the execution engine:
+//!
+//! * **Terasort** — sorts 100-byte TeraGen records (range partitioner,
+//!   identity map/reduce). CPU *and* memory intensive.
+//! * **Grep** — regex pattern search; tiny map output. CPU intensive.
+//! * **Bigram** — counts consecutive word pairs. CPU intensive,
+//!   reduce-heavy.
+//! * **Inverted Index** — word → document-id postings. CPU+memory,
+//!   reduce-heavy.
+//! * **Word Co-occurrence** — window-2 co-occurrence matrix counts; the
+//!   largest map output of the set.
+
+use regex::bytes::Regex;
+
+use crate::engine::{
+    Emit, IdentityReducer, JobSpec, Mapper, Rec, Reducer, Split, SumReducer,
+};
+use crate::engine::types::RangePartitioner;
+use crate::util::rng::Rng;
+use crate::util::units::{GB, MB};
+
+use super::corpus::{
+    generate_documents, generate_tera, generate_text, TextCorpusSpec, TERA_RECORD_LEN,
+};
+use super::profile::WorkloadProfile;
+
+/// The five paper benchmarks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    Terasort,
+    Grep,
+    Bigram,
+    InvertedIndex,
+    WordCooccurrence,
+}
+
+impl Benchmark {
+    pub fn all() -> [Benchmark; 5] {
+        [
+            Benchmark::Terasort,
+            Benchmark::Grep,
+            Benchmark::Bigram,
+            Benchmark::InvertedIndex,
+            Benchmark::WordCooccurrence,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Benchmark::Terasort => "Terasort",
+            Benchmark::Grep => "Grep",
+            Benchmark::Bigram => "Bigram",
+            Benchmark::InvertedIndex => "Inverted Index",
+            Benchmark::WordCooccurrence => "Word Co-occurrence",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Benchmark> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+            "terasort" => Some(Benchmark::Terasort),
+            "grep" => Some(Benchmark::Grep),
+            "bigram" => Some(Benchmark::Bigram),
+            "invertedindex" | "invidx" => Some(Benchmark::InvertedIndex),
+            "wordcooccurrence" | "cooccurrence" | "wordco" => Some(Benchmark::WordCooccurrence),
+            _ => None,
+        }
+    }
+
+    /// Partial (optimization-phase) workload sizes of the paper's §6.5:
+    /// Terasort 30 GB, Grep 22 GB, Word Co-occurrence 85 GB, Inverted Index
+    /// 1 GB, Bigram 200 MB.
+    pub fn paper_partial_bytes(&self) -> u64 {
+        match self {
+            Benchmark::Terasort => 30 * GB,
+            Benchmark::Grep => 22 * GB,
+            Benchmark::Bigram => 200 * MB,
+            Benchmark::InvertedIndex => 1 * GB,
+            Benchmark::WordCooccurrence => 85 * GB,
+        }
+    }
+
+    /// Per-record CPU weights (ops) for the map function, positioning each
+    /// benchmark on the paper's CPU/IO spectrum (§6.3): Grep and Bigram are
+    /// CPU intensive; Inverted Index and Terasort are CPU+memory intensive.
+    pub fn map_cpu_ops_per_record(&self) -> f64 {
+        match self {
+            Benchmark::Terasort => 60.0,       // 100-byte records, pure data movement
+            Benchmark::Grep => 2_600.0,        // regex scan per line
+            Benchmark::Bigram => 1_500.0,      // tokenize + pair emit
+            Benchmark::InvertedIndex => 1_900.0, // tokenize + dedup per doc
+            Benchmark::WordCooccurrence => 2_400.0, // tokenize + window pairs
+        }
+    }
+
+    /// Per-intermediate-record CPU weight (ops) in the reduce function.
+    pub fn reduce_cpu_ops_per_record(&self) -> f64 {
+        match self {
+            Benchmark::Terasort => 50.0,
+            Benchmark::Grep => 120.0,
+            Benchmark::Bigram => 900.0,        // reduce-heavy (paper §6.5)
+            Benchmark::InvertedIndex => 1_300.0, // postings-list building
+            Benchmark::WordCooccurrence => 350.0,
+        }
+    }
+
+    pub fn has_combiner(&self) -> bool {
+        !matches!(self, Benchmark::Terasort | Benchmark::InvertedIndex)
+    }
+
+    /// Build the executable job definition.
+    pub fn job(&self) -> JobSpec {
+        match self {
+            Benchmark::Terasort => JobSpec::new(
+                "terasort",
+                Box::new(TeraMapper),
+                Box::new(IdentityReducer),
+                None,
+            )
+            .with_partitioner(Box::new(RangePartitioner)),
+            Benchmark::Grep => JobSpec::new(
+                "grep",
+                Box::new(GrepMapper::default_pattern()),
+                Box::new(SumReducer),
+                Some(Box::new(SumReducer)),
+            ),
+            Benchmark::Bigram => JobSpec::new(
+                "bigram",
+                Box::new(BigramMapper),
+                Box::new(SumReducer),
+                Some(Box::new(SumReducer)),
+            ),
+            Benchmark::InvertedIndex => JobSpec::new(
+                "inverted_index",
+                Box::new(InvertedIndexMapper),
+                Box::new(PostingsReducer),
+                None,
+            ),
+            Benchmark::WordCooccurrence => JobSpec::new(
+                "word_cooccurrence",
+                Box::new(CooccurrenceMapper { window: 2 }),
+                Box::new(SumReducer),
+                Some(Box::new(SumReducer)),
+            ),
+        }
+    }
+
+    /// Generate real input data of roughly `bytes`, chunked into splits of
+    /// `split_bytes`.
+    pub fn generate_input(&self, bytes: u64, split_bytes: u64, rng: &mut Rng) -> Vec<Split> {
+        let mut splits = Vec::new();
+        let mut remaining = bytes;
+        while remaining > 0 {
+            let chunk = remaining.min(split_bytes);
+            let split = match self {
+                Benchmark::Terasort => {
+                    let n = (chunk / TERA_RECORD_LEN as u64).max(1);
+                    Split::Fixed { data: generate_tera(n, rng), record_len: TERA_RECORD_LEN }
+                }
+                Benchmark::InvertedIndex => {
+                    Split::Text(generate_documents(&TextCorpusSpec::default(), chunk, rng))
+                }
+                _ => Split::Text(generate_text(&TextCorpusSpec::default(), chunk, rng)),
+            };
+            remaining = remaining.saturating_sub(chunk);
+            splits.push(split);
+        }
+        splits
+    }
+
+    /// Profile the benchmark by *really running it* on `sample_bytes` of
+    /// generated data, then scale the measured ratios to `target_bytes`.
+    pub fn profile_scaled(&self, sample_bytes: u64, target_bytes: u64, rng: &mut Rng) -> WorkloadProfile {
+        let splits = self.generate_input(sample_bytes, sample_bytes.div_ceil(4).max(1), rng);
+        let job = self.job();
+        // Modest reducer count for profiling; ratios are insensitive to it.
+        let out = crate::engine::run_job(&job, &splits, 8);
+        WorkloadProfile::from_stats(
+            self.label(),
+            &out.stats,
+            target_bytes,
+            self.has_combiner(),
+            self.map_cpu_ops_per_record(),
+            self.reduce_cpu_ops_per_record(),
+        )
+    }
+
+    /// Profile at the paper's partial-workload size with a small real sample.
+    pub fn paper_profile(&self, rng: &mut Rng) -> WorkloadProfile {
+        self.profile_scaled(2 * MB, self.paper_partial_bytes(), rng)
+    }
+}
+
+impl std::fmt::Display for Benchmark {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mappers / reducers
+// ---------------------------------------------------------------------------
+
+/// Terasort: emit (10-byte key, 90-byte payload).
+struct TeraMapper;
+
+impl Mapper for TeraMapper {
+    fn map(&self, _k: u64, value: &[u8], emit: Emit) {
+        if value.len() >= 10 {
+            emit(Rec::new(value[..10].to_vec(), value[10..].to_vec()));
+        }
+    }
+}
+
+/// Grep: count regex matches. The default pattern matches words with a
+/// doubled vowel — selective but not empty on the Zipf corpus (the paper
+/// notes Grep "produces very little map output").
+pub struct GrepMapper {
+    re: Regex,
+}
+
+impl GrepMapper {
+    pub fn default_pattern() -> Self {
+        GrepMapper { re: Regex::new(r"\b\w*(aa|ee|ii|oo|uu)\w*\b").unwrap() }
+    }
+
+    pub fn with_pattern(pattern: &str) -> anyhow::Result<Self> {
+        Ok(GrepMapper { re: Regex::new(pattern)? })
+    }
+}
+
+impl Mapper for GrepMapper {
+    fn map(&self, _k: u64, value: &[u8], emit: Emit) {
+        for m in self.re.find_iter(value) {
+            emit(Rec::new(m.as_bytes().to_vec(), b"1".to_vec()));
+        }
+    }
+}
+
+fn tokenize(value: &[u8]) -> impl Iterator<Item = &[u8]> {
+    value
+        .split(|&b| !(b.is_ascii_alphanumeric()))
+        .filter(|w| !w.is_empty())
+}
+
+/// Bigram: emit ("w1 w2", 1) for consecutive word pairs.
+struct BigramMapper;
+
+impl Mapper for BigramMapper {
+    fn map(&self, _k: u64, value: &[u8], emit: Emit) {
+        let words: Vec<&[u8]> = tokenize(value).collect();
+        for pair in words.windows(2) {
+            let mut key = Vec::with_capacity(pair[0].len() + pair[1].len() + 1);
+            key.extend_from_slice(pair[0]);
+            key.push(b' ');
+            key.extend_from_slice(pair[1]);
+            emit(Rec::new(key, b"1".to_vec()));
+        }
+    }
+}
+
+/// Inverted index: line is `docid<TAB>text`; emit (word, docid) once per
+/// distinct word per document.
+struct InvertedIndexMapper;
+
+impl Mapper for InvertedIndexMapper {
+    fn map(&self, _k: u64, value: &[u8], emit: Emit) {
+        let Some(tab) = value.iter().position(|&b| b == b'\t') else {
+            return;
+        };
+        let (doc, text) = value.split_at(tab);
+        let mut seen: std::collections::BTreeSet<&[u8]> = std::collections::BTreeSet::new();
+        for w in tokenize(&text[1..]) {
+            seen.insert(w);
+        }
+        for w in seen {
+            emit(Rec::new(w.to_vec(), doc.to_vec()));
+        }
+    }
+}
+
+/// Inverted index reducer: build the sorted, deduplicated postings list.
+struct PostingsReducer;
+
+impl Reducer for PostingsReducer {
+    fn reduce(&self, key: &[u8], values: &[Vec<u8>], emit: Emit) {
+        let mut docs: Vec<&[u8]> = values.iter().map(|v| v.as_slice()).collect();
+        docs.sort_unstable();
+        docs.dedup();
+        let mut postings = Vec::new();
+        for (i, d) in docs.iter().enumerate() {
+            if i > 0 {
+                postings.push(b',');
+            }
+            postings.extend_from_slice(d);
+        }
+        emit(Rec::new(key.to_vec(), postings));
+    }
+}
+
+/// Word co-occurrence: emit ("wi:wj", 1) for all ordered pairs within a
+/// sliding window (the paper's NLP co-occurrence matrix).
+struct CooccurrenceMapper {
+    window: usize,
+}
+
+impl Mapper for CooccurrenceMapper {
+    fn map(&self, _k: u64, value: &[u8], emit: Emit) {
+        let words: Vec<&[u8]> = tokenize(value).collect();
+        for i in 0..words.len() {
+            let end = (i + 1 + self.window).min(words.len());
+            for j in i + 1..end {
+                let mut key = Vec::with_capacity(words[i].len() + words[j].len() + 1);
+                key.extend_from_slice(words[i]);
+                key.push(b':');
+                key.extend_from_slice(words[j]);
+                emit(Rec::new(key, b"1".to_vec()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::run_job;
+
+    fn text_split(s: &str) -> Vec<Split> {
+        vec![Split::Text(s.as_bytes().to_vec())]
+    }
+
+    #[test]
+    fn grep_counts_matches() {
+        let job = Benchmark::Grep.job();
+        let out = run_job(&job, &text_split("the keen bee seen here\nkeen again"), 2);
+        // doubled-vowel words: keen, bee, seen, keen
+        assert_eq!(out.find(b"keen").unwrap().value_str(), "2");
+        assert_eq!(out.find(b"bee").unwrap().value_str(), "1");
+        assert_eq!(out.find(b"seen").unwrap().value_str(), "1");
+        assert!(out.find(b"the").is_none());
+    }
+
+    #[test]
+    fn bigram_counts_pairs() {
+        let job = Benchmark::Bigram.job();
+        let out = run_job(&job, &text_split("a b a b a"), 2);
+        assert_eq!(out.find(b"a b").unwrap().value_str(), "2");
+        assert_eq!(out.find(b"b a").unwrap().value_str(), "2");
+    }
+
+    #[test]
+    fn inverted_index_builds_postings() {
+        let job = Benchmark::InvertedIndex.job();
+        let input = "doc1\tapple pear\ndoc2\tapple fig\n";
+        let out = run_job(&job, &text_split(input), 2);
+        let apple = out.find(b"apple").unwrap().value_str().to_string();
+        assert_eq!(apple, "doc1,doc2");
+        assert_eq!(out.find(b"fig").unwrap().value_str(), "doc2");
+    }
+
+    #[test]
+    fn inverted_index_dedups_within_doc() {
+        let job = Benchmark::InvertedIndex.job();
+        let out = run_job(&job, &text_split("doc9\tword word word\n"), 1);
+        assert_eq!(out.find(b"word").unwrap().value_str(), "doc9");
+    }
+
+    #[test]
+    fn cooccurrence_window_two() {
+        let job = Benchmark::WordCooccurrence.job();
+        let out = run_job(&job, &text_split("x y z"), 1);
+        // pairs: x:y, x:z, y:z
+        assert_eq!(out.find(b"x:y").unwrap().value_str(), "1");
+        assert_eq!(out.find(b"x:z").unwrap().value_str(), "1");
+        assert_eq!(out.find(b"y:z").unwrap().value_str(), "1");
+    }
+
+    #[test]
+    fn terasort_sorts_within_partitions() {
+        let mut rng = Rng::seeded(8);
+        let splits = Benchmark::Terasort.generate_input(10_000, 5_000, &mut rng);
+        let job = Benchmark::Terasort.job();
+        let out = run_job(&job, &splits, 4);
+        // total records preserved
+        let total: usize = out.partitions.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 100);
+        // sorted within each partition, and partition ranges ordered
+        let mut last_max: Vec<u8> = Vec::new();
+        for part in &out.partitions {
+            for w in part.windows(2) {
+                assert!(w[0].key <= w[1].key);
+            }
+            if let (Some(first), Some(last)) = (part.first(), part.last()) {
+                assert!(first.key >= last_max, "partition ranges out of order");
+                last_max = last.key.clone();
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_reflect_benchmark_character() {
+        let mut rng = Rng::seeded(21);
+        let tera = Benchmark::Terasort.profile_scaled(200_000, 1 << 30, &mut rng);
+        let grep = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut rng);
+        let cooc = Benchmark::WordCooccurrence.profile_scaled(200_000, 1 << 30, &mut rng);
+        // Terasort: map output ≈ input (identity)
+        assert!(
+            tera.map_selectivity_bytes > 0.9 && tera.map_selectivity_bytes < 1.3,
+            "tera selectivity {}",
+            tera.map_selectivity_bytes
+        );
+        // Grep: tiny map output (the paper's observation)
+        assert!(grep.map_selectivity_bytes < 0.25, "grep selectivity {}", grep.map_selectivity_bytes);
+        // Co-occurrence: map output larger than input
+        assert!(cooc.map_selectivity_bytes > 1.0, "cooc selectivity {}", cooc.map_selectivity_bytes);
+        // combiner helps the skewed-text counts
+        assert!(cooc.combiner_reduction < 0.9);
+        // word-pair text compresses measurably
+        assert!(cooc.compress_ratio < 0.7, "cooc ratio {}", cooc.compress_ratio);
+    }
+
+    #[test]
+    fn from_name_parses_variants() {
+        assert_eq!(Benchmark::from_name("TeraSort"), Some(Benchmark::Terasort));
+        assert_eq!(Benchmark::from_name("inverted-index"), Some(Benchmark::InvertedIndex));
+        assert_eq!(Benchmark::from_name("word co-occurrence"), Some(Benchmark::WordCooccurrence));
+        assert_eq!(Benchmark::from_name("nope"), None);
+    }
+
+    #[test]
+    fn paper_partial_sizes() {
+        assert_eq!(Benchmark::Terasort.paper_partial_bytes(), 30 * GB);
+        assert_eq!(Benchmark::Bigram.paper_partial_bytes(), 200 * MB);
+    }
+}

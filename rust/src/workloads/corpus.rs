@@ -1,0 +1,199 @@
+//! Synthetic dataset generators — stand-ins for the paper's Wikipedia/PUMA
+//! corpora and TeraGen output (DESIGN.md §1 substitution table).
+//!
+//! Text is generated with a Zipf(≈1.1) word-rank distribution over a
+//! synthetic vocabulary, reproducing the key-frequency skew that drives
+//! combiner effectiveness and partition imbalance in the text benchmarks.
+
+use crate::util::rng::Rng;
+
+/// Deterministic pseudo-word for a vocabulary rank: letters derived from the
+/// rank so the vocabulary is unbounded and stable across runs.
+pub fn word_for_rank(rank: u64) -> String {
+    // base-20 consonant-vowel syllables → pronounceable-ish unique words
+    const C: &[u8] = b"bcdfghjklmnpqrstvwxz";
+    const V: &[u8] = b"aeiou";
+    let mut w = String::new();
+    let mut r = rank;
+    loop {
+        w.push(C[(r % 20) as usize] as char);
+        w.push(V[((r / 20) % 5) as usize] as char);
+        r /= 100;
+        if r == 0 {
+            break;
+        }
+    }
+    w
+}
+
+/// Configuration for the synthetic text corpus.
+#[derive(Clone, Debug)]
+pub struct TextCorpusSpec {
+    /// Vocabulary size (distinct words).
+    pub vocab: u64,
+    /// Zipf exponent (natural language ≈ 1.0–1.2).
+    pub zipf_s: f64,
+    /// Words per line (sentence length), sampled uniform ±50 %.
+    pub words_per_line: u64,
+}
+
+impl Default for TextCorpusSpec {
+    fn default() -> Self {
+        TextCorpusSpec { vocab: 50_000, zipf_s: 1.1, words_per_line: 12 }
+    }
+}
+
+/// Generate approximately `bytes` of newline-delimited Zipf text.
+pub fn generate_text(spec: &TextCorpusSpec, bytes: u64, rng: &mut Rng) -> Vec<u8> {
+    let mut out = Vec::with_capacity(bytes as usize + 64);
+    while (out.len() as u64) < bytes {
+        let n_words = rng.range_u64(spec.words_per_line / 2 + 1, spec.words_per_line * 3 / 2 + 1);
+        for i in 0..n_words {
+            if i > 0 {
+                out.push(b' ');
+            }
+            let rank = rng.zipf(spec.vocab, spec.zipf_s);
+            out.extend_from_slice(word_for_rank(rank).as_bytes());
+        }
+        out.push(b'\n');
+    }
+    out.truncate(bytes as usize);
+    // keep the data line-clean: drop a possibly cut final line
+    if let Some(pos) = out.iter().rposition(|&b| b == b'\n') {
+        out.truncate(pos + 1);
+    }
+    out
+}
+
+/// Generate documents for the Inverted-Index benchmark: each line is
+/// `docNNNN<TAB>text...` (the mapper needs a document id per record).
+pub fn generate_documents(spec: &TextCorpusSpec, bytes: u64, rng: &mut Rng) -> Vec<u8> {
+    let mut out = Vec::with_capacity(bytes as usize + 64);
+    let mut doc = 0u64;
+    while (out.len() as u64) < bytes {
+        out.extend_from_slice(format!("doc{doc:06}\t").as_bytes());
+        let n_words = rng.range_u64(spec.words_per_line, spec.words_per_line * 4);
+        for i in 0..n_words {
+            if i > 0 {
+                out.push(b' ');
+            }
+            let rank = rng.zipf(spec.vocab, spec.zipf_s);
+            out.extend_from_slice(word_for_rank(rank).as_bytes());
+        }
+        out.push(b'\n');
+        doc += 1;
+    }
+    out.truncate(bytes as usize);
+    if let Some(pos) = out.iter().rposition(|&b| b == b'\n') {
+        out.truncate(pos + 1);
+    }
+    out
+}
+
+/// TeraGen record length: 10-byte key + 90-byte payload (TeraSort format).
+pub const TERA_RECORD_LEN: usize = 100;
+
+/// Generate `n_records` TeraGen-format records (10-byte random binary key,
+/// 90-byte structured payload).
+pub fn generate_tera(n_records: u64, rng: &mut Rng) -> Vec<u8> {
+    let mut out = Vec::with_capacity((n_records as usize) * TERA_RECORD_LEN);
+    for i in 0..n_records {
+        // 10-byte key
+        for _ in 0..10 {
+            out.push(rng.next_u64() as u8);
+        }
+        // 90-byte payload: row id + filler (mirrors teragen's layout)
+        let row = format!("{i:032x}");
+        out.extend_from_slice(row.as_bytes());
+        let filler = [b'A' + (i % 26) as u8; 58];
+        out.extend_from_slice(&filler);
+    }
+    debug_assert_eq!(out.len(), n_records as usize * TERA_RECORD_LEN);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn words_unique_per_rank() {
+        let mut seen = std::collections::HashSet::new();
+        for r in 1..2000 {
+            assert!(seen.insert(word_for_rank(r)), "dup word at rank {r}");
+        }
+    }
+
+    #[test]
+    fn text_size_and_lines() {
+        let mut rng = Rng::seeded(1);
+        let data = generate_text(&TextCorpusSpec::default(), 10_000, &mut rng);
+        assert!(data.len() <= 10_000);
+        assert!(data.len() > 8_000);
+        assert_eq!(*data.last().unwrap(), b'\n');
+        let lines = data.split(|&b| b == b'\n').filter(|l| !l.is_empty()).count();
+        assert!(lines > 50);
+    }
+
+    #[test]
+    fn text_is_zipf_skewed() {
+        let mut rng = Rng::seeded(2);
+        let data = generate_text(&TextCorpusSpec::default(), 200_000, &mut rng);
+        let text = String::from_utf8(data).unwrap();
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w).or_default() += 1;
+        }
+        let mut freqs: Vec<u64> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // top word should dwarf the median word
+        let top = freqs[0];
+        let median = freqs[freqs.len() / 2];
+        assert!(top > 20 * median.max(1), "top {top} median {median}");
+    }
+
+    #[test]
+    fn documents_have_ids() {
+        let mut rng = Rng::seeded(3);
+        let data = generate_documents(&TextCorpusSpec::default(), 20_000, &mut rng);
+        for line in data.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let s = String::from_utf8_lossy(line);
+            assert!(s.starts_with("doc"), "line {s}");
+            assert!(s.contains('\t'));
+        }
+    }
+
+    #[test]
+    fn teragen_format() {
+        let mut rng = Rng::seeded(4);
+        let data = generate_tera(100, &mut rng);
+        assert_eq!(data.len(), 100 * TERA_RECORD_LEN);
+    }
+
+    #[test]
+    fn teragen_keys_spread() {
+        let mut rng = Rng::seeded(5);
+        let data = generate_tera(1000, &mut rng);
+        // first key byte should span the byte range decently
+        let mut lo = 0u32;
+        let mut hi = 0u32;
+        for i in 0..1000 {
+            let b = data[i * TERA_RECORD_LEN];
+            if b < 0x40 {
+                lo += 1;
+            }
+            if b >= 0xC0 {
+                hi += 1;
+            }
+        }
+        assert!(lo > 150 && hi > 150, "lo {lo} hi {hi}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_text(&TextCorpusSpec::default(), 5000, &mut Rng::seeded(9));
+        let b = generate_text(&TextCorpusSpec::default(), 5000, &mut Rng::seeded(9));
+        assert_eq!(a, b);
+    }
+}

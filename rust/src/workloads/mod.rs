@@ -1,0 +1,10 @@
+//! Benchmark workloads: synthetic dataset generators (Wikipedia/PUMA and
+//! TeraGen stand-ins), the paper's five benchmark MapReduce programs, and
+//! the measured workload profiles that parameterize the simulator.
+
+pub mod benchmarks;
+pub mod corpus;
+pub mod profile;
+
+pub use benchmarks::Benchmark;
+pub use profile::{WorkloadProfile, N_WORKLOAD_FEATURES};

@@ -1,0 +1,190 @@
+//! Workload profiles: the bridge between *measured* execution-engine
+//! statistics and the discrete-event simulator / analytic cost model.
+//!
+//! A profile describes a benchmark's data-flow ratios (measured on a real
+//! sample run via [`crate::engine`]) scaled to a target input size, plus the
+//! per-record CPU weights that position it on the paper's CPU-intensive ↔
+//! IO-intensive spectrum (§6.3).
+
+use crate::engine::DataStats;
+
+/// Everything the simulator and cost model need to know about one job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadProfile {
+    pub name: String,
+    /// Target (scaled) input size in bytes — the simulated job reads this
+    /// much from HDFS even though the engine profiled a smaller sample.
+    pub input_bytes: u64,
+    /// Mean input record length (bytes).
+    pub avg_input_record_bytes: f64,
+    /// Map output bytes per input byte.
+    pub map_selectivity_bytes: f64,
+    /// Map output records per input record.
+    pub map_selectivity_records: f64,
+    /// Mean map-output record length (bytes).
+    pub avg_map_record_bytes: f64,
+    /// Combiner record survival ratio in (0,1]; 1.0 when no combiner.
+    pub combiner_reduction: f64,
+    pub has_combiner: bool,
+    /// Reduce output bytes per shuffled byte.
+    pub reduce_selectivity_bytes: f64,
+    /// Max-partition / mean-partition ratio (≥ 1).
+    pub partition_skew: f64,
+    /// Measured zlib ratio of map output (compressed / raw).
+    pub compress_ratio: f64,
+    /// CPU cost per input record in the map function (ops; the cluster's
+    /// `cpu_ops_per_sec` turns this into seconds).
+    pub map_cpu_ops_per_record: f64,
+    /// CPU cost per intermediate record in the reduce function (ops).
+    pub reduce_cpu_ops_per_record: f64,
+}
+
+impl WorkloadProfile {
+    /// Build a profile from engine-measured stats, scaled to `input_bytes`,
+    /// with benchmark-specific CPU weights.
+    pub fn from_stats(
+        name: &str,
+        stats: &DataStats,
+        input_bytes: u64,
+        has_combiner: bool,
+        map_cpu_ops_per_record: f64,
+        reduce_cpu_ops_per_record: f64,
+    ) -> Self {
+        let avg_in = if stats.input_records > 0 {
+            stats.input_bytes as f64 / stats.input_records as f64
+        } else {
+            100.0
+        };
+        WorkloadProfile {
+            name: name.to_string(),
+            input_bytes,
+            avg_input_record_bytes: avg_in.max(1.0),
+            map_selectivity_bytes: stats.map_selectivity_bytes(),
+            map_selectivity_records: stats.map_selectivity_records(),
+            avg_map_record_bytes: stats.avg_map_record_bytes().max(1.0),
+            combiner_reduction: if has_combiner { stats.combiner_reduction() } else { 1.0 },
+            has_combiner,
+            reduce_selectivity_bytes: stats.reduce_selectivity_bytes(),
+            partition_skew: stats.partition_skew(),
+            compress_ratio: stats.map_output_compress_ratio.clamp(0.01, 1.0),
+            map_cpu_ops_per_record,
+            reduce_cpu_ops_per_record,
+        }
+    }
+
+    /// Total input records at the scaled size.
+    pub fn input_records(&self) -> u64 {
+        (self.input_bytes as f64 / self.avg_input_record_bytes).ceil() as u64
+    }
+
+    /// Total map-output bytes at the scaled size.
+    pub fn map_output_bytes(&self) -> u64 {
+        (self.input_bytes as f64 * self.map_selectivity_bytes).ceil() as u64
+    }
+
+    /// Total map-output records at the scaled size.
+    pub fn map_output_records(&self) -> u64 {
+        (self.input_records() as f64 * self.map_selectivity_records).ceil() as u64
+    }
+
+    /// Bytes shuffled to reducers (post-combiner, pre-compression).
+    pub fn shuffle_bytes(&self) -> u64 {
+        (self.map_output_bytes() as f64 * self.combiner_reduction).ceil() as u64
+    }
+
+    /// A copy of this profile as a *single-shot measurement* would see it:
+    /// every data-flow ratio and CPU weight picks up independent lognormal
+    /// error of the given sigma. Profiling-based tuners (Starfish, PPABS)
+    /// consume this — they characterize a job from one instrumented run,
+    /// whereas SPSA averages information across many live observations
+    /// (the paper's §6.8 point 4).
+    pub fn with_measurement_noise(&self, rng: &mut crate::util::rng::Rng, sigma: f64) -> Self {
+        let mut p = self.clone();
+        let mut jitter = |x: &mut f64| {
+            *x *= rng.lognormal_unit_mean(sigma);
+        };
+        jitter(&mut p.avg_input_record_bytes);
+        jitter(&mut p.map_selectivity_bytes);
+        jitter(&mut p.map_selectivity_records);
+        jitter(&mut p.avg_map_record_bytes);
+        jitter(&mut p.reduce_selectivity_bytes);
+        jitter(&mut p.map_cpu_ops_per_record);
+        jitter(&mut p.reduce_cpu_ops_per_record);
+        p.combiner_reduction = (p.combiner_reduction * rng.lognormal_unit_mean(sigma)).clamp(0.01, 1.0);
+        p.compress_ratio = (p.compress_ratio * rng.lognormal_unit_mean(sigma)).clamp(0.01, 1.0);
+        p.partition_skew = (p.partition_skew * rng.lognormal_unit_mean(sigma)).max(1.0);
+        p
+    }
+
+    /// The feature vector consumed by the AOT cost-model artifact. Order
+    /// must match `python/compile/model.py::WORKLOAD_FEATURES`.
+    pub fn to_features(&self) -> Vec<f32> {
+        vec![
+            self.input_bytes as f32,
+            self.avg_input_record_bytes as f32,
+            self.map_selectivity_bytes as f32,
+            self.map_selectivity_records as f32,
+            self.avg_map_record_bytes as f32,
+            self.combiner_reduction as f32,
+            self.reduce_selectivity_bytes as f32,
+            self.partition_skew as f32,
+            self.compress_ratio as f32,
+            self.map_cpu_ops_per_record as f32,
+            self.reduce_cpu_ops_per_record as f32,
+        ]
+    }
+}
+
+/// Number of workload features in [`WorkloadProfile::to_features`].
+pub const N_WORKLOAD_FEATURES: usize = 11;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> DataStats {
+        DataStats {
+            input_bytes: 1_000,
+            input_records: 10,
+            map_output_records: 100,
+            map_output_bytes: 2_000,
+            combine_output_records: 50,
+            combine_output_bytes: 1_000,
+            distinct_keys: 40,
+            partition_bytes: vec![600, 400],
+            reduce_output_records: 40,
+            reduce_output_bytes: 500,
+            map_output_compress_ratio: 0.4,
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_ratios() {
+        let p = WorkloadProfile::from_stats("t", &stats(), 1 << 30, true, 100.0, 50.0);
+        assert!((p.map_selectivity_bytes - 2.0).abs() < 1e-12);
+        assert_eq!(p.map_output_bytes(), 2 << 30);
+        let recs = p.input_records();
+        // avg record 100 B ⇒ ceil(2^30 / 100)
+        assert_eq!(recs, ((1u64 << 30) as f64 / 100.0).ceil() as u64);
+        assert_eq!(p.map_output_records(), recs * 10);
+    }
+
+    #[test]
+    fn combiner_halves_shuffle() {
+        let p = WorkloadProfile::from_stats("t", &stats(), 1 << 20, true, 1.0, 1.0);
+        assert!((p.combiner_reduction - 0.5).abs() < 1e-12);
+        assert_eq!(p.shuffle_bytes(), p.map_output_bytes() / 2);
+    }
+
+    #[test]
+    fn no_combiner_means_unit_reduction() {
+        let p = WorkloadProfile::from_stats("t", &stats(), 1 << 20, false, 1.0, 1.0);
+        assert!((p.combiner_reduction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feature_vector_length() {
+        let p = WorkloadProfile::from_stats("t", &stats(), 1 << 20, true, 1.0, 1.0);
+        assert_eq!(p.to_features().len(), N_WORKLOAD_FEATURES);
+    }
+}

@@ -1,0 +1,130 @@
+//! End-to-end AOT bridge tests: load the HLO-text artifacts produced by
+//! `make artifacts`, execute them through PJRT, and cross-check the
+//! numerics against the independent rust what-if implementation.
+//!
+//! Tests skip (with a loud message) when artifacts are missing so
+//! `cargo test` works before `make artifacts`; `make test` always builds
+//! artifacts first.
+
+use hadoop_spsa::baselines::CostEvaluator;
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
+use hadoop_spsa::runtime::{ArtifactSpsaStep, ArtifactWhatIf, Runtime, ARTIFACT_K};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::whatif::{cost_for_theta, ClusterFeatures};
+use hadoop_spsa::workloads::Benchmark;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Runtime::artifacts_present("artifacts") {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::default_dir().expect("PJRT CPU client"))
+}
+
+#[test]
+fn artifact_matches_rust_whatif() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let space = ParameterSpace::v1();
+    let cluster = ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), HadoopVersion::V1);
+    let mut rng = Rng::seeded(3);
+    let w = Benchmark::Terasort.profile_scaled(100_000, 8 << 30, &mut rng);
+
+    let mut artifact = ArtifactWhatIf::new(&rt, space.clone(), &w, &cluster).unwrap();
+    let thetas: Vec<Vec<f64>> = (0..300)
+        .map(|_| (0..space.dim()).map(|_| rng.f64()).collect())
+        .collect();
+    let from_artifact = artifact.eval_batch(&thetas);
+    for (theta, a) in thetas.iter().zip(&from_artifact) {
+        let r = cost_for_theta(&space, theta, &w, &cluster);
+        let rel = (a - r).abs() / r.max(1.0);
+        assert!(
+            rel < 5e-3,
+            "artifact {a} vs rust {r} (rel {rel:.2e}) at theta {theta:?}"
+        );
+    }
+    assert_eq!(artifact.model_evals(), 300);
+}
+
+#[test]
+fn artifact_matches_rust_whatif_v2() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let space = ParameterSpace::v2();
+    let cluster = ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), HadoopVersion::V2);
+    let mut rng = Rng::seeded(5);
+    let w = Benchmark::Bigram.profile_scaled(100_000, 1 << 30, &mut rng);
+
+    let mut artifact = ArtifactWhatIf::new(&rt, space.clone(), &w, &cluster).unwrap();
+    let thetas: Vec<Vec<f64>> = (0..100)
+        .map(|_| (0..space.dim()).map(|_| rng.f64()).collect())
+        .collect();
+    let got = artifact.eval_batch(&thetas);
+    for (theta, a) in thetas.iter().zip(&got) {
+        let r = cost_for_theta(&space, theta, &w, &cluster);
+        let rel = (a - r).abs() / r.max(1.0);
+        assert!(rel < 5e-3, "artifact {a} vs rust {r} at theta {theta:?}");
+    }
+}
+
+#[test]
+fn spsa_step_artifact_descends_model() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let space = ParameterSpace::v1();
+    let cluster = ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), HadoopVersion::V1);
+    let mut rng = Rng::seeded(7);
+    let w = Benchmark::Terasort.profile_scaled(100_000, 8 << 30, &mut rng);
+
+    let stepper = ArtifactSpsaStep::new(&rt, &space, &w, &cluster).unwrap();
+    let c_scales: Vec<f64> = space
+        .params()
+        .iter()
+        .map(|p| (1.0 / p.width().max(1e-9)).clamp(0.02, 0.25))
+        .collect();
+
+    let mut theta = space.default_theta();
+    let mut first = None;
+    let mut last = 0.0;
+    for iter in 0..40 {
+        let signs: Vec<Vec<f64>> = (0..ARTIFACT_K)
+            .map(|_| (0..space.dim()).map(|_| rng.rademacher()).collect())
+            .collect();
+        let out = stepper.step(&theta, &signs, &c_scales, 0.01, 0.15).unwrap();
+        assert!(out.theta_next.iter().all(|t| (0.0..=1.0).contains(t)));
+        assert_eq!(out.ghat.len(), space.dim());
+        theta = out.theta_next;
+        if iter == 0 {
+            first = Some(out.f_theta);
+        }
+        last = out.f_theta;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < 0.6 * first,
+        "surrogate SPSA did not descend: {first} -> {last}"
+    );
+}
+
+#[test]
+fn rrs_over_artifact_beats_default_on_simulator() {
+    // The full Starfish pipeline with the artifact as what-if engine.
+    let Some(rt) = runtime_or_skip() else { return };
+    use hadoop_spsa::baselines::{rrs, RrsConfig};
+    use hadoop_spsa::sim::{simulate, SimOptions};
+
+    let space = ParameterSpace::v1();
+    let cluster_spec = ClusterSpec::paper_cluster();
+    let cluster = ClusterFeatures::from_spec(&cluster_spec, HadoopVersion::V1);
+    let mut rng = Rng::seeded(11);
+    let w = Benchmark::InvertedIndex.profile_scaled(100_000, 4 << 30, &mut rng);
+
+    let mut artifact = ArtifactWhatIf::new(&rt, space.clone(), &w, &cluster).unwrap();
+    let res = rrs(&mut artifact, &RrsConfig { budget: 1500, ..Default::default() });
+
+    let opts = SimOptions { seed: 13, noise: false };
+    let f_default = simulate(&cluster_spec, &space.default_config(), &w, &opts).exec_time_s;
+    let f_tuned = simulate(&cluster_spec, &space.materialize(&res.best_theta), &w, &opts).exec_time_s;
+    assert!(
+        f_tuned < 0.8 * f_default,
+        "artifact-RRS config not better: {f_tuned} vs {f_default}"
+    );
+}

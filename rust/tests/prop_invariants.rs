@@ -1,0 +1,277 @@
+//! Property-based invariant tests (via the in-repo `util::prop`
+//! mini-framework, DESIGN.md §7): the algebra every module must satisfy
+//! for any input, not just the unit-test fixtures.
+
+use hadoop_spsa::config::{HadoopVersion, ParamKind, ParameterSpace};
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::engine::{run_job, Split};
+use hadoop_spsa::sim::{map_output_for_split, simulate, SimOptions};
+use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig, SpsaState};
+use hadoop_spsa::util::json::Json;
+use hadoop_spsa::util::prop::{assert_close, assert_that, forall};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::whatif::{cost_for_theta, ClusterFeatures};
+use hadoop_spsa::workloads::{Benchmark, WorkloadProfile};
+
+fn spaces() -> [ParameterSpace; 2] {
+    [ParameterSpace::v1(), ParameterSpace::v2()]
+}
+
+fn any_profile(g: &mut hadoop_spsa::util::prop::Gen) -> WorkloadProfile {
+    WorkloadProfile {
+        name: "prop".into(),
+        input_bytes: g.u64_in(64 << 20, 64 << 30),
+        avg_input_record_bytes: g.f64_in(20.0, 500.0),
+        map_selectivity_bytes: g.f64_in(0.01, 4.0),
+        map_selectivity_records: g.f64_in(0.05, 16.0),
+        avg_map_record_bytes: g.f64_in(8.0, 300.0),
+        combiner_reduction: g.f64_in(0.05, 1.0),
+        has_combiner: g.bool(),
+        reduce_selectivity_bytes: g.f64_in(0.05, 2.0),
+        partition_skew: g.f64_in(1.0, 5.0),
+        compress_ratio: g.f64_in(0.05, 1.0),
+        map_cpu_ops_per_record: g.f64_in(10.0, 5000.0),
+        reduce_cpu_ops_per_record: g.f64_in(10.0, 5000.0),
+    }
+}
+
+#[test]
+fn mu_always_lands_in_hadoop_range() {
+    forall("mu in range", 300, |g| {
+        for space in spaces() {
+            let theta = g.unit_vec(space.dim());
+            let vals = space.to_hadoop_values(&theta);
+            for (v, p) in vals.iter().zip(space.params()) {
+                let x = v.as_f64();
+                if p.kind == ParamKind::Bool {
+                    assert_that(x == 0.0 || x == 1.0, format!("{}: {x}", p.name))?;
+                } else {
+                    assert_that(
+                        x >= p.min - 1e-9 && x <= p.max + 1e-9,
+                        format!("{}: {x} outside [{}, {}]", p.name, p.min, p.max),
+                    )?;
+                }
+                if p.kind == ParamKind::Int {
+                    assert_that(x == x.floor(), format!("{} not integral: {x}", p.name))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mu_is_monotone_per_coordinate() {
+    forall("mu monotone", 200, |g| {
+        for space in spaces() {
+            let i = g.usize_in(0, space.dim() - 1);
+            let mut lo = g.unit_vec(space.dim());
+            let mut hi = lo.clone();
+            let (a, b) = (g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0));
+            lo[i] = a.min(b);
+            hi[i] = a.max(b);
+            let vlo = space.to_hadoop_values(&lo)[i].as_f64();
+            let vhi = space.to_hadoop_values(&hi)[i].as_f64();
+            assert_that(vlo <= vhi + 1e-9, format!("coord {i}: {vlo} > {vhi}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn projection_is_idempotent_and_clipping() {
+    forall("projection idempotent", 300, |g| {
+        let space = ParameterSpace::v1();
+        let mut theta: Vec<f64> =
+            (0..space.dim()).map(|_| g.f64_in(-2.0, 3.0)).collect();
+        space.project(&mut theta);
+        assert_that(theta.iter().all(|t| (0.0..=1.0).contains(t)), "in box")?;
+        let once = theta.clone();
+        space.project(&mut theta);
+        assert_that(theta == once, "idempotent")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn perturbation_moves_every_integer_param() {
+    forall("integer params move", 200, |g| {
+        for space in spaces() {
+            let theta: Vec<f64> = (0..space.dim()).map(|_| g.f64_in(0.3, 0.7)).collect();
+            let delta = space.sample_perturbation(g.rng());
+            let base = space.to_hadoop_values(&theta);
+            let pert: Vec<f64> =
+                theta.iter().zip(&delta).map(|(t, d)| (t + d).clamp(0.0, 1.0)).collect();
+            let moved = space.to_hadoop_values(&pert);
+            for (i, p) in space.params().iter().enumerate() {
+                if p.kind == ParamKind::Int && p.width() >= 5.0 {
+                    assert_that(
+                        base[i].as_i64() != moved[i].as_i64(),
+                        format!("{} did not move", p.name),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_is_deterministic_and_sane() {
+    forall("sim deterministic + sane", 40, |g| {
+        let w = any_profile(g);
+        let space = if g.bool() { ParameterSpace::v1() } else { ParameterSpace::v2() };
+        let theta = g.unit_vec(space.dim());
+        let cfg = space.materialize(&theta);
+        let cluster = ClusterSpec::paper_cluster();
+        let seed = g.u64_in(1, 1 << 40);
+        let opts = SimOptions { seed, noise: true };
+        let a = simulate(&cluster, &cfg, &w, &opts);
+        let b = simulate(&cluster, &cfg, &w, &opts);
+        assert_that(a.exec_time_s == b.exec_time_s, "determinism")?;
+        assert_that(a.exec_time_s.is_finite() && a.exec_time_s > 0.0, "finite positive")?;
+        assert_that(a.maps_done_s <= a.exec_time_s, "maps before end")?;
+        let c = &a.counters;
+        assert_that(c.data_local_maps <= c.n_maps, "locality bound")?;
+        assert_that(c.n_maps >= 1 && c.n_reduces >= 1, "tasks exist")?;
+        assert_that(
+            c.map_waves >= 1 && c.reduce_waves >= 1,
+            "waves at least one",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn spill_count_monotone_in_buffer() {
+    forall("spills decrease with buffer", 200, |g| {
+        let space = ParameterSpace::v1();
+        let mut theta = g.unit_vec(space.dim());
+        let w = any_profile(g);
+        let split = g.u64_in(32 << 20, 256 << 20);
+        theta[0] = g.f64_in(0.0, 0.5);
+        let small = map_output_for_split(&space.materialize(&theta), &w, split);
+        theta[0] = g.f64_in(theta[0], 1.0);
+        let big = map_output_for_split(&space.materialize(&theta), &w, split);
+        assert_that(
+            big.n_spills <= small.n_spills,
+            format!("{} > {}", big.n_spills, small.n_spills),
+        )
+    });
+}
+
+#[test]
+fn whatif_model_finite_positive_everywhere() {
+    forall("model finite positive", 300, |g| {
+        let w = any_profile(g);
+        for (space, version) in [
+            (ParameterSpace::v1(), HadoopVersion::V1),
+            (ParameterSpace::v2(), HadoopVersion::V2),
+        ] {
+            let features = ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), version);
+            let theta = g.unit_vec(space.dim());
+            let cost = cost_for_theta(&space, &theta, &w, &features);
+            assert_that(
+                cost.is_finite() && cost > 0.0,
+                format!("cost {cost} for theta {theta:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn whatif_model_monotone_in_input_size() {
+    forall("model monotone in input", 150, |g| {
+        let mut w = any_profile(g);
+        let space = ParameterSpace::v1();
+        let features =
+            ClusterFeatures::from_spec(&ClusterSpec::paper_cluster(), HadoopVersion::V1);
+        let theta = g.unit_vec(space.dim());
+        w.input_bytes = g.u64_in(256 << 20, 8 << 30);
+        let small = cost_for_theta(&space, &theta, &w, &features);
+        w.input_bytes *= 4;
+        let big = cost_for_theta(&space, &theta, &w, &features);
+        assert_that(big >= small * 0.99, format!("4x input got cheaper: {small} -> {big}"))
+    });
+}
+
+#[test]
+fn spsa_iterates_stay_in_box_under_any_seed() {
+    forall("spsa in box", 8, |g| {
+        let space = ParameterSpace::v1();
+        let w = any_profile(g);
+        let cluster = ClusterSpec::paper_cluster();
+        let seed = g.u64_in(1, 1 << 40);
+        let mut obj = SimObjective::new(space.clone(), cluster, w, seed);
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: 8, seed, ..Default::default() },
+            &space,
+        );
+        let res = spsa.run(&mut obj, space.default_theta());
+        for r in &res.history {
+            assert_that(
+                r.theta.iter().all(|t| (0.0..=1.0).contains(t)),
+                format!("iterate escaped the box at iter {}", r.iter),
+            )?;
+            assert_that(r.f_theta > 0.0 && r.f_theta.is_finite(), "f finite")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spsa_state_json_roundtrip_any_state() {
+    forall("spsa checkpoint roundtrip", 100, |g| {
+        let n = g.usize_in(1, 16);
+        let mut st = SpsaState::fresh(g.unit_vec(n));
+        st.iter = g.u64_in(0, 500);
+        st.f0 = if g.bool() { Some(g.f64_in(1.0, 1e5)) } else { None };
+        st.best_f = g.f64_in(1.0, 1e5);
+        st.best_theta = g.unit_vec(n);
+        let json = st.to_json();
+        let back = SpsaState::from_json(&Json::parse(&json.to_string()).unwrap()).unwrap();
+        assert_that(back.theta == st.theta, "theta")?;
+        assert_that(back.iter == st.iter, "iter")?;
+        assert_that(back.best_theta == st.best_theta, "best theta")?;
+        match (back.f0, st.f0) {
+            (Some(a), Some(b)) => assert_close(a, b, 1e-12)?,
+            (None, None) => {}
+            _ => return Err("f0 mismatch".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wordcount_total_is_partition_invariant() {
+    // The reduce output must be the same data regardless of how many
+    // partitions the engine uses.
+    forall("engine partition invariance", 30, |g| {
+        let mut rng = Rng::seeded(g.u64_in(1, 1 << 40));
+        let bench = *g.pick(&[Benchmark::Bigram, Benchmark::Grep, Benchmark::WordCooccurrence]);
+        let splits = bench.generate_input(20_000, 7_000, &mut rng);
+        let n1 = g.u64_in(1, 4) as u32;
+        let n2 = g.u64_in(5, 16) as u32;
+        let a = run_job(&bench.job(), &splits, n1);
+        let b = run_job(&bench.job(), &splits, n2);
+        let mut ra: Vec<_> = a.all_records().into_iter().cloned().collect();
+        let mut rb: Vec<_> = b.all_records().into_iter().cloned().collect();
+        ra.sort();
+        rb.sort();
+        assert_that(ra == rb, format!("{bench}: outputs differ between {n1} and {n2} partitions"))
+    });
+}
+
+#[test]
+fn terasort_preserves_every_record() {
+    forall("terasort record preservation", 20, |g| {
+        let mut rng = Rng::seeded(g.u64_in(1, 1 << 40));
+        let n_records = g.u64_in(50, 500);
+        let data = hadoop_spsa::workloads::corpus::generate_tera(n_records, &mut rng);
+        let splits = vec![Split::Fixed { data, record_len: 100 }];
+        let out = run_job(&Benchmark::Terasort.job(), &splits, g.u64_in(1, 8) as u32);
+        let total: usize = out.partitions.iter().map(|p| p.len()).sum();
+        assert_that(total as u64 == n_records, format!("{total} != {n_records}"))
+    });
+}
