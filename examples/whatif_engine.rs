@@ -17,12 +17,13 @@ use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
 use hadoop_spsa::runtime::{ArtifactSpsaStep, ArtifactWhatIf, Runtime, ARTIFACT_K};
 use hadoop_spsa::sim::{simulate, SimOptions};
 use hadoop_spsa::tuner::Spsa;
+use hadoop_spsa::util::error::Result;
 use hadoop_spsa::util::rng::Rng;
 use hadoop_spsa::util::units::fmt_secs;
 use hadoop_spsa::whatif::{cost_for_theta, ClusterFeatures};
 use hadoop_spsa::workloads::Benchmark;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     if !Runtime::artifacts_present("artifacts") {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         std::process::exit(1);

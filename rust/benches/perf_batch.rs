@@ -1,0 +1,76 @@
+//! Perf bench for the batched objective layer: one 30-iteration Terasort
+//! SPSA trial with grad_avg=4 (1 + 4 observations per iteration), run
+//! with a sequential objective vs. the parallel fan-out, plus the raw
+//! `simulate_batch` path. On a ≥4-core machine the parallel trial should
+//! be ≥2× faster wall-clock while producing the bit-identical trajectory
+//! (seeds are assigned before dispatch).
+
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::ParameterSpace;
+use hadoop_spsa::coordinator::default_workers;
+use hadoop_spsa::sim::{simulate_batch, SimJob, SimOptions};
+use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig};
+use hadoop_spsa::util::bench::{black_box, quick};
+use hadoop_spsa::util::rng::Rng;
+use hadoop_spsa::workloads::Benchmark;
+
+fn main() {
+    let space = ParameterSpace::v1();
+    let cluster = ClusterSpec::paper_cluster();
+    let mut rng = Rng::seeded(1000);
+    let w = Benchmark::Terasort.paper_profile(&mut rng);
+    let workers = default_workers();
+    println!("parallel worker count: {workers}\n");
+
+    let trial = |workers: usize, seed: u64| {
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed)
+            .with_workers(workers);
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: 30, grad_avg: 4, seed, ..Default::default() },
+            &space,
+        );
+        spsa.run(&mut obj, space.default_theta())
+    };
+
+    // sanity: identical trajectories before timing anything
+    let a = trial(1, 7);
+    let b = trial(workers, 7);
+    assert_eq!(a.final_theta, b.final_theta, "parallel trajectory diverged");
+
+    let mut seed = 0u64;
+    let seq = quick("spsa/30-iter grad_avg=4 trial (1 worker)", || {
+        seed += 1;
+        black_box(trial(1, seed));
+    });
+    let mut seed = 0u64;
+    let par = quick("spsa/30-iter grad_avg=4 trial (parallel)", || {
+        seed += 1;
+        black_box(trial(workers, seed));
+    });
+    println!(
+        "\nintra-trial speedup: {:.2}x with {} workers",
+        seq.mean_ns / par.mean_ns,
+        workers
+    );
+
+    // raw batched-simulation path (campaign::evaluate_theta's substrate)
+    let jobs = |n: u64| -> Vec<SimJob> {
+        (0..n)
+            .map(|i| SimJob {
+                config: space.default_config(),
+                opts: SimOptions { seed: i + 1, noise: true },
+            })
+            .collect()
+    };
+    let seq = quick("simulate_batch/8 runs (1 worker)", || {
+        black_box(simulate_batch(&cluster, jobs(8), &w, 1));
+    });
+    let par = quick("simulate_batch/8 runs (parallel)", || {
+        black_box(simulate_batch(&cluster, jobs(8), &w, workers));
+    });
+    println!(
+        "\nsimulate_batch speedup: {:.2}x with {} workers",
+        seq.mean_ns / par.mean_ns,
+        workers
+    );
+}

@@ -16,6 +16,17 @@ fn main() {
     let mut seed = 0u64;
     quick("spsa/30-iter campaign (terasort)", || {
         seed += 1;
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed)
+            .with_workers(1);
+        let spsa = Spsa::for_space(SpsaConfig { seed, ..Default::default() }, &space);
+        black_box(spsa.run(&mut obj, space.default_theta()));
+    });
+
+    // same campaign with per-iteration observations fanned across cores
+    // (see perf_batch.rs for the dedicated speedup bench)
+    let mut seed = 0u64;
+    quick("spsa/30-iter campaign (batched objective)", || {
+        seed += 1;
         let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
         let spsa = Spsa::for_space(SpsaConfig { seed, ..Default::default() }, &space);
         black_box(spsa.run(&mut obj, space.default_theta()));

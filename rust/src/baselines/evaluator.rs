@@ -4,15 +4,52 @@
 //! AOT-compiled JAX/Pallas artifact via PJRT (`crate::runtime`).
 
 use crate::config::ParameterSpace;
+use crate::tuner::Objective;
 use crate::whatif::{cost_for_theta, ClusterFeatures};
 use crate::workloads::WorkloadProfile;
 
 /// Batched what-if evaluation of θ_A points (algorithm space, [0,1]^n).
+/// Same batch shape as [`Objective::eval_batch`] — [`CostObjective`]
+/// bridges the two, so RRS, PPABS, Starfish *and* surrogate-SPSA all
+/// drive their models through one batching interface.
 pub trait CostEvaluator {
     fn dim(&self) -> usize;
     fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64>;
     /// Number of model evaluations so far (profiling-overhead accounting).
     fn model_evals(&self) -> u64;
+}
+
+/// Adapter presenting any what-if [`CostEvaluator`] as a tuner
+/// [`Objective`]: surrogate-SPSA runs against the model through the same
+/// `eval_batch` the CBO baselines use (replacing the ad-hoc wrapper the
+/// campaign layer used to carry). Model observations are deterministic —
+/// the "noise" SPSA sees is only the perturbation geometry.
+pub struct CostObjective<'a> {
+    inner: &'a mut dyn CostEvaluator,
+}
+
+impl<'a> CostObjective<'a> {
+    pub fn new(inner: &'a mut dyn CostEvaluator) -> Self {
+        CostObjective { inner }
+    }
+}
+
+impl Objective for CostObjective<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&mut self, theta: &[f64]) -> f64 {
+        self.inner.eval_batch(&[theta.to_vec()])[0]
+    }
+
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        self.inner.eval_batch(thetas)
+    }
+
+    fn evals(&self) -> u64 {
+        self.inner.model_evals()
+    }
 }
 
 /// The rust analytic what-if model.
@@ -73,5 +110,19 @@ mod tests {
         assert_eq!(costs.len(), 2);
         assert!(costs.iter().all(|c| c.is_finite() && *c > 0.0));
         assert_eq!(e.model_evals(), 2);
+    }
+
+    #[test]
+    fn cost_objective_bridges_to_tuner() {
+        let mut e = test_whatif();
+        let direct = e.eval_batch(&[vec![0.5; 11]])[0];
+        let mut obj = CostObjective::new(&mut e);
+        assert_eq!(obj.dim(), 11);
+        let single = obj.eval(&[0.5; 11]);
+        let batch = obj.eval_batch(&[vec![0.5; 11], vec![0.2; 11]]);
+        // the analytic model is deterministic: all routes agree
+        assert_eq!(single, direct);
+        assert_eq!(batch[0], direct);
+        assert_eq!(obj.evals(), 4);
     }
 }

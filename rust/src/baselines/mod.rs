@@ -13,7 +13,7 @@ pub mod rrs;
 pub mod starfish;
 
 pub use annealing::{simulated_annealing, SaConfig, SaResult};
-pub use evaluator::{CostEvaluator, RustWhatIf};
+pub use evaluator::{CostEvaluator, CostObjective, RustWhatIf};
 pub use hill_climbing::{hill_climb, HillClimbConfig, HillClimbResult};
 pub use kmeans::{kmeans, nearest, KmeansResult};
 pub use ppabs::{training_corpus, Ppabs};

@@ -4,19 +4,19 @@
 //! generalized over the comparison algorithms of §6.6.
 
 use crate::baselines::{
-    hill_climb, random_search, starfish_tune, training_corpus, HillClimbConfig, Ppabs,
-    RrsConfig, RustWhatIf,
+    hill_climb, random_search, starfish_tune, training_corpus, CostObjective,
+    HillClimbConfig, Ppabs, RrsConfig, RustWhatIf,
 };
 use crate::cluster::ClusterSpec;
 use crate::config::{HadoopVersion, ParameterSpace};
-use crate::sim::{simulate, SimOptions};
-use crate::tuner::{IterRecord, Objective, SimObjective, Spsa, SpsaConfig};
+use crate::sim::{simulate_batch_auto, SimJob, SimOptions};
+use crate::tuner::{IterRecord, SimObjective, Spsa, SpsaConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, stddev};
 use crate::whatif::ClusterFeatures;
 use crate::workloads::{Benchmark, WorkloadProfile};
 
-use super::pool::{default_workers, run_parallel};
+use super::pool::{resolve_workers, run_parallel};
 
 /// Tuning algorithm under test.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -137,6 +137,9 @@ pub fn profile_for(benchmark: Benchmark, seed: u64) -> WorkloadProfile {
 }
 
 /// Evaluate a θ on the simulator with `n` noisy runs; returns (mean, std).
+/// The runs are independent verification jobs, so they fan across the
+/// worker pool (`HSPSA_WORKERS` knob); per-run seeds are fixed up front,
+/// so the statistics are identical at any worker count.
 pub fn evaluate_theta(
     space: &ParameterSpace,
     cluster: &ClusterSpec,
@@ -146,11 +149,15 @@ pub fn evaluate_theta(
     seed: u64,
 ) -> (f64, f64) {
     let cfg = space.materialize(theta);
-    let runs: Vec<f64> = (0..n)
-        .map(|i| {
-            simulate(cluster, &cfg, w, &SimOptions { seed: seed ^ (i + 1), noise: true })
-                .exec_time_s
+    let jobs: Vec<SimJob> = (0..n)
+        .map(|i| SimJob {
+            config: cfg.clone(),
+            opts: SimOptions { seed: seed ^ (i + 1), noise: true },
         })
+        .collect();
+    let runs: Vec<f64> = simulate_batch_auto(cluster, jobs, w)
+        .iter()
+        .map(|r| r.exec_time_s)
         .collect();
     (mean(&runs), stddev(&runs))
 }
@@ -189,35 +196,18 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
         Algo::SpsaSurrogate => {
             // surrogate SPSA: iterate on the analytic model only, then
             // deploy. Uses the rust what-if here; the artifact-backed
-            // variant lives in examples/whatif_engine.rs.
+            // variant lives in examples/whatif_engine.rs. The model is
+            // driven through the same CostEvaluator batching trait the
+            // CBO baselines use (CostObjective bridge).
             let mut evaluator = RustWhatIf::new(space.clone(), w.clone(), features.clone());
-            let mut theta = space.default_theta();
             let spsa = Spsa::for_space(
                 SpsaConfig { max_iters: spec.iters * 4, seed: spec.seed, ..Default::default() },
                 &space,
             );
-            struct ModelObjective<'a> {
-                inner: &'a mut RustWhatIf,
-                evals: u64,
-            }
-            impl Objective for ModelObjective<'_> {
-                fn dim(&self) -> usize {
-                    self.inner.space.dim()
-                }
-                fn eval(&mut self, theta: &[f64]) -> f64 {
-                    use crate::baselines::CostEvaluator;
-                    self.evals += 1;
-                    self.inner.eval_batch(std::slice::from_ref(&theta.to_vec()))[0]
-                }
-                fn evals(&self) -> u64 {
-                    self.evals
-                }
-            }
-            let mut obj = ModelObjective { inner: &mut evaluator, evals: 0 };
-            let res = spsa.run(&mut obj, theta.clone());
-            model_evals = obj.evals;
-            theta = res.best_theta;
-            theta
+            let mut obj = CostObjective::new(&mut evaluator);
+            let res = spsa.run(&mut obj, space.default_theta());
+            model_evals = res.observations;
+            res.best_theta
         }
         Algo::Starfish => {
             // Starfish characterizes the job from ONE instrumented run: its
@@ -294,12 +284,13 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
 }
 
 /// Run many trials across the worker pool (leader/worker topology).
+/// Worker count honors `HSPSA_WORKERS` (1 = fully sequential).
 pub fn run_campaign(specs: Vec<TrialSpec>) -> Vec<TrialOutcome> {
     let jobs: Vec<Box<dyn FnOnce() -> TrialOutcome + Send>> = specs
         .into_iter()
         .map(|s| Box::new(move || run_trial(&s)) as _)
         .collect();
-    run_parallel(jobs, default_workers())
+    run_parallel(jobs, resolve_workers(None))
 }
 
 #[cfg(test)]

@@ -1,10 +1,29 @@
 //! Leader/worker thread pool for fanning simulated tuning trials across
 //! cores (tokio is unavailable offline; the workload is CPU-bound
 //! simulation, so std threads + channels are the right tool anyway).
+//!
+//! **Nested-parallelism guard.** Campaign-level fan-out (one thread per
+//! trial) and objective-level fan-out (one thread per observation inside a
+//! trial) compose: `run_parallel` called from inside a pool worker runs its
+//! jobs sequentially on that worker instead of spawning a second tier of
+//! threads, so total concurrency never exceeds the outer pool's worker
+//! count regardless of nesting depth.
 
+use std::cell::Cell;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+thread_local! {
+    /// True on threads spawned by `run_parallel` (see module docs).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker; nested `run_parallel`
+/// calls degrade to sequential execution to avoid oversubscription.
+pub fn in_pool_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
 
 /// Run `jobs` on up to `workers` threads; results return in job order.
 pub fn run_parallel<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
@@ -16,7 +35,7 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let workers = workers.clamp(1, n);
+    let workers = if in_pool_worker() { 1 } else { workers.clamp(1, n) };
     if workers == 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
@@ -30,16 +49,19 @@ where
     for _ in 0..workers {
         let queue = Arc::clone(&queue);
         let tx = tx.clone();
-        handles.push(thread::spawn(move || loop {
-            let job = queue.lock().expect("queue poisoned").pop();
-            match job {
-                Some((i, f)) => {
-                    let out = f();
-                    if tx.send((i, out)).is_err() {
-                        break;
+        handles.push(thread::spawn(move || {
+            IN_POOL.with(|c| c.set(true));
+            loop {
+                let job = queue.lock().expect("queue poisoned").pop();
+                match job {
+                    Some((i, f)) => {
+                        let out = f();
+                        if tx.send((i, out)).is_err() {
+                            break;
+                        }
                     }
+                    None => break,
                 }
-                None => break,
             }
         }));
     }
@@ -58,6 +80,21 @@ where
 /// Default worker count: physical parallelism minus one leader core.
 pub fn default_workers() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+}
+
+/// Worker-count override from the `HSPSA_WORKERS` environment variable
+/// (`1` forces fully sequential evaluation; unset/invalid → `None`).
+pub fn env_workers() -> Option<usize> {
+    std::env::var("HSPSA_WORKERS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// Worker count for intra-trial observation fan-out: explicit override,
+/// else `HSPSA_WORKERS`, else all-but-one core.
+pub fn resolve_workers(explicit: Option<usize>) -> usize {
+    explicit.or_else(env_workers).unwrap_or_else(default_workers)
 }
 
 #[cfg(test)]
@@ -87,12 +124,74 @@ mod tests {
 
     #[test]
     fn actually_parallel() {
+        // Concurrency proof without wall-clock assertions (the old
+        // sleep-based test was flaky on loaded CI machines): every job
+        // increments an in-flight counter and waits until all 8 jobs are
+        // in flight simultaneously before finishing. Only a pool that
+        // really runs 8 jobs concurrently lets the count reach 8; a
+        // sequential pool would stall at 1 until the deadline fails the
+        // test rather than hanging it.
+        use std::sync::atomic::{AtomicUsize, Ordering};
         use std::time::{Duration, Instant};
-        let jobs: Vec<Box<dyn FnOnce() -> () + Send>> = (0..8)
-            .map(|_| Box::new(|| thread::sleep(Duration::from_millis(50))) as _)
+
+        const N: usize = 8;
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let deadline = Instant::now() + Duration::from_secs(10);
+
+        let jobs: Vec<Box<dyn FnOnce() -> () + Send>> = (0..N)
+            .map(|_| {
+                let in_flight = Arc::clone(&in_flight);
+                let max_seen = Arc::clone(&max_seen);
+                Box::new(move || {
+                    let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                    max_seen.fetch_max(now, Ordering::SeqCst);
+                    // wait until every job has been observed in flight
+                    while max_seen.load(Ordering::SeqCst) < N && Instant::now() < deadline {
+                        thread::yield_now();
+                    }
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                }) as _
+            })
             .collect();
-        let t0 = Instant::now();
-        run_parallel(jobs, 8);
-        assert!(t0.elapsed() < Duration::from_millis(350));
+        run_parallel(jobs, N);
+        assert_eq!(
+            max_seen.load(Ordering::SeqCst),
+            N,
+            "never saw all {N} jobs in flight at once"
+        );
+    }
+
+    #[test]
+    fn nested_call_degrades_to_sequential() {
+        // From inside a pool worker, a nested run_parallel must not spawn
+        // threads: its jobs run on the worker thread itself.
+        let outer: Vec<Box<dyn FnOnce() -> Vec<bool> + Send>> = (0..4)
+            .map(|_| {
+                Box::new(move || {
+                    assert!(in_pool_worker());
+                    let inner: Vec<Box<dyn FnOnce() -> bool + Send>> = (0..4)
+                        .map(|_| Box::new(in_pool_worker) as Box<dyn FnOnce() -> bool + Send>)
+                        .collect();
+                    // if these spawned fresh threads, in_pool_worker would
+                    // be false there; sequential execution keeps it true
+                    run_parallel(inner, 4)
+                }) as _
+            })
+            .collect();
+        for inner in run_parallel(outer, 2) {
+            assert!(inner.into_iter().all(|b| b));
+        }
+    }
+
+    #[test]
+    fn leader_thread_is_not_a_worker() {
+        assert!(!in_pool_worker());
+    }
+
+    #[test]
+    fn resolve_workers_explicit_wins() {
+        assert_eq!(resolve_workers(Some(3)), 3);
+        assert!(resolve_workers(None) >= 1);
     }
 }

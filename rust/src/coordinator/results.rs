@@ -4,7 +4,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 use crate::util::table::Table;

@@ -4,92 +4,161 @@
 //!
 //! One [`Runtime`] owns the PJRT client; each artifact compiles once into a
 //! [`LoadedComputation`] that the hot path executes repeatedly.
+//!
+//! **Feature gating.** The real implementation needs the `xla` crate,
+//! which is not vendored in the offline build; it compiles only with
+//! `--features pjrt`. The default build ships an API-compatible stub whose
+//! constructor reports the runtime as unavailable — callers already probe
+//! [`Runtime::artifacts_present`] first (the artifacts can only have been
+//! produced in an environment that also provides PJRT), so the offline
+//! path degrades to "skipped" everywhere.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::Result;
 
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
 
-/// Owns the PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
+/// True if the artifact files exist (lets tests skip gracefully when
+/// `make artifacts` has not run).
+fn artifacts_present_in(dir: &Path) -> bool {
+    dir.join("whatif_batch.hlo.txt").exists() && dir.join("spsa_step.hlo.txt").exists()
 }
 
-/// A compiled executable plus its entry metadata.
-pub struct LoadedComputation {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at `artifact_dir`.
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    use crate::util::error::{Context, Error, Result};
+
+    /// Owns the PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifact_dir: PathBuf,
     }
 
+    /// A compiled executable plus its entry metadata.
+    pub struct LoadedComputation {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at `artifact_dir`.
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile `<name>.hlo.txt` from the artifact directory.
+        pub fn load(&self, name: &str) -> Result<LoadedComputation> {
+            let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::msg("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            Ok(LoadedComputation { exe, name: name.to_string() })
+        }
+    }
+
+    impl LoadedComputation {
+        /// Execute with f32 tensor inputs given as (data, dims) pairs;
+        /// returns the flattened f32 contents of the first tuple element.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                    lit
+                } else {
+                    lit.reshape(dims)
+                        .with_context(|| format!("reshape to {dims:?}"))?
+                };
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let out = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| Error::msg(format!("no output buffer from {}", self.name)))?
+                .to_literal_sync()
+                .context("syncing output literal")?;
+            // aot.py lowers with return_tuple=True: outputs are 1-tuples
+            let inner = out.to_tuple1().context("unwrapping output tuple")?;
+            inner.to_vec::<f32>().context("reading f32 output")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+
+    use crate::util::error::{Error, Result};
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` \
+         feature (the `xla` crate is not vendored in the offline build)";
+
+    /// Stub standing in for the PJRT client (see module docs).
+    pub struct Runtime {
+        #[allow(dead_code)]
+        artifact_dir: PathBuf,
+    }
+
+    /// Stub compiled-executable handle; cannot be constructed without the
+    /// `pjrt` feature (its only producer, `Runtime::load`, needs a
+    /// `Runtime`, and `Runtime::new` always errors here).
+    pub struct LoadedComputation {
+        pub name: String,
+    }
+
+    impl Runtime {
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+            let _ = artifact_dir.as_ref();
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (no pjrt feature)".to_string()
+        }
+
+        pub fn load(&self, _name: &str) -> Result<LoadedComputation> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+    }
+
+    impl LoadedComputation {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+    }
+}
+
+pub use imp::{LoadedComputation, Runtime};
+
+impl Runtime {
     /// Create with the default `artifacts/` directory.
     pub fn default_dir() -> Result<Runtime> {
         Self::new(DEFAULT_ARTIFACT_DIR)
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
     /// True if the artifact files exist (lets tests skip gracefully when
     /// `make artifacts` has not run).
     pub fn artifacts_present(dir: impl AsRef<Path>) -> bool {
-        dir.as_ref().join("whatif_batch.hlo.txt").exists()
-            && dir.as_ref().join("spsa_step.hlo.txt").exists()
-    }
-
-    /// Load and compile `<name>.hlo.txt` from the artifact directory.
-    pub fn load(&self, name: &str) -> Result<LoadedComputation> {
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        Ok(LoadedComputation { exe, name: name.to_string() })
-    }
-}
-
-impl LoadedComputation {
-    /// Execute with f32 tensor inputs given as (data, dims) pairs; returns
-    /// the flattened f32 contents of the first tuple element.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
-                lit
-            } else {
-                lit.reshape(dims)
-                    .with_context(|| format!("reshape to {dims:?}"))?
-            };
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let out = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("no output buffer from {}", self.name))?
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: outputs are 1-tuples
-        let inner = out.to_tuple1().context("unwrapping output tuple")?;
-        Ok(inner.to_vec::<f32>()?)
+        artifacts_present_in(dir.as_ref())
     }
 }
 
@@ -102,6 +171,13 @@ mod tests {
         assert!(!Runtime::artifacts_present("/nonexistent"));
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::default_dir().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
     // Full load/execute coverage lives in rust/tests/integration_runtime.rs
-    // (needs `make artifacts`).
+    // (needs `make artifacts` and `--features pjrt`).
 }

@@ -2,7 +2,7 @@
 //! engine served by the compiled JAX/Pallas graph through PJRT — this is
 //! the L1/L2 compute on the L3 hot path.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::baselines::CostEvaluator;
 use crate::config::ParameterSpace;

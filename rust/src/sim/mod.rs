@@ -5,6 +5,7 @@
 //! full §2.3 data path and returns the wall-clock execution time (the SPSA
 //! objective) plus a phase/counter trace.
 
+pub mod batch;
 pub mod constants;
 pub mod event;
 pub mod map_task;
@@ -12,6 +13,7 @@ pub mod reduce_task;
 pub mod simulator;
 pub mod trace;
 
+pub use batch::{simulate_batch, simulate_batch_auto, SimJob};
 pub use event::{EventQueue, SimTime};
 pub use map_task::{map_output_for_split, map_task_cost, MapTaskCost, TaskRates};
 pub use reduce_task::{reduce_task_cost, ReduceTaskCost};

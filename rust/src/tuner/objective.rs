@@ -12,6 +12,16 @@ pub trait Objective {
     /// One observation of f at θ_A ∈ [0,1]^n. Observations are noisy; the
     /// same θ may return different values (run-to-run variance).
     fn eval(&mut self, theta: &[f64]) -> f64;
+    /// Observe f at a batch of points. The contract: element `i` of the
+    /// result equals what `eval(&thetas[i])` would have returned had the
+    /// points been evaluated one by one, in order — per-observation seed
+    /// derivation included. The default implementation *is* that
+    /// sequential loop; implementations may parallelize (SPSA's
+    /// perturbation probes are independent jobs) as long as the results
+    /// stay element-for-element identical.
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        thetas.iter().map(|t| self.eval(t)).collect()
+    }
     /// Total observations made so far (the paper's cost metric: 2/iter).
     fn evals(&self) -> u64;
 }
@@ -78,6 +88,9 @@ pub struct SimObjective {
     pub noise: bool,
     /// Statistic to minimize.
     pub metric: Metric,
+    /// Worker threads for `eval_batch` (None → `HSPSA_WORKERS` env var,
+    /// else all-but-one core). 1 = sequential.
+    workers: Option<usize>,
     evals: u64,
 }
 
@@ -95,6 +108,7 @@ impl SimObjective {
             base_seed,
             noise: true,
             metric: Metric::ExecTime,
+            workers: None,
             evals: 0,
         }
     }
@@ -108,6 +122,20 @@ impl SimObjective {
         self.metric = metric;
         self
     }
+
+    /// Pin the `eval_batch` worker count (1 = always sequential). Without
+    /// this, `HSPSA_WORKERS` / core count decide.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    /// Seed of observation number `k` (1-based): the same derivation
+    /// `eval` uses, split out so batched dispatch can assign every
+    /// observation its seed *before* the jobs fan out across threads.
+    fn obs_seed(&self, k: u64) -> u64 {
+        self.base_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(k)
+    }
 }
 
 impl Objective for SimObjective {
@@ -118,13 +146,36 @@ impl Objective for SimObjective {
     fn eval(&mut self, theta: &[f64]) -> f64 {
         self.evals += 1;
         let config = self.space.materialize(theta);
-        let seed = self
-            .base_seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(self.evals);
-        let opts = SimOptions { seed, noise: self.noise };
+        let opts = SimOptions { seed: self.obs_seed(self.evals), noise: self.noise };
         self.metric
             .extract(&simulate(&self.cluster, &config, &self.workload, &opts))
+    }
+
+    /// Parallel override: one simulation per observation, fanned across
+    /// the coordinator pool. Seeds are derived from the observation index
+    /// *before* dispatch, so the result vector is bit-identical to the
+    /// sequential `eval` loop for every worker count and independent of
+    /// thread scheduling. Nested inside a campaign pool worker this
+    /// degrades to sequential automatically (see `coordinator::pool`).
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        let workers = crate::coordinator::pool::resolve_workers(self.workers);
+        if workers <= 1 || thetas.len() <= 1 {
+            return thetas.iter().map(|t| self.eval(t)).collect();
+        }
+        let jobs: Vec<crate::sim::SimJob> = thetas
+            .iter()
+            .map(|t| {
+                self.evals += 1;
+                crate::sim::SimJob {
+                    config: self.space.materialize(t),
+                    opts: SimOptions { seed: self.obs_seed(self.evals), noise: self.noise },
+                }
+            })
+            .collect();
+        crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers)
+            .iter()
+            .map(|r| self.metric.extract(r))
+            .collect()
     }
 
     fn evals(&self) -> u64 {
@@ -240,6 +291,47 @@ mod tests {
             "spill-metric tuning got worse: {f0} -> {}",
             res.best_f
         );
+    }
+
+    fn probe_thetas(n: usize) -> Vec<Vec<f64>> {
+        let mut rng = crate::util::rng::Rng::seeded(77);
+        (0..n).map(|_| (0..11).map(|_| rng.f64()).collect()).collect()
+    }
+
+    #[test]
+    fn eval_batch_matches_sequential_eval_loop() {
+        // the batched path must preserve per-observation seed derivation
+        // exactly: element-for-element bit-identical with the plain loop
+        let thetas = probe_thetas(7);
+        let mut batched = objective();
+        let got = batched.eval_batch(&thetas);
+        let mut looped = objective();
+        let want: Vec<f64> = thetas.iter().map(|t| looped.eval(t)).collect();
+        assert_eq!(got, want);
+        assert_eq!(batched.evals(), looped.evals());
+        assert_eq!(batched.evals(), 7);
+    }
+
+    #[test]
+    fn eval_batch_one_worker_equals_many_workers() {
+        let thetas = probe_thetas(6);
+        let mut one = objective().with_workers(1);
+        let mut many = objective().with_workers(4);
+        assert_eq!(one.eval_batch(&thetas), many.eval_batch(&thetas));
+    }
+
+    #[test]
+    fn eval_batch_continues_the_seed_sequence() {
+        // interleaving single evals and batches must not fork the seed
+        // stream: (eval, eval, batch) == four sequential evals
+        let thetas = probe_thetas(4);
+        let mut mixed = objective().with_workers(4);
+        let a = mixed.eval(&thetas[0]);
+        let b = mixed.eval(&thetas[1]);
+        let tail = mixed.eval_batch(&thetas[2..]);
+        let mut seq = objective().with_workers(1);
+        let want: Vec<f64> = thetas.iter().map(|t| seq.eval(t)).collect();
+        assert_eq!(vec![a, b, tail[0], tail[1]], want);
     }
 
     #[test]

@@ -260,25 +260,108 @@ impl Spsa {
         mut state: SpsaState,
         pause_after: Option<u64>,
     ) -> TuningResult {
+        let stop = self.run_state(objective, &mut state, pause_after);
+        TuningResult {
+            final_theta: state.theta.clone(),
+            best_theta: state.best_theta.clone(),
+            best_f: state.best_f,
+            stop,
+            iterations: state.iter,
+            observations: objective.evals(),
+            history: state.history,
+        }
+    }
+
+    /// Run with pause support, returning the checkpointable state instead
+    /// of a final result (used by the pause/resume example). The returned
+    /// state is the loop's own — including `f0`, `prev_grad_norm` and
+    /// `calm_iters`, so a resumed run keeps its termination context (a
+    /// prior version hand-reassembled the state from the result and
+    /// silently dropped those fields, making calm stopping fire later
+    /// after a resume than in an uninterrupted run).
+    pub fn run_paused(
+        &self,
+        objective: &mut dyn Objective,
+        mut state: SpsaState,
+        iters: u64,
+    ) -> SpsaState {
+        self.run_state(objective, &mut state, Some(iters));
+        state
+    }
+
+    /// The iteration loop, advancing `state` in place — the single source
+    /// of truth for `run`/`run_from`/`run_paused`. Each iteration gathers
+    /// f(θ_n) plus every perturbation probe into ONE `eval_batch` call:
+    /// the observations are independent simulations, so a parallel
+    /// objective ([`super::objective::SimObjective`]) fans them across
+    /// worker threads. Perturbations are drawn *before* dispatch and the
+    /// batch contract guarantees sequential-identical values, so the
+    /// trajectory is bit-for-bit the same at any worker count.
+    pub fn run_state(
+        &self,
+        objective: &mut dyn Objective,
+        state: &mut SpsaState,
+        pause_after: Option<u64>,
+    ) -> StopReason {
         let n = objective.dim();
         assert_eq!(self.c.len(), n, "perturbation scale dimension mismatch");
         let cfg = &self.config;
         let start_iter = state.iter;
-        let mut stop = StopReason::MaxIters;
+        let rounds = cfg.grad_avg.max(1);
 
         while state.iter < cfg.max_iters {
             if let Some(p) = pause_after {
                 if state.iter - start_iter >= p {
-                    stop = StopReason::Paused;
-                    break;
+                    return StopReason::Paused;
                 }
             }
             // Deterministic per-iteration RNG ⇒ checkpoint/resume replays
             // the same perturbation sequence.
             let mut rng = Rng::seeded(cfg.seed ^ (state.iter.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
 
+            // Draw every round's perturbation, then batch θ_n plus all
+            // probe points into one objective call (2 obs/iter for the
+            // paper's estimator; grad_avg rounds ride the same batch).
+            let mut points: Vec<Vec<f64>> = Vec::with_capacity(1 + 2 * rounds as usize);
+            points.push(state.theta.clone());
+            let mut draws: Vec<(Vec<f64>, Option<Vec<f64>>)> = Vec::with_capacity(rounds as usize);
+            for _ in 0..rounds {
+                let signs: Vec<f64> = (0..n).map(|_| rng.rademacher()).collect();
+                let plus = |deltas: &[f64], sign: f64| -> Vec<f64> {
+                    state
+                        .theta
+                        .iter()
+                        .zip(deltas)
+                        .zip(&self.c)
+                        .map(|((t, d), c)| (t + sign * d * c).clamp(0.0, 1.0))
+                        .collect()
+                };
+                match cfg.variant {
+                    SpsaVariant::OneSided | SpsaVariant::OneMeasurement => {
+                        points.push(plus(&signs, 1.0));
+                        draws.push((signs, None));
+                    }
+                    SpsaVariant::TwoSided => {
+                        points.push(plus(&signs, 1.0));
+                        points.push(plus(&signs, -1.0));
+                        draws.push((signs, None));
+                    }
+                    SpsaVariant::Rdsa => {
+                        // gaussian direction instead of Bernoulli signs
+                        // (signs stay drawn so the RNG stream matches the
+                        // historical per-iteration sequence)
+                        let dirs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                        points.push(plus(&dirs, 1.0));
+                        draws.push((signs, Some(dirs)));
+                    }
+                }
+            }
+
+            let fs = objective.eval_batch(&points);
+            debug_assert_eq!(fs.len(), points.len());
+
             // f(θ_n)
-            let f_theta = objective.eval(&state.theta);
+            let f_theta = fs[0];
             let f0 = *state.f0.get_or_insert(f_theta.max(1e-9));
             // Adaptive normalization: gradients are scaled by the *current*
             // observation, so the relative sensitivity (and hence step
@@ -294,19 +377,12 @@ impl Spsa {
             // averaged gradient estimate (cfg.grad_avg independent Δs)
             let mut grad = vec![0.0; n];
             let mut f_pert_last = f_theta;
-            for _ in 0..cfg.grad_avg.max(1) {
-                let signs: Vec<f64> = (0..n).map(|_| rng.rademacher()).collect();
-                let pert: Vec<f64> = state
-                    .theta
-                    .iter()
-                    .zip(&signs)
-                    .zip(&self.c)
-                    .map(|((t, s), c)| (t + s * c).clamp(0.0, 1.0))
-                    .collect();
-
+            let mut idx = 1;
+            for (signs, dirs) in &draws {
                 match cfg.variant {
                     SpsaVariant::OneSided => {
-                        let f_pert = objective.eval(&pert);
+                        let f_pert = fs[idx];
+                        idx += 1;
                         f_pert_last = f_pert;
                         let df = (f_pert - f_theta) / f_norm;
                         for i in 0..n {
@@ -314,15 +390,8 @@ impl Spsa {
                         }
                     }
                     SpsaVariant::TwoSided => {
-                        let pert_minus: Vec<f64> = state
-                            .theta
-                            .iter()
-                            .zip(&signs)
-                            .zip(&self.c)
-                            .map(|((t, s), c)| (t - s * c).clamp(0.0, 1.0))
-                            .collect();
-                        let f_plus = objective.eval(&pert);
-                        let f_minus = objective.eval(&pert_minus);
+                        let (f_plus, f_minus) = (fs[idx], fs[idx + 1]);
+                        idx += 2;
                         f_pert_last = f_plus;
                         let df = (f_plus - f_minus) / (2.0 * f_norm);
                         for i in 0..n {
@@ -330,7 +399,8 @@ impl Spsa {
                         }
                     }
                     SpsaVariant::OneMeasurement => {
-                        let f_pert = objective.eval(&pert);
+                        let f_pert = fs[idx];
+                        idx += 1;
                         f_pert_last = f_pert;
                         let fv = f_pert / f0;
                         for i in 0..n {
@@ -338,16 +408,9 @@ impl Spsa {
                         }
                     }
                     SpsaVariant::Rdsa => {
-                        // gaussian direction instead of Bernoulli signs
-                        let dirs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-                        let pert_g: Vec<f64> = state
-                            .theta
-                            .iter()
-                            .zip(&dirs)
-                            .zip(&self.c)
-                            .map(|((t, d), c)| (t + d * c).clamp(0.0, 1.0))
-                            .collect();
-                        let f_pert = objective.eval(&pert_g);
+                        let dirs = dirs.as_ref().expect("RDSA round carries directions");
+                        let f_pert = fs[idx];
+                        idx += 1;
                         f_pert_last = f_pert;
                         let df = (f_pert - f_theta) / f_norm;
                         for i in 0..n {
@@ -356,7 +419,7 @@ impl Spsa {
                     }
                 }
             }
-            let avg = cfg.grad_avg.max(1) as f64;
+            let avg = rounds as f64;
             for g in grad.iter_mut() {
                 *g /= avg;
             }
@@ -389,42 +452,10 @@ impl Spsa {
             state.iter += 1;
 
             if state.calm_iters >= cfg.patience {
-                stop = StopReason::GradientCalm;
-                break;
+                return StopReason::GradientCalm;
             }
         }
-
-        TuningResult {
-            final_theta: state.theta.clone(),
-            best_theta: state.best_theta.clone(),
-            best_f: state.best_f,
-            stop,
-            iterations: state.iter,
-            observations: objective.evals(),
-            history: state.history,
-        }
-    }
-
-    /// Run with pause support, returning the checkpointable state instead
-    /// of a final result (used by the pause/resume example).
-    pub fn run_paused(
-        &self,
-        objective: &mut dyn Objective,
-        state: SpsaState,
-        iters: u64,
-    ) -> SpsaState {
-        let mut st = state;
-        let res = self.run_from(objective, st.clone(), Some(iters));
-        // rebuild state from the result (run_from consumed a clone)
-        st.theta = res.final_theta;
-        st.iter = res.iterations;
-        st.best_theta = res.best_theta;
-        st.best_f = res.best_f;
-        st.history = res.history;
-        if st.f0.is_none() {
-            st.f0 = st.history.first().map(|r| r.f_theta);
-        }
-        st
+        StopReason::MaxIters
     }
 }
 
@@ -536,6 +567,93 @@ mod tests {
         let resumed = spsa.run_from(&mut obj2, st, None);
         for (a, b) in full.final_theta.iter().zip(&resumed.final_theta) {
             assert!((a - b).abs() < 1e-9, "{:?} vs {:?}", full.final_theta, resumed.final_theta);
+        }
+    }
+
+    #[test]
+    fn pause_resume_preserves_termination_context() {
+        // Calm stopping ENABLED: pausing and resuming (through a JSON
+        // checkpoint, like the real flow) must stop at the same iteration
+        // with the same θ as an uninterrupted run. The old run_paused
+        // dropped prev_grad_norm/calm_iters, stopping late after resume.
+        let spsa = Spsa::new(
+            SpsaConfig {
+                max_iters: 500,
+                grad_tol: 0.5,
+                patience: 3,
+                ..quad_spsa(10).config
+            },
+            vec![0.05; 4],
+        );
+        let mut obj1 = QuadraticObjective::new(vec![0.5; 4], 0.0, 2);
+        let full = spsa.run(&mut obj1, vec![0.5; 4]);
+        assert_eq!(full.stop, StopReason::GradientCalm);
+        assert!(full.iterations > 2, "need a stop later than the pause point");
+
+        let mut obj2 = QuadraticObjective::new(vec![0.5; 4], 0.0, 2);
+        let st = spsa.run_paused(&mut obj2, SpsaState::fresh(vec![0.5; 4]), 2);
+        assert_eq!(st.iter, 2);
+        assert!(st.prev_grad_norm.is_some(), "checkpoint lost prev_grad_norm");
+        let st = SpsaState::from_json(&st.to_json()).unwrap();
+        let resumed = spsa.run_from(&mut obj2, st, None);
+        assert_eq!(resumed.stop, StopReason::GradientCalm);
+        assert_eq!(
+            resumed.iterations, full.iterations,
+            "resume lost its calm-stopping context"
+        );
+        assert_eq!(resumed.final_theta, full.final_theta);
+    }
+
+    #[test]
+    fn run_paused_state_matches_midpoint_of_straight_run() {
+        // the paused state is the loop's own state: f0 and the
+        // termination fields survive, not just θ/iter/history
+        let spsa = quad_spsa(12);
+        let mut obj = QuadraticObjective::new(vec![0.4; 4], 0.0, 3);
+        let st = spsa.run_paused(&mut obj, SpsaState::fresh(vec![0.2; 4]), 5);
+        assert_eq!(st.iter, 5);
+        assert_eq!(st.history.len(), 5);
+        assert!(st.f0.is_some());
+        assert!(st.prev_grad_norm.is_some());
+        assert_eq!(
+            st.prev_grad_norm.unwrap(),
+            st.history.last().unwrap().grad_norm
+        );
+    }
+
+    #[test]
+    fn batched_objective_reproduces_sequential_trajectory() {
+        // SPSA through a parallel SimObjective (per-iteration probes
+        // fanned across threads) must trace exactly the trajectory of the
+        // 1-worker objective on a noise-free system.
+        use crate::cluster::ClusterSpec;
+        use crate::tuner::objective::SimObjective;
+        use crate::workloads::Benchmark;
+
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = crate::util::rng::Rng::seeded(4);
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: 6, grad_avg: 4, seed: 3, ..Default::default() },
+            &space,
+        );
+
+        let run_with = |workers: usize| {
+            let mut obj =
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), 9)
+                    .noise_free()
+                    .with_workers(workers);
+            spsa.run(&mut obj, space.default_theta())
+        };
+        let seq = run_with(1);
+        let par = run_with(4);
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.final_theta, par.final_theta);
+        for (a, b) in seq.history.iter().zip(&par.history) {
+            assert_eq!(a.f_theta, b.f_theta);
+            assert_eq!(a.grad_norm, b.grad_norm);
+            assert_eq!(a.theta, b.theta);
         }
     }
 

@@ -97,11 +97,13 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile with linear interpolation; `q` in [0, 100].
+/// Percentile with linear interpolation; `q` is clamped into [0, 100]
+/// (out-of-range and NaN `q` used to index out of bounds).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
+    let q = if q.is_nan() { 50.0 } else { q.clamp(0.0, 100.0) };
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = q / 100.0 * (v.len() - 1) as f64;
@@ -174,6 +176,19 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_q() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        // q > 100 used to panic with an index out of bounds
+        assert_eq!(percentile(&xs, 101.0), 4.0);
+        assert_eq!(percentile(&xs, 1e9), 4.0);
+        assert_eq!(percentile(&xs, -5.0), 1.0);
+        assert_eq!(percentile(&xs, f64::NEG_INFINITY), 1.0);
+        assert_eq!(percentile(&xs, f64::INFINITY), 4.0);
+        assert!(percentile(&xs, f64::NAN).is_finite());
+        assert_eq!(percentile(&[7.5], 250.0), 7.5);
     }
 
     #[test]

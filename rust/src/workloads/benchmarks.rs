@@ -11,8 +11,6 @@
 //! * **Word Co-occurrence** — window-2 co-occurrence matrix counts; the
 //!   largest map output of the set.
 
-use regex::bytes::Regex;
-
 use crate::engine::{
     Emit, IdentityReducer, JobSpec, Mapper, Rec, Reducer, Split, SumReducer,
 };
@@ -75,7 +73,7 @@ impl Benchmark {
             Benchmark::Terasort => 30 * GB,
             Benchmark::Grep => 22 * GB,
             Benchmark::Bigram => 200 * MB,
-            Benchmark::InvertedIndex => 1 * GB,
+            Benchmark::InvertedIndex => GB,
             Benchmark::WordCooccurrence => 85 * GB,
         }
     }
@@ -212,27 +210,75 @@ impl Mapper for TeraMapper {
     }
 }
 
-/// Grep: count regex matches. The default pattern matches words with a
+/// Word-level pattern for the Grep benchmark: matches maximal `\w+` runs
+/// that contain any of a set of literal fragments — the offline stand-in
+/// for `regex::bytes::Regex` (DESIGN.md §7). Covers the two shapes the
+/// project uses: the default `\b\w*(aa|ee|..)\w*\b` alternation form and a
+/// plain literal substring.
+pub struct WordPattern {
+    fragments: Vec<Vec<u8>>,
+}
+
+impl WordPattern {
+    /// Parse a pattern. Accepted grammar: `\b\w*(F1|F2|..)\w*\b` (a word
+    /// containing any literal fragment `Fi`) or a bare literal (a word
+    /// containing that substring). Anything else is rejected.
+    pub fn parse(pattern: &str) -> crate::util::error::Result<WordPattern> {
+        let inner = pattern
+            .strip_prefix(r"\b\w*(")
+            .and_then(|r| r.strip_suffix(r")\w*\b"));
+        let fragments: Vec<&str> = match inner {
+            Some(alts) => alts.split('|').collect(),
+            None => vec![pattern],
+        };
+        for f in &fragments {
+            if f.is_empty() || !f.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_') {
+                return Err(crate::util::error::Error::msg(format!(
+                    "unsupported grep pattern {pattern:?}: fragments must be \
+                     non-empty word literals (offline matcher, no full regex)"
+                )));
+            }
+        }
+        Ok(WordPattern {
+            fragments: fragments.into_iter().map(|f| f.as_bytes().to_vec()).collect(),
+        })
+    }
+
+    /// Does a word contain any fragment?
+    fn matches(&self, word: &[u8]) -> bool {
+        self.fragments
+            .iter()
+            .any(|f| word.windows(f.len()).any(|w| w == f.as_slice()))
+    }
+}
+
+/// Grep: count pattern matches. The default pattern matches words with a
 /// doubled vowel — selective but not empty on the Zipf corpus (the paper
 /// notes Grep "produces very little map output").
 pub struct GrepMapper {
-    re: Regex,
+    pattern: WordPattern,
 }
 
 impl GrepMapper {
     pub fn default_pattern() -> Self {
-        GrepMapper { re: Regex::new(r"\b\w*(aa|ee|ii|oo|uu)\w*\b").unwrap() }
+        GrepMapper { pattern: WordPattern::parse(r"\b\w*(aa|ee|ii|oo|uu)\w*\b").unwrap() }
     }
 
-    pub fn with_pattern(pattern: &str) -> anyhow::Result<Self> {
-        Ok(GrepMapper { re: Regex::new(pattern)? })
+    pub fn with_pattern(pattern: &str) -> crate::util::error::Result<Self> {
+        Ok(GrepMapper { pattern: WordPattern::parse(pattern)? })
     }
 }
 
 impl Mapper for GrepMapper {
     fn map(&self, _k: u64, value: &[u8], emit: Emit) {
-        for m in self.re.find_iter(value) {
-            emit(Rec::new(m.as_bytes().to_vec(), b"1".to_vec()));
+        // \w+ word runs, like the regex's \b\w*..\w*\b match extent
+        for word in value
+            .split(|&b| !(b.is_ascii_alphanumeric() || b == b'_'))
+            .filter(|w| !w.is_empty())
+        {
+            if self.pattern.matches(word) {
+                emit(Rec::new(word.to_vec(), b"1".to_vec()));
+            }
         }
     }
 }
@@ -327,6 +373,19 @@ mod tests {
 
     fn text_split(s: &str) -> Vec<Split> {
         vec![Split::Text(s.as_bytes().to_vec())]
+    }
+
+    #[test]
+    fn word_pattern_parses_alternation_and_literal() {
+        let p = WordPattern::parse(r"\b\w*(aa|bb)\w*\b").unwrap();
+        assert!(p.matches(b"baaz"));
+        assert!(p.matches(b"abba"));
+        assert!(!p.matches(b"abab"));
+        let lit = WordPattern::parse("oo").unwrap();
+        assert!(lit.matches(b"look"));
+        assert!(!lit.matches(b"lok"));
+        assert!(WordPattern::parse("").is_err());
+        assert!(WordPattern::parse(r"a+b*").is_err());
     }
 
     #[test]
