@@ -30,7 +30,7 @@ fn main() {
         fmt_bytes(128 << 20),
     );
 
-    let opts = SimOptions { seed: 7, noise: true };
+    let opts = SimOptions { seed: 7, noise: true, ..Default::default() };
 
     println!("--- default configuration ---");
     let r = simulate(&cluster, &space.default_config(), &w, &opts);

@@ -43,7 +43,7 @@ fn main() {
         &cluster,
         &space.default_config(),
         &w,
-        &SimOptions { seed: 1234, noise: true },
+        &SimOptions { seed: 1234, noise: true, ..Default::default() },
     );
     println!("(production job ran for {})", fmt_secs(prod.exec_time_s));
 

@@ -46,9 +46,11 @@ fn main() {
         res.iterations, res.observations, res.stop
     );
 
-    // 3. evaluate tuned vs default
-    let (f_default, _) = evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 7);
-    let (f_tuned, sd) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, 7);
+    // 3. evaluate tuned vs default (on the benign, failure-free cluster)
+    let benign = hadoop_spsa::sim::ScenarioSpec::default();
+    let (f_default, _) =
+        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 7, &benign);
+    let (f_tuned, sd) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, 7, &benign);
     println!(
         "\ndefault: {}   tuned: {} (±{:.0}s)   decrease: {:.0}%\n",
         fmt_secs(f_default),

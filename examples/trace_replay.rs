@@ -76,7 +76,7 @@ fn main() {
                 &cluster,
                 &cfg,
                 &w,
-                &SimOptions { seed: 0xBEEF ^ job_id, noise: true },
+                &SimOptions { seed: 0xBEEF ^ job_id, noise: true, ..Default::default() },
             );
             total += r.exec_time_s;
             *by_family.entry(bench).or_default() += r.exec_time_s;

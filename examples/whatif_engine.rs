@@ -50,7 +50,7 @@ fn main() -> Result<()> {
 
     // --- 3. Starfish CBO with the artifact as what-if engine ----------------
     let res = rrs(&mut artifact, &RrsConfig::default());
-    let sim_opts = SimOptions { seed: 3, noise: false };
+    let sim_opts = SimOptions { seed: 3, noise: false, ..Default::default() };
     let f_default =
         simulate(&cluster_spec, &space.default_config(), &w, &sim_opts).exec_time_s;
     let f_rrs =

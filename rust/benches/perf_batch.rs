@@ -58,7 +58,7 @@ fn main() {
         (0..n)
             .map(|i| SimJob {
                 config: space.default_config(),
-                opts: SimOptions { seed: i + 1, noise: true },
+                opts: SimOptions { seed: i + 1, noise: true, ..Default::default() },
             })
             .collect()
     };

@@ -18,7 +18,12 @@ fn main() {
         let mut seed = 0u64;
         quick(&format!("simulate/{}", bench.label()), || {
             seed += 1;
-            black_box(simulate(&cluster, &default, &w, &SimOptions { seed, noise: true }));
+            black_box(simulate(
+                &cluster,
+                &default,
+                &w,
+                &SimOptions { seed, noise: true, ..Default::default() },
+            ));
         });
     }
     // tuned configuration (more reducers = more events)
@@ -29,6 +34,11 @@ fn main() {
     let mut seed = 0u64;
     quick("simulate/Terasort-95reducers", || {
         seed += 1;
-        black_box(simulate(&cluster, &tuned, &w, &SimOptions { seed, noise: true }));
+        black_box(simulate(
+            &cluster,
+            &tuned,
+            &w,
+            &SimOptions { seed, noise: true, ..Default::default() },
+        ));
     });
 }

@@ -81,7 +81,7 @@ impl Ppabs {
                 cluster_spec,
                 &space.default_config(),
                 w,
-                &SimOptions { seed: seed ^ (i as u64 + 1), noise: true },
+                &SimOptions { seed: seed ^ (i as u64 + 1), noise: true, ..Default::default() },
             );
             profiling += run.exec_time_s;
         }
@@ -190,7 +190,7 @@ mod tests {
         let mut rng = Rng::seeded(9);
         let w = Benchmark::Terasort.profile_scaled(100_000, 8 << 30, &mut rng);
         let theta = ppabs.configure(&w);
-        let opts = SimOptions { seed: 3, noise: false };
+        let opts = SimOptions { seed: 3, noise: false, ..Default::default() };
         let f_def = simulate(&cluster, &space.default_config(), &w, &opts).exec_time_s;
         let f_ppabs = simulate(&cluster, &space.materialize(&theta), &w, &opts).exec_time_s;
         assert!(f_ppabs < f_def, "ppabs {f_ppabs} default {f_def}");

@@ -49,7 +49,7 @@ pub fn starfish_tune(
         cluster,
         &default_cfg,
         workload,
-        &SimOptions { seed, noise: true },
+        &SimOptions { seed, noise: true, ..Default::default() },
     );
 
     // 2+3. what-if + CBO
@@ -89,7 +89,7 @@ mod tests {
     fn starfish_beats_default_on_live_system() {
         let (space, cluster, w, mut eval) = setup();
         let res = starfish_tune(&space, &cluster, &w, &mut eval, &RrsConfig::default(), 3);
-        let opts = SimOptions { seed: 77, noise: false };
+        let opts = SimOptions { seed: 77, noise: false, ..Default::default() };
         let f_default =
             simulate(&cluster, &space.default_config(), &w, &opts).exec_time_s;
         let f_starfish =

@@ -65,27 +65,29 @@ impl ResourceTracker {
     }
 
     /// Effective disk bandwidth for one task on `node`, *including* itself
-    /// as a user (call after `acquire`).
+    /// as a user (call after `acquire`). Reads the node's own hardware spec,
+    /// so heterogeneous fleets price IO per machine.
     pub fn disk_bw(&self, node: u32) -> f64 {
         let users = self.disk_users[node as usize].max(1) as f64;
-        self.spec.node.disk_bw / users
+        self.spec.node_spec(node).disk_bw / users
     }
 
     /// Effective NIC bandwidth for one task on `node`.
     pub fn net_bw(&self, node: u32) -> f64 {
         let users = self.net_users[node as usize].max(1) as f64;
-        self.spec.node.net_bw / users
+        self.spec.node_spec(node).net_bw / users
     }
 
     /// Effective CPU rate for one task on `node` — cores are dedicated up to
     /// the core count, then shared.
     pub fn cpu_rate(&self, node: u32) -> f64 {
         let users = self.cpu_users[node as usize].max(1) as f64;
-        let cores = self.spec.node.cores as f64;
+        let spec = self.spec.node_spec(node);
+        let cores = spec.cores as f64;
         if users <= cores {
-            self.spec.node.cpu_ops_per_sec
+            spec.cpu_ops_per_sec
         } else {
-            self.spec.node.cpu_ops_per_sec * cores / users
+            spec.cpu_ops_per_sec * cores / users
         }
     }
 }
@@ -152,5 +154,22 @@ mod tests {
     fn transfer_time_math() {
         assert!((transfer_time(100, 50.0) - 2.0).abs() < 1e-12);
         assert!(transfer_time(1, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn heterogeneous_node_rates_follow_overrides() {
+        use crate::cluster::NodeSpec;
+        let slow = NodeSpec {
+            disk_bw: 30e6,
+            net_bw: 20e6,
+            cpu_ops_per_sec: 1e8,
+            ..NodeSpec::default()
+        };
+        let spec = ClusterSpec::tiny().with_node_override(1, slow);
+        let t = ResourceTracker::new(&spec);
+        assert!(t.disk_bw(1) < t.disk_bw(0));
+        assert!(t.net_bw(1) < t.net_bw(0));
+        assert!(t.cpu_rate(1) < t.cpu_rate(0));
+        assert_eq!(t.disk_bw(1), 30e6);
     }
 }

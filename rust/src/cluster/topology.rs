@@ -44,7 +44,11 @@ pub struct ClusterSpec {
     pub map_slots_per_node: u32,
     /// Reduce slots per worker node (paper: 2).
     pub reduce_slots_per_node: u32,
+    /// Hardware of a stock worker.
     pub node: NodeSpec,
+    /// Per-worker hardware overrides — heterogeneous fleets mixing machine
+    /// generations. `(worker index, spec)`; workers not listed run `node`.
+    pub overrides: Vec<(u32, NodeSpec)>,
 }
 
 impl ClusterSpec {
@@ -55,6 +59,7 @@ impl ClusterSpec {
             map_slots_per_node: 3,
             reduce_slots_per_node: 2,
             node: NodeSpec::default(),
+            overrides: Vec::new(),
         }
     }
 
@@ -65,7 +70,25 @@ impl ClusterSpec {
             map_slots_per_node: 2,
             reduce_slots_per_node: 1,
             node: NodeSpec::default(),
+            overrides: Vec::new(),
         }
+    }
+
+    /// Builder: give one worker different hardware (later wins on repeats).
+    pub fn with_node_override(mut self, worker: u32, spec: NodeSpec) -> Self {
+        self.overrides.push((worker, spec));
+        self
+    }
+
+    /// The hardware of one worker: its override if present, else the stock
+    /// `node` spec.
+    pub fn node_spec(&self, worker: u32) -> &NodeSpec {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|(w, _)| *w == worker)
+            .map(|(_, s)| s)
+            .unwrap_or(&self.node)
     }
 
     /// Worker (DataNode) count: one node is the dedicated master.
@@ -92,7 +115,7 @@ impl ClusterSpec {
     /// Cross-rack aggregate network bisection (bytes/s). Single-switch
     /// fabric: bounded by the sum of NIC bandwidths on either side.
     pub fn bisection_bw(&self) -> f64 {
-        self.workers() as f64 * self.node.net_bw / 2.0
+        (0..self.workers()).map(|w| self.node_spec(w).net_bw).sum::<f64>() / 2.0
     }
 }
 
@@ -124,5 +147,25 @@ mod tests {
         assert!(c.total_map_slots() > 0);
         assert!(c.total_reduce_slots() > 0);
         assert!(c.bisection_bw() > 0.0);
+    }
+
+    #[test]
+    fn node_overrides_make_heterogeneous_fleet() {
+        let slow = NodeSpec { cpu_ops_per_sec: 1.0e8, disk_bw: 60.0e6, ..NodeSpec::default() };
+        let c = ClusterSpec::paper_cluster().with_node_override(3, slow.clone());
+        assert_eq!(c.node_spec(3).cpu_ops_per_sec, 1.0e8);
+        assert_eq!(c.node_spec(2).cpu_ops_per_sec, NodeSpec::default().cpu_ops_per_sec);
+        // a second override of the same worker wins
+        let faster = NodeSpec { cpu_ops_per_sec: 4.0e8, ..NodeSpec::default() };
+        let c = c.with_node_override(3, faster);
+        assert_eq!(c.node_spec(3).cpu_ops_per_sec, 4.0e8);
+    }
+
+    #[test]
+    fn bisection_bw_counts_per_node_nics() {
+        let half_nic = NodeSpec { net_bw: NodeSpec::default().net_bw / 2.0, ..NodeSpec::default() };
+        let homo = ClusterSpec::paper_cluster();
+        let hetero = ClusterSpec::paper_cluster().with_node_override(0, half_nic);
+        assert!(hetero.bisection_bw() < homo.bisection_bw());
     }
 }

@@ -9,7 +9,7 @@ use crate::baselines::{
 };
 use crate::cluster::ClusterSpec;
 use crate::config::{HadoopVersion, ParameterSpace};
-use crate::sim::{simulate_batch_auto, SimJob, SimOptions};
+use crate::sim::{simulate_batch_auto, ScenarioSpec, SimJob, SimOptions};
 use crate::tuner::{IterRecord, SimObjective, Spsa, SpsaConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, stddev};
@@ -75,11 +75,28 @@ pub struct TrialSpec {
     /// SPSA iteration budget (other live-system tuners get 2× this many
     /// observations so budgets are comparable).
     pub iters: u64,
+    /// Execution-substrate regime: live-system tuners observe the system
+    /// under it, and the tuned/default verification runs execute under it
+    /// too. Benign by default.
+    pub scenario: ScenarioSpec,
 }
 
 impl TrialSpec {
     pub fn new(benchmark: Benchmark, version: HadoopVersion, algo: Algo, seed: u64) -> Self {
-        TrialSpec { benchmark, version, algo, seed, iters: 30 }
+        TrialSpec {
+            benchmark,
+            version,
+            algo,
+            seed,
+            iters: 30,
+            scenario: ScenarioSpec::default(),
+        }
+    }
+
+    /// Builder: run this trial under a fault/heterogeneity scenario.
+    pub fn with_scenario(mut self, scenario: ScenarioSpec) -> Self {
+        self.scenario = scenario;
+        self
     }
 }
 
@@ -136,10 +153,12 @@ pub fn profile_for(benchmark: Benchmark, seed: u64) -> WorkloadProfile {
     p
 }
 
-/// Evaluate a θ on the simulator with `n` noisy runs; returns (mean, std).
-/// The runs are independent verification jobs, so they fan across the
-/// worker pool (`HSPSA_WORKERS` knob); per-run seeds are fixed up front,
-/// so the statistics are identical at any worker count.
+/// Evaluate a θ on the simulator with `n` noisy runs under `scenario`;
+/// returns (mean, std). The runs are independent verification jobs, so
+/// they fan across the worker pool (`HSPSA_WORKERS` knob); per-run seeds
+/// are fixed up front, so the statistics are identical at any worker
+/// count. Failed runs (max.attempts exhausted) carry the objective-layer
+/// penalty so robustness tables surface them.
 pub fn evaluate_theta(
     space: &ParameterSpace,
     cluster: &ClusterSpec,
@@ -147,17 +166,18 @@ pub fn evaluate_theta(
     theta: &[f64],
     n: u64,
     seed: u64,
+    scenario: &ScenarioSpec,
 ) -> (f64, f64) {
     let cfg = space.materialize(theta);
     let jobs: Vec<SimJob> = (0..n)
         .map(|i| SimJob {
             config: cfg.clone(),
-            opts: SimOptions { seed: seed ^ (i + 1), noise: true },
+            opts: SimOptions { seed: seed ^ (i + 1), noise: true, scenario: scenario.clone() },
         })
         .collect();
     let runs: Vec<f64> = simulate_batch_auto(cluster, jobs, w)
         .iter()
-        .map(|r| r.exec_time_s)
+        .map(|r| crate::tuner::Metric::ExecTime.score(r))
         .collect();
     (mean(&runs), stddev(&runs))
 }
@@ -180,7 +200,8 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
         Algo::Default => space.default_theta(),
         Algo::Spsa => {
             let mut obj =
-                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed);
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
+                    .with_scenario(spec.scenario.clone());
             let spsa = Spsa::for_space(
                 SpsaConfig { max_iters: spec.iters, seed: spec.seed, ..Default::default() },
                 &space,
@@ -243,7 +264,8 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
         }
         Algo::HillClimb => {
             let mut obj =
-                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed);
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
+                    .with_scenario(spec.scenario.clone());
             let res = hill_climb(
                 &mut obj,
                 space.default_theta(),
@@ -254,7 +276,8 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
         }
         Algo::Random => {
             let mut obj =
-                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed);
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
+                    .with_scenario(spec.scenario.clone());
             let res =
                 random_search(&mut obj, space.default_theta(), spec.iters * 2, spec.seed);
             observations = res.observations;
@@ -264,10 +287,24 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
     let tuning_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     const EVAL_SEED: u64 = 0xE7A1;
-    let (tuned_mean_s, tuned_std_s) =
-        evaluate_theta(&space, &cluster, &w, &tuned_theta, 5, spec.seed ^ EVAL_SEED);
-    let (default_mean_s, _) =
-        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, spec.seed ^ EVAL_SEED);
+    let (tuned_mean_s, tuned_std_s) = evaluate_theta(
+        &space,
+        &cluster,
+        &w,
+        &tuned_theta,
+        5,
+        spec.seed ^ EVAL_SEED,
+        &spec.scenario,
+    );
+    let (default_mean_s, _) = evaluate_theta(
+        &space,
+        &cluster,
+        &w,
+        &space.default_theta(),
+        5,
+        spec.seed ^ EVAL_SEED,
+        &spec.scenario,
+    );
 
     TrialOutcome {
         spec: spec.clone(),
@@ -329,6 +366,26 @@ mod tests {
         // both live-system tuners improve on the default for bigram
         assert!(out[0].pct_decrease() > 20.0, "spsa {:.1}%", out[0].pct_decrease());
         assert!(out[1].pct_decrease() > 0.0, "random {:.1}%", out[1].pct_decrease());
+    }
+
+    #[test]
+    fn scenario_trial_tunes_under_faults() {
+        // SPSA observing a faulty heterogeneous cluster must still beat the
+        // default configuration evaluated under the same scenario.
+        let scenario = ScenarioSpec::default()
+            .with_failures(0.05)
+            .with_max_attempts(10)
+            .with_slow_node(2, 0.6)
+            .with_slow_node(5, 0.7)
+            .with_speculation(true);
+        let spec = TrialSpec::new(Benchmark::Terasort, HadoopVersion::V1, Algo::Spsa, 5)
+            .with_scenario(scenario);
+        let out = run_trial(&spec);
+        assert!(
+            out.pct_decrease() > 20.0,
+            "under faults only {:.1}% decrease",
+            out.pct_decrease()
+        );
     }
 
     #[test]

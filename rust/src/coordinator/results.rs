@@ -56,6 +56,7 @@ pub fn outcome_json(o: &TrialOutcome) -> Json {
         .set("version", Json::Str(o.spec.version.label().into()))
         .set("algo", Json::Str(o.spec.algo.label().into()))
         .set("seed", Json::Num(o.spec.seed as f64))
+        .set("task_failure_p", Json::Num(o.spec.scenario.task_failure_p))
         .set("tuned_mean_s", Json::Num(o.tuned_mean_s))
         .set("tuned_std_s", Json::Num(o.tuned_std_s))
         .set("default_mean_s", Json::Num(o.default_mean_s))

@@ -36,7 +36,15 @@ fn run_cell(cfg: SpsaConfig, seeds: &[u64]) -> (f64, f64) {
         let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
         let spsa = Spsa::for_space(SpsaConfig { seed, ..cfg.clone() }, &space);
         let res = spsa.run(&mut obj, space.default_theta());
-        let (t, _) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, seed ^ 0xAB);
+        let (t, _) = evaluate_theta(
+            &space,
+            &cluster,
+            &w,
+            &res.best_theta,
+            5,
+            seed ^ 0xAB,
+            &crate::sim::ScenarioSpec::default(),
+        );
         times.push(t);
         obs.push(res.observations as f64);
     }

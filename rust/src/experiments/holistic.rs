@@ -24,7 +24,15 @@ fn tune(space: &ParameterSpace, bench: Benchmark, iters: u64, seed: u64) -> f64 
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
     let spsa = Spsa::for_space(SpsaConfig { max_iters: iters, seed, ..Default::default() }, space);
     let res = spsa.run(&mut obj, space.default_theta());
-    let (t, _) = evaluate_theta(space, &cluster, &w, &res.best_theta, 5, seed ^ 0xC0);
+    let (t, _) = evaluate_theta(
+        space,
+        &cluster,
+        &w,
+        &res.best_theta,
+        5,
+        seed ^ 0xC0,
+        &crate::sim::ScenarioSpec::default(),
+    );
     t
 }
 
@@ -49,8 +57,15 @@ pub fn run(opts: &ExpOptions) -> String {
         let cluster = ClusterSpec::paper_cluster();
         let mut rng = Rng::seeded(1000);
         let w = bench.paper_profile(&mut rng);
-        let (f_default, _) =
-            evaluate_theta(&base_space, &cluster, &w, &base_space.default_theta(), 5, 9);
+        let (f_default, _) = evaluate_theta(
+            &base_space,
+            &cluster,
+            &w,
+            &base_space.default_theta(),
+            5,
+            9,
+            &crate::sim::ScenarioSpec::default(),
+        );
 
         let f_base = mean(
             &seeds.iter().map(|&s| tune(&base_space, bench, iters, s)).collect::<Vec<_>>(),

@@ -1,0 +1,156 @@
+//! Robustness experiment: tuner quality when the execution substrate
+//! misbehaves — the scenario-engine counterpart of Fig. 8/Table 2.
+//!
+//! Every tuner runs at failure tiers 0 / 5 / 15 % (each non-zero tier adds
+//! two slow nodes and speculative execution — the heterogeneous fleet of
+//! the acceptance scenario). Live-system tuners (SPSA, random search)
+//! observe the faulty system directly; model-based tuners (Starfish, PPABS)
+//! profile as usual and have their configurations *evaluated* under the
+//! faults. The paper's §4.2 argument predicts SPSA degrades gracefully: the
+//! extra noise from re-execution is exactly what the SPSA iterates already
+//! filter.
+
+use crate::config::HadoopVersion;
+use crate::coordinator::{run_campaign, Algo, TrialOutcome, TrialSpec};
+use crate::sim::ScenarioSpec;
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+/// The failure tiers of the full robustness table.
+pub const FAILURE_RATES: [f64; 3] = [0.0, 0.05, 0.15];
+
+/// The scenario of one tier: task failures at `rate`, two slow nodes
+/// (workers 2 @ 0.6× and 5 @ 0.7×) and speculative execution on. Rate 0 is
+/// the benign cluster every other experiment uses.
+pub fn tier_scenario(rate: f64) -> ScenarioSpec {
+    if rate <= 0.0 {
+        return ScenarioSpec::default();
+    }
+    ScenarioSpec::default()
+        .with_failures(rate)
+        .with_max_attempts(8)
+        .with_slow_node(2, 0.6)
+        .with_slow_node(5, 0.7)
+        .with_speculation(true)
+}
+
+fn find<'a>(
+    outcomes: &'a [TrialOutcome],
+    bench: Benchmark,
+    algo: Algo,
+    rate: f64,
+) -> Option<&'a TrialOutcome> {
+    outcomes.iter().find(|o| {
+        o.spec.benchmark == bench
+            && o.spec.algo == algo
+            && (o.spec.scenario.task_failure_p - rate).abs() < 1e-9
+    })
+}
+
+pub fn run(opts: &ExpOptions) -> String {
+    let algos: Vec<Algo> = if opts.quick {
+        vec![Algo::Spsa, Algo::Random]
+    } else {
+        vec![Algo::Spsa, Algo::Random, Algo::Starfish, Algo::Ppabs]
+    };
+    let rates: Vec<f64> = if opts.quick { vec![0.0, 0.05] } else { FAILURE_RATES.to_vec() };
+    let seed = opts.seeds()[0];
+
+    let mut specs = Vec::new();
+    for &rate in &rates {
+        for &algo in &algos {
+            for bench in Benchmark::all() {
+                // PPABS tunes the v2 space (as in Fig. 9 / Table 2).
+                let version =
+                    if algo == Algo::Ppabs { HadoopVersion::V2 } else { HadoopVersion::V1 };
+                let mut s = TrialSpec::new(bench, version, algo, seed)
+                    .with_scenario(tier_scenario(rate));
+                s.iters = opts.iters();
+                specs.push(s);
+            }
+        }
+    }
+    let outcomes = run_campaign(specs);
+
+    // Table-1-style matrix: % decrease vs the (same-scenario) default,
+    // one column per tuner × failure tier.
+    let mut header = vec!["Benchmark".to_string()];
+    for &rate in &rates {
+        for a in &algos {
+            header.push(format!("{} @{:.0}%", a.label(), rate * 100.0));
+        }
+    }
+    let mut table =
+        Table::new("Robustness — % decrease vs default under fault injection").header(header);
+    for bench in Benchmark::all() {
+        let mut row = vec![bench.label().to_string()];
+        for &rate in &rates {
+            for &algo in &algos {
+                row.push(match find(&outcomes, bench, algo, rate) {
+                    Some(o) => format!("{:.0}%", o.pct_decrease()),
+                    None => "-".to_string(),
+                });
+            }
+        }
+        table.row(row);
+    }
+
+    // Convergence-under-faults summary (the acceptance criterion): SPSA's
+    // tuned objective at the 5 % tier vs its failure-free tuned value.
+    let mut report = String::new();
+    let mut within = 0;
+    let mut judged = 0;
+    report.push_str("SPSA tuned objective: 5%-failure tier vs failure-free\n");
+    for bench in Benchmark::all() {
+        let (Some(faulty), Some(clean)) = (
+            find(&outcomes, bench, Algo::Spsa, 0.05),
+            find(&outcomes, bench, Algo::Spsa, 0.0),
+        ) else {
+            continue;
+        };
+        let ratio = faulty.tuned_mean_s / clean.tuned_mean_s;
+        judged += 1;
+        if ratio <= 1.10 {
+            within += 1;
+        }
+        report.push_str(&format!(
+            "  {:<20} {:>7.0}s vs {:>7.0}s  ratio {:.2}{}\n",
+            bench.label(),
+            faulty.tuned_mean_s,
+            clean.tuned_mean_s,
+            ratio,
+            if ratio <= 1.10 { "  (within 10%)" } else { "" },
+        ));
+    }
+    report.push_str(&format!(
+        "{within}/{judged} benchmarks within 10% of the failure-free tuned value\n\n"
+    ));
+    report.push_str(&table.to_ascii());
+    opts.persist("robustness", &table);
+    opts.persist_text("robustness_convergence", &report);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_scenarios_shape() {
+        assert!(tier_scenario(0.0).is_benign());
+        let t = tier_scenario(0.05);
+        assert_eq!(t.task_failure_p, 0.05);
+        assert_eq!(t.slow_nodes.len(), 2);
+        assert!(t.speculative_maps && t.speculative_reduces);
+    }
+
+    #[test]
+    fn robustness_quick_report_shape() {
+        let report = run(&ExpOptions::quick());
+        assert!(report.contains("SPSA"), "missing SPSA column");
+        assert!(report.contains("@5%"), "missing 5% failure tier");
+        assert!(report.contains("ratio"), "missing convergence summary");
+    }
+}

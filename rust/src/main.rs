@@ -2,9 +2,11 @@
 //!
 //! Subcommands:
 //!   run         simulate one job and print the trace
+//!   scenario    simulate a job under fault injection / heterogeneity and
+//!               compare against the benign cluster
 //!   tune        run a tuning algorithm on a benchmark
 //!   experiment  regenerate a paper table/figure (table1 | fig6 | fig7 |
-//!               fig8 | fig9 | table2 | headline | all)
+//!               fig8 | fig9 | table2 | robustness | headline | all)
 //!   whatif      evaluate a configuration on the analytic model /
 //!               AOT artifact and compare with the simulator
 //!   list        show benchmarks, parameters and algorithms
@@ -14,7 +16,7 @@ use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
 use hadoop_spsa::coordinator::{profile_for, run_trial, Algo, ResultsDir, TrialSpec};
 use hadoop_spsa::experiments::{self, ExpOptions};
 use hadoop_spsa::runtime::{ArtifactWhatIf, Runtime};
-use hadoop_spsa::sim::{simulate, SimOptions};
+use hadoop_spsa::sim::{simulate, ScenarioSpec, SimOptions};
 use hadoop_spsa::util::cli::Args;
 use hadoop_spsa::util::table::Table;
 use hadoop_spsa::util::units::fmt_secs;
@@ -26,6 +28,7 @@ fn main() {
     let cmd = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
     let rc = match cmd {
         "run" => cmd_run(),
+        "scenario" => cmd_scenario(),
         "tune" => cmd_tune(),
         "experiment" => cmd_experiment(),
         "whatif" => cmd_whatif(),
@@ -33,7 +36,7 @@ fn main() {
         _ => {
             println!(
                 "repro — Performance Tuning of Hadoop MapReduce: A Noisy Gradient Approach\n\n\
-                 USAGE: repro <run|tune|experiment|whatif|list> [flags]\n\
+                 USAGE: repro <run|scenario|tune|experiment|whatif|list> [flags]\n\
                  Run `repro <cmd> --help` for per-command flags."
             );
             0
@@ -79,13 +82,168 @@ fn cmd_run() -> i32 {
         &ClusterSpec::paper_cluster(),
         &space.default_config(),
         &w,
-        &SimOptions { seed: p.get_u64("seed").unwrap_or(1), noise: !p.get_bool("no-noise") },
+        &SimOptions {
+            seed: p.get_u64("seed").unwrap_or(1),
+            noise: !p.get_bool("no-noise"),
+            ..Default::default()
+        },
     );
     println!(
         "benchmark: {bench} ({} input)",
         hadoop_spsa::util::units::fmt_bytes(w.input_bytes)
     );
     print!("{}", r.report());
+    0
+}
+
+/// Parse a crash schedule `"t:node[,t:node...]"` (seconds:worker).
+fn parse_crashes(s: &str) -> Result<Vec<(f64, u32)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (t, node) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad crash entry '{part}' (want seconds:node)"))?;
+        let t: f64 = t.trim().parse().map_err(|e| format!("crash time '{t}': {e}"))?;
+        let node: u32 = node.trim().parse().map_err(|e| format!("crash node '{node}': {e}"))?;
+        out.push((t, node));
+    }
+    Ok(out)
+}
+
+/// Parse a heterogeneity list `"node:speed[,node:speed...]"`.
+fn parse_slow_nodes(s: &str) -> Result<Vec<(u32, f64)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (node, speed) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad slow-node entry '{part}' (want node:speed)"))?;
+        let node: u32 = node.trim().parse().map_err(|e| format!("slow node '{node}': {e}"))?;
+        let speed: f64 =
+            speed.trim().parse().map_err(|e| format!("slow-node speed '{speed}': {e}"))?;
+        out.push((node, speed));
+    }
+    Ok(out)
+}
+
+fn cmd_scenario() -> i32 {
+    let parsed = Args::new(
+        "repro scenario",
+        "simulate a job under fault injection / heterogeneity and compare with the benign cluster",
+    )
+    .flag("benchmark", Some("terasort"), "benchmark name")
+    .flag("version", Some("v1"), "hadoop version (v1|v2)")
+    .flag("seed", Some("1"), "simulation seed")
+    .flag("runs", Some("5"), "noisy runs per summary line")
+    .flag("failure-p", Some("0.05"), "per-attempt task failure probability")
+    .flag("max-attempts", Some("4"), "failed attempts per task before the job is killed")
+    .flag("crash", Some(""), "node-crash schedule 'seconds:node[,seconds:node...]'")
+    .flag("slow", Some(""), "heterogeneous nodes 'node:speed[,...]' (speed 1.0 = nominal)")
+    .switch("speculative", "enable speculative execution (map + reduce)")
+    .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let bench = parse_benchmark(&p.get_str("benchmark"));
+    let version = parse_version(&p.get_str("version"));
+    let space = ParameterSpace::for_version(version);
+    // A typo in a numeric flag must abort, not silently simulate a
+    // different scenario than the one the user asked for.
+    let numbers = (|| -> Result<(u64, u64, f64, u64), String> {
+        Ok((
+            p.get_u64("seed")?,
+            p.get_u64("runs")?,
+            p.get_f64("failure-p")?,
+            p.get_u64("max-attempts")?,
+        ))
+    })();
+    let (seed, runs, failure_p, max_attempts) = match numbers {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let runs = runs.max(1);
+
+    let mut scenario =
+        ScenarioSpec::default().with_failures(failure_p).with_max_attempts(max_attempts);
+    match parse_crashes(&p.get_str("crash")) {
+        Ok(crashes) => {
+            for (t, node) in crashes {
+                scenario = scenario.with_crash(t, node);
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    match parse_slow_nodes(&p.get_str("slow")) {
+        Ok(slow) => {
+            for (node, speed) in slow {
+                scenario = scenario.with_slow_node(node, speed);
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    if p.get_bool("speculative") {
+        scenario = scenario.with_speculation(true);
+    }
+
+    let cluster = ClusterSpec::paper_cluster();
+    let w = profile_for(bench, 1000);
+    let cfg = space.default_config();
+    println!(
+        "benchmark: {bench} ({} input)   scenario: p_fail={} max_attempts={} \
+         crashes={} slow_nodes={} speculation={}\n",
+        hadoop_spsa::util::units::fmt_bytes(w.input_bytes),
+        scenario.task_failure_p,
+        scenario.max_attempts,
+        scenario.node_crashes.len(),
+        scenario.slow_nodes.len(),
+        scenario.speculative_maps,
+    );
+
+    // one detailed trace under the scenario ...
+    let r = simulate(
+        &cluster,
+        &cfg,
+        &w,
+        &SimOptions { seed, noise: true, scenario: scenario.clone() },
+    );
+    print!("{}", r.report());
+
+    // ... and a mean/p95 summary against the benign cluster
+    let collect = |scn: &ScenarioSpec| -> Vec<f64> {
+        (0..runs)
+            .map(|i| {
+                simulate(
+                    &cluster,
+                    &cfg,
+                    &w,
+                    &SimOptions { seed: seed ^ (i + 1), noise: true, scenario: scn.clone() },
+                )
+                .exec_time_s
+            })
+            .collect()
+    };
+    use hadoop_spsa::util::stats::{mean, percentile};
+    let faulty = collect(&scenario);
+    let benign = collect(&ScenarioSpec::default());
+    println!(
+        "\nover {runs} runs   scenario: mean {} p95 {}   benign: mean {} p95 {}",
+        fmt_secs(mean(&faulty)),
+        fmt_secs(percentile(&faulty, 95.0)),
+        fmt_secs(mean(&benign)),
+        fmt_secs(percentile(&benign, 95.0)),
+    );
     0
 }
 
@@ -186,7 +344,7 @@ fn cmd_tune() -> i32 {
 fn cmd_experiment() -> i32 {
     let parsed = Args::new(
         "repro experiment",
-        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 headline ablation holistic all)",
+        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 robustness headline ablation holistic all)",
     )
     .switch("quick", "reduced seeds/iterations")
     .flag("out", Some("results"), "output directory for md/csv")
@@ -226,6 +384,10 @@ fn cmd_experiment() -> i32 {
     }
     if sel("table2") {
         println!("{}", experiments::table2::run(&opts));
+        ran = true;
+    }
+    if sel("robustness") {
+        println!("{}", experiments::robustness::run(&opts));
         ran = true;
     }
     if sel("holistic") {
@@ -284,7 +446,7 @@ fn cmd_whatif() -> i32 {
         &cluster,
         &space.materialize(&theta),
         &w,
-        &SimOptions { seed: 1, noise: false },
+        &SimOptions { seed: 1, noise: false, ..Default::default() },
     )
     .exec_time_s;
     println!("rust what-if model  : {}", fmt_secs(model));

@@ -77,7 +77,7 @@ mod tests {
         let jobs: Vec<SimJob> = (0..6)
             .map(|i| SimJob {
                 config: space.default_config(),
-                opts: SimOptions { seed: 100 + i, noise: true },
+                opts: SimOptions { seed: 100 + i, noise: true, ..Default::default() },
             })
             .collect();
         let seq = simulate_batch(&cluster, jobs.clone(), &w, 1);
@@ -89,5 +89,37 @@ mod tests {
         }
         // distinct seeds must really differ (noise on)
         assert_ne!(seq[0].exec_time_s, seq[1].exec_time_s);
+    }
+
+    #[test]
+    fn scenario_batch_is_bit_identical_at_any_worker_count() {
+        // Scenario fates are keyed per (seed, task, attempt), so a faulty
+        // heterogeneous batch stays a pure function of its job list — the
+        // PR-1 determinism contract extends to the scenario engine.
+        use crate::sim::ScenarioSpec;
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut rng = Rng::seeded(3);
+        let w = Benchmark::Terasort.profile_scaled(200_000, 2 << 30, &mut rng);
+        let scenario = ScenarioSpec::default()
+            .with_failures(0.15)
+            .with_max_attempts(10)
+            .with_crash(90.0, 1)
+            .with_slow_node(4, 0.5)
+            .with_speculation(true);
+        let jobs: Vec<SimJob> = (0..6)
+            .map(|i| SimJob {
+                config: space.default_config(),
+                opts: SimOptions { seed: 500 + i, noise: true, scenario: scenario.clone() },
+            })
+            .collect();
+        let seq = simulate_batch(&cluster, jobs.clone(), &w, 1);
+        let par = simulate_batch(&cluster, jobs, &w, 4);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.exec_time_s, b.exec_time_s);
+            assert_eq!(a.counters, b.counters);
+            assert_eq!(a.phases, b.phases);
+            assert_eq!(a.job_failed, b.job_failed);
+        }
     }
 }

@@ -56,3 +56,23 @@ pub const TASK_NOISE_SIGMA: f64 = 0.10;
 /// Straggler probability and slowdown factor.
 pub const STRAGGLER_P: f64 = 0.015;
 pub const STRAGGLER_FACTOR: f64 = 2.2;
+
+/// Delay between a slot going idle with no pending work and the scheduler
+/// launching a speculative backup copy (the JobTracker's speculation lag).
+pub const SPECULATIVE_DELAY_S: f64 = 1.0;
+
+/// Only speculate on attempts with at least this much expected remaining
+/// run time — backing up a nearly-done task is pure waste.
+pub const SPECULATIVE_MIN_REMAINING_S: f64 = 5.0;
+
+/// Objective penalty multiplier for a failed job (a task exhausted
+/// `max.attempts`, or node losses made the job unplaceable): the tuner
+/// must see failed configurations as far worse than any completed run.
+pub const FAILED_JOB_PENALTY: f64 = 10.0;
+
+/// Failed-job score for counter-based metrics (spilled records, shuffled
+/// bytes, …). Those counters commit on success only, so an early abort
+/// drives them toward zero and no extrapolation can recover the full-job
+/// scale from the run itself; a sentinel far above any physical counter
+/// value keeps job-killing configurations unattractive.
+pub const FAILED_METRIC_SENTINEL: f64 = 1e30;

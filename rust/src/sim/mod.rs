@@ -10,6 +10,7 @@ pub mod constants;
 pub mod event;
 pub mod map_task;
 pub mod reduce_task;
+pub mod scenario;
 pub mod simulator;
 pub mod trace;
 
@@ -17,5 +18,6 @@ pub use batch::{simulate_batch, simulate_batch_auto, SimJob};
 pub use event::{EventQueue, SimTime};
 pub use map_task::{map_output_for_split, map_task_cost, MapTaskCost, TaskRates};
 pub use reduce_task::{reduce_task_cost, ReduceTaskCost};
+pub use scenario::{NodeCrash, NodeSlowdown, ScenarioSpec, TaskKind};
 pub use simulator::{simulate, SimOptions};
 pub use trace::{JobRunResult, PhaseBreakdown, SimCounters};

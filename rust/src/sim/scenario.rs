@@ -1,0 +1,285 @@
+//! Fault-injection & heterogeneity scenarios — the misbehaving execution
+//! substrates a tuner must stay robust against.
+//!
+//! The paper's central claim is that SPSA tunes Hadoop by observing a
+//! *noisy* system (§4.2, Fig. 4). On a real cluster that noise is not just
+//! task-duration jitter: tasks fail and re-execute (`mapred.*.max.attempts`),
+//! whole nodes drop out mid-job, speculative backup copies race the
+//! originals (`mapred.map./reduce.tasks.speculative.execution`), and
+//! heterogeneous fleets mix fast and slow machines. A [`ScenarioSpec`]
+//! describes one such regime and rides inside
+//! [`super::simulator::SimOptions`] into the event loop, which reacts with
+//! `TaskFailed` / `NodeDown` / `SpeculativeLaunch` events.
+//!
+//! **Determinism.** Every scenario decision (does attempt k of task t fail,
+//! and when?) and every task-noise draw is keyed by
+//! `(seed, kind, task, attempt)` rather than drawn from a sequential
+//! stream. Two consequences: a simulation is a pure function of
+//! `(cluster, config, workload, SimOptions)` regardless of event ordering,
+//! so scenarios compose with [`super::batch`] and the batched objective
+//! layer at any worker count; and the attempt-0 noise of every task is
+//! *identical* between a scenario run and its benign twin, so injected
+//! faults add work on top of the same baseline instead of reshuffling it.
+
+use crate::util::rng::Rng;
+
+/// Which side of the job an attempt belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+impl TaskKind {
+    fn tag(self) -> u64 {
+        match self {
+            TaskKind::Map => 0x4D41_5054,    // "MAPT"
+            TaskKind::Reduce => 0x5245_4454, // "REDT"
+        }
+    }
+}
+
+/// A scheduled permanent node loss (the machine never comes back; its
+/// slots are removed and its running attempts are killed and re-queued).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeCrash {
+    /// Simulation time in seconds at which the node goes down.
+    pub at_s: f64,
+    /// Worker (DataNode) index.
+    pub node: u32,
+}
+
+/// A heterogeneous-fleet entry: one worker running at a fraction of
+/// nominal speed (all three resource rates — CPU, disk, NIC — scale).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSlowdown {
+    /// Worker (DataNode) index.
+    pub node: u32,
+    /// Relative speed in (0, ∞): 1.0 = nominal, 0.5 = half-speed straggler
+    /// node, 2.0 = an upgraded machine.
+    pub speed: f64,
+}
+
+/// One execution-substrate regime: failure injection, node-crash schedule,
+/// per-node speed factors and speculative execution. `Default` is the
+/// benign scenario PRs 0–1 simulated (no failures, homogeneous, no
+/// speculation) — it reproduces the pre-scenario simulator exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Probability that any single task attempt fails partway through
+    /// (applies independently to every map/reduce attempt, speculative
+    /// copies included).
+    pub task_failure_p: f64,
+    /// `mapred.map./reduce.max.attempts`: when one task accumulates this
+    /// many *failed* attempts the job is declared failed (Hadoop's
+    /// job-kill semantics). Kills from speculation or node loss do not
+    /// count, matching Hadoop's failed-vs-killed distinction.
+    pub max_attempts: u64,
+    /// Permanent node losses on a schedule.
+    pub node_crashes: Vec<NodeCrash>,
+    /// Heterogeneous per-node speed factors.
+    pub slow_nodes: Vec<NodeSlowdown>,
+    /// `mapred.map.tasks.speculative.execution`: back up slow map tasks.
+    pub speculative_maps: bool,
+    /// `mapred.reduce.tasks.speculative.execution`: back up slow reducers.
+    pub speculative_reduces: bool,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            task_failure_p: 0.0,
+            max_attempts: 4,
+            node_crashes: Vec::new(),
+            slow_nodes: Vec::new(),
+            speculative_maps: false,
+            speculative_reduces: false,
+        }
+    }
+}
+
+/// Salt for the per-attempt task-duration noise stream.
+pub(crate) const NOISE_SALT: u64 = 0x6E6F_6973_655F_7331;
+/// Salt for the per-attempt failure-fate stream (independent of noise).
+pub(crate) const FAULT_SALT: u64 = 0x6661_756C_745F_7332;
+
+/// Derive the independent RNG of one `(seed, salt, kind, task, attempt)`
+/// tuple. Keyed derivation (instead of one sequential stream) is what makes
+/// scenarios order-independent and benign/faulty runs share their attempt-0
+/// noise — see the module docs.
+pub(crate) fn attempt_rng(seed: u64, salt: u64, kind: TaskKind, task: u64, attempt: u64) -> Rng {
+    let mut x = seed ^ salt;
+    x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ kind.tag().wrapping_mul(0xD1B5_4A32_D192_ED03);
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB)
+        ^ task.wrapping_add(1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = x.wrapping_mul(0x2545_F491_4F6C_DD1D) ^ attempt.wrapping_add(1);
+    Rng::seeded(x)
+}
+
+impl ScenarioSpec {
+    /// The benign scenario (alias of `Default`).
+    pub fn benign() -> Self {
+        ScenarioSpec::default()
+    }
+
+    /// No faults, homogeneous fleet, speculation off?
+    pub fn is_benign(&self) -> bool {
+        self.task_failure_p <= 0.0
+            && self.node_crashes.is_empty()
+            && self.slow_nodes.is_empty()
+            && !self.speculative_maps
+            && !self.speculative_reduces
+    }
+
+    /// Builder: per-attempt failure probability.
+    pub fn with_failures(mut self, p: f64) -> Self {
+        self.task_failure_p = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Builder: `max.attempts` ceiling (≥ 1).
+    pub fn with_max_attempts(mut self, n: u64) -> Self {
+        self.max_attempts = n.max(1);
+        self
+    }
+
+    /// Builder: schedule a permanent node loss.
+    pub fn with_crash(mut self, at_s: f64, node: u32) -> Self {
+        self.node_crashes.push(NodeCrash { at_s: at_s.max(0.0), node });
+        self
+    }
+
+    /// Builder: mark one worker as running at `speed` × nominal.
+    pub fn with_slow_node(mut self, node: u32, speed: f64) -> Self {
+        self.slow_nodes.push(NodeSlowdown { node, speed: speed.max(1e-3) });
+        self
+    }
+
+    /// Builder: toggle speculative execution for both task kinds.
+    pub fn with_speculation(mut self, on: bool) -> Self {
+        self.speculative_maps = on;
+        self.speculative_reduces = on;
+        self
+    }
+
+    /// Is speculation enabled for this task kind?
+    pub fn speculative(&self, kind: TaskKind) -> bool {
+        match kind {
+            TaskKind::Map => self.speculative_maps,
+            TaskKind::Reduce => self.speculative_reduces,
+        }
+    }
+
+    /// Relative speed of a worker (1.0 unless listed in `slow_nodes`; the
+    /// last entry wins if a node is listed twice).
+    pub fn speed_of(&self, node: u32) -> f64 {
+        self.slow_nodes
+            .iter()
+            .rev()
+            .find(|s| s.node == node)
+            .map(|s| s.speed)
+            .unwrap_or(1.0)
+    }
+
+    /// The fate of attempt `attempt` of task `task`: `None` = runs to
+    /// completion; `Some(frac)` = dies after `frac` of its would-be work
+    /// time. Pure function of `(seed, kind, task, attempt)`.
+    pub fn attempt_fate(&self, seed: u64, kind: TaskKind, task: u64, attempt: u64) -> Option<f64> {
+        if self.task_failure_p <= 0.0 {
+            return None;
+        }
+        let mut rng = attempt_rng(seed, FAULT_SALT, kind, task, attempt);
+        if rng.bernoulli(self.task_failure_p) {
+            // Die strictly inside the run: at least a sliver of work is
+            // wasted, and the attempt never outlives its healthy twin.
+            Some(rng.range_f64(0.05, 0.95))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_benign() {
+        let s = ScenarioSpec::default();
+        assert!(s.is_benign());
+        assert_eq!(s.max_attempts, 4);
+        assert_eq!(s.attempt_fate(1, TaskKind::Map, 0, 0), None);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let s = ScenarioSpec::default()
+            .with_failures(0.1)
+            .with_max_attempts(3)
+            .with_crash(100.0, 2)
+            .with_slow_node(5, 0.5)
+            .with_speculation(true);
+        assert!(!s.is_benign());
+        assert_eq!(s.node_crashes, vec![NodeCrash { at_s: 100.0, node: 2 }]);
+        assert_eq!(s.speed_of(5), 0.5);
+        assert_eq!(s.speed_of(4), 1.0);
+        assert!(s.speculative(TaskKind::Map) && s.speculative(TaskKind::Reduce));
+    }
+
+    #[test]
+    fn failure_p_clamped() {
+        assert_eq!(ScenarioSpec::default().with_failures(7.0).task_failure_p, 1.0);
+        assert_eq!(ScenarioSpec::default().with_failures(-1.0).task_failure_p, 0.0);
+    }
+
+    #[test]
+    fn fate_is_deterministic_and_keyed() {
+        let s = ScenarioSpec::default().with_failures(0.5);
+        for task in 0..50u64 {
+            for attempt in 0..3u64 {
+                let a = s.attempt_fate(9, TaskKind::Map, task, attempt);
+                let b = s.attempt_fate(9, TaskKind::Map, task, attempt);
+                assert_eq!(a, b, "fate not deterministic");
+                if let Some(frac) = a {
+                    assert!((0.05..0.95).contains(&frac));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fate_rate_tracks_p() {
+        let s = ScenarioSpec::default().with_failures(0.2);
+        let n = 5000u64;
+        let fails = (0..n)
+            .filter(|&t| s.attempt_fate(3, TaskKind::Reduce, t, 0).is_some())
+            .count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn kinds_and_attempts_get_independent_fates() {
+        let s = ScenarioSpec::default().with_failures(0.5);
+        let map_fates: Vec<bool> =
+            (0..64).map(|t| s.attempt_fate(1, TaskKind::Map, t, 0).is_some()).collect();
+        let red_fates: Vec<bool> =
+            (0..64).map(|t| s.attempt_fate(1, TaskKind::Reduce, t, 0).is_some()).collect();
+        let retry_fates: Vec<bool> =
+            (0..64).map(|t| s.attempt_fate(1, TaskKind::Map, t, 1).is_some()).collect();
+        assert_ne!(map_fates, red_fates);
+        assert_ne!(map_fates, retry_fates);
+    }
+
+    #[test]
+    fn attempt_rng_streams_differ() {
+        let mut a = attempt_rng(1, NOISE_SALT, TaskKind::Map, 0, 0);
+        let mut b = attempt_rng(1, NOISE_SALT, TaskKind::Map, 1, 0);
+        let mut c = attempt_rng(1, FAULT_SALT, TaskKind::Map, 0, 0);
+        let same_ab = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same_ab < 4);
+        let mut a2 = attempt_rng(1, NOISE_SALT, TaskKind::Map, 0, 0);
+        let same_ac = (0..64).filter(|_| a2.next_u64() == c.next_u64()).count();
+        assert!(same_ac < 4);
+    }
+}

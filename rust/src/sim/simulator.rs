@@ -9,31 +9,49 @@
 //! resource contention, multiplied by seeded stochastic noise (lognormal +
 //! stragglers) — the run-to-run randomness SPSA's iterates must filter
 //! (paper §4.2, Fig. 4).
+//!
+//! **Scenario engine.** A [`ScenarioSpec`] in [`SimOptions`] turns the
+//! benign cluster into a misbehaving one: task attempts fail mid-run and
+//! retry up to `max.attempts` (job-kill beyond), nodes crash on a schedule
+//! (slots die, lost splits re-queue locality-first), speculative backup
+//! copies race slow originals with copy-kill semantics, and per-node speed
+//! factors model heterogeneous fleets. Every stochastic decision is keyed
+//! by `(seed, kind, task, attempt)` — see [`super::scenario`] — so runs
+//! stay bit-reproducible and order-independent, and compose with
+//! [`super::batch`] at any worker count.
 
 use crate::cluster::{ClusterSpec, HdfsFile, Namenode, Resource, ResourceTracker};
 use crate::config::{HadoopConfig, HadoopVersion};
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadProfile;
+// (placement uses a sequential seeded Rng at init; task noise and scenario
+// fates come from keyed per-attempt streams in `scenario::attempt_rng`)
 
 use super::constants::*;
 use super::event::EventQueue;
 use super::map_task::{map_output_for_split, map_task_cost, TaskRates};
 use super::reduce_task::reduce_task_cost;
+use super::scenario::{self, ScenarioSpec, TaskKind};
 use super::trace::{JobRunResult, PhaseBreakdown, SimCounters};
 
 /// Simulation options.
 #[derive(Clone, Debug)]
 pub struct SimOptions {
-    /// RNG seed: placement and noise are deterministic per seed.
+    /// RNG seed: placement, noise and scenario fates are deterministic per
+    /// seed.
     pub seed: u64,
     /// Disable for the noise-free objective (landscape dumps, tests);
     /// SPSA observes the noisy system, as on a real cluster.
     pub noise: bool,
+    /// Execution-substrate regime: task failures, node crashes, per-node
+    /// speed factors, speculative execution. The default is the benign
+    /// failure-free homogeneous cluster.
+    pub scenario: ScenarioSpec,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { seed: 1, noise: true }
+        SimOptions { seed: 1, noise: true, scenario: ScenarioSpec::default() }
     }
 }
 
@@ -45,13 +63,73 @@ const FETCH_OVERLAP_EFF: f64 = 0.5;
 enum Event {
     /// Fill all map slots at job start.
     InitialFill,
-    MapDone { slot: usize, task: usize },
-    ReduceDone { slot: usize },
+    /// A task attempt ran to completion (ignored if the attempt was killed).
+    TaskDone { attempt: usize },
+    /// A task attempt died mid-run (fault injection).
+    TaskFailed { attempt: usize },
+    /// A scheduled permanent node loss (index into the crash schedule).
+    NodeDown { crash: usize },
+    /// A free slot looks for a straggling task to back up.
+    SpeculativeLaunch { kind: TaskKind },
 }
 
 struct Slot {
     node: u32,
     tasks_run: u64,
+    busy: bool,
+    dead: bool,
+}
+
+/// Scheduler-side state of one task (map or reduce).
+#[derive(Clone, Default)]
+struct TaskState {
+    completed: bool,
+    /// Failed attempts so far — the `max.attempts` budget.
+    failed_attempts: u64,
+    /// Attempts ever launched (ordinal for keyed noise/fate derivation).
+    attempts_launched: u64,
+    /// Live attempt ids (original and at most one speculative copy).
+    running: Vec<usize>,
+    /// Speculative copies ever launched (at most one per task).
+    backups: u64,
+}
+
+/// Counter deltas an attempt commits if (and only if) it succeeds.
+#[derive(Clone, Copy, Default)]
+struct AttemptCounters {
+    data_local: bool,
+    spilled_files: u64,
+    spilled_records: u64,
+    map_output_bytes: u64,
+    shuffled_bytes: u64,
+    reduce_spilled_bytes: u64,
+    output_bytes: u64,
+}
+
+/// One in-flight (or finished) task attempt.
+#[derive(Clone)]
+struct AttemptInfo {
+    kind: TaskKind,
+    task: usize,
+    slot: usize,
+    node: u32,
+    alive: bool,
+    speculative: bool,
+    holds_net: bool,
+    start_s: f64,
+    /// Scheduled wall end: completion or mid-run failure time.
+    end_s: f64,
+    /// Phase contribution, committed on success only.
+    phases: PhaseBreakdown,
+    /// Counter contribution, committed on success only.
+    counters: AttemptCounters,
+}
+
+fn kind_index(kind: TaskKind) -> usize {
+    match kind {
+        TaskKind::Map => 0,
+        TaskKind::Reduce => 1,
+    }
 }
 
 struct Sim<'a> {
@@ -61,7 +139,6 @@ struct Sim<'a> {
 
     q: EventQueue<Event>,
     tracker: ResourceTracker,
-    rng: Rng,
     phases: PhaseBreakdown,
     counters: SimCounters,
 
@@ -80,13 +157,28 @@ struct Sim<'a> {
     map_assigned: Vec<bool>,
     maps_launched: u64,
     pending_reduces: Vec<usize>,
-    map_task_local: Vec<bool>,
+
+    /// Scheduler state per map / reduce task.
+    map_tasks: Vec<TaskState>,
+    red_tasks: Vec<TaskState>,
+    /// Registry of every attempt ever launched.
+    attempts: Vec<AttemptInfo>,
+    node_dead: Vec<bool>,
+    /// InitialFill has fired (guards crash handlers scheduled before
+    /// JOB_SETUP_S from launching the map wave early).
+    job_started: bool,
+    reduce_phase_started: bool,
+    /// A SpeculativeLaunch event is already queued for [map, reduce].
+    spec_scheduled: [bool; 2],
+    /// A task exhausted `max.attempts` — the job is killed.
+    aborted: bool,
 
     n_maps: u64,
     n_reduces: u64,
     total_shuffle_raw: f64,
 
     maps_completed: u64,
+    reduces_completed: u64,
     maps_done_s: f64,
     slowstart_cross_s: Option<f64>,
     last_reduce_done_s: f64,
@@ -127,14 +219,14 @@ impl<'a> Sim<'a> {
         for s in 0..cluster.map_slots_per_node {
             for node in 0..cluster.workers() {
                 let _ = s;
-                map_slots.push(Slot { node, tasks_run: 0 });
+                map_slots.push(Slot { node, tasks_run: 0, busy: false, dead: false });
             }
         }
         let mut reduce_slots = Vec::new();
         for s in 0..cluster.reduce_slots_per_node {
             for node in 0..cluster.workers() {
                 let _ = s;
-                reduce_slots.push(Slot { node, tasks_run: 0 });
+                reduce_slots.push(Slot { node, tasks_run: 0, busy: false, dead: false });
             }
         }
 
@@ -159,7 +251,6 @@ impl<'a> Sim<'a> {
             opts,
             q: EventQueue::new(),
             tracker: ResourceTracker::new(cluster),
-            rng,
             phases: PhaseBreakdown::default(),
             counters,
             node_pending,
@@ -168,7 +259,14 @@ impl<'a> Sim<'a> {
             map_assigned: vec![false; n_maps as usize],
             maps_launched: 0,
             pending_reduces: (0..n_reduces as usize).collect(),
-            map_task_local: vec![false; n_maps as usize],
+            map_tasks: vec![TaskState::default(); n_maps as usize],
+            red_tasks: vec![TaskState::default(); n_reduces as usize],
+            attempts: Vec::new(),
+            node_dead: vec![false; cluster.workers() as usize],
+            job_started: false,
+            reduce_phase_started: false,
+            spec_scheduled: [false; 2],
+            aborted: false,
             file,
             namenode,
             map_slots,
@@ -177,21 +275,38 @@ impl<'a> Sim<'a> {
             n_reduces,
             total_shuffle_raw,
             maps_completed: 0,
+            reduces_completed: 0,
             maps_done_s: 0.0,
             slowstart_cross_s: None,
             last_reduce_done_s: 0.0,
         }
     }
 
-    fn noise_factor(&mut self) -> f64 {
+    /// Per-attempt multiplicative duration noise, keyed by
+    /// `(seed, kind, task, attempt)` so it is independent of scheduling
+    /// order and identical between benign and scenario runs.
+    fn noise_factor_for(&self, kind: TaskKind, task: usize, attempt: u64) -> f64 {
         if !self.opts.noise {
             return 1.0;
         }
-        let mut m = self.rng.lognormal_unit_mean(TASK_NOISE_SIGMA);
-        if self.rng.bernoulli(STRAGGLER_P) {
+        let mut rng =
+            scenario::attempt_rng(self.opts.seed, scenario::NOISE_SALT, kind, task as u64, attempt);
+        let mut m = rng.lognormal_unit_mean(TASK_NOISE_SIGMA);
+        if rng.bernoulli(STRAGGLER_P) {
             m *= STRAGGLER_FACTOR;
         }
         m
+    }
+
+    /// Contention-adjusted resource rates on `node`, scaled by the
+    /// scenario's per-node speed factor (heterogeneous fleets).
+    fn rates_for(&self, node: u32) -> TaskRates {
+        let speed = self.opts.scenario.speed_of(node);
+        TaskRates {
+            disk_bw: self.tracker.disk_bw(node) * speed,
+            net_bw: self.tracker.net_bw(node) * speed,
+            cpu_ops_per_sec: self.tracker.cpu_rate(node) * speed,
+        }
     }
 
     fn setup_time(slot: &mut Slot, reuse: u64) -> f64 {
@@ -243,68 +358,96 @@ impl<'a> Sim<'a> {
         None
     }
 
-    fn launch_map(&mut self, slot_idx: usize) -> bool {
+    /// Launch one map attempt of `task` on `slot_idx` (original, retry or
+    /// speculative copy).
+    fn launch_map_on(&mut self, slot_idx: usize, task: usize, speculative: bool) {
         let node = self.map_slots[slot_idx].node;
-        let Some(task) = self.next_map_task(node) else {
-            return false;
-        };
         let local = self.namenode.is_local(&self.file.blocks[task], node);
-        self.map_task_local[task] = local;
-        if local {
-            self.counters.data_local_maps += 1;
-        }
-
         self.tracker.acquire(node, Resource::Cpu);
         self.tracker.acquire(node, Resource::Disk);
         if !local {
             self.tracker.acquire(node, Resource::Net);
         }
-        let rates = TaskRates {
-            disk_bw: self.tracker.disk_bw(node),
-            net_bw: self.tracker.net_bw(node),
-            cpu_ops_per_sec: self.tracker.cpu_rate(node),
-        };
+        let rates = self.rates_for(node);
         let split = self.file.blocks[task].size;
         let cost = map_task_cost(self.config, self.w, split, local, &rates);
-        let setup =
-            Self::setup_time(&mut self.map_slots[slot_idx], self.config.effective_jvm_reuse());
-        let m = self.noise_factor();
-        let wall = setup + cost.wall_s() * m;
+        let reuse = self.config.effective_jvm_reuse();
+        let setup = Self::setup_time(&mut self.map_slots[slot_idx], reuse);
+        let ord = self.map_tasks[task].attempts_launched;
+        self.map_tasks[task].attempts_launched += 1;
+        let m = self.noise_factor_for(TaskKind::Map, task, ord);
 
-        self.phases.task_setup += setup;
-        self.phases.map_read += cost.read_s * m;
-        self.phases.map_cpu += cost.map_cpu_s * m;
-        self.phases.map_spill += cost.spill_s * m;
-        self.phases.map_merge += cost.merge_s * m;
-        self.counters.spilled_files += cost.n_spills;
-        self.counters.spilled_records += cost.spilled_records;
-        self.counters.map_output_bytes += cost.output_bytes;
+        let phases = PhaseBreakdown {
+            task_setup: setup,
+            map_read: cost.read_s * m,
+            map_cpu: cost.map_cpu_s * m,
+            map_spill: cost.spill_s * m,
+            map_merge: cost.merge_s * m,
+            ..Default::default()
+        };
+        let counters = AttemptCounters {
+            data_local: local,
+            spilled_files: cost.n_spills,
+            spilled_records: cost.spilled_records,
+            map_output_bytes: cost.output_bytes,
+            ..Default::default()
+        };
 
-        self.q.schedule_in(wall, Event::MapDone { slot: slot_idx, task });
-        true
+        let now = self.q.now();
+        let work = cost.wall_s() * m;
+        let fate =
+            self.opts.scenario.attempt_fate(self.opts.seed, TaskKind::Map, task as u64, ord);
+        let end = now + setup + work * fate.unwrap_or(1.0);
+        let id = self.attempts.len();
+        self.attempts.push(AttemptInfo {
+            kind: TaskKind::Map,
+            task,
+            slot: slot_idx,
+            node,
+            alive: true,
+            speculative,
+            holds_net: !local,
+            start_s: now,
+            end_s: end,
+            phases,
+            counters,
+        });
+        self.map_slots[slot_idx].busy = true;
+        self.map_tasks[task].running.push(id);
+        if speculative {
+            self.map_tasks[task].backups += 1;
+            self.counters.speculative_launches += 1;
+        }
+        self.counters.map_attempts += 1;
+        let ev = if fate.is_some() {
+            Event::TaskFailed { attempt: id }
+        } else {
+            Event::TaskDone { attempt: id }
+        };
+        self.q.schedule(end, ev);
     }
 
-    fn launch_reduce(&mut self, slot_idx: usize) -> bool {
-        if self.pending_reduces.is_empty() {
-            return false;
-        }
-        let task = self.pending_reduces.remove(0);
+    /// Launch one reduce attempt of `task` on `slot_idx`.
+    fn launch_reduce_on(&mut self, slot_idx: usize, task: usize, speculative: bool) {
         let node = self.reduce_slots[slot_idx].node;
-        let first_wave = self.reduce_slots[slot_idx].tasks_run == 0;
-
+        // First-wave shuffle credit belongs only to a task's FIRST attempt
+        // on a virgin slot — the one that really fetched during the map
+        // phase. Retries and speculative copies launch later and must
+        // re-fetch everything, even when they land on an unused slot.
+        let first_wave = self.reduce_slots[slot_idx].tasks_run == 0
+            && self.red_tasks[task].attempts_launched == 0
+            && !speculative;
         self.tracker.acquire(node, Resource::Cpu);
         self.tracker.acquire(node, Resource::Disk);
         self.tracker.acquire(node, Resource::Net);
-        let rates = TaskRates {
-            disk_bw: self.tracker.disk_bw(node),
-            net_bw: self.tracker.net_bw(node),
-            cpu_ops_per_sec: self.tracker.cpu_rate(node),
-        };
+        let rates = self.rates_for(node);
         let vol = self.reduce_volume(task);
         let cost = reduce_task_cost(self.config, self.w, vol as u64, self.n_maps, &rates);
-        let setup =
-            Self::setup_time(&mut self.reduce_slots[slot_idx], self.config.effective_jvm_reuse());
-        let m = self.noise_factor();
+        let reuse = self.config.effective_jvm_reuse();
+        let setup = Self::setup_time(&mut self.reduce_slots[slot_idx], reuse);
+        let ord = self.red_tasks[task].attempts_launched;
+        self.red_tasks[task].attempts_launched += 1;
+        let m = self.noise_factor_for(TaskKind::Reduce, task, ord);
 
         // Shuffle-overlap credit: a first-wave reducer has been fetching
         // since the slowstart point, at reduced efficiency (shared with map
@@ -316,86 +459,437 @@ impl<'a> Sim<'a> {
                 shuffle_s = (shuffle_s - window).max(cost.shuffle_s * m * SHUFFLE_TAIL_FRACTION);
             }
         }
-        let wall = setup + shuffle_s + (cost.merge_s + cost.reduce_cpu_s + cost.write_s) * m;
+        let work = shuffle_s + (cost.merge_s + cost.reduce_cpu_s + cost.write_s) * m;
 
-        self.phases.task_setup += setup;
-        self.phases.shuffle += shuffle_s;
-        self.phases.reduce_merge += cost.merge_s * m;
-        self.phases.reduce_cpu += cost.reduce_cpu_s * m;
-        self.phases.output_write += cost.write_s * m;
-        self.counters.shuffled_bytes += if self.config.compress_map_output {
+        let phases = PhaseBreakdown {
+            task_setup: setup,
+            shuffle: shuffle_s,
+            reduce_merge: cost.merge_s * m,
+            reduce_cpu: cost.reduce_cpu_s * m,
+            output_write: cost.write_s * m,
+            ..Default::default()
+        };
+        let shuffled = if self.config.compress_map_output {
             (vol * self.w.compress_ratio) as u64
         } else {
             vol as u64
         };
-        self.counters.reduce_spilled_bytes += cost.spilled_bytes;
-        self.counters.output_bytes += cost.output_bytes;
+        let counters = AttemptCounters {
+            shuffled_bytes: shuffled,
+            reduce_spilled_bytes: cost.spilled_bytes,
+            output_bytes: cost.output_bytes,
+            ..Default::default()
+        };
 
-        self.q.schedule_in(wall, Event::ReduceDone { slot: slot_idx });
-        true
+        let now = self.q.now();
+        let fate =
+            self.opts.scenario.attempt_fate(self.opts.seed, TaskKind::Reduce, task as u64, ord);
+        let end = now + setup + work * fate.unwrap_or(1.0);
+        let id = self.attempts.len();
+        self.attempts.push(AttemptInfo {
+            kind: TaskKind::Reduce,
+            task,
+            slot: slot_idx,
+            node,
+            alive: true,
+            speculative,
+            holds_net: true,
+            start_s: now,
+            end_s: end,
+            phases,
+            counters,
+        });
+        self.reduce_slots[slot_idx].busy = true;
+        self.red_tasks[task].running.push(id);
+        if speculative {
+            self.red_tasks[task].backups += 1;
+            self.counters.speculative_launches += 1;
+        }
+        self.counters.reduce_attempts += 1;
+        let ev = if fate.is_some() {
+            Event::TaskFailed { attempt: id }
+        } else {
+            Event::TaskDone { attempt: id }
+        };
+        self.q.schedule(end, ev);
+    }
+
+    /// Fill every idle live map slot with pending work; slots left idle ask
+    /// for a speculative pass.
+    fn fill_map_slots(&mut self) {
+        if !self.job_started {
+            return;
+        }
+        let mut want_spec = false;
+        for i in 0..self.map_slots.len() {
+            if self.map_slots[i].busy || self.map_slots[i].dead {
+                continue;
+            }
+            let node = self.map_slots[i].node;
+            match self.next_map_task(node) {
+                Some(task) => self.launch_map_on(i, task, false),
+                None => want_spec = true,
+            }
+        }
+        if want_spec {
+            self.maybe_schedule_speculation(TaskKind::Map);
+        }
+    }
+
+    /// Fill every idle live reduce slot once the reduce phase has begun.
+    fn fill_reduce_slots(&mut self) {
+        if !self.reduce_phase_started {
+            return;
+        }
+        let mut want_spec = false;
+        for i in 0..self.reduce_slots.len() {
+            if self.reduce_slots[i].busy || self.reduce_slots[i].dead {
+                continue;
+            }
+            if self.pending_reduces.is_empty() {
+                want_spec = true;
+                break;
+            }
+            let task = self.pending_reduces.remove(0);
+            self.launch_reduce_on(i, task, false);
+        }
+        if want_spec {
+            self.maybe_schedule_speculation(TaskKind::Reduce);
+        }
+    }
+
+    /// The straggler most worth backing up: the running original with the
+    /// latest expected finish, no backup yet, and enough remaining time.
+    fn spec_candidate(&self, kind: TaskKind, now: f64) -> Option<(usize, usize)> {
+        let tasks = match kind {
+            TaskKind::Map => &self.map_tasks,
+            TaskKind::Reduce => &self.red_tasks,
+        };
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (t, ts) in tasks.iter().enumerate() {
+            if ts.completed || ts.backups > 0 || ts.running.len() != 1 {
+                continue;
+            }
+            let id = ts.running[0];
+            let a = &self.attempts[id];
+            if a.speculative || a.end_s - now < SPECULATIVE_MIN_REMAINING_S {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, _, e)) => a.end_s > e,
+            };
+            if better {
+                best = Some((t, id, a.end_s));
+            }
+        }
+        best.map(|(t, id, _)| (t, id))
+    }
+
+    /// An idle live slot of the kind, preferring a different node than the
+    /// original attempt runs on.
+    fn pick_idle_slot(&self, kind: TaskKind, avoid_node: Option<u32>) -> Option<usize> {
+        let slots = match kind {
+            TaskKind::Map => &self.map_slots,
+            TaskKind::Reduce => &self.reduce_slots,
+        };
+        if let Some(avoid) = avoid_node {
+            if let Some(i) = slots.iter().position(|s| !s.busy && !s.dead && s.node != avoid) {
+                return Some(i);
+            }
+        }
+        slots.iter().position(|s| !s.busy && !s.dead)
+    }
+
+    /// Schedule a speculative pass after the JobTracker's lag, if
+    /// speculation is on, none is queued yet, and a candidate exists.
+    fn maybe_schedule_speculation(&mut self, kind: TaskKind) {
+        if !self.opts.scenario.speculative(kind) {
+            return;
+        }
+        let ki = kind_index(kind);
+        if self.spec_scheduled[ki] {
+            return;
+        }
+        let fire_at = self.q.now() + SPECULATIVE_DELAY_S;
+        if self.spec_candidate(kind, fire_at).is_none() {
+            return;
+        }
+        self.spec_scheduled[ki] = true;
+        self.q.schedule_in(SPECULATIVE_DELAY_S, Event::SpeculativeLaunch { kind });
+    }
+
+    /// Launch backup copies of the slowest running originals onto idle
+    /// slots until either runs out.
+    fn run_speculation(&mut self, kind: TaskKind, now: f64) {
+        if !self.opts.scenario.speculative(kind) {
+            return;
+        }
+        loop {
+            let Some((task, orig)) = self.spec_candidate(kind, now) else {
+                return;
+            };
+            let orig_node = self.attempts[orig].node;
+            let Some(slot) = self.pick_idle_slot(kind, Some(orig_node)) else {
+                return;
+            };
+            match kind {
+                TaskKind::Map => self.launch_map_on(slot, task, true),
+                TaskKind::Reduce => self.launch_reduce_on(slot, task, true),
+            }
+        }
+    }
+
+    /// Shared teardown of every attempt-termination path (success, failure,
+    /// kill): mark the attempt dead, give back its tracker resources and
+    /// free its slot. Returns the attempt record for the caller's
+    /// path-specific accounting. Callers must check `alive` first.
+    fn retire_attempt(&mut self, id: usize) -> AttemptInfo {
+        debug_assert!(self.attempts[id].alive, "retiring a dead attempt");
+        self.attempts[id].alive = false;
+        let a = self.attempts[id].clone();
+        self.tracker.release(a.node, Resource::Cpu);
+        self.tracker.release(a.node, Resource::Disk);
+        if a.holds_net {
+            self.tracker.release(a.node, Resource::Net);
+        }
+        match a.kind {
+            TaskKind::Map => self.map_slots[a.slot].busy = false,
+            TaskKind::Reduce => self.reduce_slots[a.slot].busy = false,
+        }
+        a
+    }
+
+    /// Kill a live attempt (losing speculation copy or node-loss victim):
+    /// elapsed work is wasted and the attempt's future Done/Failed event
+    /// becomes a no-op.
+    fn kill_attempt(&mut self, id: usize, t: f64) {
+        if !self.attempts[id].alive {
+            return;
+        }
+        let a = self.retire_attempt(id);
+        self.phases.wasted += (t - a.start_s).max(0.0);
+        self.counters.killed_attempts += 1;
+    }
+
+    fn on_task_done(&mut self, attempt: usize, t: f64) {
+        if !self.attempts[attempt].alive {
+            return; // orphaned event of a killed attempt
+        }
+        let a = self.retire_attempt(attempt);
+        // The first finisher commits; racing copies are killed on the spot.
+        let siblings = match a.kind {
+            TaskKind::Map => std::mem::take(&mut self.map_tasks[a.task].running),
+            TaskKind::Reduce => std::mem::take(&mut self.red_tasks[a.task].running),
+        };
+        for sib in siblings {
+            if sib != attempt {
+                self.kill_attempt(sib, t);
+            }
+        }
+        match a.kind {
+            TaskKind::Map => self.map_tasks[a.task].completed = true,
+            TaskKind::Reduce => self.red_tasks[a.task].completed = true,
+        }
+        if a.speculative {
+            self.counters.speculative_wins += 1;
+        }
+        // Commit the successful attempt's work.
+        self.phases.add(&a.phases);
+        let c = &a.counters;
+        match a.kind {
+            TaskKind::Map => {
+                self.counters.data_local_maps += c.data_local as u64;
+                self.counters.spilled_files += c.spilled_files;
+                self.counters.spilled_records += c.spilled_records;
+                self.counters.map_output_bytes += c.map_output_bytes;
+                self.counters.map_successes += 1;
+                self.maps_completed += 1;
+                self.maps_done_s = t;
+                let slowstart = self.config.effective_slowstart();
+                if self.slowstart_cross_s.is_none()
+                    && self.maps_completed as f64 / self.n_maps as f64 >= slowstart
+                {
+                    self.slowstart_cross_s = Some(t);
+                }
+                self.fill_map_slots();
+                if self.maps_completed == self.n_maps {
+                    if self.slowstart_cross_s.is_none() {
+                        self.slowstart_cross_s = Some(t);
+                    }
+                    // launch the first reduce wave
+                    self.reduce_phase_started = true;
+                    self.fill_reduce_slots();
+                }
+            }
+            TaskKind::Reduce => {
+                self.counters.shuffled_bytes += c.shuffled_bytes;
+                self.counters.reduce_spilled_bytes += c.reduce_spilled_bytes;
+                self.counters.output_bytes += c.output_bytes;
+                self.counters.reduce_successes += 1;
+                self.reduces_completed += 1;
+                self.last_reduce_done_s = t;
+                self.fill_reduce_slots();
+            }
+        }
+    }
+
+    fn on_task_failed(&mut self, attempt: usize, t: f64) {
+        if !self.attempts[attempt].alive {
+            return; // killed before the failure fired
+        }
+        let a = self.retire_attempt(attempt);
+        self.phases.wasted += (t - a.start_s).max(0.0);
+        let (failures, orphaned) = {
+            let ts = match a.kind {
+                TaskKind::Map => &mut self.map_tasks[a.task],
+                TaskKind::Reduce => &mut self.red_tasks[a.task],
+            };
+            ts.running.retain(|&x| x != attempt);
+            ts.failed_attempts += 1;
+            (ts.failed_attempts, !ts.completed && ts.running.is_empty())
+        };
+        match a.kind {
+            TaskKind::Map => self.counters.map_failures += 1,
+            TaskKind::Reduce => self.counters.reduce_failures += 1,
+        }
+        self.counters.max_task_failures = self.counters.max_task_failures.max(failures);
+        if failures >= self.opts.scenario.max_attempts {
+            // Hadoop kills the job once one task exhausts its attempts.
+            self.aborted = true;
+            return;
+        }
+        if orphaned {
+            // Retry on the slot that just freed: deterministic, and the
+            // extra work lands on the same chain the healthy run used.
+            match a.kind {
+                TaskKind::Map => self.launch_map_on(a.slot, a.task, false),
+                TaskKind::Reduce => self.launch_reduce_on(a.slot, a.task, false),
+            }
+        } else {
+            // A live copy keeps running; reuse the freed slot elsewhere.
+            match a.kind {
+                TaskKind::Map => self.fill_map_slots(),
+                TaskKind::Reduce => self.fill_reduce_slots(),
+            }
+        }
+    }
+
+    fn on_node_down(&mut self, crash: usize, t: f64) {
+        let node = self.opts.scenario.node_crashes[crash].node;
+        if (node as usize) >= self.node_dead.len() || self.node_dead[node as usize] {
+            return;
+        }
+        self.node_dead[node as usize] = true;
+        self.counters.nodes_lost += 1;
+        for s in self.map_slots.iter_mut().chain(self.reduce_slots.iter_mut()) {
+            if s.node == node {
+                s.dead = true;
+            }
+        }
+        let victims: Vec<usize> = (0..self.attempts.len())
+            .filter(|&i| self.attempts[i].alive && self.attempts[i].node == node)
+            .collect();
+        for id in victims {
+            self.kill_attempt(id, t);
+            let (kind, task) = (self.attempts[id].kind, self.attempts[id].task);
+            let orphaned = {
+                let ts = match kind {
+                    TaskKind::Map => &mut self.map_tasks[task],
+                    TaskKind::Reduce => &mut self.red_tasks[task],
+                };
+                ts.running.retain(|&x| x != id);
+                !ts.completed && ts.running.is_empty()
+            };
+            if orphaned {
+                match kind {
+                    TaskKind::Map => {
+                        // Re-queue the lost split, locality-first on the
+                        // surviving replica holders.
+                        self.map_assigned[task] = false;
+                        self.maps_launched = self.maps_launched.saturating_sub(1);
+                        let replicas = self.file.blocks[task].replicas.clone();
+                        for r in replicas {
+                            if !self.node_dead[r as usize] {
+                                self.node_pending[r as usize].push(task);
+                            }
+                        }
+                        self.pending_maps.push(task);
+                    }
+                    TaskKind::Reduce => self.pending_reduces.push(task),
+                }
+            }
+        }
+        self.fill_map_slots();
+        self.fill_reduce_slots();
     }
 
     fn run(mut self) -> JobRunResult {
+        let crash_schedule: Vec<(usize, f64)> = self
+            .opts
+            .scenario
+            .node_crashes
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| (c.node as usize) < self.node_dead.len())
+            .map(|(i, c)| (i, c.at_s))
+            .collect();
+        for (i, at) in crash_schedule {
+            self.q.schedule(at, Event::NodeDown { crash: i });
+        }
         self.q.schedule(JOB_SETUP_S, Event::InitialFill);
-        let slowstart = self.config.effective_slowstart();
 
         while let Some((t, ev)) = self.q.pop() {
             match ev {
                 Event::InitialFill => {
-                    for i in 0..self.map_slots.len() {
-                        if !self.launch_map(i) {
-                            break;
-                        }
-                    }
+                    self.job_started = true;
+                    self.fill_map_slots();
                     // degenerate: a job with zero map output still runs
                     if self.n_maps == 0 {
                         self.maps_done_s = t;
+                        self.reduce_phase_started = true;
+                        self.fill_reduce_slots();
                     }
                 }
-                Event::MapDone { slot, task } => {
-                    self.maps_completed += 1;
-                    self.maps_done_s = t;
-                    let node = self.map_slots[slot].node;
-                    self.tracker.release(node, Resource::Cpu);
-                    self.tracker.release(node, Resource::Disk);
-                    if !self.map_task_local[task] {
-                        self.tracker.release(node, Resource::Net);
-                    }
-                    if self.slowstart_cross_s.is_none()
-                        && self.maps_completed as f64 / self.n_maps as f64 >= slowstart
-                    {
-                        self.slowstart_cross_s = Some(t);
-                    }
-                    self.launch_map(slot);
-                    if self.maps_completed == self.n_maps {
-                        if self.slowstart_cross_s.is_none() {
-                            self.slowstart_cross_s = Some(t);
-                        }
-                        // launch the first reduce wave
-                        for i in 0..self.reduce_slots.len() {
-                            if !self.launch_reduce(i) {
-                                break;
-                            }
-                        }
-                    }
+                Event::TaskDone { attempt } => self.on_task_done(attempt, t),
+                Event::TaskFailed { attempt } => self.on_task_failed(attempt, t),
+                Event::NodeDown { crash } => self.on_node_down(crash, t),
+                Event::SpeculativeLaunch { kind } => {
+                    self.spec_scheduled[kind_index(kind)] = false;
+                    self.run_speculation(kind, t);
                 }
-                Event::ReduceDone { slot } => {
-                    self.last_reduce_done_s = t;
-                    let node = self.reduce_slots[slot].node;
-                    self.tracker.release(node, Resource::Cpu);
-                    self.tracker.release(node, Resource::Disk);
-                    self.tracker.release(node, Resource::Net);
-                    self.launch_reduce(slot);
-                }
+            }
+            if self.aborted {
+                break;
             }
         }
 
-        let exec = self.last_reduce_done_s.max(self.maps_done_s) + JOB_CLEANUP_S;
+        if self.aborted {
+            // The job kill terminates every in-flight attempt; charge their
+            // partial work as waste exactly like any other kill, so the
+            // failed run's phase breakdown stays consistent.
+            let now = self.q.now();
+            let live: Vec<usize> =
+                (0..self.attempts.len()).filter(|&i| self.attempts[i].alive).collect();
+            for id in live {
+                self.kill_attempt(id, now);
+            }
+        }
+
+        let complete =
+            self.maps_completed == self.n_maps && self.reduces_completed == self.n_reduces;
+        let job_failed = self.aborted || !complete;
+        let end = if complete {
+            self.last_reduce_done_s.max(self.maps_done_s)
+        } else {
+            self.q.now().max(self.maps_done_s)
+        };
         JobRunResult {
-            exec_time_s: exec,
+            exec_time_s: end + JOB_CLEANUP_S,
             phases: self.phases,
             counters: self.counters,
             maps_done_s: self.maps_done_s,
+            job_failed,
         }
     }
 }
@@ -433,6 +927,10 @@ mod tests {
         }
     }
 
+    fn o(seed: u64, noise: bool) -> SimOptions {
+        SimOptions { seed, noise, ..Default::default() }
+    }
+
     #[test]
     fn runs_to_completion() {
         let cluster = ClusterSpec::paper_cluster();
@@ -442,14 +940,21 @@ mod tests {
         assert!(r.exec_time_s > JOB_SETUP_S);
         assert_eq!(r.counters.n_maps, 32); // 4 GB / 128 MB
         assert_eq!(r.counters.n_reduces, 1);
+        assert!(!r.job_failed);
+        // benign runs register one attempt per task, nothing scenario-ish
+        assert_eq!(r.counters.map_attempts, 32);
+        assert_eq!(r.counters.map_successes, 32);
+        assert_eq!(r.counters.reduce_successes, 1);
+        assert_eq!(r.counters.map_failures + r.counters.killed_attempts, 0);
+        assert_eq!(r.phases.wasted, 0.0);
     }
 
     #[test]
     fn deterministic_per_seed() {
         let cluster = ClusterSpec::paper_cluster();
         let cfg = ParameterSpace::v1().default_config();
-        let a = simulate(&cluster, &cfg, &workload(), &SimOptions { seed: 7, noise: true });
-        let b = simulate(&cluster, &cfg, &workload(), &SimOptions { seed: 7, noise: true });
+        let a = simulate(&cluster, &cfg, &workload(), &o(7, true));
+        let b = simulate(&cluster, &cfg, &workload(), &o(7, true));
         assert_eq!(a.exec_time_s, b.exec_time_s);
         assert_eq!(a.counters, b.counters);
     }
@@ -458,8 +963,8 @@ mod tests {
     fn noise_changes_between_seeds() {
         let cluster = ClusterSpec::paper_cluster();
         let cfg = ParameterSpace::v1().default_config();
-        let a = simulate(&cluster, &cfg, &workload(), &SimOptions { seed: 1, noise: true });
-        let b = simulate(&cluster, &cfg, &workload(), &SimOptions { seed: 2, noise: true });
+        let a = simulate(&cluster, &cfg, &workload(), &o(1, true));
+        let b = simulate(&cluster, &cfg, &workload(), &o(2, true));
         assert_ne!(a.exec_time_s, b.exec_time_s);
         let ratio = a.exec_time_s / b.exec_time_s;
         assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
@@ -469,7 +974,7 @@ mod tests {
     fn more_reducers_help_shuffle_heavy_job() {
         let cluster = ClusterSpec::paper_cluster();
         let mut cfg = ParameterSpace::v1().default_config();
-        let opts = SimOptions { seed: 3, noise: false };
+        let opts = o(3, false);
         let single = simulate(&cluster, &cfg, &workload(), &opts);
         cfg.reduce_tasks = 48;
         let many = simulate(&cluster, &cfg, &workload(), &opts);
@@ -485,7 +990,7 @@ mod tests {
     fn maps_finish_before_job_ends() {
         let cluster = ClusterSpec::paper_cluster();
         let cfg = ParameterSpace::v1().default_config();
-        let r = simulate(&cluster, &cfg, &workload(), &SimOptions { seed: 5, noise: false });
+        let r = simulate(&cluster, &cfg, &workload(), &o(5, false));
         assert!(r.maps_done_s < r.exec_time_s);
         assert!(r.counters.data_local_maps > r.counters.n_maps / 2);
     }
@@ -495,7 +1000,7 @@ mod tests {
         let cluster = ClusterSpec::paper_cluster();
         let mut cfg = ParameterSpace::v1().default_config();
         cfg.reduce_tasks = 100;
-        let r = simulate(&cluster, &cfg, &workload(), &SimOptions { seed: 5, noise: false });
+        let r = simulate(&cluster, &cfg, &workload(), &o(5, false));
         assert_eq!(r.counters.map_waves, 1); // 32 maps on 72 slots
         assert_eq!(r.counters.reduce_waves, 3); // 100 on 48 slots
     }
@@ -507,7 +1012,7 @@ mod tests {
         let mut small = workload();
         small.input_bytes = 256 << 20; // 2 natural splits
         cfg.job_maps = 16;
-        let r = simulate(&cluster, &cfg, &small, &SimOptions { seed: 1, noise: false });
+        let r = simulate(&cluster, &cfg, &small, &o(1, false));
         assert_eq!(r.counters.n_maps, 16);
     }
 
@@ -517,7 +1022,7 @@ mod tests {
         let mut cfg = ParameterSpace::v2().default_config();
         let mut wl = workload();
         wl.input_bytes = 40 << 30; // many waves
-        let opts = SimOptions { seed: 2, noise: false };
+        let opts = o(2, false);
         let fresh = simulate(&cluster, &cfg, &wl, &opts);
         cfg.jvm_numtasks = 20;
         let reused = simulate(&cluster, &cfg, &wl, &opts);
@@ -531,7 +1036,7 @@ mod tests {
         cfg.reduce_tasks = 24;
         let mut wl = workload();
         wl.input_bytes = 20 << 30;
-        let opts = SimOptions { seed: 4, noise: false };
+        let opts = o(4, false);
         cfg.slowstart = 0.05;
         let early = simulate(&cluster, &cfg, &wl, &opts);
         cfg.slowstart = 1.0;
@@ -563,10 +1068,264 @@ mod tests {
         tuned.compress_map_output = true;
         let mut wl = workload();
         wl.input_bytes = 30 << 30; // the paper's terasort partial workload
-        let opts = SimOptions { seed: 11, noise: false };
+        let opts = o(11, false);
         let d = simulate(&cluster, &default, &wl, &opts);
         let t = simulate(&cluster, &tuned, &wl, &opts);
         let gain = 1.0 - t.exec_time_s / d.exec_time_s;
-        assert!(gain > 0.4, "gain only {:.1}% ({} -> {})", gain * 100.0, d.exec_time_s, t.exec_time_s);
+        assert!(
+            gain > 0.4,
+            "gain only {:.1}% ({} -> {})",
+            gain * 100.0,
+            d.exec_time_s,
+            t.exec_time_s
+        );
+    }
+
+    // -- scenario engine ---------------------------------------------------
+
+    #[test]
+    fn failure_injection_retries_every_split_to_success() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        // max_attempts far above what p=0.2 can exhaust: P(one task fails
+        // 10 times) = 0.2^10 ≈ 1e-7, so the job always completes.
+        let scenario = ScenarioSpec::default().with_failures(0.2).with_max_attempts(10);
+        let mut total_failures = 0;
+        for seed in 1..=8 {
+            let opts = SimOptions { seed, noise: true, scenario: scenario.clone() };
+            let r = simulate(&cluster, &cfg, &workload(), &opts);
+            assert!(!r.job_failed, "seed {seed} failed the job");
+            assert_eq!(r.counters.map_successes, r.counters.n_maps);
+            assert_eq!(r.counters.reduce_successes, r.counters.n_reduces);
+            assert!(r.counters.map_attempts >= r.counters.n_maps);
+            assert!(r.counters.max_task_failures < 10);
+            total_failures += r.counters.map_failures + r.counters.reduce_failures;
+            if r.counters.map_failures + r.counters.reduce_failures > 0 {
+                assert!(r.phases.wasted > 0.0, "failed attempts must waste work");
+            }
+        }
+        // 8 seeds × 33 attempts × p=0.2: zero failures overall is impossible
+        assert!(total_failures > 0, "no failures injected across 8 seeds");
+    }
+
+    #[test]
+    fn failure_counters_conserve_data_flow() {
+        // Byte/record counters come from successful attempts only, so a
+        // faulty run moves exactly the data of its benign twin.
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let benign = simulate(&cluster, &cfg, &workload(), &o(17, true));
+        let scenario = ScenarioSpec::default().with_failures(0.25).with_max_attempts(12);
+        let faulty = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 17, noise: true, scenario },
+        );
+        assert!(!faulty.job_failed);
+        let (b, f) = (&benign.counters, &faulty.counters);
+        assert_eq!(b.map_output_bytes, f.map_output_bytes);
+        assert_eq!(b.shuffled_bytes, f.shuffled_bytes);
+        assert_eq!(b.output_bytes, f.output_bytes);
+        assert_eq!(b.spilled_records, f.spilled_records);
+        assert_eq!(b.spilled_files, f.spilled_files);
+        assert_eq!(b.reduce_spilled_bytes, f.reduce_spilled_bytes);
+    }
+
+    #[test]
+    fn job_fails_when_attempts_exhausted() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let scenario = ScenarioSpec::default().with_failures(1.0).with_max_attempts(2);
+        let r = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 1, noise: true, scenario },
+        );
+        assert!(r.job_failed);
+        assert_eq!(r.counters.max_task_failures, 2);
+        assert_eq!(r.counters.map_successes, 0);
+        assert!(r.exec_time_s.is_finite() && r.exec_time_s > 0.0);
+        // the job kill terminates the other in-flight attempts and charges
+        // their partial work as waste (32 maps were running at abort time)
+        assert!(r.counters.killed_attempts > 0, "abort left live attempts unaccounted");
+        assert!(r.phases.wasted > 0.0);
+    }
+
+    #[test]
+    fn node_crash_requeues_lost_splits() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let benign = simulate(&cluster, &cfg, &workload(), &o(9, false));
+        // crash one node mid-map-phase: its running work re-queues and the
+        // job still processes every split exactly once
+        let scenario = ScenarioSpec::default().with_crash(JOB_SETUP_S + 10.0, 3);
+        let r = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 9, noise: false, scenario },
+        );
+        assert!(!r.job_failed);
+        assert_eq!(r.counters.nodes_lost, 1);
+        assert_eq!(r.counters.map_successes, r.counters.n_maps);
+        assert_eq!(r.counters.reduce_successes, r.counters.n_reduces);
+        // losing capacity + re-running work cannot beat the healthy cluster
+        // by more than scheduling-anomaly jitter
+        assert!(
+            r.exec_time_s > benign.exec_time_s * 0.95,
+            "crash run {} vs benign {}",
+            r.exec_time_s,
+            benign.exec_time_s
+        );
+    }
+
+    #[test]
+    fn crash_before_job_setup_does_not_start_the_job_early() {
+        // A NodeDown event popped before InitialFill must not launch the
+        // map wave at crash time: with a tiny single-split job whose task
+        // never touches the crashed node, the run is identical to benign.
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let mut tiny = workload();
+        tiny.input_bytes = 1 << 20; // one split, well under one block
+        let benign = simulate(&cluster, &cfg, &tiny, &o(6, false));
+        let scenario = ScenarioSpec::default().with_crash(0.5, 3);
+        let crashed = simulate(
+            &cluster,
+            &cfg,
+            &tiny,
+            &SimOptions { seed: 6, noise: false, scenario },
+        );
+        assert!(!crashed.job_failed);
+        assert_eq!(crashed.counters.nodes_lost, 1);
+        assert_eq!(
+            crashed.exec_time_s, benign.exec_time_s,
+            "crash before job setup changed the schedule"
+        );
+    }
+
+    #[test]
+    fn losing_every_node_fails_the_job() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let mut scenario = ScenarioSpec::default();
+        for node in 0..cluster.workers() {
+            scenario = scenario.with_crash(JOB_SETUP_S + 5.0, node);
+        }
+        let r = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 2, noise: false, scenario },
+        );
+        assert!(r.job_failed);
+        assert_eq!(r.counters.nodes_lost as u32, cluster.workers());
+        assert!(r.exec_time_s.is_finite());
+    }
+
+    #[test]
+    fn slow_nodes_stretch_the_makespan() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let benign = simulate(&cluster, &cfg, &workload(), &o(4, false));
+        let scenario = ScenarioSpec::default()
+            .with_slow_node(0, 0.5)
+            .with_slow_node(1, 0.5)
+            .with_slow_node(2, 0.5)
+            .with_slow_node(3, 0.5)
+            .with_slow_node(4, 0.5);
+        let slow = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 4, noise: false, scenario },
+        );
+        assert!(
+            slow.exec_time_s > benign.exec_time_s * 1.02,
+            "slow fleet {} vs homogeneous {}",
+            slow.exec_time_s,
+            benign.exec_time_s
+        );
+    }
+
+    #[test]
+    fn cluster_node_overrides_slow_the_job() {
+        // Heterogeneity through ClusterSpec hardware overrides (not just
+        // scenario speed factors): slower disks/CPU on five workers.
+        use crate::cluster::NodeSpec;
+        let cfg = ParameterSpace::v1().default_config();
+        let homo = ClusterSpec::paper_cluster();
+        let benign = simulate(&homo, &cfg, &workload(), &o(6, false));
+        let old_gen = NodeSpec {
+            cpu_ops_per_sec: 1.0e8,
+            disk_bw: 60.0e6,
+            ..NodeSpec::default()
+        };
+        let mut hetero = ClusterSpec::paper_cluster();
+        for node in 0..5 {
+            hetero = hetero.with_node_override(node, old_gen.clone());
+        }
+        let slow = simulate(&hetero, &cfg, &workload(), &o(6, false));
+        assert!(
+            slow.exec_time_s > benign.exec_time_s * 1.02,
+            "hetero {} vs homo {}",
+            slow.exec_time_s,
+            benign.exec_time_s
+        );
+    }
+
+    #[test]
+    fn speculation_rescues_straggler_nodes() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        // Nodes 0 and 1 run at quarter speed. The first slot-fill row places
+        // one map on every node, so the stragglers always carry work.
+        let hetero = ScenarioSpec::default().with_slow_node(0, 0.25).with_slow_node(1, 0.25);
+        let no_spec = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 8, noise: false, scenario: hetero.clone() },
+        );
+        let with_spec = simulate(
+            &cluster,
+            &cfg,
+            &workload(),
+            &SimOptions { seed: 8, noise: false, scenario: hetero.with_speculation(true) },
+        );
+        assert!(!with_spec.job_failed);
+        assert!(with_spec.counters.speculative_launches > 0, "no backups launched");
+        assert!(with_spec.counters.speculative_wins > 0, "no backup won its race");
+        // every win kills the losing original
+        assert!(with_spec.counters.killed_attempts >= with_spec.counters.speculative_wins);
+        assert_eq!(with_spec.counters.map_successes, with_spec.counters.n_maps);
+        assert!(
+            with_spec.exec_time_s < no_spec.exec_time_s * 0.9,
+            "speculation {} vs none {}",
+            with_spec.exec_time_s,
+            no_spec.exec_time_s
+        );
+        assert!(with_spec.phases.wasted > 0.0, "killed copies must show as waste");
+    }
+
+    #[test]
+    fn scenario_runs_are_deterministic() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let scenario = ScenarioSpec::default()
+            .with_failures(0.15)
+            .with_max_attempts(10)
+            .with_crash(60.0, 2)
+            .with_slow_node(5, 0.5)
+            .with_speculation(true);
+        let opts = SimOptions { seed: 23, noise: true, scenario };
+        let a = simulate(&cluster, &cfg, &workload(), &opts);
+        let b = simulate(&cluster, &cfg, &workload(), &opts);
+        assert_eq!(a.exec_time_s, b.exec_time_s);
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.phases, b.phases);
+        assert_eq!(a.job_failed, b.job_failed);
     }
 }

@@ -18,6 +18,9 @@ pub struct PhaseBreakdown {
     pub reduce_merge: f64,
     pub reduce_cpu: f64,
     pub output_write: f64,
+    /// Work thrown away by the scenario engine: failed attempts up to their
+    /// failure point, and speculative/node-loss kills up to the kill.
+    pub wasted: f64,
 }
 
 impl PhaseBreakdown {
@@ -31,6 +34,7 @@ impl PhaseBreakdown {
             + self.reduce_merge
             + self.reduce_cpu
             + self.output_write
+            + self.wasted
     }
 
     pub fn add(&mut self, other: &PhaseBreakdown) {
@@ -43,6 +47,7 @@ impl PhaseBreakdown {
         self.reduce_merge += other.reduce_merge;
         self.reduce_cpu += other.reduce_cpu;
         self.output_write += other.output_write;
+        self.wasted += other.wasted;
     }
 
     /// (label, seconds) rows for display, largest first.
@@ -57,6 +62,7 @@ impl PhaseBreakdown {
             ("reduce merge", self.reduce_merge),
             ("reduce cpu", self.reduce_cpu),
             ("output write", self.output_write),
+            ("wasted (failed/killed attempts)", self.wasted),
         ];
         v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         v
@@ -82,6 +88,32 @@ pub struct SimCounters {
     pub output_bytes: u64,
     /// Map tasks that read their split from a local replica.
     pub data_local_maps: u64,
+
+    // -- scenario-engine counters (all zero on a benign run) ---------------
+    /// Map attempts launched (originals + retries + speculative copies).
+    pub map_attempts: u64,
+    /// Reduce attempts launched.
+    pub reduce_attempts: u64,
+    /// Map tasks that completed successfully (== n_maps unless the job
+    /// failed; each split is processed exactly once).
+    pub map_successes: u64,
+    /// Reduce tasks that completed successfully.
+    pub reduce_successes: u64,
+    /// Map attempts that failed mid-run (fault injection).
+    pub map_failures: u64,
+    /// Reduce attempts that failed mid-run.
+    pub reduce_failures: u64,
+    /// The most failed attempts accumulated by any single task — never
+    /// exceeds the scenario's `max_attempts`.
+    pub max_task_failures: u64,
+    /// Speculative backup copies launched.
+    pub speculative_launches: u64,
+    /// Backup copies that finished before their original.
+    pub speculative_wins: u64,
+    /// Attempts killed (losing speculation copies + node-loss victims).
+    pub killed_attempts: u64,
+    /// Workers permanently lost to scheduled crashes.
+    pub nodes_lost: u64,
 }
 
 /// Result of one simulated job execution.
@@ -93,18 +125,48 @@ pub struct JobRunResult {
     pub counters: SimCounters,
     /// Time the last map task finished (start of the reduce-only tail).
     pub maps_done_s: f64,
+    /// True when the job did not complete: a task exhausted the scenario's
+    /// `max_attempts`, or node losses left work unplaceable. The objective
+    /// layer penalizes failed runs.
+    pub job_failed: bool,
 }
 
 impl JobRunResult {
+    /// Fraction of the job's tasks that completed successfully, in
+    /// (0, 1]. Used to extrapolate an aborted run's truncated makespan to
+    /// a full-job estimate: an early abort stops the clock long before a
+    /// completed run would, so the raw `exec_time_s` of a failed job says
+    /// nothing about how expensive finishing would have been.
+    pub fn progress(&self) -> f64 {
+        let done = self.counters.map_successes + self.counters.reduce_successes;
+        let total = self.counters.n_maps + self.counters.n_reduces;
+        (((done + 1) as f64) / ((total + 1) as f64)).clamp(1e-3, 1.0)
+    }
+
     /// Human-readable run report (used by `repro run` and cluster_trace).
     pub fn report(&self) -> String {
         let c = &self.counters;
         let mut s = String::new();
         s.push_str(&format!("job time: {}\n", fmt_secs(self.exec_time_s)));
+        if self.job_failed {
+            s.push_str("JOB FAILED (max.attempts exhausted or cluster lost)\n");
+        }
         s.push_str(&format!(
             "maps: {} ({} waves, {} data-local)   reduces: {} ({} waves)\n",
             c.n_maps, c.map_waves, c.data_local_maps, c.n_reduces, c.reduce_waves
         ));
+        if c.map_failures + c.reduce_failures + c.speculative_launches + c.nodes_lost > 0 {
+            s.push_str(&format!(
+                "scenario: {} map / {} reduce attempt failures   {} speculative \
+                 ({} won)   {} killed   {} nodes lost\n",
+                c.map_failures,
+                c.reduce_failures,
+                c.speculative_launches,
+                c.speculative_wins,
+                c.killed_attempts,
+                c.nodes_lost,
+            ));
+        }
         s.push_str(&format!(
             "map output: {}   shuffled: {}   spill files: {}   spilled records: {}\n",
             fmt_bytes(c.map_output_bytes),
@@ -155,9 +217,35 @@ mod tests {
             phases: PhaseBreakdown::default(),
             counters: SimCounters { n_maps: 10, n_reduces: 4, ..Default::default() },
             maps_done_s: 100.0,
+            job_failed: false,
         };
         let rep = r.report();
         assert!(rep.contains("maps: 10"));
         assert!(rep.contains("reduces: 4"));
+        assert!(!rep.contains("scenario:"), "benign run must not print scenario line");
+    }
+
+    #[test]
+    fn report_surfaces_scenario_outcomes() {
+        let r = JobRunResult {
+            exec_time_s: 99.0,
+            phases: PhaseBreakdown { wasted: 12.0, ..Default::default() },
+            counters: SimCounters {
+                n_maps: 8,
+                n_reduces: 2,
+                map_failures: 3,
+                speculative_launches: 2,
+                speculative_wins: 1,
+                nodes_lost: 1,
+                ..Default::default()
+            },
+            maps_done_s: 50.0,
+            job_failed: true,
+        };
+        let rep = r.report();
+        assert!(rep.contains("JOB FAILED"));
+        assert!(rep.contains("3 map"));
+        assert!(rep.contains("1 nodes lost"));
+        assert!(rep.contains("wasted"));
     }
 }

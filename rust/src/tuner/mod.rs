@@ -4,7 +4,7 @@
 pub mod objective;
 pub mod spsa;
 
-pub use objective::{Metric, Objective, QuadraticObjective, SimObjective};
+pub use objective::{Metric, Objective, ObsAgg, QuadraticObjective, SimObjective};
 pub use spsa::{
     IterRecord, Spsa, SpsaConfig, SpsaState, SpsaVariant, StopReason, TuningResult,
 };

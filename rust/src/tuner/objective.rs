@@ -3,7 +3,9 @@
 
 use crate::cluster::ClusterSpec;
 use crate::config::ParameterSpace;
-use crate::sim::{simulate, SimOptions};
+use crate::sim::constants::FAILED_JOB_PENALTY;
+use crate::sim::{simulate, JobRunResult, ScenarioSpec, SimOptions};
+use crate::util::stats::percentile;
 use crate::workloads::WorkloadProfile;
 
 /// A tunable system observed through its scalar performance.
@@ -72,6 +74,43 @@ impl Metric {
             Metric::ReduceSpill => r.counters.reduce_spilled_bytes as f64 + 1.0,
         }
     }
+
+    /// Objective-facing score: the raw metric for a completed run; for a
+    /// failed job, a value guaranteed to exceed any completed run's.
+    ///
+    /// Execution time of an aborted run scales with how far the job got,
+    /// so dividing by [`crate::sim::JobRunResult::progress`] reconstructs
+    /// a full-job estimate before the [`FAILED_JOB_PENALTY`] multiplier —
+    /// even an abort seconds into a multi-hour job scores worse than
+    /// completing. Byte/record counters commit on success only and shrink
+    /// toward zero as the abort gets earlier, so no extrapolation can
+    /// recover their scale; those metrics score a graded sentinel instead
+    /// (nearly-finishing configurations still compare better than
+    /// instantly-dying ones).
+    pub fn score(&self, r: &crate::sim::JobRunResult) -> f64 {
+        let v = self.extract(r);
+        if !r.job_failed {
+            return v;
+        }
+        match self {
+            Metric::ExecTime => v / r.progress() * FAILED_JOB_PENALTY,
+            Metric::SpilledRecords | Metric::ShuffledBytes | Metric::ReduceSpill => {
+                crate::sim::constants::FAILED_METRIC_SENTINEL * (2.0 - r.progress())
+            }
+        }
+    }
+}
+
+/// How one `eval` call aggregates simulated runs into a scalar observation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ObsAgg {
+    /// One simulated run per observation — the paper's setting.
+    Single,
+    /// `repeats` runs per observation, reduced at the `q`-th percentile.
+    /// Tail-aware tuning: under fault injection the mean hides re-execution
+    /// tails, so optimize p95 instead (`SimObjective::tail_p95`). The
+    /// repeated runs are independent jobs and fan across the worker pool.
+    Percentile { repeats: u64, q: f64 },
 }
 
 /// The real objective: a job statistic of the workload on the simulated
@@ -88,6 +127,11 @@ pub struct SimObjective {
     pub noise: bool,
     /// Statistic to minimize.
     pub metric: Metric,
+    /// Execution-substrate regime the observed cluster runs under
+    /// (failures, crashes, heterogeneity, speculation). Benign by default.
+    pub scenario: ScenarioSpec,
+    /// Runs-per-observation aggregation (`Single` = the paper's setting).
+    pub agg: ObsAgg,
     /// Worker threads for `eval_batch` (None → `HSPSA_WORKERS` env var,
     /// else all-but-one core). 1 = sequential.
     workers: Option<usize>,
@@ -108,6 +152,8 @@ impl SimObjective {
             base_seed,
             noise: true,
             metric: Metric::ExecTime,
+            scenario: ScenarioSpec::default(),
+            agg: ObsAgg::Single,
             workers: None,
             evals: 0,
         }
@@ -123,6 +169,25 @@ impl SimObjective {
         self
     }
 
+    /// Observe the system under a fault/heterogeneity scenario instead of
+    /// the benign cluster.
+    pub fn with_scenario(mut self, scenario: ScenarioSpec) -> Self {
+        self.scenario = scenario;
+        self
+    }
+
+    /// Set the runs-per-observation aggregation.
+    pub fn with_aggregate(mut self, agg: ObsAgg) -> Self {
+        self.agg = agg;
+        self
+    }
+
+    /// Tail-aware objective: each observation is the p95 of `repeats`
+    /// independent runs (re-execution tails dominate under failures).
+    pub fn tail_p95(self, repeats: u64) -> Self {
+        self.with_aggregate(ObsAgg::Percentile { repeats: repeats.max(1), q: 95.0 })
+    }
+
     /// Pin the `eval_batch` worker count (1 = always sequential). Without
     /// this, `HSPSA_WORKERS` / core count decide.
     pub fn with_workers(mut self, workers: usize) -> Self {
@@ -136,6 +201,39 @@ impl SimObjective {
     fn obs_seed(&self, k: u64) -> u64 {
         self.base_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(k)
     }
+
+    /// Options of the next simulated run, consuming one eval-counter slot.
+    fn next_opts(&mut self) -> SimOptions {
+        self.evals += 1;
+        SimOptions {
+            seed: self.obs_seed(self.evals),
+            noise: self.noise,
+            scenario: self.scenario.clone(),
+        }
+    }
+
+    /// Metric value of one run, with the failed-job penalty applied: a run
+    /// that exhausted `max.attempts` (or lost its cluster) must look far
+    /// worse to the tuner than any completed run (see [`Metric::score`]).
+    fn score(&self, r: &JobRunResult) -> f64 {
+        self.metric.score(r)
+    }
+
+    /// Number of simulated runs one observation consumes.
+    fn runs_per_obs(&self) -> u64 {
+        match self.agg {
+            ObsAgg::Single => 1,
+            ObsAgg::Percentile { repeats, .. } => repeats.max(1),
+        }
+    }
+
+    /// Reduce the scores of one observation's runs to the scalar f(θ).
+    fn aggregate(&self, scores: &[f64]) -> f64 {
+        match self.agg {
+            ObsAgg::Single => scores[0],
+            ObsAgg::Percentile { q, .. } => percentile(scores, q),
+        }
+    }
 }
 
 impl Objective for SimObjective {
@@ -144,15 +242,31 @@ impl Objective for SimObjective {
     }
 
     fn eval(&mut self, theta: &[f64]) -> f64 {
-        self.evals += 1;
         let config = self.space.materialize(theta);
-        let opts = SimOptions { seed: self.obs_seed(self.evals), noise: self.noise };
-        self.metric
-            .extract(&simulate(&self.cluster, &config, &self.workload, &opts))
+        match self.agg {
+            ObsAgg::Single => {
+                let opts = self.next_opts();
+                self.score(&simulate(&self.cluster, &config, &self.workload, &opts))
+            }
+            ObsAgg::Percentile { .. } => {
+                // the repeated runs of one observation are independent jobs
+                // and fan across the pool like any other batch
+                let jobs: Vec<crate::sim::SimJob> = (0..self.runs_per_obs())
+                    .map(|_| crate::sim::SimJob { config: config.clone(), opts: self.next_opts() })
+                    .collect();
+                let workers = crate::coordinator::pool::resolve_workers(self.workers);
+                let scores: Vec<f64> =
+                    crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers)
+                        .iter()
+                        .map(|r| self.score(r))
+                        .collect();
+                self.aggregate(&scores)
+            }
+        }
     }
 
-    /// Parallel override: one simulation per observation, fanned across
-    /// the coordinator pool. Seeds are derived from the observation index
+    /// Parallel override: one simulation per run, fanned across the
+    /// coordinator pool. Seeds are derived from the observation index
     /// *before* dispatch, so the result vector is bit-identical to the
     /// sequential `eval` loop for every worker count and independent of
     /// thread scheduling. Nested inside a campaign pool worker this
@@ -162,19 +276,22 @@ impl Objective for SimObjective {
         if workers <= 1 || thetas.len() <= 1 {
             return thetas.iter().map(|t| self.eval(t)).collect();
         }
+        let per_obs = self.runs_per_obs() as usize;
         let jobs: Vec<crate::sim::SimJob> = thetas
             .iter()
-            .map(|t| {
-                self.evals += 1;
-                crate::sim::SimJob {
-                    config: self.space.materialize(t),
-                    opts: SimOptions { seed: self.obs_seed(self.evals), noise: self.noise },
-                }
+            .flat_map(|t| {
+                let config = self.space.materialize(t);
+                (0..per_obs)
+                    .map(|_| crate::sim::SimJob { config: config.clone(), opts: self.next_opts() })
+                    .collect::<Vec<_>>()
             })
             .collect();
-        crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers)
-            .iter()
-            .map(|r| self.metric.extract(r))
+        let runs = crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers);
+        runs.chunks(per_obs)
+            .map(|chunk| {
+                let scores: Vec<f64> = chunk.iter().map(|r| self.score(r)).collect();
+                self.aggregate(&scores)
+            })
             .collect()
     }
 
@@ -340,6 +457,134 @@ mod tests {
         assert_eq!(Metric::from_name("spilled-records"), Some(Metric::SpilledRecords));
         assert_eq!(Metric::from_name("shuffle"), Some(Metric::ShuffledBytes));
         assert_eq!(Metric::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn scenario_objective_stays_deterministic_and_batched() {
+        // Observations under a fault scenario keep the eval_batch contract:
+        // element-for-element identical to the sequential loop, any workers.
+        let scenario = crate::sim::ScenarioSpec::default()
+            .with_failures(0.2)
+            .with_max_attempts(10)
+            .with_slow_node(2, 0.5)
+            .with_speculation(true);
+        let thetas = probe_thetas(5);
+        let mut batched = objective().with_scenario(scenario.clone()).with_workers(4);
+        let got = batched.eval_batch(&thetas);
+        let mut looped = objective().with_scenario(scenario).with_workers(1);
+        let want: Vec<f64> = thetas.iter().map(|t| looped.eval(t)).collect();
+        assert_eq!(got, want);
+        assert!(got.iter().all(|f| f.is_finite() && *f > 0.0));
+    }
+
+    #[test]
+    fn scenario_observations_cost_more_time() {
+        // Re-execution and retries make the observed objective worse than
+        // the benign cluster's at the same θ and seed.
+        let theta = objective().space.default_theta();
+        let mut benign = objective().noise_free();
+        let mut faulty = objective().noise_free().with_scenario(
+            crate::sim::ScenarioSpec::default().with_failures(0.3).with_max_attempts(12),
+        );
+        let fb = benign.eval(&theta);
+        let ff = faulty.eval(&theta);
+        assert!(ff >= fb * 0.95, "faulty {ff} vs benign {fb}");
+    }
+
+    #[test]
+    fn failed_jobs_are_penalized() {
+        // p=1.0 with max_attempts=2 kills every job: the tuner must see a
+        // value far above the benign one.
+        let theta = objective().space.default_theta();
+        let mut benign = objective().noise_free();
+        let mut doomed = objective().noise_free().with_scenario(
+            crate::sim::ScenarioSpec::default().with_failures(1.0).with_max_attempts(2),
+        );
+        let fb = benign.eval(&theta);
+        let fd = doomed.eval(&theta);
+        assert!(fd > fb, "failed job not penalized: {fd} vs {fb}");
+    }
+
+    #[test]
+    fn failed_jobs_dominate_for_counter_metrics_too() {
+        // Byte/record counters commit on success only, so an aborting run
+        // reports ~zero shuffled bytes — the sentinel must keep it scoring
+        // far above any completed run's real counter value.
+        let theta = objective().space.default_theta();
+        let mut completed = objective().noise_free().with_metric(Metric::ShuffledBytes);
+        let mut doomed = objective()
+            .noise_free()
+            .with_metric(Metric::ShuffledBytes)
+            .with_scenario(
+                crate::sim::ScenarioSpec::default().with_failures(1.0).with_max_attempts(2),
+            );
+        let fc = completed.eval(&theta);
+        let fd = doomed.eval(&theta);
+        assert!(fd > fc, "aborting config undercuts completed run: {fd} vs {fc}");
+    }
+
+    #[test]
+    fn early_abort_scores_worse_than_any_completed_run() {
+        // The sharp case: a multi-hour job that aborts seconds in. The raw
+        // abort-time makespan times the penalty constant could undercut a
+        // completed run; the progress extrapolation in Metric::score must
+        // keep the failed configuration strictly worse.
+        let mut rng = crate::util::rng::Rng::seeded(5);
+        let w = Benchmark::Terasort.profile_scaled(200_000, 30 << 30, &mut rng);
+        let make = || {
+            SimObjective::new(
+                ParameterSpace::v1(),
+                ClusterSpec::paper_cluster(),
+                w.clone(),
+                42,
+            )
+            .noise_free()
+        };
+        let theta = make().space.default_theta();
+        let completed = make().eval(&theta);
+        let aborted = make()
+            .with_scenario(
+                crate::sim::ScenarioSpec::default().with_failures(1.0).with_max_attempts(2),
+            )
+            .eval(&theta);
+        assert!(
+            aborted > completed,
+            "early abort ({aborted}) undercuts the completed run ({completed})"
+        );
+    }
+
+    #[test]
+    fn tail_p95_matches_manual_percentile_and_batches() {
+        use crate::util::stats::percentile;
+        let theta = objective().space.default_theta();
+        // manual: 9 single observations with the same seed stream
+        let mut single = objective();
+        let runs: Vec<f64> = (0..9).map(|_| single.eval(&theta)).collect();
+        let want = percentile(&runs, 95.0);
+        // one tail-aware observation consumes the same 9 runs
+        let mut tail = objective().tail_p95(9);
+        let got = tail.eval(&theta);
+        assert_eq!(got, want);
+        assert_eq!(tail.evals(), 9, "tail objective must account all runs");
+        // and the batched path agrees at any worker count
+        let thetas = probe_thetas(3);
+        let mut seq = objective().tail_p95(4).with_workers(1);
+        let mut par = objective().tail_p95(4).with_workers(4);
+        let a: Vec<f64> = thetas.iter().map(|t| seq.eval(t)).collect();
+        let b = par.eval_batch(&thetas);
+        assert_eq!(a, b);
+        assert_eq!(seq.evals(), par.evals());
+    }
+
+    #[test]
+    fn tail_p95_sits_in_the_right_tail() {
+        let theta = objective().space.default_theta();
+        let mut mean_like = objective();
+        let runs: Vec<f64> = (0..15).map(|_| mean_like.eval(&theta)).collect();
+        let mean = runs.iter().sum::<f64>() / runs.len() as f64;
+        let mut tail = objective().tail_p95(15);
+        let p95 = tail.eval(&theta);
+        assert!(p95 >= mean, "p95 {p95} below mean {mean}");
     }
 
     #[test]

@@ -658,6 +658,49 @@ mod tests {
     }
 
     #[test]
+    fn batched_trajectory_matches_sequential_under_scenario() {
+        // The PR-1 determinism contract extends to the scenario engine:
+        // with failures, a slow node and speculation all on (and noise ON —
+        // scenario fates and noise are keyed per attempt, not per stream),
+        // SPSA through the parallel objective traces exactly the 1-worker
+        // trajectory.
+        use crate::cluster::ClusterSpec;
+        use crate::sim::ScenarioSpec;
+        use crate::tuner::objective::SimObjective;
+        use crate::workloads::Benchmark;
+
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = crate::util::rng::Rng::seeded(6);
+        let w = Benchmark::Terasort.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let scenario = ScenarioSpec::default()
+            .with_failures(0.15)
+            .with_max_attempts(10)
+            .with_slow_node(1, 0.5)
+            .with_speculation(true);
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: 5, grad_avg: 3, seed: 4, ..Default::default() },
+            &space,
+        );
+
+        let run_with = |workers: usize| {
+            let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 13)
+                .with_scenario(scenario.clone())
+                .with_workers(workers);
+            spsa.run(&mut obj, space.default_theta())
+        };
+        let seq = run_with(1);
+        let par = run_with(4);
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.final_theta, par.final_theta);
+        for (a, b) in seq.history.iter().zip(&par.history) {
+            assert_eq!(a.f_theta, b.f_theta);
+            assert_eq!(a.grad_norm, b.grad_norm);
+            assert_eq!(a.theta, b.theta);
+        }
+    }
+
+    #[test]
     fn rdsa_variant_descends() {
         let mut cfg = quad_spsa(11).config;
         cfg.variant = SpsaVariant::Rdsa;

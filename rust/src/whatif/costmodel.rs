@@ -341,7 +341,7 @@ mod tests {
         let c = features(HadoopVersion::V1);
         let cluster = ClusterSpec::paper_cluster();
         let w = wl();
-        let opts = SimOptions { seed: 9, noise: false };
+        let opts = SimOptions { seed: 9, noise: false, ..Default::default() };
 
         let mut bad = space.default_theta();
         bad[7] = 0.0; // 1 reducer

@@ -54,8 +54,12 @@ impl Benchmark {
         }
     }
 
+    /// Parse a benchmark name. Case-insensitive, tolerant of surrounding
+    /// whitespace and of `-`/`_`/space separators, so the paper's display
+    /// labels ("Inverted Index", "Word Co-occurrence") and every `label()`
+    /// round-trip through CLI/experiment arguments.
     pub fn from_name(s: &str) -> Option<Benchmark> {
-        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+        match s.trim().to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
             "terasort" => Some(Benchmark::Terasort),
             "grep" => Some(Benchmark::Grep),
             "bigram" => Some(Benchmark::Bigram),
@@ -484,6 +488,24 @@ mod tests {
         assert_eq!(Benchmark::from_name("inverted-index"), Some(Benchmark::InvertedIndex));
         assert_eq!(Benchmark::from_name("word co-occurrence"), Some(Benchmark::WordCooccurrence));
         assert_eq!(Benchmark::from_name("nope"), None);
+    }
+
+    #[test]
+    fn every_label_round_trips_through_from_name() {
+        // CLI/experiment args carry `label()` strings (the paper's display
+        // names): parsing must invert labelling for every benchmark, in any
+        // case, with stray whitespace.
+        for b in Benchmark::all() {
+            let label = b.label();
+            assert_eq!(Benchmark::from_name(label), Some(b), "{label}");
+            assert_eq!(Benchmark::from_name(&label.to_uppercase()), Some(b), "{label} upper");
+            assert_eq!(Benchmark::from_name(&label.to_lowercase()), Some(b), "{label} lower");
+            assert_eq!(Benchmark::from_name(&format!("  {label} ")), Some(b), "{label} padded");
+            assert_eq!(Benchmark::from_name(&b.to_string()), Some(b), "{label} Display");
+        }
+        // the paper's exact table labels
+        assert_eq!(Benchmark::from_name("Inverted Index"), Some(Benchmark::InvertedIndex));
+        assert_eq!(Benchmark::from_name("Word Co-occurrence"), Some(Benchmark::WordCooccurrence));
     }
 
     #[test]

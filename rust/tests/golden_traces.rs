@@ -1,0 +1,226 @@
+//! Golden-trace snapshot tests: fixed-seed digests (makespan, phase
+//! breakdown, counters) for all 5 paper benchmarks × both Hadoop versions
+//! × {benign, 5%-failure scenario} — the regression net every future
+//! simulator PR runs against.
+//!
+//! Fixtures live in `rust/tests/golden/traces.tsv`. The suite is
+//! self-sealing: cases missing from the fixture file are recorded on the
+//! first run (commit the updated file); recorded cases are enforced
+//! bit-exactly, with a per-field readable diff on mismatch. To accept an
+//! intentional simulator change, rerun with `GOLDEN_REGEN=1` and commit
+//! the rewritten fixtures.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+
+use hadoop_spsa::cluster::ClusterSpec;
+use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
+use hadoop_spsa::coordinator::profile_for;
+use hadoop_spsa::sim::{simulate, JobRunResult, ScenarioSpec, SimOptions};
+use hadoop_spsa::workloads::Benchmark;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/traces.tsv")
+}
+
+/// The 5%-failure scenario tier of the golden matrix: failures + two slow
+/// nodes + one mid-job node crash + speculation.
+fn faulty_scenario() -> ScenarioSpec {
+    ScenarioSpec::default()
+        .with_failures(0.05)
+        .with_max_attempts(8)
+        .with_slow_node(2, 0.6)
+        .with_slow_node(5, 0.7)
+        .with_crash(240.0, 1)
+        .with_speculation(true)
+}
+
+/// Bit-exact, human-scannable digest of one run. Float fields carry their
+/// raw bit pattern (the byte-stability contract) plus a readable value.
+fn digest(r: &JobRunResult) -> String {
+    let c = &r.counters;
+    format!(
+        "exec={:016x}({:.3}s) phases={:016x} wasted={:016x} \
+         maps={}/{} reds={}/{} waves={}:{} spills={} spilled_recs={} \
+         map_out={} shuffled={} red_spill={} out={} local={} \
+         attempts={}:{} fails={}:{} maxfail={} spec={}:{} killed={} \
+         nodes_lost={} failed={}",
+        r.exec_time_s.to_bits(),
+        r.exec_time_s,
+        r.phases.total().to_bits(),
+        r.phases.wasted.to_bits(),
+        c.map_successes,
+        c.n_maps,
+        c.reduce_successes,
+        c.n_reduces,
+        c.map_waves,
+        c.reduce_waves,
+        c.spilled_files,
+        c.spilled_records,
+        c.map_output_bytes,
+        c.shuffled_bytes,
+        c.reduce_spilled_bytes,
+        c.output_bytes,
+        c.data_local_maps,
+        c.map_attempts,
+        c.reduce_attempts,
+        c.map_failures,
+        c.reduce_failures,
+        c.max_task_failures,
+        c.speculative_launches,
+        c.speculative_wins,
+        c.killed_attempts,
+        c.nodes_lost,
+        r.job_failed,
+    )
+}
+
+/// Compute the full golden matrix: key → digest.
+fn compute_matrix() -> BTreeMap<String, String> {
+    let cluster = ClusterSpec::paper_cluster();
+    let mut out = BTreeMap::new();
+    for (vtag, version) in [("v1", HadoopVersion::V1), ("v2", HadoopVersion::V2)] {
+        let space = ParameterSpace::for_version(version);
+        let config = space.default_config();
+        for bench in Benchmark::all() {
+            let w = profile_for(bench, 1000);
+            for (stag, scenario) in
+                [("benign", ScenarioSpec::default()), ("fail5", faulty_scenario())]
+            {
+                let opts = SimOptions { seed: 42, noise: true, scenario };
+                let r = simulate(&cluster, &config, &w, &opts);
+                let key = format!("{vtag}/{}/{stag}", bench.label().replace(' ', "_"));
+                out.insert(key, digest(&r));
+            }
+        }
+    }
+    out
+}
+
+fn load_fixtures() -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let Ok(text) = fs::read_to_string(fixture_path()) else {
+        return out;
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((key, digest)) = line.split_once('\t') {
+            out.insert(key.to_string(), digest.to_string());
+        }
+    }
+    out
+}
+
+fn write_fixtures(map: &BTreeMap<String, String>) {
+    let path = fixture_path();
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir).expect("create golden dir");
+    }
+    let mut text = String::from(
+        "# Golden simulator traces — seed 42, paper cluster, default configs.\n\
+         # One line per case: <version>/<benchmark>/<scenario>\\t<digest>.\n\
+         # Regenerate intentionally with: GOLDEN_REGEN=1 cargo test --test golden_traces\n",
+    );
+    for (k, v) in map {
+        text.push_str(k);
+        text.push('\t');
+        text.push_str(v);
+        text.push('\n');
+    }
+    fs::write(&path, text).expect("write golden fixtures");
+}
+
+/// Print a per-field diff of two digests (they are whitespace-separated
+/// `name=value` tokens).
+fn print_field_diff(key: &str, want: &str, got: &str) {
+    eprintln!("golden trace mismatch for {key}:");
+    let (wt, gt): (Vec<&str>, Vec<&str>) =
+        (want.split_whitespace().collect(), got.split_whitespace().collect());
+    for i in 0..wt.len().max(gt.len()) {
+        let w = wt.get(i).copied().unwrap_or("<missing>");
+        let g = gt.get(i).copied().unwrap_or("<missing>");
+        if w != g {
+            let name = w.split('=').next().unwrap_or("?");
+            eprintln!("  {name:<14} expected {w}");
+            eprintln!("  {name:<14} got      {g}");
+        }
+    }
+    eprintln!("  full expected: {want}");
+    eprintln!("  full got:      {got}");
+}
+
+#[test]
+fn golden_traces_match_fixtures() {
+    let computed = compute_matrix();
+    assert_eq!(computed.len(), 20, "5 benchmarks × 2 versions × 2 scenarios");
+
+    if std::env::var("GOLDEN_REGEN").is_ok() {
+        write_fixtures(&computed);
+        println!("GOLDEN_REGEN set: rewrote {} fixtures", computed.len());
+        return;
+    }
+
+    let recorded = load_fixtures();
+    let mut mismatches = 0;
+    let mut fresh = 0;
+    let mut merged = recorded.clone();
+    for (key, got) in &computed {
+        match recorded.get(key) {
+            Some(want) if want == got => {}
+            Some(want) => {
+                print_field_diff(key, want, got);
+                mismatches += 1;
+            }
+            None => {
+                merged.insert(key.clone(), got.clone());
+                fresh += 1;
+            }
+        }
+    }
+    assert_eq!(
+        mismatches, 0,
+        "{mismatches} golden trace(s) diverged — if the simulator change is \
+         intentional, regenerate with GOLDEN_REGEN=1 and commit the fixtures"
+    );
+    if fresh > 0 {
+        write_fixtures(&merged);
+        println!(
+            "recorded {fresh} new golden fixture(s) — commit rust/tests/golden/traces.tsv"
+        );
+    }
+}
+
+#[test]
+fn golden_matrix_is_stable_within_process() {
+    // Two computations must agree bit-for-bit (the cross-run byte-stability
+    // contract, verifiable in-process).
+    let a = compute_matrix();
+    let b = compute_matrix();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn scenario_digests_differ_from_benign() {
+    let m = compute_matrix();
+    for (vtag, bench) in [("v1", "Terasort"), ("v2", "Grep")] {
+        let benign = &m[&format!("{vtag}/{bench}/benign")];
+        let faulty = &m[&format!("{vtag}/{bench}/fail5")];
+        assert_ne!(benign, faulty, "{vtag}/{bench}: scenario left no trace");
+    }
+}
+
+#[test]
+fn golden_jobs_all_complete() {
+    // p=0.05 with max_attempts=8 cannot exhaust a task (p^8 ≈ 4e-11): every
+    // golden case must finish and process each split exactly once.
+    for (key, digest) in compute_matrix() {
+        assert!(digest.contains("failed=false"), "{key} failed: {digest}");
+        let maps = digest.split_whitespace().find(|t| t.starts_with("maps=")).unwrap();
+        let (done, total) = maps["maps=".len()..].split_once('/').unwrap();
+        assert_eq!(done, total, "{key}: not every split processed ({maps})");
+    }
+}

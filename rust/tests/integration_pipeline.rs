@@ -7,7 +7,7 @@ use hadoop_spsa::baselines::{
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
 use hadoop_spsa::coordinator::{evaluate_theta, run_trial, Algo, TrialSpec};
-use hadoop_spsa::sim::{simulate, SimOptions};
+use hadoop_spsa::sim::{simulate, ScenarioSpec, SimOptions};
 use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig, SpsaVariant};
 use hadoop_spsa::util::rng::Rng;
 use hadoop_spsa::workloads::{Benchmark, WorkloadProfile};
@@ -36,8 +36,9 @@ fn spsa_variants_all_descend() {
     let cluster = ClusterSpec::paper_cluster();
     let mut rng = Rng::seeded(1000);
     let w = Benchmark::InvertedIndex.paper_profile(&mut rng);
+    let benign = ScenarioSpec::default();
     let (f_default, _) =
-        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 1);
+        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 1, &benign);
     for variant in [SpsaVariant::OneSided, SpsaVariant::TwoSided, SpsaVariant::OneMeasurement] {
         let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 5);
         let spsa = Spsa::for_space(
@@ -45,7 +46,7 @@ fn spsa_variants_all_descend() {
             &space,
         );
         let res = spsa.run(&mut obj, space.default_theta());
-        let (f_tuned, _) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, 1);
+        let (f_tuned, _) = evaluate_theta(&space, &cluster, &w, &res.best_theta, 5, 1, &benign);
         assert!(
             f_tuned < f_default * 0.6,
             "{variant:?}: {f_tuned} vs default {f_default}"
@@ -59,8 +60,9 @@ fn all_live_tuners_improve_terasort() {
     let cluster = ClusterSpec::paper_cluster();
     let mut rng = Rng::seeded(1000);
     let w = Benchmark::Terasort.paper_profile(&mut rng);
+    let benign = ScenarioSpec::default();
     let (f_default, _) =
-        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 2);
+        evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 2, &benign);
 
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 7);
     let hc = hill_climb(
@@ -68,12 +70,12 @@ fn all_live_tuners_improve_terasort() {
         space.default_theta(),
         &HillClimbConfig { budget: 60, ..Default::default() },
     );
-    let (f_hc, _) = evaluate_theta(&space, &cluster, &w, &hc.best_theta, 5, 2);
+    let (f_hc, _) = evaluate_theta(&space, &cluster, &w, &hc.best_theta, 5, 2, &benign);
     assert!(f_hc < f_default, "hill climbing did not improve");
 
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 8);
     let rs = random_search(&mut obj, space.default_theta(), 60, 8);
-    let (f_rs, _) = evaluate_theta(&space, &cluster, &w, &rs.best_theta, 5, 2);
+    let (f_rs, _) = evaluate_theta(&space, &cluster, &w, &rs.best_theta, 5, 2, &benign);
     assert!(f_rs < f_default, "random search did not improve");
 }
 
@@ -121,7 +123,7 @@ fn simulator_survives_zero_output_job() {
         &ClusterSpec::paper_cluster(),
         &space.default_config(),
         &degenerate_profile(),
-        &SimOptions { seed: 1, noise: true },
+        &SimOptions { seed: 1, noise: true, ..Default::default() },
     );
     assert!(r.exec_time_s.is_finite());
     assert!(r.exec_time_s > 0.0);
@@ -136,7 +138,12 @@ fn simulator_survives_tiny_cluster() {
     w.map_selectivity_records = 1.0;
     let mut cfg = space.default_config();
     cfg.reduce_tasks = 40; // more reducers than the tiny cluster has slots
-    let r = simulate(&ClusterSpec::tiny(), &cfg, &w, &SimOptions { seed: 2, noise: true });
+    let r = simulate(
+        &ClusterSpec::tiny(),
+        &cfg,
+        &w,
+        &SimOptions { seed: 2, noise: true, ..Default::default() },
+    );
     assert!(r.exec_time_s.is_finite());
     assert_eq!(r.counters.n_reduces, 40);
     assert!(r.counters.reduce_waves > 1);
@@ -154,7 +161,7 @@ fn extreme_corner_configurations_do_not_break() {
                 &cluster,
                 &space.materialize(&theta),
                 &w,
-                &SimOptions { seed: 3, noise: true },
+                &SimOptions { seed: 3, noise: true, ..Default::default() },
             );
             assert!(
                 r.exec_time_s.is_finite() && r.exec_time_s > 0.0,

@@ -120,7 +120,7 @@ fn rrs_over_artifact_beats_default_on_simulator() {
     let mut artifact = ArtifactWhatIf::new(&rt, space.clone(), &w, &cluster).unwrap();
     let res = rrs(&mut artifact, &RrsConfig { budget: 1500, ..Default::default() });
 
-    let opts = SimOptions { seed: 13, noise: false };
+    let opts = SimOptions { seed: 13, noise: false, ..Default::default() };
     let f_default = simulate(&cluster_spec, &space.default_config(), &w, &opts).exec_time_s;
     let f_tuned = simulate(&cluster_spec, &space.materialize(&res.best_theta), &w, &opts).exec_time_s;
     assert!(
