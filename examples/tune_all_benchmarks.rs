@@ -1,8 +1,10 @@
-//! End-to-end driver (DESIGN.md deliverable): regenerate *every* paper
-//! table and figure on the full pipeline — real benchmark executions feed
-//! workload profiles, SPSA and all baselines tune against the simulated
-//! 25-node cluster, results land in `results/` as markdown + CSV, and the
-//! headline numbers are printed next to the paper's.
+//! End-to-end driver (DESIGN.md deliverable): sweep the ENTIRE tuner
+//! registry over every benchmark under one identical observation budget,
+//! then regenerate every paper table and figure on the full pipeline —
+//! real benchmark executions feed workload profiles, all tuners spend the
+//! same metered budget against the simulated 25-node cluster, results land
+//! in `results/` as markdown + CSV, and the headline numbers are printed
+//! next to the paper's.
 //!
 //! ```bash
 //! cargo run --release --example tune_all_benchmarks            # full
@@ -12,8 +14,55 @@
 //! This is the run recorded in EXPERIMENTS.md.
 
 use hadoop_spsa::config::HadoopVersion;
-use hadoop_spsa::coordinator::ResultsDir;
+use hadoop_spsa::coordinator::{run_campaign, Algo, ResultsDir, TrialSpec};
 use hadoop_spsa::experiments::{self, ExpOptions};
+use hadoop_spsa::util::table::Table;
+use hadoop_spsa::workloads::Benchmark;
+
+/// Registry sweep: every algorithm × every benchmark, one shared budget.
+/// This is the comparison the `Tuner`/`EvalBroker` refactor makes native:
+/// best-found vs identical observation spend, no per-algorithm glue.
+fn registry_sweep(opts: &ExpOptions) {
+    let budget = opts.budget();
+    let seed = opts.seeds()[0];
+    let all = Benchmark::all();
+    let benches: &[Benchmark] = if opts.quick { &[Benchmark::Terasort] } else { &all };
+
+    let mut specs = Vec::new();
+    for &bench in benches {
+        for algo in Algo::all() {
+            // PPABS tunes the v2 space (as in Fig. 9 / Table 2)
+            let version =
+                if algo == Algo::Ppabs { HadoopVersion::V2 } else { HadoopVersion::V1 };
+            specs.push(TrialSpec::new(bench, version, algo, seed).with_budget(budget));
+        }
+    }
+    let outcomes = run_campaign(specs);
+
+    let mut header = vec!["Benchmark".to_string()];
+    for algo in Algo::all() {
+        header.push(algo.label().to_string());
+    }
+    let mut table = Table::new(&format!(
+        "Registry sweep — % decrease vs default at {} shared observations",
+        budget.max_obs
+    ))
+    .header(header);
+    for &bench in benches {
+        let mut row = vec![bench.label().to_string()];
+        for algo in Algo::all() {
+            let o = outcomes
+                .iter()
+                .find(|o| o.spec.benchmark == bench && o.spec.algo == algo)
+                .expect("campaign covers the full matrix");
+            assert!(o.observations <= budget.max_obs, "{} overspent", algo.label());
+            row.push(format!("{:.0}% ({} obs)", o.pct_decrease(), o.observations));
+        }
+        table.row(row);
+    }
+    print!("{}", table.to_ascii());
+    opts.persist("registry_sweep", &table);
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -21,7 +70,10 @@ fn main() {
     let opts = ExpOptions { quick, out: Some(out) };
     let t0 = std::time::Instant::now();
 
-    println!("=== Table 1: tuned parameter values ===\n");
+    println!("=== Registry sweep: all tuners, one budget ===\n");
+    registry_sweep(&opts);
+
+    println!("\n=== Table 1: tuned parameter values ===\n");
     println!("{}", experiments::table1::run(&opts));
 
     println!("=== Fig 6: SPSA convergence (Hadoop v1) ===\n");

@@ -6,14 +6,20 @@
 //! coordinates once, and its axis-aligned moves cannot follow
 //! cross-parameter interactions — the paper's Table 2 "Parameter
 //! Dependency" column.
+//!
+//! The observation budget lives in the [`EvalBroker`] (the one metered
+//! evaluation path all live-system tuners share): `try_eval` returning
+//! `None` is the graceful stop, and with [`CachePolicy::Quantized`]
+//! revisited points — common when the shrinking step retraces its path —
+//! cost nothing.
+//!
+//! [`CachePolicy::Quantized`]: crate::tuner::broker::CachePolicy::Quantized
 
-use crate::tuner::Objective;
+use crate::tuner::broker::EvalBroker;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct HillClimbConfig {
-    /// Live-system observation budget (comparable to SPSA's 2 × iters).
-    pub budget: u64,
     /// Step size per coordinate move (algorithm space).
     pub step: f64,
     /// Step shrink factor after a full unproductive sweep.
@@ -23,7 +29,7 @@ pub struct HillClimbConfig {
 
 impl Default for HillClimbConfig {
     fn default() -> Self {
-        HillClimbConfig { budget: 60, step: 0.15, shrink: 0.6, seed: 17 }
+        HillClimbConfig { step: 0.15, shrink: 0.6, seed: 17 }
     }
 }
 
@@ -31,19 +37,22 @@ impl Default for HillClimbConfig {
 pub struct HillClimbResult {
     pub best_theta: Vec<f64>,
     pub best_f: f64,
+    /// Live observations consumed (cache hits are free).
     pub observations: u64,
 }
 
 pub fn hill_climb(
-    objective: &mut dyn Objective,
+    broker: &mut EvalBroker,
     theta0: Vec<f64>,
     cfg: &HillClimbConfig,
 ) -> HillClimbResult {
-    let n = objective.dim();
+    let n = broker.dim();
+    let start_evals = broker.evals_used();
     let mut rng = Rng::seeded(cfg.seed);
     let mut theta = theta0;
-    let mut f_cur = objective.eval(&theta);
-    let mut used = 1u64;
+    let Some(mut f_cur) = broker.try_eval(&theta) else {
+        return HillClimbResult { best_theta: theta, best_f: f64::INFINITY, observations: 0 };
+    };
     let mut step = cfg.step;
 
     'outer: loop {
@@ -53,16 +62,14 @@ pub fn hill_climb(
         rng.shuffle(&mut order);
         for &i in &order {
             for dir in [1.0, -1.0] {
-                if used >= cfg.budget {
-                    break 'outer;
-                }
                 let mut cand = theta.clone();
                 cand[i] = (cand[i] + dir * step).clamp(0.0, 1.0);
                 if cand[i] == theta[i] {
                     continue;
                 }
-                let f = objective.eval(&cand);
-                used += 1;
+                let Some(f) = broker.try_eval(&cand) else {
+                    break 'outer; // budget exhausted: keep best-so-far
+                };
                 if f < f_cur {
                     theta = cand;
                     f_cur = f;
@@ -79,30 +86,53 @@ pub fn hill_climb(
         }
     }
 
-    HillClimbResult { best_theta: theta, best_f: f_cur, observations: used }
+    // delta, not lifetime total: the broker may have metered earlier
+    // phases (profile runs, a prior tuner) before this climb started
+    HillClimbResult {
+        best_theta: theta,
+        best_f: f_cur,
+        observations: broker.evals_used() - start_evals,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tuner::QuadraticObjective;
+    use crate::tuner::broker::{Budget, CachePolicy, EvalBroker};
+    use crate::tuner::{Objective, QuadraticObjective};
 
     #[test]
     fn climbs_smooth_surface() {
         let mut obj = QuadraticObjective::new(vec![0.8, 0.2, 0.5], 0.0, 1);
-        let cfg = HillClimbConfig { budget: 200, ..Default::default() };
-        let res = hill_climb(&mut obj, vec![0.5; 3], &cfg);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(200));
+        let res = hill_climb(&mut broker, vec![0.5; 3], &HillClimbConfig::default());
         for (a, b) in res.best_theta.iter().zip(&[0.8, 0.2, 0.5]) {
             assert!((a - b).abs() < 0.15, "{:?}", res.best_theta);
         }
     }
 
     #[test]
-    fn respects_budget() {
+    fn respects_broker_budget() {
         let mut obj = QuadraticObjective::new(vec![0.5; 5], 0.1, 2);
-        let cfg = HillClimbConfig { budget: 30, ..Default::default() };
-        let res = hill_climb(&mut obj, vec![0.1; 5], &cfg);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(30));
+        let res = hill_climb(&mut broker, vec![0.1; 5], &HillClimbConfig::default());
         assert!(res.observations <= 30);
         assert_eq!(obj.evals(), res.observations);
+    }
+
+    #[test]
+    fn cached_revisits_stretch_the_budget() {
+        // With the memo cache on, the climber's retraced points are free:
+        // it must reach a (possibly cached) stop without ever overdrawing.
+        let mut obj = QuadraticObjective::new(vec![0.6, 0.4], 0.0, 3);
+        let mut broker =
+            EvalBroker::new(&mut obj, Budget::obs(60)).with_cache(CachePolicy::Quantized);
+        let res = hill_climb(&mut broker, vec![0.0, 1.0], &HillClimbConfig::default());
+        assert!(res.observations <= 60);
+        assert!(
+            broker.cache_hits() > 0,
+            "shrinking-step descent should revisit quantized points"
+        );
+        assert!((res.best_theta[0] - 0.6).abs() < 0.15, "{:?}", res.best_theta);
     }
 }

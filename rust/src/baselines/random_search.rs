@@ -1,9 +1,25 @@
 //! Pure random search on the live system — the weakest sensible baseline
 //! and the ablation anchor: any tuner must beat it at equal observation
 //! budget.
+//!
+//! The budget lives in the [`EvalBroker`]: the search spends *exactly* the
+//! broker's remaining observations and keeps the best point seen.
+//! Candidates are pre-drawn and dispatched in chunks through
+//! `try_eval_batch`, so the independent probes fan across the worker pool
+//! while the per-observation seed stream stays identical to the one-by-one
+//! loop (the broker dispatches uncached points in order).
 
-use crate::tuner::Objective;
+use crate::tuner::broker::EvalBroker;
 use crate::util::rng::Rng;
+
+/// Candidates per dispatch round (bounds memory for huge budgets while
+/// keeping whole worker waves busy).
+const CHUNK: u64 = 64;
+
+/// Observations spent when the broker itself is unlimited: random search
+/// has no intrinsic stopping rule, so an explicit fallback keeps the loop
+/// finite instead of simulating forever.
+const UNLIMITED_FALLBACK_OBS: u64 = 256;
 
 #[derive(Clone, Debug)]
 pub struct RandomSearchResult {
@@ -12,51 +28,113 @@ pub struct RandomSearchResult {
     pub observations: u64,
 }
 
-/// Evaluate `budget` uniform random points (plus the starting point) and
-/// keep the best.
+/// Evaluate the starting point, then uniform random points until the
+/// broker's budget is spent; keep the best. An unlimited broker gets the
+/// [`UNLIMITED_FALLBACK_OBS`] cap — the search would otherwise never stop.
 pub fn random_search(
-    objective: &mut dyn Objective,
+    broker: &mut EvalBroker,
     theta0: Vec<f64>,
-    budget: u64,
     seed: u64,
 ) -> RandomSearchResult {
-    let n = objective.dim();
+    let n = broker.dim();
+    let start_evals = broker.evals_used();
     let mut rng = Rng::seeded(seed);
+    let mut cap = if broker.budget().max_obs == u64::MAX {
+        UNLIMITED_FALLBACK_OBS
+    } else {
+        u64::MAX
+    };
     let mut best_theta = theta0;
-    let mut best_f = objective.eval(&best_theta);
-    let mut used = 1u64;
-    while used < budget {
-        let cand: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
-        let f = objective.eval(&cand);
-        used += 1;
-        if f < best_f {
-            best_f = f;
-            best_theta = cand;
+    let Some(mut best_f) = broker.try_eval(&best_theta) else {
+        return RandomSearchResult { best_theta, best_f: f64::INFINITY, observations: 0 };
+    };
+    cap = cap.saturating_sub(1);
+    loop {
+        let k = broker.remaining().min(CHUNK).min(cap);
+        if k == 0 {
+            break;
+        }
+        cap -= k;
+        let cands: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..n).map(|_| rng.f64()).collect()).collect();
+        let fs = broker.try_eval_batch(&cands);
+        // k never exceeds remaining(), so the broker serves whole chunks
+        debug_assert_eq!(fs.len() as u64, k);
+        for (cand, &f) in cands.iter().zip(&fs) {
+            if f < best_f {
+                best_f = f;
+                best_theta = cand.clone();
+            }
         }
     }
-    RandomSearchResult { best_theta, best_f, observations: used }
+    // delta, not lifetime total: a reused broker may carry earlier spend
+    RandomSearchResult {
+        best_theta,
+        best_f,
+        observations: broker.evals_used() - start_evals,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tuner::broker::{Budget, EvalBroker};
     use crate::tuner::QuadraticObjective;
 
     #[test]
-    fn improves_over_bad_start() {
+    fn improves_over_bad_start_and_spends_exactly_the_budget() {
         let mut obj = QuadraticObjective::new(vec![0.5; 3], 0.0, 1);
-        let res = random_search(&mut obj, vec![0.99; 3], 100, 4);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(100));
+        let res = random_search(&mut broker, vec![0.99; 3], 4);
         let start_f = 1.0 + 3.0 * (0.99 - 0.5) * (0.99 - 0.5);
         assert!(res.best_f < start_f);
-        assert_eq!(res.observations, 100);
+        assert_eq!(res.observations, 100, "budget exhaustion must land exactly");
+        assert!(broker.exhausted());
+    }
+
+    #[test]
+    fn unlimited_broker_stops_at_the_fallback_cap() {
+        let mut obj = QuadraticObjective::new(vec![0.5; 2], 0.0, 1);
+        let mut broker = EvalBroker::new(&mut obj, Budget::unlimited());
+        let res = random_search(&mut broker, vec![0.9, 0.9], 5);
+        assert_eq!(res.observations, UNLIMITED_FALLBACK_OBS);
     }
 
     #[test]
     fn deterministic_per_seed() {
         let run = |seed| {
             let mut obj = QuadraticObjective::new(vec![0.5; 3], 0.0, 1);
-            random_search(&mut obj, vec![0.0; 3], 50, seed).best_theta
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(50));
+            random_search(&mut broker, vec![0.0; 3], seed).best_theta
         };
         assert_eq!(run(9), run(9));
+    }
+
+    #[test]
+    fn chunked_dispatch_matches_single_eval_loop() {
+        // The chunked batches must see the same values a one-by-one loop
+        // would: same candidate draws, same objective seed stream.
+        let budget = 37; // not a multiple of CHUNK
+        let mut obj_a = QuadraticObjective::new(vec![0.4, 0.6], 0.1, 2);
+        let mut broker_a = EvalBroker::new(&mut obj_a, Budget::obs(budget));
+        let batched = random_search(&mut broker_a, vec![0.5, 0.5], 11);
+
+        // manual sequential replay: same rng, same eval order
+        let mut obj_b = QuadraticObjective::new(vec![0.4, 0.6], 0.1, 2);
+        let mut rng = Rng::seeded(11);
+        use crate::tuner::Objective;
+        let mut best_theta = vec![0.5, 0.5];
+        let mut best_f = obj_b.eval(&best_theta);
+        for _ in 1..budget {
+            let cand: Vec<f64> = (0..2).map(|_| rng.f64()).collect();
+            let f = obj_b.eval(&cand);
+            if f < best_f {
+                best_f = f;
+                best_theta = cand;
+            }
+        }
+        assert_eq!(batched.best_theta, best_theta);
+        assert_eq!(batched.best_f, best_f);
+        assert_eq!(batched.observations, budget);
     }
 }

@@ -3,20 +3,21 @@
 //!
 //! * **Profiler** — runs the job once with the default configuration on the
 //!   live (simulated) cluster, instrumented; this is the expensive
-//!   profiling pass the paper's §6.8(6) measures in hours. We charge its
-//!   wall-clock as `profiling_overhead_s`.
+//!   profiling pass the paper's §6.8(6) measures in hours. The run goes
+//!   through the [`EvalBroker`] like every other live observation, so it is
+//!   metered against the same budget the other tuners spend, and its
+//!   observed execution time is charged as `profiling_overhead_s`.
 //! * **What-if engine** — the analytic cost model (rust or the AOT
-//!   JAX/Pallas artifact through PJRT).
+//!   JAX/Pallas artifact through PJRT), supplied by the caller — typically
+//!   built from a *noisy single-shot profile* of the workload.
 //! * **CBO** — recursive random search over the what-if surface.
 //!
 //! The deliberate model-vs-system gap means Starfish's chosen configuration
 //! is good but not optimal on the real system — the structural reason SPSA
 //! wins in Fig. 8 (see DESIGN.md §1).
 
-use crate::cluster::ClusterSpec;
 use crate::config::ParameterSpace;
-use crate::sim::{simulate, SimOptions};
-use crate::workloads::WorkloadProfile;
+use crate::tuner::broker::EvalBroker;
 
 use super::evaluator::CostEvaluator;
 use super::rrs::{rrs, RrsConfig, RrsResult};
@@ -27,30 +28,29 @@ pub struct StarfishResult {
     pub best_theta: Vec<f64>,
     /// Model-predicted cost at the chosen configuration.
     pub model_cost: f64,
-    /// Simulated seconds spent profiling (one default-config run).
+    /// Profiling cost: the objective score of the one default-config run
+    /// (0 when the broker's budget could not afford even the profile).
+    /// Under the benign `ExecTime` objective this is the run's simulated
+    /// seconds; under a fault scenario a *failed* profile run scores its
+    /// extrapolated full-job estimate × the failed-job penalty — the
+    /// broker's uniform currency deliberately surfaces how expensive
+    /// profiling on a flaky cluster is, rather than the raw abort time.
     pub profiling_overhead_s: f64,
     /// What-if model evaluations consumed by the CBO.
     pub model_evals: u64,
 }
 
-/// Run the Starfish pipeline. `evaluator` supplies the what-if engine
-/// (rust model or PJRT artifact); the profiler runs on the DES.
+/// Run the Starfish pipeline: one metered profiling run at the default
+/// configuration, then RRS over the what-if surface.
 pub fn starfish_tune(
     space: &ParameterSpace,
-    cluster: &ClusterSpec,
-    workload: &WorkloadProfile,
+    broker: &mut EvalBroker,
     evaluator: &mut dyn CostEvaluator,
     rrs_cfg: &RrsConfig,
-    seed: u64,
 ) -> StarfishResult {
-    // 1. profile: one instrumented run at the default configuration
-    let default_cfg = space.default_config();
-    let profile_run = simulate(
-        cluster,
-        &default_cfg,
-        workload,
-        &SimOptions { seed, noise: true, ..Default::default() },
-    );
+    // 1. profile: one instrumented run at the default configuration (a
+    //    live observation — under ExecTime its value IS the job's seconds)
+    let profiling_overhead_s = broker.try_eval(&space.default_theta()).unwrap_or(0.0);
 
     // 2+3. what-if + CBO
     let RrsResult { best_theta, best_cost, evals } = rrs(evaluator, rrs_cfg);
@@ -58,7 +58,7 @@ pub fn starfish_tune(
     StarfishResult {
         best_theta,
         model_cost: best_cost,
-        profiling_overhead_s: profile_run.exec_time_s,
+        profiling_overhead_s,
         model_evals: evals,
     }
 }
@@ -67,10 +67,14 @@ pub fn starfish_tune(
 mod tests {
     use super::*;
     use crate::baselines::evaluator::RustWhatIf;
+    use crate::cluster::ClusterSpec;
     use crate::config::HadoopVersion;
+    use crate::sim::{simulate, SimOptions};
+    use crate::tuner::broker::Budget;
+    use crate::tuner::SimObjective;
     use crate::util::rng::Rng;
     use crate::whatif::ClusterFeatures;
-    use crate::workloads::Benchmark;
+    use crate::workloads::{Benchmark, WorkloadProfile};
 
     fn setup() -> (ParameterSpace, ClusterSpec, WorkloadProfile, RustWhatIf) {
         let space = ParameterSpace::v1();
@@ -88,7 +92,15 @@ mod tests {
     #[test]
     fn starfish_beats_default_on_live_system() {
         let (space, cluster, w, mut eval) = setup();
-        let res = starfish_tune(&space, &cluster, &w, &mut eval, &RrsConfig::default(), 3);
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 3);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(90));
+        let res = starfish_tune(
+            &space,
+            &mut broker,
+            &mut eval,
+            &RrsConfig { seed: 3, ..Default::default() },
+        );
+        assert_eq!(broker.evals_used(), 1, "starfish profiles exactly once");
         let opts = SimOptions { seed: 77, noise: false, ..Default::default() };
         let f_default =
             simulate(&cluster, &space.default_config(), &w, &opts).exec_time_s;
@@ -100,5 +112,19 @@ mod tests {
         );
         assert!(res.profiling_overhead_s > 0.0);
         assert!(res.model_evals > 100);
+    }
+
+    #[test]
+    fn exhausted_broker_still_returns_a_model_optimum() {
+        // Budget 0: the profile is skipped (overhead 0) but the CBO still
+        // searches the model — graceful partial result.
+        let (space, _cluster, _w, mut eval) = setup();
+        let mut obj = crate::tuner::QuadraticObjective::new(vec![0.5; 11], 0.0, 1);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(0));
+        let res = starfish_tune(&space, &mut broker, &mut eval, &RrsConfig::default());
+        assert_eq!(res.profiling_overhead_s, 0.0);
+        assert_eq!(broker.evals_used(), 0);
+        assert!(res.model_evals > 0);
+        assert_eq!(res.best_theta.len(), space.dim());
     }
 }

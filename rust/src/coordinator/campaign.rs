@@ -2,23 +2,29 @@
 //! benchmark on the simulated cluster and evaluates the outcome — the
 //! equivalent of the SPSA process the paper runs on the NameNode (§6),
 //! generalized over the comparison algorithms of §6.6.
+//!
+//! Every algorithm is a [`Tuner`](crate::tuner::Tuner) resolved from the
+//! registry and driven through one budget-metered
+//! [`EvalBroker`](crate::tuner::EvalBroker): identical observation budgets,
+//! identical accounting, one convergence trace — the bespoke per-algorithm
+//! dispatch this module used to carry is gone.
 
-use crate::baselines::{
-    hill_climb, random_search, starfish_tune, training_corpus, CostObjective,
-    HillClimbConfig, Ppabs, RrsConfig, RustWhatIf,
-};
 use crate::cluster::ClusterSpec;
 use crate::config::{HadoopVersion, ParameterSpace};
 use crate::sim::{simulate_batch_auto, ScenarioSpec, SimJob, SimOptions};
-use crate::tuner::{IterRecord, SimObjective, Spsa, SpsaConfig};
+use crate::tuner::registry::{self, TunerContext};
+use crate::tuner::{Budget, EvalBroker, EvalRecord, IterRecord, SimObjective};
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, stddev};
-use crate::whatif::ClusterFeatures;
 use crate::workloads::{Benchmark, WorkloadProfile};
 
 use super::pool::{resolve_workers, run_parallel};
 
-/// Tuning algorithm under test.
+// compat re-export: the constant moved to the registry with the tuners
+pub use crate::tuner::registry::PROFILE_NOISE_SIGMA;
+
+/// Tuning algorithm under test — a thin, enum-typed shim over the tuner
+/// registry (experiment code matches on it; the registry owns behavior).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// No tuning: Hadoop defaults (the paper's baseline row).
@@ -39,6 +45,33 @@ pub enum Algo {
 }
 
 impl Algo {
+    pub fn all() -> [Algo; 7] {
+        [
+            Algo::Default,
+            Algo::Spsa,
+            Algo::SpsaSurrogate,
+            Algo::Starfish,
+            Algo::Ppabs,
+            Algo::HillClimb,
+            Algo::Random,
+        ]
+    }
+
+    /// Canonical registry name ([`crate::tuner::registry::find`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Default => "default",
+            Algo::Spsa => "spsa",
+            Algo::SpsaSurrogate => "spsa-surrogate",
+            Algo::Starfish => "starfish",
+            Algo::Ppabs => "ppabs",
+            Algo::HillClimb => "hillclimb",
+            Algo::Random => "random",
+        }
+    }
+
+    /// Display label (every output of this round-trips through
+    /// [`Algo::from_name`], case-insensitively).
     pub fn label(&self) -> &'static str {
         match self {
             Algo::Default => "Default",
@@ -51,35 +84,35 @@ impl Algo {
         }
     }
 
+    /// Resolve through the registry: trims, matches canonical names,
+    /// aliases and labels case-insensitively.
     pub fn from_name(s: &str) -> Option<Algo> {
-        match s.to_ascii_lowercase().as_str() {
-            "default" => Some(Algo::Default),
-            "spsa" => Some(Algo::Spsa),
-            "spsa-surrogate" | "surrogate" => Some(Algo::SpsaSurrogate),
-            "starfish" => Some(Algo::Starfish),
-            "ppabs" => Some(Algo::Ppabs),
-            "hill" | "hillclimb" | "mronline" => Some(Algo::HillClimb),
-            "random" => Some(Algo::Random),
-            _ => None,
-        }
+        let entry = registry::find(s)?;
+        Algo::all().into_iter().find(|a| a.name() == entry.name)
     }
 }
 
-/// One tuning trial: algorithm × benchmark × Hadoop version × seed.
+/// One tuning trial: algorithm × benchmark × Hadoop version × seed, under
+/// one shared live-observation budget.
 #[derive(Clone, Debug)]
 pub struct TrialSpec {
     pub benchmark: Benchmark,
     pub version: HadoopVersion,
     pub algo: Algo,
     pub seed: u64,
-    /// SPSA iteration budget (other live-system tuners get 2× this many
-    /// observations so budgets are comparable).
-    pub iters: u64,
+    /// Live-observation budget the tuner may spend — the same number for
+    /// every algorithm of a comparison, so best-found-vs-budget is the
+    /// native currency (the paper's 2-obs/iter economy claim, §6.6).
+    pub budget: Budget,
     /// Execution-substrate regime: live-system tuners observe the system
     /// under it, and the tuned/default verification runs execute under it
     /// too. Benign by default.
     pub scenario: ScenarioSpec,
 }
+
+/// Default per-trial budget: 90 observations ≈ 30 SPSA iterations of the
+/// paper's estimator with gradient averaging (3 obs each).
+pub const DEFAULT_TRIAL_BUDGET: u64 = 90;
 
 impl TrialSpec {
     pub fn new(benchmark: Benchmark, version: HadoopVersion, algo: Algo, seed: u64) -> Self {
@@ -88,7 +121,7 @@ impl TrialSpec {
             version,
             algo,
             seed,
-            iters: 30,
+            budget: Budget::obs(DEFAULT_TRIAL_BUDGET),
             scenario: ScenarioSpec::default(),
         }
     }
@@ -96,6 +129,12 @@ impl TrialSpec {
     /// Builder: run this trial under a fault/heterogeneity scenario.
     pub fn with_scenario(mut self, scenario: ScenarioSpec) -> Self {
         self.scenario = scenario;
+        self
+    }
+
+    /// Builder: cap the live-observation budget.
+    pub fn with_budget(mut self, budget: Budget) -> Self {
+        self.budget = budget;
         self
     }
 }
@@ -111,7 +150,8 @@ pub struct TrialOutcome {
     pub tuned_std_s: f64,
     /// Same for the default configuration.
     pub default_mean_s: f64,
-    /// Live-system observations consumed while tuning.
+    /// Live-system observations consumed while tuning (broker-metered;
+    /// always ≤ `spec.budget.max_obs`).
     pub observations: u64,
     /// What-if model evaluations (model-based tuners only).
     pub model_evals: u64,
@@ -121,6 +161,11 @@ pub struct TrialOutcome {
     pub tuning_wall_ms: f64,
     /// SPSA per-iteration history (empty for other algorithms).
     pub history: Vec<IterRecord>,
+    /// The broker's uniform convergence trace — every observation served
+    /// through the broker, in order. Empty for model-only tuners, and for
+    /// PPABS, whose corpus profiling is metered via `EvalBroker::charge`
+    /// (runs of *other* workloads never enter this trial's trace).
+    pub eval_trace: Vec<EvalRecord>,
 }
 
 impl TrialOutcome {
@@ -129,11 +174,6 @@ impl TrialOutcome {
         100.0 * (self.default_mean_s - self.tuned_mean_s) / self.default_mean_s
     }
 }
-
-/// Measurement error of a single-shot job profile (lognormal sigma applied
-/// to each data-flow feature). Profiling-based tuners see the workload
-/// through this lens; SPSA never needs a profile.
-pub const PROFILE_NOISE_SIGMA: f64 = 0.35;
 
 /// Build the workload profile for a benchmark by really running it on
 /// sampled data. Profiles are cached per (benchmark, seed): the engine run
@@ -182,116 +222,44 @@ pub fn evaluate_theta(
     (mean(&runs), stddev(&runs))
 }
 
-/// Run one tuning trial end to end.
+/// Run one tuning trial end to end: resolve the algorithm from the
+/// registry, let it spend the trial's budget through a metered broker,
+/// then verify tuned vs default on the simulator.
 pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
     let space = ParameterSpace::for_version(spec.version);
     let cluster = ClusterSpec::paper_cluster();
     // fixed profiling seed: all algorithms tune the *same* workload
     let w = profile_for(spec.benchmark, 1000);
-    let features = ClusterFeatures::from_spec(&cluster, spec.version);
-    let t0 = std::time::Instant::now();
-
-    let mut observations = 0;
-    let mut model_evals = 0;
-    let mut profiling_overhead_s = 0.0;
-    let mut history = Vec::new();
-
-    let tuned_theta = match spec.algo {
-        Algo::Default => space.default_theta(),
-        Algo::Spsa => {
-            let mut obj =
-                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
-                    .with_scenario(spec.scenario.clone());
-            let spsa = Spsa::for_space(
-                SpsaConfig { max_iters: spec.iters, seed: spec.seed, ..Default::default() },
-                &space,
-            );
-            let res = spsa.run(&mut obj, space.default_theta());
-            observations = res.observations;
-            history = res.history;
-            // Deploy the best configuration observed during learning: the
-            // coordinator has every iterate's measured time at hand, and
-            // the final iterate still carries the last noisy step.
-            res.best_theta
-        }
-        Algo::SpsaSurrogate => {
-            // surrogate SPSA: iterate on the analytic model only, then
-            // deploy. Uses the rust what-if here; the artifact-backed
-            // variant lives in examples/whatif_engine.rs. The model is
-            // driven through the same CostEvaluator batching trait the
-            // CBO baselines use (CostObjective bridge).
-            let mut evaluator = RustWhatIf::new(space.clone(), w.clone(), features.clone());
-            let spsa = Spsa::for_space(
-                SpsaConfig { max_iters: spec.iters * 4, seed: spec.seed, ..Default::default() },
-                &space,
-            );
-            let mut obj = CostObjective::new(&mut evaluator);
-            let res = spsa.run(&mut obj, space.default_theta());
-            model_evals = res.observations;
-            res.best_theta
-        }
-        Algo::Starfish => {
-            // Starfish characterizes the job from ONE instrumented run: its
-            // what-if engine sees a single-shot noisy profile (§6.8 pt 4).
-            let mut prof_rng = Rng::seeded(spec.seed ^ 0x5F15);
-            let noisy_w = w.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA);
-            let mut evaluator = RustWhatIf::new(space.clone(), noisy_w, features.clone());
-            let res = starfish_tune(
-                &space,
-                &cluster,
-                &w,
-                &mut evaluator,
-                &RrsConfig { seed: spec.seed, ..Default::default() },
-                spec.seed,
-            );
-            model_evals = res.model_evals;
-            profiling_overhead_s = res.profiling_overhead_s;
-            observations = 1; // the single profiled run
-            res.best_theta
-        }
-        Algo::Ppabs => {
-            // PPABS likewise profiles each corpus job once.
-            let mut prof_rng = Rng::seeded(spec.seed ^ 0x99AB);
-            let corpus: Vec<WorkloadProfile> = training_corpus(2000)
-                .iter()
-                .map(|c| c.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA))
-                .collect();
-            let ppabs = Ppabs::train(&space, &cluster, &corpus, 4, spec.seed);
-            model_evals = ppabs.model_evals;
-            profiling_overhead_s = ppabs.profiling_overhead_s;
-            observations = corpus.len() as u64;
-            ppabs.configure(&w)
-        }
-        Algo::HillClimb => {
-            let mut obj =
-                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
-                    .with_scenario(spec.scenario.clone());
-            let res = hill_climb(
-                &mut obj,
-                space.default_theta(),
-                &HillClimbConfig { budget: spec.iters * 2, seed: spec.seed, ..Default::default() },
-            );
-            observations = res.observations;
-            res.best_theta
-        }
-        Algo::Random => {
-            let mut obj =
-                SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
-                    .with_scenario(spec.scenario.clone());
-            let res =
-                random_search(&mut obj, space.default_theta(), spec.iters * 2, spec.seed);
-            observations = res.observations;
-            res.best_theta
-        }
+    let ctx = TunerContext {
+        version: spec.version,
+        cluster: cluster.clone(),
+        workload: w.clone(),
     };
+    let tuner = registry::create(spec.algo.name(), &ctx)
+        .expect("every Algo maps to a registry entry");
+
+    let t0 = std::time::Instant::now();
+    let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
+        .with_scenario(spec.scenario.clone());
+    let mut broker =
+        EvalBroker::new(&mut obj, spec.budget).with_cache(tuner.cache_policy());
+    let out = tuner.tune(&mut broker, &space, spec.seed);
+    let observations = broker.evals_used();
+    let eval_trace = broker.take_trace();
     let tuning_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(
+        observations <= spec.budget.max_obs,
+        "{} overspent its budget: {observations} > {}",
+        spec.algo.label(),
+        spec.budget.max_obs
+    );
 
     const EVAL_SEED: u64 = 0xE7A1;
     let (tuned_mean_s, tuned_std_s) = evaluate_theta(
         &space,
         &cluster,
         &w,
-        &tuned_theta,
+        &out.best_theta,
         5,
         spec.seed ^ EVAL_SEED,
         &spec.scenario,
@@ -308,15 +276,16 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
 
     TrialOutcome {
         spec: spec.clone(),
-        tuned_theta,
+        tuned_theta: out.best_theta,
         tuned_mean_s,
         tuned_std_s,
         default_mean_s,
         observations,
-        model_evals,
-        profiling_overhead_s,
+        model_evals: out.model_evals,
+        profiling_overhead_s: out.profiling_overhead_s,
         tuning_wall_ms,
-        history,
+        history: out.history,
+        eval_trace,
     }
 }
 
@@ -335,13 +304,36 @@ mod tests {
     use super::*;
 
     #[test]
+    fn algo_label_round_trips_case_insensitively() {
+        for algo in Algo::all() {
+            assert_eq!(Algo::from_name(algo.label()), Some(algo), "{}", algo.label());
+            assert_eq!(
+                Algo::from_name(&algo.label().to_uppercase()),
+                Some(algo),
+                "uppercased {}",
+                algo.label()
+            );
+            assert_eq!(Algo::from_name(&format!("  {} ", algo.name())), Some(algo));
+        }
+        // legacy aliases stay accepted
+        assert_eq!(Algo::from_name("hill"), Some(Algo::HillClimb));
+        assert_eq!(Algo::from_name("mronline"), Some(Algo::HillClimb));
+        assert_eq!(Algo::from_name("surrogate"), Some(Algo::SpsaSurrogate));
+        assert_eq!(Algo::from_name("bogus"), None);
+    }
+
+    #[test]
     fn spsa_trial_beats_default() {
         let spec = TrialSpec::new(Benchmark::Terasort, HadoopVersion::V1, Algo::Spsa, 5);
         let out = run_trial(&spec);
         assert!(out.pct_decrease() > 30.0, "decrease {:.1}%", out.pct_decrease());
-        assert_eq!(out.history.len() as u64, out.spec.iters);
-        assert!(out.observations >= 2 * out.spec.iters);
+        // 3 obs per iteration, whole iterations only, within budget
+        assert_eq!(out.history.len() as u64 * 3, out.observations);
+        assert!(out.observations <= out.spec.budget.max_obs);
+        assert!(out.observations >= out.spec.budget.max_obs / 2, "barely tuned");
         assert_eq!(out.profiling_overhead_s, 0.0);
+        // the uniform trace mirrors the broker accounting
+        assert_eq!(out.eval_trace.len() as u64, out.observations);
     }
 
     #[test]
@@ -350,6 +342,7 @@ mod tests {
         let out = run_trial(&spec);
         assert!((out.pct_decrease()).abs() < 1e-9);
         assert_eq!(out.observations, 0);
+        assert!(out.eval_trace.is_empty());
     }
 
     #[test]
@@ -366,6 +359,8 @@ mod tests {
         // both live-system tuners improve on the default for bigram
         assert!(out[0].pct_decrease() > 20.0, "spsa {:.1}%", out[0].pct_decrease());
         assert!(out[1].pct_decrease() > 0.0, "random {:.1}%", out[1].pct_decrease());
+        // random search spends the whole shared budget, to the observation
+        assert_eq!(out[1].observations, out[1].spec.budget.max_obs);
     }
 
     #[test]
@@ -395,5 +390,19 @@ mod tests {
         assert!(out.profiling_overhead_s > 0.0);
         assert!(out.model_evals > 100);
         assert!(out.pct_decrease() > 0.0);
+        assert_eq!(out.observations, 1, "starfish profiles exactly once");
+    }
+
+    #[test]
+    fn every_algo_runs_under_one_small_budget() {
+        // The whole registry through run_trial at a tight shared budget:
+        // nothing overspends (run_trial asserts) and outcomes are sane.
+        for algo in Algo::all() {
+            let spec = TrialSpec::new(Benchmark::Grep, HadoopVersion::V1, algo, 3)
+                .with_budget(Budget::obs(24));
+            let out = run_trial(&spec);
+            assert!(out.observations <= 24, "{}", algo.label());
+            assert!(out.tuned_mean_s > 0.0, "{}", algo.label());
+        }
     }
 }

@@ -82,13 +82,39 @@ pub fn default_workers() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
 }
 
-/// Worker-count override from the `HSPSA_WORKERS` environment variable
-/// (`1` forces fully sequential evaluation; unset/invalid → `None`).
+/// Worker-count override from the `HSPSA_WORKERS` environment variable.
+/// `1` forces fully sequential evaluation; `0` — a common "disable
+/// parallelism" spelling — clamps to `1` instead of silently falling back
+/// to the all-cores default. An unparseable value warns once on stderr and
+/// is treated as unset (the user asked for *something*; ignoring it
+/// silently would hand them a surprise worker count).
 pub fn env_workers() -> Option<usize> {
-    std::env::var("HSPSA_WORKERS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
+    let raw = std::env::var("HSPSA_WORKERS").ok()?;
+    let parsed = parse_workers(&raw);
+    if parsed.is_none() {
+        warn_bad_env_workers_once(&raw);
+    }
+    parsed
+}
+
+/// Pure parse of an `HSPSA_WORKERS` value: trims, clamps 0 → 1, `None`
+/// for garbage. Split from [`env_workers`] so tests never have to mutate
+/// the process environment (getenv/setenv races across test threads).
+fn parse_workers(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// One-time warning for a garbage `HSPSA_WORKERS` value (once per process,
+/// not once per pool dispatch — objectives resolve workers per batch).
+fn warn_bad_env_workers_once(raw: &str) {
+    use std::sync::Once;
+    static WARNED: Once = Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "warning: HSPSA_WORKERS={raw:?} is not a number; \
+             falling back to the default worker count"
+        );
+    });
 }
 
 /// Worker count for intra-trial observation fan-out: explicit override,
@@ -193,5 +219,18 @@ mod tests {
     fn resolve_workers_explicit_wins() {
         assert_eq!(resolve_workers(Some(3)), 3);
         assert!(resolve_workers(None) >= 1);
+    }
+
+    #[test]
+    fn workers_value_clamps_zero_and_rejects_garbage() {
+        // The parse is tested directly — mutating the real environment
+        // would race getenv calls on concurrently running test threads.
+        assert_eq!(parse_workers("3"), Some(3));
+        assert_eq!(parse_workers(" 2 "), Some(2), "value must be trimmed");
+        assert_eq!(parse_workers("1"), Some(1));
+        assert_eq!(parse_workers("0"), Some(1), "0 means sequential, not unset");
+        assert_eq!(parse_workers("lots"), None, "garbage falls back to default");
+        assert_eq!(parse_workers(""), None);
+        assert_eq!(parse_workers("-2"), None);
     }
 }

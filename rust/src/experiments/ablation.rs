@@ -8,13 +8,16 @@
 //! * step clip `max_step` (the stability guard, DESIGN.md).
 //!
 //! Each cell reports the deployed configuration's mean execution time at an
-//! *equal live-observation budget*, so cheaper estimators get more
-//! iterations.
+//! *equal live-observation budget*. The budget is not hand-translated into
+//! per-variant iteration counts any more: every cell runs through an
+//! [`EvalBroker`] with the same `Budget`, and the broker stops each
+//! estimator after however many whole iterations it can afford — cheaper
+//! estimators simply get more of them.
 
 use crate::cluster::ClusterSpec;
 use crate::config::ParameterSpace;
 use crate::coordinator::evaluate_theta;
-use crate::tuner::{SimObjective, Spsa, SpsaConfig, SpsaVariant};
+use crate::tuner::{Budget, EvalBroker, SimObjective, Spsa, SpsaConfig, SpsaVariant};
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::util::table::Table;
@@ -25,17 +28,20 @@ use super::common::ExpOptions;
 /// Observation budget per tuning run (comparable to the paper's 40–60).
 const BUDGET: u64 = 90;
 
-fn run_cell(cfg: SpsaConfig, seeds: &[u64]) -> (f64, f64) {
+fn run_cell(cfg: SpsaConfig, seeds: &[u64]) -> (f64, f64, f64) {
     let space = ParameterSpace::v1();
     let cluster = ClusterSpec::paper_cluster();
     let mut rng = Rng::seeded(1000);
     let w = Benchmark::Terasort.paper_profile(&mut rng);
     let mut times = Vec::new();
     let mut obs = Vec::new();
+    let mut iters = Vec::new();
     for &seed in seeds {
         let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(BUDGET));
         let spsa = Spsa::for_space(SpsaConfig { seed, ..cfg.clone() }, &space);
-        let res = spsa.run(&mut obj, space.default_theta());
+        let res = spsa.run_broker(&mut broker, space.default_theta());
+        assert!(broker.evals_used() <= BUDGET);
         let (t, _) = evaluate_theta(
             &space,
             &cluster,
@@ -46,9 +52,10 @@ fn run_cell(cfg: SpsaConfig, seeds: &[u64]) -> (f64, f64) {
             &crate::sim::ScenarioSpec::default(),
         );
         times.push(t);
-        obs.push(res.observations as f64);
+        obs.push(broker.evals_used() as f64);
+        iters.push(res.iterations as f64);
     }
-    (mean(&times), mean(&obs))
+    (mean(&times), mean(&obs), mean(&iters))
 }
 
 pub fn run(opts: &ExpOptions) -> String {
@@ -56,72 +63,47 @@ pub fn run(opts: &ExpOptions) -> String {
     let mut table = Table::new(
         "Ablation — SPSA design choices on Terasort v1 (equal observation budget)",
     )
-    .header(vec!["variant", "grad_avg", "max_step", "iters", "mean obs", "tuned time (s)"]);
+    .header(vec!["variant", "grad_avg", "max_step", "mean iters", "mean obs", "tuned time (s)"]);
 
-    let base = SpsaConfig { grad_tol: 0.0, patience: u64::MAX, ..Default::default() };
+    // the broker's budget governs iteration counts: max_iters stays
+    // unbounded and each estimator spends the same 90 observations
+    let base = SpsaConfig {
+        grad_tol: 0.0,
+        patience: u64::MAX,
+        max_iters: u64::MAX,
+        ..Default::default()
+    };
 
-    // estimator variants at equal budget
     let cells: Vec<(&str, SpsaConfig)> = vec![
         (
             "one-sided (paper)",
-            SpsaConfig {
-                variant: SpsaVariant::OneSided,
-                grad_avg: 2,
-                max_iters: BUDGET / 3,
-                ..base.clone()
-            },
+            SpsaConfig { variant: SpsaVariant::OneSided, grad_avg: 2, ..base.clone() },
         ),
         (
             "two-sided",
-            SpsaConfig {
-                variant: SpsaVariant::TwoSided,
-                grad_avg: 1,
-                max_iters: BUDGET / 3,
-                ..base.clone()
-            },
+            SpsaConfig { variant: SpsaVariant::TwoSided, grad_avg: 1, ..base.clone() },
         ),
         (
             "one-measurement",
-            SpsaConfig {
-                variant: SpsaVariant::OneMeasurement,
-                grad_avg: 1,
-                max_iters: BUDGET / 2,
-                ..base.clone()
-            },
+            SpsaConfig { variant: SpsaVariant::OneMeasurement, grad_avg: 1, ..base.clone() },
         ),
         (
             "one-sided, no averaging",
-            SpsaConfig {
-                variant: SpsaVariant::OneSided,
-                grad_avg: 1,
-                max_iters: BUDGET / 2,
-                ..base.clone()
-            },
+            SpsaConfig { variant: SpsaVariant::OneSided, grad_avg: 1, ..base.clone() },
         ),
         (
             "one-sided, heavy averaging",
-            SpsaConfig {
-                variant: SpsaVariant::OneSided,
-                grad_avg: 4,
-                max_iters: BUDGET / 5,
-                ..base.clone()
-            },
+            SpsaConfig { variant: SpsaVariant::OneSided, grad_avg: 4, ..base.clone() },
         ),
         (
             "RDSA (gaussian directions)",
-            SpsaConfig {
-                variant: SpsaVariant::Rdsa,
-                grad_avg: 2,
-                max_iters: BUDGET / 3,
-                ..base.clone()
-            },
+            SpsaConfig { variant: SpsaVariant::Rdsa, grad_avg: 2, ..base.clone() },
         ),
         (
             "small step clip (0.05)",
             SpsaConfig {
                 variant: SpsaVariant::OneSided,
                 grad_avg: 2,
-                max_iters: BUDGET / 3,
                 max_step: 0.05,
                 ..base.clone()
             },
@@ -131,7 +113,6 @@ pub fn run(opts: &ExpOptions) -> String {
             SpsaConfig {
                 variant: SpsaVariant::OneSided,
                 grad_avg: 2,
-                max_iters: BUDGET / 3,
                 max_step: 0.4,
                 ..base.clone()
             },
@@ -139,12 +120,12 @@ pub fn run(opts: &ExpOptions) -> String {
     ];
 
     for (label, cfg) in cells {
-        let (t, obs) = run_cell(cfg.clone(), &seeds);
+        let (t, obs, iters) = run_cell(cfg.clone(), &seeds);
         table.row(vec![
             label.to_string(),
             cfg.grad_avg.to_string(),
             format!("{}", cfg.max_step),
-            cfg.max_iters.to_string(),
+            format!("{iters:.0}"),
             format!("{obs:.0}"),
             format!("{t:.0}"),
         ]);
@@ -165,6 +146,30 @@ mod tests {
         assert!(report.contains("one-sided (paper)"));
         assert!(report.contains("one-measurement"));
         assert!(report.contains("large step clip"));
-        assert_eq!(report.lines().filter(|l| l.contains("0.")).count() >= 5, true);
+        assert!(report.lines().filter(|l| l.contains("0.")).count() >= 5);
+    }
+
+    #[test]
+    fn cheaper_estimators_get_more_iterations_at_equal_budget() {
+        // one-measurement costs 2 obs/iter vs one-sided+avg2's 3: the
+        // broker must grant it 45 iterations to the paper variant's 30.
+        let base = SpsaConfig {
+            grad_tol: 0.0,
+            patience: u64::MAX,
+            max_iters: u64::MAX,
+            ..Default::default()
+        };
+        let (_, obs_paper, iters_paper) = run_cell(
+            SpsaConfig { variant: SpsaVariant::OneSided, grad_avg: 2, ..base.clone() },
+            &[11],
+        );
+        let (_, obs_one, iters_one) = run_cell(
+            SpsaConfig { variant: SpsaVariant::OneMeasurement, grad_avg: 1, ..base },
+            &[11],
+        );
+        assert_eq!(obs_paper, 90.0);
+        assert_eq!(obs_one, 90.0);
+        assert_eq!(iters_paper, 30.0);
+        assert_eq!(iters_one, 45.0);
     }
 }

@@ -3,6 +3,7 @@
 
 use crate::config::HadoopVersion;
 use crate::coordinator::{run_campaign, Algo, ResultsDir, TrialOutcome, TrialSpec};
+use crate::tuner::Budget;
 use crate::util::stats::mean;
 use crate::workloads::Benchmark;
 
@@ -40,6 +41,13 @@ impl ExpOptions {
         }
     }
 
+    /// The shared live-observation budget of every trial: 3 observations
+    /// per SPSA iteration (paper estimator + gradient averaging), so all
+    /// algorithms of a comparison spend the same currency.
+    pub fn budget(&self) -> Budget {
+        Budget::obs(3 * self.iters())
+    }
+
     /// Persist a table if an output directory is configured.
     pub fn persist(&self, name: &str, table: &crate::util::table::Table) {
         if let Some(dir) = &self.out {
@@ -70,9 +78,9 @@ pub fn campaign_for(
     for &algo in algos {
         for bench in Benchmark::all() {
             for &seed in &opts.seeds() {
-                let mut s = TrialSpec::new(bench, version, algo, seed);
-                s.iters = opts.iters();
-                specs.push(s);
+                specs.push(
+                    TrialSpec::new(bench, version, algo, seed).with_budget(opts.budget()),
+                );
             }
         }
     }

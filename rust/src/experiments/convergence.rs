@@ -15,11 +15,7 @@ pub fn run(version: HadoopVersion, opts: &ExpOptions) -> String {
     let seed = opts.seeds()[0];
     let specs: Vec<TrialSpec> = Benchmark::all()
         .iter()
-        .map(|b| {
-            let mut s = TrialSpec::new(*b, version, Algo::Spsa, seed);
-            s.iters = opts.iters();
-            s
-        })
+        .map(|b| TrialSpec::new(*b, version, Algo::Spsa, seed).with_budget(opts.budget()))
         .collect();
     let outcomes = run_campaign(specs);
 

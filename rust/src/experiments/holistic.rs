@@ -9,7 +9,8 @@
 use crate::cluster::ClusterSpec;
 use crate::config::{HadoopVersion, ParameterSpace};
 use crate::coordinator::evaluate_theta;
-use crate::tuner::{SimObjective, Spsa, SpsaConfig};
+use crate::tuner::registry::SpsaTuner;
+use crate::tuner::{Budget, EvalBroker, SimObjective, Tuner};
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::util::table::Table;
@@ -17,18 +18,21 @@ use crate::workloads::Benchmark;
 
 use super::common::ExpOptions;
 
+/// Tune `bench` over `space` with the registry SPSA tuner under an
+/// `iters`-iteration-equivalent observation budget; return the deployed
+/// configuration's mean execution time.
 fn tune(space: &ParameterSpace, bench: Benchmark, iters: u64, seed: u64) -> f64 {
     let cluster = ClusterSpec::paper_cluster();
     let mut rng = Rng::seeded(1000);
     let w = bench.paper_profile(&mut rng);
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
-    let spsa = Spsa::for_space(SpsaConfig { max_iters: iters, seed, ..Default::default() }, space);
-    let res = spsa.run(&mut obj, space.default_theta());
+    let mut broker = EvalBroker::new(&mut obj, Budget::obs(3 * iters));
+    let out = SpsaTuner::paper().tune(&mut broker, space, seed);
     let (t, _) = evaluate_theta(
         space,
         &cluster,
         &w,
-        &res.best_theta,
+        &out.best_theta,
         5,
         seed ^ 0xC0,
         &crate::sim::ScenarioSpec::default(),

@@ -50,13 +50,14 @@ fn find<'a>(
 }
 
 pub fn run(opts: &ExpOptions) -> String {
-    let algos: Vec<Algo> = if opts.quick {
-        vec![Algo::Spsa, Algo::Random]
-    } else {
-        vec![Algo::Spsa, Algo::Random, Algo::Starfish, Algo::Ppabs]
-    };
+    // Full mode compares the ENTIRE registry — all seven algorithms under
+    // one identical observation budget per tier; quick keeps the two
+    // cheapest live tuners so the smoke pass stays fast.
+    let algos: Vec<Algo> =
+        if opts.quick { vec![Algo::Spsa, Algo::Random] } else { Algo::all().to_vec() };
     let rates: Vec<f64> = if opts.quick { vec![0.0, 0.05] } else { FAILURE_RATES.to_vec() };
     let seed = opts.seeds()[0];
+    let budget = opts.budget();
 
     let mut specs = Vec::new();
     for &rate in &rates {
@@ -65,14 +66,22 @@ pub fn run(opts: &ExpOptions) -> String {
                 // PPABS tunes the v2 space (as in Fig. 9 / Table 2).
                 let version =
                     if algo == Algo::Ppabs { HadoopVersion::V2 } else { HadoopVersion::V1 };
-                let mut s = TrialSpec::new(bench, version, algo, seed)
-                    .with_scenario(tier_scenario(rate));
-                s.iters = opts.iters();
-                specs.push(s);
+                specs.push(
+                    TrialSpec::new(bench, version, algo, seed)
+                        .with_scenario(tier_scenario(rate))
+                        .with_budget(budget),
+                );
             }
         }
     }
     let outcomes = run_campaign(specs);
+    for o in &outcomes {
+        assert!(
+            o.observations <= budget.max_obs,
+            "{} overspent the shared budget under faults",
+            o.spec.algo.label()
+        );
+    }
 
     // Table-1-style matrix: % decrease vs the (same-scenario) default,
     // one column per tuner × failure tier.

@@ -19,9 +19,9 @@ pub fn run(opts: &ExpOptions) -> String {
     let mut specs = Vec::new();
     for version in [HadoopVersion::V1, HadoopVersion::V2] {
         for bench in Benchmark::all() {
-            let mut s = TrialSpec::new(bench, version, Algo::Spsa, seed);
-            s.iters = opts.iters();
-            specs.push(s);
+            specs.push(
+                TrialSpec::new(bench, version, Algo::Spsa, seed).with_budget(opts.budget()),
+            );
         }
     }
     let outcomes = run_campaign(specs);

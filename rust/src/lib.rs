@@ -7,7 +7,10 @@
 //! * **L3 (this crate)** — the SPSA tuner (paper Algorithm 1), the baseline
 //!   tuners it is compared against (Starfish-style what-if optimizer,
 //!   PPABS-style clustering + simulated annealing, hill climbing, random
-//!   search), and every substrate the evaluation needs: a 25-node cluster
+//!   search) — all behind one `Tuner` trait and driven through the
+//!   budget-metered, memoizing `EvalBroker` (`tuner::broker`), so
+//!   cross-algorithm comparisons share one observation currency — and
+//!   every substrate the evaluation needs: a 25-node cluster
 //!   model, an HDFS block-placement model, a real mini-MapReduce execution
 //!   engine running the five paper benchmarks on synthetic corpora, and a
 //!   discrete-event simulator of the full MapReduce data path whose job

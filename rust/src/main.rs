@@ -17,6 +17,7 @@ use hadoop_spsa::coordinator::{profile_for, run_trial, Algo, ResultsDir, TrialSp
 use hadoop_spsa::experiments::{self, ExpOptions};
 use hadoop_spsa::runtime::{ArtifactWhatIf, Runtime};
 use hadoop_spsa::sim::{simulate, ScenarioSpec, SimOptions};
+use hadoop_spsa::tuner::Budget;
 use hadoop_spsa::util::cli::Args;
 use hadoop_spsa::util::table::Table;
 use hadoop_spsa::util::units::fmt_secs;
@@ -248,11 +249,11 @@ fn cmd_scenario() -> i32 {
 }
 
 fn cmd_tune() -> i32 {
-    let parsed = Args::new("repro tune", "tune a benchmark with one algorithm")
+    let parsed = Args::new("repro tune", "tune a benchmark with one registry tuner")
         .flag("benchmark", Some("terasort"), "benchmark name")
         .flag("version", Some("v1"), "hadoop version (v1|v2)")
-        .flag("algo", Some("spsa"), "spsa|starfish|ppabs|hill|random|surrogate")
-        .flag("iters", Some("30"), "SPSA iteration budget")
+        .flag("tuner", Some("spsa"), "registry tuner name (see `repro list`)")
+        .flag("budget", Some("90"), "live-observation budget (all tuners share this currency)")
         .flag("seed", Some("7"), "tuner seed")
         .flag("metric", Some("time"), "objective: time|spills|shuffle|reduce-spill (spsa only)")
         .parse_env(2);
@@ -263,23 +264,32 @@ fn cmd_tune() -> i32 {
             return 2;
         }
     };
-    let algo = Algo::from_name(&p.get_str("algo")).unwrap_or_else(|| {
-        eprintln!("unknown algo (see `repro list`)");
+    let algo = Algo::from_name(&p.get_str("tuner")).unwrap_or_else(|| {
+        eprintln!("unknown tuner '{}' (see `repro list`)", p.get_str("tuner"));
         std::process::exit(2);
     });
-    let mut spec = TrialSpec::new(
+    let budget = match p.get_u64("budget") {
+        Ok(b) => Budget::obs(b),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let spec = TrialSpec::new(
         parse_benchmark(&p.get_str("benchmark")),
         parse_version(&p.get_str("version")),
         algo,
         p.get_u64("seed").unwrap_or(7),
-    );
-    spec.iters = p.get_u64("iters").unwrap_or(30);
+    )
+    .with_budget(budget);
 
-    // alternative objective metrics (paper §4.2) — SPSA path only
+    // alternative objective metrics (paper §4.2) — SPSA path only, still
+    // through the registry tuner + metered broker
     let metric = hadoop_spsa::tuner::Metric::from_name(&p.get_str("metric"))
         .unwrap_or(hadoop_spsa::tuner::Metric::ExecTime);
     if metric != hadoop_spsa::tuner::Metric::ExecTime {
-        use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig};
+        use hadoop_spsa::tuner::registry::SpsaTuner;
+        use hadoop_spsa::tuner::{EvalBroker, SimObjective, Tuner};
         let space = ParameterSpace::for_version(spec.version);
         let w = profile_for(spec.benchmark, 1000);
         let cluster = ClusterSpec::paper_cluster();
@@ -289,18 +299,15 @@ fn cmd_tune() -> i32 {
             use hadoop_spsa::tuner::Objective;
             obj.eval(&space.default_theta())
         };
-        let spsa = Spsa::for_space(
-            SpsaConfig { max_iters: spec.iters, seed: spec.seed, ..Default::default() },
-            &space,
-        );
-        let res = spsa.run(&mut obj, space.default_theta());
+        let mut broker = EvalBroker::new(&mut obj, spec.budget);
+        let out = SpsaTuner::paper().tune(&mut broker, &space, spec.seed);
         println!(
-            "SPSA minimizing {}: default {:.3e} → best {:.3e} ({} iterations, {} observations)",
+            "SPSA minimizing {}: default {:.3e} → best {:.3e} ({} observations of {} budgeted)",
             metric.label(),
             f0,
-            res.best_f,
-            res.iterations,
-            res.observations
+            out.best_f,
+            broker.evals_used(),
+            spec.budget.max_obs
         );
         return 0;
     }
@@ -317,8 +324,9 @@ fn cmd_tune() -> i32 {
         o.pct_decrease()
     );
     println!(
-        "observations: {}   model evals: {}   profiling: {}   tuner wall: {:.0} ms",
+        "observations: {}/{}   model evals: {}   profiling: {}   tuner wall: {:.0} ms",
         o.observations,
+        o.spec.budget.max_obs,
         o.model_evals,
         if o.profiling_overhead_s > 0.0 {
             fmt_secs(o.profiling_overhead_s)
@@ -473,7 +481,15 @@ fn cmd_list() -> i32 {
             hadoop_spsa::util::units::fmt_bytes(b.paper_partial_bytes())
         );
     }
-    println!("\nalgorithms: default spsa surrogate starfish ppabs hill random");
+    println!("\ntuners (registry; all metered by one observation budget):");
+    for e in hadoop_spsa::tuner::TUNERS {
+        let aliases = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  (aliases: {})", e.aliases.join(", "))
+        };
+        println!("  {:<16} {}{}", e.name, e.summary, aliases);
+    }
     for version in [HadoopVersion::V1, HadoopVersion::V2] {
         let space = ParameterSpace::for_version(version);
         let mut t = Table::new(&format!("parameters (Hadoop {version})")).header(vec![

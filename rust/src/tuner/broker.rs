@@ -1,0 +1,466 @@
+//! `EvalBroker` — the single metered evaluation path every tuner observes
+//! the live system through. The paper's headline claim is *economy of
+//! observations* (SPSA needs 2 per iteration, §6.6); the broker makes that
+//! the native currency of the comparison by wrapping any [`Objective`] with
+//!
+//! * a hard observation/batch budget ([`Budget`]): exceeding it is a
+//!   graceful stop — the tuner keeps its best-so-far partial result;
+//! * a memoization cache keyed by quantized θ ([`CachePolicy::Quantized`]),
+//!   so revisit-heavy tuners (hill climbing, annealing-style proposals)
+//!   stop paying for repeat simulations — cache hits cost no budget and
+//!   never reach the underlying objective;
+//! * batched dispatch: uncached points of a batch go to the objective in
+//!   one [`Objective::eval_batch`] call, in their original order, so the
+//!   pre-assigned seed streams of `SimObjective` fan across
+//!   `coordinator::pool` workers and stay bit-identical to the sequential
+//!   loop at any worker count (the PR 1 contract);
+//! * a uniform eval-trace ([`EvalRecord`]) and best-so-far tracking, so
+//!   every tuner gets a convergence history for free.
+//!
+//! **Cache caveat (continuous-θ tuners).** A cache hit replays a past
+//! observation instead of consuming the objective's next seed, so the
+//! observation stream is no longer bit-identical to an uncached run, and
+//! quantization (default 1e-6 per coordinate) aliases points closer than
+//! the quantum. Tuners whose trajectories must replay exactly — the SPSA
+//! family — declare [`CachePolicy::Off`] via `Tuner::cache_policy`.
+
+use std::collections::HashMap;
+
+use super::objective::Objective;
+
+/// Hard evaluation budget of one tuning run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Budget {
+    /// Maximum live observations (cache hits are free).
+    pub max_obs: u64,
+    /// Maximum dispatch rounds (each underlying `eval_batch` call is one
+    /// round — a wall-clock proxy: one round ≈ one parallel wave).
+    pub max_batches: u64,
+}
+
+impl Budget {
+    /// Observation budget with unlimited batches — the common case.
+    pub fn obs(max_obs: u64) -> Budget {
+        Budget { max_obs, max_batches: u64::MAX }
+    }
+
+    /// No limits (compat path for callers that meter elsewhere).
+    pub fn unlimited() -> Budget {
+        Budget::obs(u64::MAX)
+    }
+
+    /// Builder: additionally cap dispatch rounds.
+    pub fn with_batches(mut self, max_batches: u64) -> Budget {
+        self.max_batches = max_batches;
+        self
+    }
+}
+
+/// Whether the broker may serve repeat θs from memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Every observation reaches the objective — bit-exact seed streams.
+    Off,
+    /// Memoize by quantized θ; revisits are free (and noise-frozen).
+    Quantized,
+}
+
+/// One observed point of the uniform convergence trace.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    /// Live observations consumed *after* this record (cache hits repeat
+    /// the previous count).
+    pub obs: u64,
+    pub theta: Vec<f64>,
+    pub f: f64,
+    pub cached: bool,
+}
+
+/// Budget-metered, memoizing, trace-keeping wrapper around an objective.
+pub struct EvalBroker<'a> {
+    objective: &'a mut dyn Objective,
+    budget: Budget,
+    policy: CachePolicy,
+    /// Cache quantization step per coordinate (θ ∈ [0,1]).
+    quant: f64,
+    memo: HashMap<Vec<i64>, f64>,
+    evals_used: u64,
+    batches_used: u64,
+    cache_hits: u64,
+    trace: Vec<EvalRecord>,
+    best: Option<(Vec<f64>, f64)>,
+}
+
+impl<'a> EvalBroker<'a> {
+    /// Wrap `objective`. The cache starts [`CachePolicy::Off`] — the safe,
+    /// bit-exact default; registry-driven runs apply the tuner's declared
+    /// policy.
+    pub fn new(objective: &'a mut dyn Objective, budget: Budget) -> Self {
+        EvalBroker {
+            objective,
+            budget,
+            policy: CachePolicy::Off,
+            quant: 1e-6,
+            memo: HashMap::new(),
+            evals_used: 0,
+            batches_used: 0,
+            cache_hits: 0,
+            trace: Vec::new(),
+            best: None,
+        }
+    }
+
+    pub fn with_cache(mut self, policy: CachePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Cache quantization step (only meaningful with `Quantized`).
+    pub fn with_quantization(mut self, quant: f64) -> Self {
+        assert!(quant > 0.0, "quantization step must be positive");
+        self.quant = quant;
+        self
+    }
+
+    /// Observations still affordable (0 once either budget axis is spent).
+    pub fn remaining(&self) -> u64 {
+        if self.batches_used >= self.budget.max_batches {
+            return 0;
+        }
+        self.budget.max_obs.saturating_sub(self.evals_used)
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Live observations consumed so far (incl. [`EvalBroker::charge`]).
+    pub fn evals_used(&self) -> u64 {
+        self.evals_used
+    }
+
+    pub fn batches_used(&self) -> u64 {
+        self.batches_used
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    pub fn budget(&self) -> Budget {
+        self.budget
+    }
+
+    pub fn dim(&self) -> usize {
+        self.objective.dim()
+    }
+
+    /// Best observed point so far: (θ, f).
+    pub fn best(&self) -> Option<(&[f64], f64)> {
+        self.best.as_ref().map(|(t, f)| (t.as_slice(), *f))
+    }
+
+    /// The uniform convergence trace (every served observation, in order).
+    pub fn trace(&self) -> &[EvalRecord] {
+        &self.trace
+    }
+
+    pub fn take_trace(&mut self) -> Vec<EvalRecord> {
+        std::mem::take(&mut self.trace)
+    }
+
+    /// Account `n` live runs performed *outside* this broker's objective
+    /// against the budget (e.g. PPABS profiling its training corpus, which
+    /// runs other workloads). Returns how many were granted; the caller
+    /// must scale its external work down to the grant.
+    pub fn charge(&mut self, n: u64) -> u64 {
+        let granted = n.min(self.remaining());
+        self.evals_used += granted;
+        granted
+    }
+
+    fn key(&self, theta: &[f64]) -> Vec<i64> {
+        theta.iter().map(|t| (t / self.quant).round() as i64).collect()
+    }
+
+    /// One observation. `None` once the budget is exhausted — the caller's
+    /// graceful-stop signal (return best-so-far).
+    pub fn try_eval(&mut self, theta: &[f64]) -> Option<f64> {
+        self.try_eval_batch(std::slice::from_ref(&theta.to_vec())).first().copied()
+    }
+
+    /// Observe a batch of points. Serves each point in order — from the
+    /// cache when allowed, else from the objective — and **truncates at
+    /// the first point the budget cannot afford**: the returned vector may
+    /// be shorter than `thetas` (empty when exhausted up front). All
+    /// uncached points go to the objective in ONE `eval_batch` call, in
+    /// their original relative order, so per-observation seed derivation
+    /// matches the plain sequential loop exactly.
+    pub fn try_eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        // Plan: which points are served from memory, which dispatch, and
+        // where the budget truncates the batch.
+        enum Source {
+            Memo(f64),
+            /// Index into the dispatch vector (also covers duplicates of a
+            /// not-yet-dispatched point within the same batch).
+            Dispatch(usize),
+        }
+        let mut plan: Vec<Source> = Vec::with_capacity(thetas.len());
+        let mut dispatch: Vec<Vec<f64>> = Vec::new();
+        let mut pending: HashMap<Vec<i64>, usize> = HashMap::new();
+        let affordable = self.remaining();
+        for theta in thetas {
+            let use_cache = self.policy == CachePolicy::Quantized;
+            let k = if use_cache { self.key(theta) } else { Vec::new() };
+            if use_cache {
+                if let Some(&f) = self.memo.get(&k) {
+                    plan.push(Source::Memo(f));
+                    continue;
+                }
+                if let Some(&i) = pending.get(&k) {
+                    plan.push(Source::Dispatch(i));
+                    continue;
+                }
+            }
+            if (dispatch.len() as u64) >= affordable {
+                break; // budget exhausted: truncate here
+            }
+            if use_cache {
+                pending.insert(k, dispatch.len());
+            }
+            plan.push(Source::Dispatch(dispatch.len()));
+            dispatch.push(theta.clone());
+        }
+
+        let values: Vec<f64> = if dispatch.is_empty() {
+            Vec::new()
+        } else {
+            self.batches_used += 1;
+            self.evals_used += dispatch.len() as u64;
+            self.objective.eval_batch(&dispatch)
+        };
+        debug_assert_eq!(values.len(), dispatch.len());
+        if self.policy == CachePolicy::Quantized {
+            for (theta, &f) in dispatch.iter().zip(&values) {
+                self.memo.insert(self.key(theta), f);
+            }
+        }
+
+        let mut out = Vec::with_capacity(plan.len());
+        let mut dispatched_seen = vec![false; dispatch.len()];
+        for (src, theta) in plan.iter().zip(thetas) {
+            let (f, cached) = match src {
+                Source::Memo(f) => (*f, true),
+                Source::Dispatch(i) => {
+                    let first = !dispatched_seen[*i];
+                    dispatched_seen[*i] = true;
+                    (values[*i], !first)
+                }
+            };
+            if cached {
+                self.cache_hits += 1;
+            }
+            self.trace.push(EvalRecord {
+                obs: self.evals_used,
+                theta: theta.clone(),
+                f,
+                cached,
+            });
+            let better = match &self.best {
+                Some((_, bf)) => f < *bf,
+                None => true,
+            };
+            if better {
+                self.best = Some((theta.clone(), f));
+            }
+            out.push(f);
+        }
+        out
+    }
+}
+
+/// The broker as an [`Objective`], so batch-driven tuners (`Spsa::run_state`)
+/// plug in unchanged. This facade has no graceful-stop channel: callers
+/// must check [`EvalBroker::remaining`] before each request (as
+/// `Spsa::run_broker` does) — an over-budget request here is a caller bug
+/// and panics rather than fabricating an observation.
+impl Objective for EvalBroker<'_> {
+    fn dim(&self) -> usize {
+        self.objective.dim()
+    }
+
+    fn eval(&mut self, theta: &[f64]) -> f64 {
+        self.try_eval(theta)
+            .expect("EvalBroker budget exhausted — check remaining() before eval")
+    }
+
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        let out = self.try_eval_batch(thetas);
+        assert_eq!(
+            out.len(),
+            thetas.len(),
+            "EvalBroker budget exhausted mid-batch — check remaining() before eval_batch"
+        );
+        out
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals_used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::objective::QuadraticObjective;
+
+    fn quad() -> QuadraticObjective {
+        QuadraticObjective::new(vec![0.3, 0.7], 0.05, 9)
+    }
+
+    #[test]
+    fn meters_observations_and_batches() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        assert_eq!(b.remaining(), 10);
+        let f = b.try_eval(&[0.5, 0.5]).unwrap();
+        assert!(f.is_finite());
+        assert_eq!(b.evals_used(), 1);
+        assert_eq!(b.batches_used(), 1);
+        let fs = b.try_eval_batch(&[vec![0.1, 0.1], vec![0.9, 0.9]]);
+        assert_eq!(fs.len(), 2);
+        assert_eq!(b.evals_used(), 3);
+        assert_eq!(b.batches_used(), 2);
+        assert_eq!(b.remaining(), 7);
+        assert_eq!(b.trace().len(), 3);
+    }
+
+    #[test]
+    fn budget_exhaustion_truncates_gracefully() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(3));
+        let pts: Vec<Vec<f64>> = (0..5).map(|i| vec![0.1 * i as f64, 0.2]).collect();
+        let fs = b.try_eval_batch(&pts);
+        assert_eq!(fs.len(), 3, "batch must truncate at the budget");
+        assert_eq!(b.evals_used(), 3);
+        assert!(b.exhausted());
+        assert!(b.try_eval(&[0.5, 0.5]).is_none());
+        assert!(b.try_eval_batch(&pts).is_empty());
+        // best-so-far survives exhaustion — the partial result
+        let (bt, bf) = b.best().expect("best-so-far");
+        assert_eq!(bt.len(), 2);
+        assert!(bf.is_finite());
+        assert_eq!(obj.evals(), 3, "objective saw exactly the budget");
+    }
+
+    #[test]
+    fn batch_budget_axis_stops_dispatch() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(100).with_batches(2));
+        assert!(b.try_eval(&[0.1, 0.1]).is_some());
+        assert!(b.try_eval(&[0.2, 0.2]).is_some());
+        assert_eq!(b.batches_used(), 2);
+        assert_eq!(b.remaining(), 0, "batch budget spent");
+        assert!(b.try_eval(&[0.3, 0.3]).is_none());
+    }
+
+    #[test]
+    fn cache_hit_is_free_and_objective_counter_does_not_grow() {
+        let mut obj = quad();
+        let mut b =
+            EvalBroker::new(&mut obj, Budget::obs(10)).with_cache(CachePolicy::Quantized);
+        let theta = [0.25, 0.75];
+        let a = b.try_eval(&theta).unwrap();
+        let evals_after_first = b.evals_used();
+        let c = b.try_eval(&theta).unwrap();
+        assert_eq!(a, c, "cache must replay the recorded observation");
+        assert_eq!(b.evals_used(), evals_after_first, "cache hit charged the budget");
+        assert_eq!(b.cache_hits(), 1);
+        assert_eq!(obj.evals(), 1, "Objective::evals() grew on a repeated θ");
+    }
+
+    #[test]
+    fn cache_off_pays_every_time() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        let theta = [0.25, 0.75];
+        b.try_eval(&theta).unwrap();
+        b.try_eval(&theta).unwrap();
+        assert_eq!(b.evals_used(), 2);
+        assert_eq!(b.cache_hits(), 0);
+        assert_eq!(obj.evals(), 2);
+    }
+
+    #[test]
+    fn within_batch_duplicates_dispatch_once_under_cache() {
+        let mut obj = quad();
+        let mut b =
+            EvalBroker::new(&mut obj, Budget::obs(10)).with_cache(CachePolicy::Quantized);
+        let fs = b.try_eval_batch(&[vec![0.4, 0.4], vec![0.4, 0.4], vec![0.6, 0.6]]);
+        assert_eq!(fs.len(), 3);
+        assert_eq!(fs[0], fs[1]);
+        assert_eq!(b.evals_used(), 2, "duplicate θ in one batch must dispatch once");
+        assert_eq!(obj.evals(), 2);
+    }
+
+    #[test]
+    fn quantization_aliases_nearby_points() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10))
+            .with_cache(CachePolicy::Quantized)
+            .with_quantization(0.1);
+        let a = b.try_eval(&[0.50, 0.50]).unwrap();
+        let c = b.try_eval(&[0.52, 0.48]).unwrap(); // same 0.1-cell
+        assert_eq!(a, c);
+        assert_eq!(b.evals_used(), 1);
+    }
+
+    #[test]
+    fn charge_meters_external_runs() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        assert_eq!(b.charge(4), 4);
+        assert_eq!(b.evals_used(), 4);
+        assert_eq!(b.charge(20), 6, "grant clips to the remaining budget");
+        assert!(b.exhausted());
+        assert_eq!(obj.evals(), 0, "charge must not touch the objective");
+    }
+
+    #[test]
+    fn trace_and_best_track_observations() {
+        let mut obj = QuadraticObjective::new(vec![0.5, 0.5], 0.0, 1);
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        b.try_eval(&[0.9, 0.9]).unwrap();
+        b.try_eval(&[0.5, 0.5]).unwrap();
+        b.try_eval(&[0.8, 0.8]).unwrap();
+        let (bt, bf) = b.best().unwrap();
+        assert_eq!(bt, &[0.5, 0.5]);
+        assert!((bf - 1.0).abs() < 1e-9, "noise-free minimum is 1.0");
+        assert_eq!(b.trace().len(), 3);
+        assert_eq!(b.trace()[2].obs, 3);
+        assert!(!b.trace()[2].cached);
+    }
+
+    #[test]
+    fn objective_facade_passes_through_unlimited() {
+        // Through the Objective facade with cache off, the broker is a
+        // transparent proxy: same values, same counter.
+        let thetas: Vec<Vec<f64>> = vec![vec![0.2, 0.2], vec![0.7, 0.1], vec![0.5, 0.9]];
+        let mut plain = quad();
+        let want = plain.eval_batch(&thetas);
+        let mut wrapped_inner = quad();
+        let mut b = EvalBroker::new(&mut wrapped_inner, Budget::unlimited());
+        let got = Objective::eval_batch(&mut b, &thetas);
+        assert_eq!(got, want);
+        assert_eq!(Objective::evals(&b), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "budget exhausted")]
+    fn objective_facade_panics_when_overdrawn() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(1));
+        Objective::eval(&mut b, &[0.5, 0.5]);
+        Objective::eval(&mut b, &[0.6, 0.6]); // caller bug: no remaining() check
+    }
+}

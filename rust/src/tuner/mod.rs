@@ -1,10 +1,17 @@
 //! The paper's contribution: SPSA-based Hadoop parameter tuning
-//! (Algorithm 1 + the §5 adaptations), with a pluggable noisy objective.
+//! (Algorithm 1 + the §5 adaptations), with a pluggable noisy objective —
+//! plus the unified tuner interface every comparison algorithm runs
+//! behind: the budget-metered, memoizing [`EvalBroker`] and the
+//! [`Tuner`] trait + registry.
 
+pub mod broker;
 pub mod objective;
+pub mod registry;
 pub mod spsa;
 
+pub use broker::{Budget, CachePolicy, EvalBroker, EvalRecord};
 pub use objective::{Metric, Objective, ObsAgg, QuadraticObjective, SimObjective};
+pub use registry::{Tuner, TuneOutcome, TunerContext, TunerEntry, PROFILE_NOISE_SIGMA, TUNERS};
 pub use spsa::{
     IterRecord, Spsa, SpsaConfig, SpsaState, SpsaVariant, StopReason, TuningResult,
 };

@@ -1,0 +1,507 @@
+//! The unified tuner interface: every algorithm of the paper's comparison
+//! (§6.6) — and any future one — is a [`Tuner`] that observes the live
+//! system only through a budget-metered [`EvalBroker`], so cross-algorithm
+//! comparisons are apples-to-apples by construction: one observation
+//! budget, one eval accounting, one convergence trace.
+//!
+//! Adding a tuner: implement [`Tuner`] and append a [`TunerEntry`] to
+//! [`TUNERS`] — `repro list`, `registry::create` and every broker-driven
+//! caller pick it up immediately. To also join the enum-driven campaign
+//! and experiment matrices (`repro tune`, table2, robustness), add the
+//! matching `coordinator::Algo` variant — three one-line match arms in
+//! its `all`/`name`/`label`; that enum stays as a deliberate thin compat
+//! shim for code that pattern-matches on algorithms.
+
+use crate::baselines::{
+    hill_climb, random_search, starfish_tune, training_corpus, CostObjective,
+    HillClimbConfig, Ppabs, RrsConfig, RustWhatIf,
+};
+use crate::cluster::ClusterSpec;
+use crate::config::{HadoopVersion, ParameterSpace};
+use crate::util::rng::Rng;
+use crate::whatif::ClusterFeatures;
+use crate::workloads::WorkloadProfile;
+
+use super::broker::{CachePolicy, EvalBroker};
+use super::spsa::{IterRecord, Spsa, SpsaConfig};
+
+/// Measurement error of a single-shot job profile (lognormal sigma applied
+/// to each data-flow feature). Profiling-based tuners see the workload
+/// through this lens; SPSA never needs a profile.
+pub const PROFILE_NOISE_SIGMA: f64 = 0.35;
+
+/// Everything a tuner may need besides the broker: what job runs on what
+/// cluster. The broker's objective observes the same pair, so model-based
+/// tuners derive their what-if features from here.
+#[derive(Clone)]
+pub struct TunerContext {
+    pub version: HadoopVersion,
+    pub cluster: ClusterSpec,
+    pub workload: WorkloadProfile,
+}
+
+impl TunerContext {
+    pub fn features(&self) -> ClusterFeatures {
+        ClusterFeatures::from_spec(&self.cluster, self.version)
+    }
+}
+
+/// What a tuning run hands back. Live-observation accounting lives in the
+/// broker (`evals_used`, trace, best-so-far); this carries the deployed
+/// configuration plus the tuner-private extras.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// Configuration to deploy (algorithm space).
+    pub best_theta: Vec<f64>,
+    /// The tuner's own estimate of f at `best_theta` — observed for
+    /// live-system tuners, model-predicted for CBO tuners, `INFINITY`
+    /// when nothing was evaluated.
+    pub best_f: f64,
+    /// Per-iteration records (SPSA-family; empty otherwise — the broker
+    /// trace is the uniform history).
+    pub history: Vec<IterRecord>,
+    /// What-if model evaluations (model-based tuners only).
+    pub model_evals: u64,
+    /// Simulated seconds spent profiling (Starfish/PPABS; 0 for SPSA).
+    pub profiling_overhead_s: f64,
+}
+
+impl TuneOutcome {
+    fn deploy(best_theta: Vec<f64>, best_f: f64) -> TuneOutcome {
+        TuneOutcome {
+            best_theta,
+            best_f,
+            history: Vec::new(),
+            model_evals: 0,
+            profiling_overhead_s: 0.0,
+        }
+    }
+}
+
+/// A tuning algorithm behind the one metered evaluation path.
+pub trait Tuner {
+    /// Canonical registry name (`TunerEntry::name`).
+    fn name(&self) -> &'static str;
+
+    /// Cache policy the broker should run with. Default: memoize —
+    /// revisit-heavy searches stop paying for repeat simulations. The
+    /// SPSA family overrides to `Off`: a cache hit skips the objective's
+    /// next seed, and SPSA's golden trajectories must replay bit-exactly.
+    fn cache_policy(&self) -> CachePolicy {
+        CachePolicy::Quantized
+    }
+
+    /// Tune within the broker's budget; exhausting it is a graceful stop
+    /// (return the best configuration found so far).
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// implementations
+// ---------------------------------------------------------------------------
+
+/// No tuning: Hadoop defaults (the paper's baseline row).
+pub struct DefaultTuner;
+
+impl Tuner for DefaultTuner {
+    fn name(&self) -> &'static str {
+        "default"
+    }
+
+    fn cache_policy(&self) -> CachePolicy {
+        CachePolicy::Off
+    }
+
+    fn tune(&self, _broker: &mut EvalBroker, space: &ParameterSpace, _seed: u64) -> TuneOutcome {
+        TuneOutcome::deploy(space.default_theta(), f64::INFINITY)
+    }
+}
+
+/// The paper's contribution (Algorithm 1) on the live system.
+pub struct SpsaTuner {
+    pub config: SpsaConfig,
+}
+
+impl SpsaTuner {
+    /// The paper's hyper-parameters (§5.2 / §6.5).
+    pub fn paper() -> SpsaTuner {
+        SpsaTuner { config: SpsaConfig::default() }
+    }
+}
+
+impl Tuner for SpsaTuner {
+    fn name(&self) -> &'static str {
+        "spsa"
+    }
+
+    fn cache_policy(&self) -> CachePolicy {
+        CachePolicy::Off
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        let mut spsa = Spsa::for_space(SpsaConfig { seed, ..self.config.clone() }, space);
+        if broker.budget().max_obs != u64::MAX {
+            // spend the whole budget unless the gradient calms first; the
+            // config's own max_iters only caps unlimited-budget runs
+            spsa.config.max_iters = (broker.remaining() / spsa.obs_per_iter()).max(1);
+        }
+        let res = spsa.run_broker(broker, space.default_theta());
+        TuneOutcome {
+            // Deploy the best configuration observed during learning: the
+            // coordinator has every iterate's measured time at hand, and
+            // the final iterate still carries the last noisy step.
+            best_theta: res.best_theta,
+            best_f: res.best_f,
+            history: res.history,
+            model_evals: 0,
+            profiling_overhead_s: 0.0,
+        }
+    }
+}
+
+/// SPSA iterating on the analytic what-if surface instead of the live
+/// system (extension; the artifact-backed variant lives in
+/// `examples/whatif_engine.rs`). Model observations are free, so it runs
+/// 4× the live-budget-equivalent iterations and consumes 0 live
+/// observations.
+pub struct SurrogateSpsaTuner {
+    pub config: SpsaConfig,
+    workload: WorkloadProfile,
+    features: ClusterFeatures,
+}
+
+impl SurrogateSpsaTuner {
+    pub fn new(ctx: &TunerContext) -> SurrogateSpsaTuner {
+        SurrogateSpsaTuner {
+            config: SpsaConfig::default(),
+            workload: ctx.workload.clone(),
+            features: ctx.features(),
+        }
+    }
+}
+
+impl Tuner for SurrogateSpsaTuner {
+    fn name(&self) -> &'static str {
+        "spsa-surrogate"
+    }
+
+    fn cache_policy(&self) -> CachePolicy {
+        CachePolicy::Off
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        let mut evaluator =
+            RustWhatIf::new(space.clone(), self.workload.clone(), self.features.clone());
+        let mut spsa = Spsa::for_space(SpsaConfig { seed, ..self.config.clone() }, space);
+        if broker.budget().max_obs != u64::MAX {
+            spsa.config.max_iters =
+                (broker.remaining() / spsa.obs_per_iter()).max(1).saturating_mul(4);
+        }
+        let mut obj = CostObjective::new(&mut evaluator);
+        let res = spsa.run(&mut obj, space.default_theta());
+        TuneOutcome {
+            best_theta: res.best_theta,
+            best_f: res.best_f,
+            history: res.history,
+            model_evals: res.observations,
+            profiling_overhead_s: 0.0,
+        }
+    }
+}
+
+/// Starfish: one metered profiling run → noisy single-shot profile →
+/// what-if model → RRS (paper §3, §6.8(4)).
+pub struct StarfishTuner {
+    pub rrs: RrsConfig,
+    workload: WorkloadProfile,
+    features: ClusterFeatures,
+}
+
+impl StarfishTuner {
+    pub fn new(ctx: &TunerContext) -> StarfishTuner {
+        StarfishTuner {
+            rrs: RrsConfig::default(),
+            workload: ctx.workload.clone(),
+            features: ctx.features(),
+        }
+    }
+}
+
+impl Tuner for StarfishTuner {
+    fn name(&self) -> &'static str {
+        "starfish"
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        // Starfish characterizes the job from ONE instrumented run: its
+        // what-if engine sees a single-shot noisy profile.
+        let mut prof_rng = Rng::seeded(seed ^ 0x5F15);
+        let noisy_w = self.workload.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA);
+        let mut evaluator = RustWhatIf::new(space.clone(), noisy_w, self.features.clone());
+        let res = starfish_tune(
+            space,
+            broker,
+            &mut evaluator,
+            &RrsConfig { seed, ..self.rrs.clone() },
+        );
+        TuneOutcome {
+            best_theta: res.best_theta,
+            best_f: res.model_cost,
+            history: Vec::new(),
+            model_evals: res.model_evals,
+            profiling_overhead_s: res.profiling_overhead_s,
+        }
+    }
+}
+
+/// PPABS: profile a training corpus (metered via [`EvalBroker::charge`] —
+/// the corpus jobs are *other* workloads, simulated inside `Ppabs::train`),
+/// cluster signatures, anneal one configuration per cluster, then assign
+/// the target job to its nearest cluster.
+pub struct PpabsTuner {
+    pub k: usize,
+    cluster: ClusterSpec,
+    workload: WorkloadProfile,
+}
+
+impl PpabsTuner {
+    pub fn new(ctx: &TunerContext) -> PpabsTuner {
+        PpabsTuner { k: 4, cluster: ctx.cluster.clone(), workload: ctx.workload.clone() }
+    }
+}
+
+impl Tuner for PpabsTuner {
+    fn name(&self) -> &'static str {
+        "ppabs"
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        let mut prof_rng = Rng::seeded(seed ^ 0x99AB);
+        let corpus: Vec<WorkloadProfile> = training_corpus(2000)
+            .iter()
+            .map(|c| c.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA))
+            .collect();
+        // meter the corpus profiling against the shared live budget; a
+        // too-small budget shrinks the corpus (graceful degradation)
+        let granted = broker.charge(corpus.len() as u64) as usize;
+        if granted == 0 {
+            return TuneOutcome::deploy(space.default_theta(), f64::INFINITY);
+        }
+        let ppabs = Ppabs::train(space, &self.cluster, &corpus[..granted], self.k, seed);
+        TuneOutcome {
+            best_theta: ppabs.configure(&self.workload),
+            best_f: f64::INFINITY, // assigns a cluster config, never observes it
+            history: Vec::new(),
+            model_evals: ppabs.model_evals,
+            profiling_overhead_s: ppabs.profiling_overhead_s,
+        }
+    }
+}
+
+/// MROnline-style hill climbing on the live system.
+pub struct HillClimbTuner {
+    pub config: HillClimbConfig,
+}
+
+impl Tuner for HillClimbTuner {
+    fn name(&self) -> &'static str {
+        "hillclimb"
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        let res = hill_climb(
+            broker,
+            space.default_theta(),
+            &HillClimbConfig { seed, ..self.config.clone() },
+        );
+        TuneOutcome::deploy(res.best_theta, res.best_f)
+    }
+}
+
+/// Random search on the live system (ablation anchor).
+pub struct RandomTuner;
+
+impl Tuner for RandomTuner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn cache_policy(&self) -> CachePolicy {
+        // a memo hit would silently skip the objective's next seed (the
+        // cache can never help a uniform sampler anyway) — keep the
+        // documented bit-exact seed-stream contract of random_search
+        CachePolicy::Off
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        let res = random_search(broker, space.default_theta(), seed);
+        TuneOutcome::deploy(res.best_theta, res.best_f)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+/// One registered tuner: canonical name, accepted aliases (matched
+/// case-insensitively, input trimmed), a one-liner for `repro list`, and
+/// the factory.
+pub struct TunerEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub make: fn(&TunerContext) -> Box<dyn Tuner>,
+}
+
+/// Every tuner the repro knows. Append here to register a new one.
+pub static TUNERS: &[TunerEntry] = &[
+    TunerEntry {
+        name: "default",
+        aliases: &["none", "baseline"],
+        summary: "no tuning: Hadoop default configuration",
+        make: |_| Box::new(DefaultTuner),
+    },
+    TunerEntry {
+        name: "spsa",
+        aliases: &[],
+        summary: "the paper's noisy-gradient tuner on the live system (Algorithm 1)",
+        make: |_| Box::new(SpsaTuner::paper()),
+    },
+    TunerEntry {
+        name: "spsa-surrogate",
+        aliases: &["surrogate", "spsasurrogate"],
+        summary: "SPSA iterating on the analytic what-if model, 0 live observations",
+        make: |ctx| Box::new(SurrogateSpsaTuner::new(ctx)),
+    },
+    TunerEntry {
+        name: "starfish",
+        aliases: &[],
+        summary: "profile once, then RRS over the what-if cost model (CIDR'11)",
+        make: |ctx| Box::new(StarfishTuner::new(ctx)),
+    },
+    TunerEntry {
+        name: "ppabs",
+        aliases: &[],
+        summary: "corpus profiling + signature clustering + SA on a reduced space (HiPC'13)",
+        make: |ctx| Box::new(PpabsTuner::new(ctx)),
+    },
+    TunerEntry {
+        name: "hillclimb",
+        aliases: &["hill", "hill-climb", "mronline"],
+        summary: "MROnline-style one-parameter-at-a-time search on the live system (HPDC'14)",
+        make: |_| Box::new(HillClimbTuner { config: HillClimbConfig::default() }),
+    },
+    TunerEntry {
+        name: "random",
+        aliases: &["randomsearch", "random-search"],
+        summary: "uniform random search on the live system (ablation anchor)",
+        make: |_| Box::new(RandomTuner),
+    },
+];
+
+/// Look a tuner up by name or alias (trimmed, case-insensitive).
+pub fn find(name: &str) -> Option<&'static TunerEntry> {
+    let t = name.trim().to_ascii_lowercase();
+    TUNERS.iter().find(|e| {
+        e.name == t || e.aliases.iter().any(|a| *a == t)
+    })
+}
+
+/// Instantiate a tuner for a (workload, cluster, version) context.
+pub fn create(name: &str, ctx: &TunerContext) -> Option<Box<dyn Tuner>> {
+    find(name).map(|e| (e.make)(ctx))
+}
+
+/// Canonical names, registry order.
+pub fn names() -> Vec<&'static str> {
+    TUNERS.iter().map(|e| e.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::broker::{Budget, EvalBroker};
+    use crate::tuner::SimObjective;
+    use crate::workloads::Benchmark;
+
+    fn ctx() -> TunerContext {
+        let mut rng = Rng::seeded(1);
+        TunerContext {
+            version: HadoopVersion::V1,
+            cluster: ClusterSpec::paper_cluster(),
+            workload: Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut rng),
+        }
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolve() {
+        let names = names();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[i + 1..].contains(n), "duplicate registry name {n}");
+            assert_eq!(find(n).unwrap().name, *n);
+        }
+    }
+
+    #[test]
+    fn find_is_case_insensitive_and_trims() {
+        assert_eq!(find("  SPSA ").unwrap().name, "spsa");
+        assert_eq!(find("Hill-Climb").unwrap().name, "hillclimb");
+        assert_eq!(find("MROnline").unwrap().name, "hillclimb");
+        assert_eq!(find("SURROGATE").unwrap().name, "spsa-surrogate");
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn created_tuner_reports_its_registry_name() {
+        let c = ctx();
+        for e in TUNERS {
+            let t = create(e.name, &c).unwrap();
+            assert_eq!(t.name(), e.name, "factory/name mismatch for {}", e.name);
+        }
+    }
+
+    #[test]
+    fn every_tuner_respects_one_shared_budget() {
+        // The acceptance contract in miniature: each registry tuner runs
+        // against the same live objective under the same budget and never
+        // overspends; live-system tuners must consume something.
+        let c = ctx();
+        let space = ParameterSpace::for_version(c.version);
+        const BUDGET: u64 = 30;
+        for e in TUNERS {
+            let tuner = create(e.name, &c).unwrap();
+            let mut obj =
+                SimObjective::new(space.clone(), c.cluster.clone(), c.workload.clone(), 7);
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(BUDGET))
+                .with_cache(tuner.cache_policy());
+            let out = tuner.tune(&mut broker, &space, 7);
+            assert!(
+                broker.evals_used() <= BUDGET,
+                "{} overspent: {} > {BUDGET}",
+                e.name,
+                broker.evals_used()
+            );
+            assert_eq!(out.best_theta.len(), space.dim(), "{}", e.name);
+            match e.name {
+                "default" | "spsa-surrogate" => assert_eq!(broker.evals_used(), 0),
+                "starfish" => assert_eq!(broker.evals_used(), 1),
+                "random" => assert_eq!(broker.evals_used(), BUDGET),
+                _ => assert!(broker.evals_used() > 0, "{} never observed", e.name),
+            }
+        }
+    }
+
+    #[test]
+    fn spsa_tuner_spends_budget_in_whole_iterations() {
+        let c = ctx();
+        let space = ParameterSpace::for_version(c.version);
+        let tuner = SpsaTuner::paper(); // grad_avg 2 → 3 obs/iter
+        let mut obj =
+            SimObjective::new(space.clone(), c.cluster.clone(), c.workload.clone(), 3);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(31));
+        let out = tuner.tune(&mut broker, &space, 3);
+        assert!(broker.evals_used() <= 30, "3-obs iterations can't spend 31");
+        assert_eq!(broker.evals_used() % 3, 0);
+        assert_eq!(out.history.len() as u64 * 3, broker.evals_used());
+    }
+}

@@ -200,6 +200,9 @@ pub enum StopReason {
     MaxIters,
     GradientCalm,
     Paused,
+    /// The broker's observation budget cannot afford another iteration
+    /// (graceful stop with the best-so-far partial result).
+    BudgetExhausted,
 }
 
 /// Result of a tuning run.
@@ -246,10 +249,60 @@ impl Spsa {
         Self::new(config, Self::scales_for(space))
     }
 
+    /// Live observations one iteration consumes: f(θ_n) plus the
+    /// perturbation probes of every gradient-averaging round.
+    pub fn obs_per_iter(&self) -> u64 {
+        let rounds = self.config.grad_avg.max(1);
+        match self.config.variant {
+            SpsaVariant::TwoSided => 1 + 2 * rounds,
+            _ => 1 + rounds,
+        }
+    }
+
     /// Run from a fresh state at θ₀.
     pub fn run(&self, objective: &mut dyn Objective, theta0: Vec<f64>) -> TuningResult {
         let state = SpsaState::fresh(theta0);
         self.run_from(objective, state, None)
+    }
+
+    /// Run against a budget-metered [`EvalBroker`](super::broker::EvalBroker):
+    /// before each iteration the remaining budget is checked against
+    /// [`Spsa::obs_per_iter`], so the run stops gracefully (best-so-far
+    /// kept) instead of overdrawing — [`StopReason::BudgetExhausted`].
+    /// One iteration at a time through `run_state` keeps the trajectory
+    /// bit-identical to an uninterrupted `run` (per-iteration seeding, the
+    /// pause/resume property), and the broker's pass-through batching
+    /// keeps it bit-identical at any worker count.
+    pub fn run_broker(
+        &self,
+        broker: &mut super::broker::EvalBroker,
+        theta0: Vec<f64>,
+    ) -> TuningResult {
+        let mut state = SpsaState::fresh(theta0);
+        let per_iter = self.obs_per_iter();
+        let start_evals = broker.evals_used();
+        let stop = loop {
+            if state.iter >= self.config.max_iters {
+                break StopReason::MaxIters;
+            }
+            if broker.remaining() < per_iter {
+                break StopReason::BudgetExhausted;
+            }
+            match self.run_state(broker, &mut state, Some(1)) {
+                StopReason::Paused => continue,
+                other => break other,
+            }
+        };
+        TuningResult {
+            final_theta: state.theta.clone(),
+            best_theta: state.best_theta.clone(),
+            best_f: state.best_f,
+            stop,
+            iterations: state.iter,
+            // delta, not lifetime total: a reused broker carries prior spend
+            observations: broker.evals_used() - start_evals,
+            history: state.history,
+        }
     }
 
     /// Run (or resume) from an explicit state; `pause_after` optionally
@@ -693,6 +746,85 @@ mod tests {
         let par = run_with(4);
         assert_eq!(seq.iterations, par.iterations);
         assert_eq!(seq.final_theta, par.final_theta);
+        for (a, b) in seq.history.iter().zip(&par.history) {
+            assert_eq!(a.f_theta, b.f_theta);
+            assert_eq!(a.grad_norm, b.grad_norm);
+            assert_eq!(a.theta, b.theta);
+        }
+    }
+
+    #[test]
+    fn broker_run_matches_direct_run_bit_exactly() {
+        // An unlimited, cache-off broker is a transparent proxy: the SPSA
+        // trajectory through it replays the direct run bit for bit (the
+        // pre-refactor golden-trajectory contract).
+        use crate::tuner::broker::{Budget, EvalBroker};
+        let spsa = quad_spsa(21);
+        let mut obj1 = QuadraticObjective::new(vec![0.3, 0.8, 0.5, 0.2], 0.02, 7);
+        let direct = spsa.run(&mut obj1, vec![0.5; 4]);
+        let mut obj2 = QuadraticObjective::new(vec![0.3, 0.8, 0.5, 0.2], 0.02, 7);
+        let mut broker = EvalBroker::new(&mut obj2, Budget::unlimited());
+        let brokered = spsa.run_broker(&mut broker, vec![0.5; 4]);
+        assert_eq!(direct.iterations, brokered.iterations);
+        assert_eq!(direct.final_theta, brokered.final_theta);
+        assert_eq!(direct.best_f, brokered.best_f);
+        assert_eq!(direct.observations, brokered.observations);
+        for (a, b) in direct.history.iter().zip(&brokered.history) {
+            assert_eq!(a.f_theta, b.f_theta);
+            assert_eq!(a.grad_norm, b.grad_norm);
+            assert_eq!(a.theta, b.theta);
+        }
+    }
+
+    #[test]
+    fn broker_budget_stops_gracefully_with_best_so_far() {
+        use crate::tuner::broker::{Budget, EvalBroker};
+        let spsa = quad_spsa(22); // grad_avg 2, one-sided → 3 obs/iter
+        assert_eq!(spsa.obs_per_iter(), 3);
+        let mut obj = QuadraticObjective::new(vec![0.5; 4], 0.01, 3);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(10));
+        let res = spsa.run_broker(&mut broker, vec![0.1; 4]);
+        assert_eq!(res.stop, StopReason::BudgetExhausted);
+        assert_eq!(res.iterations, 3, "10 obs afford exactly 3 iterations of 3");
+        assert_eq!(res.observations, 9);
+        assert!(broker.remaining() == 1 && !broker.exhausted());
+        assert!(res.best_f.is_finite(), "partial result must carry best-so-far");
+        assert_eq!(res.history.len(), 3);
+    }
+
+    #[test]
+    fn broker_batched_trajectory_matches_sequential() {
+        // The PR-1 determinism contract survives the broker layer: SPSA
+        // through a metered broker over the parallel SimObjective traces
+        // exactly the 1-worker trajectory.
+        use crate::cluster::ClusterSpec;
+        use crate::tuner::broker::{Budget, EvalBroker};
+        use crate::tuner::objective::SimObjective;
+        use crate::workloads::Benchmark;
+
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = crate::util::rng::Rng::seeded(8);
+        let w = Benchmark::Bigram.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let spsa = Spsa::for_space(
+            SpsaConfig { max_iters: 5, grad_avg: 3, seed: 6, ..Default::default() },
+            &space,
+        );
+
+        let run_with = |workers: usize| {
+            let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 17)
+                .with_workers(workers);
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(18));
+            spsa.run_broker(&mut broker, space.default_theta())
+        };
+        let seq = run_with(1);
+        let par = run_with(4);
+        // 18 observations afford 4 of the 5 iterations (4 obs each)
+        assert_eq!(seq.stop, StopReason::BudgetExhausted);
+        assert_eq!(seq.iterations, 4);
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.final_theta, par.final_theta);
+        assert_eq!(seq.observations, par.observations);
         for (a, b) in seq.history.iter().zip(&par.history) {
             assert_eq!(a.f_theta, b.f_theta);
             assert_eq!(a.grad_norm, b.grad_norm);

@@ -8,7 +8,9 @@ use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
 use hadoop_spsa::coordinator::{evaluate_theta, run_trial, Algo, TrialSpec};
 use hadoop_spsa::sim::{simulate, ScenarioSpec, SimOptions};
-use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig, SpsaVariant};
+use hadoop_spsa::tuner::{
+    Budget, CachePolicy, EvalBroker, SimObjective, Spsa, SpsaConfig, SpsaVariant,
+};
 use hadoop_spsa::util::rng::Rng;
 use hadoop_spsa::workloads::{Benchmark, WorkloadProfile};
 
@@ -25,8 +27,10 @@ fn full_pipeline_spsa_on_all_benchmarks_v1() {
             "{bench}: only {:.1}% decrease",
             out.pct_decrease()
         );
-        // two observations per iteration + one f(θ) per gradient average
-        assert!(out.observations >= 2 * out.spec.iters);
+        // metered by the broker: within budget, in whole 3-obs iterations
+        assert!(out.observations <= out.spec.budget.max_obs);
+        assert_eq!(out.observations % 3, 0);
+        assert!(out.observations > 0);
     }
 }
 
@@ -64,17 +68,20 @@ fn all_live_tuners_improve_terasort() {
     let (f_default, _) =
         evaluate_theta(&space, &cluster, &w, &space.default_theta(), 5, 2, &benign);
 
+    // both live baselines share the same 60-observation budget through
+    // the metered broker (the memo cache on for the revisit-heavy climber)
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 7);
-    let hc = hill_climb(
-        &mut obj,
-        space.default_theta(),
-        &HillClimbConfig { budget: 60, ..Default::default() },
-    );
+    let mut broker =
+        EvalBroker::new(&mut obj, Budget::obs(60)).with_cache(CachePolicy::Quantized);
+    let hc = hill_climb(&mut broker, space.default_theta(), &HillClimbConfig::default());
+    assert!(broker.evals_used() <= 60);
     let (f_hc, _) = evaluate_theta(&space, &cluster, &w, &hc.best_theta, 5, 2, &benign);
     assert!(f_hc < f_default, "hill climbing did not improve");
 
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 8);
-    let rs = random_search(&mut obj, space.default_theta(), 60, 8);
+    let mut broker = EvalBroker::new(&mut obj, Budget::obs(60));
+    let rs = random_search(&mut broker, space.default_theta(), 8);
+    assert_eq!(rs.observations, 60, "random search spends the budget exactly");
     let (f_rs, _) = evaluate_theta(&space, &cluster, &w, &rs.best_theta, 5, 2, &benign);
     assert!(f_rs < f_default, "random search did not improve");
 }
