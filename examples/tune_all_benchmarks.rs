@@ -19,9 +19,11 @@ use hadoop_spsa::experiments::{self, ExpOptions};
 use hadoop_spsa::util::table::Table;
 use hadoop_spsa::workloads::Benchmark;
 
-/// Registry sweep: every algorithm × every benchmark, one shared budget.
-/// This is the comparison the `Tuner`/`EvalBroker` refactor makes native:
-/// best-found vs identical observation spend, no per-algorithm glue.
+/// Registry sweep: every algorithm (all ten entries) × every benchmark,
+/// one shared budget. This is the comparison the `Tuner`/`EvalBroker`
+/// refactor makes native: best-found vs identical observation spend, no
+/// per-algorithm glue — RDSA, Nelder–Mead and TPE joined without touching
+/// this loop.
 fn registry_sweep(opts: &ExpOptions) {
     let budget = opts.budget();
     let seed = opts.seeds()[0];
@@ -76,10 +78,10 @@ fn main() {
     println!("\n=== Table 1: tuned parameter values ===\n");
     println!("{}", experiments::table1::run(&opts));
 
-    println!("=== Fig 6: SPSA convergence (Hadoop v1) ===\n");
+    println!("=== Fig 6: best-so-far convergence, all registry tuners (Hadoop v1) ===\n");
     println!("{}", experiments::convergence::run(HadoopVersion::V1, &opts));
 
-    println!("=== Fig 7: SPSA convergence (Hadoop v2) ===\n");
+    println!("=== Fig 7: best-so-far convergence, all registry tuners (Hadoop v2) ===\n");
     println!("{}", experiments::convergence::run(HadoopVersion::V2, &opts));
 
     println!("=== Fig 8: Default vs Starfish vs SPSA (Hadoop v1) ===\n");

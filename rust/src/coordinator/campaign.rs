@@ -42,10 +42,16 @@ pub enum Algo {
     HillClimb,
     /// Random search on the live system (ablation anchor).
     Random,
+    /// Random-direction SA — the paper §7 noisy-gradient sibling.
+    Rdsa,
+    /// Nelder–Mead downhill simplex on the live system.
+    NelderMead,
+    /// TPE-style Bayesian optimization over the broker trace.
+    Tpe,
 }
 
 impl Algo {
-    pub fn all() -> [Algo; 7] {
+    pub fn all() -> [Algo; 10] {
         [
             Algo::Default,
             Algo::Spsa,
@@ -54,6 +60,9 @@ impl Algo {
             Algo::Ppabs,
             Algo::HillClimb,
             Algo::Random,
+            Algo::Rdsa,
+            Algo::NelderMead,
+            Algo::Tpe,
         ]
     }
 
@@ -67,6 +76,9 @@ impl Algo {
             Algo::Ppabs => "ppabs",
             Algo::HillClimb => "hillclimb",
             Algo::Random => "random",
+            Algo::Rdsa => "rdsa",
+            Algo::NelderMead => "nelder-mead",
+            Algo::Tpe => "tpe",
         }
     }
 
@@ -81,6 +93,9 @@ impl Algo {
             Algo::Ppabs => "PPABS",
             Algo::HillClimb => "HillClimb",
             Algo::Random => "Random",
+            Algo::Rdsa => "RDSA",
+            Algo::NelderMead => "NelderMead",
+            Algo::Tpe => "TPE",
         }
     }
 
@@ -319,6 +334,9 @@ mod tests {
         assert_eq!(Algo::from_name("hill"), Some(Algo::HillClimb));
         assert_eq!(Algo::from_name("mronline"), Some(Algo::HillClimb));
         assert_eq!(Algo::from_name("surrogate"), Some(Algo::SpsaSurrogate));
+        assert_eq!(Algo::from_name("simplex"), Some(Algo::NelderMead));
+        assert_eq!(Algo::from_name("bayesopt"), Some(Algo::Tpe));
+        assert_eq!(Algo::from_name("rd-sa"), Some(Algo::Rdsa));
         assert_eq!(Algo::from_name("bogus"), None);
     }
 

@@ -50,7 +50,7 @@ fn find<'a>(
 }
 
 pub fn run(opts: &ExpOptions) -> String {
-    // Full mode compares the ENTIRE registry — all seven algorithms under
+    // Full mode compares the ENTIRE registry — all ten algorithms under
     // one identical observation budget per tier; quick keeps the two
     // cheapest live tuners so the smoke pass stays fast.
     let algos: Vec<Algo> =

@@ -30,7 +30,8 @@ pub fn run(opts: &ExpOptions) -> String {
     qual.row(vec!["SPSA", "ok", "ok", "ok", "ok", "ok"]);
 
     // Measured overheads on the paper's §6.8 example (Word Co-occurrence):
-    // all seven registry algorithms under ONE identical observation budget.
+    // the ENTIRE registry — all ten algorithms — under ONE identical
+    // observation budget.
     let bench = Benchmark::WordCooccurrence;
     let seed = opts.seeds()[0];
     let budget = opts.budget();
@@ -81,11 +82,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn table2_reports_overheads_for_all_seven_methods() {
+    fn table2_reports_overheads_for_the_whole_registry() {
         let report = run(&ExpOptions::quick());
         for algo in Algo::all() {
             assert!(report.contains(algo.label()), "missing {}", algo.label());
         }
+        assert_eq!(
+            report.matches("\nRDSA").count() + report.matches("\nTPE").count(),
+            2,
+            "the grown registry rows must be present exactly once each"
+        );
         assert!(report.contains("none")); // SPSA has no profiling phase
         assert!(report.contains("/60"), "budget column missing (quick = 60 obs)");
     }

@@ -481,7 +481,10 @@ fn cmd_list() -> i32 {
             hadoop_spsa::util::units::fmt_bytes(b.paper_partial_bytes())
         );
     }
-    println!("\ntuners (registry; all metered by one observation budget):");
+    println!(
+        "\ntuners (registry, {} entries; all metered by one observation budget):",
+        hadoop_spsa::tuner::TUNERS.len()
+    );
     for e in hadoop_spsa::tuner::TUNERS {
         let aliases = if e.aliases.is_empty() {
             String::new()

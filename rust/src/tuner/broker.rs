@@ -122,6 +122,13 @@ impl<'a> EvalBroker<'a> {
         self
     }
 
+    /// The cache quantization step in effect (θ-cell size of `Quantized`).
+    /// Tuners that deduplicate their own proposals against the memo (TPE)
+    /// read this so their notion of "already observed" matches the cache's.
+    pub fn quantization(&self) -> f64 {
+        self.quant
+    }
+
     /// Observations still affordable (0 once either budget axis is spent).
     pub fn remaining(&self) -> u64 {
         if self.batches_used >= self.budget.max_batches {

@@ -5,13 +5,19 @@
 //! [`Tuner`] trait + registry.
 
 pub mod broker;
+pub mod nelder_mead;
 pub mod objective;
+pub mod rdsa;
 pub mod registry;
 pub mod spsa;
+pub mod tpe;
 
 pub use broker::{Budget, CachePolicy, EvalBroker, EvalRecord};
+pub use nelder_mead::{NelderMeadConfig, NelderMeadTuner};
 pub use objective::{Metric, Objective, ObsAgg, QuadraticObjective, SimObjective};
+pub use rdsa::RdsaTuner;
 pub use registry::{Tuner, TuneOutcome, TunerContext, TunerEntry, PROFILE_NOISE_SIGMA, TUNERS};
 pub use spsa::{
     IterRecord, Spsa, SpsaConfig, SpsaState, SpsaVariant, StopReason, TuningResult,
 };
+pub use tpe::{TpeConfig, TpeTuner};

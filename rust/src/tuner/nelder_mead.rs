@@ -1,0 +1,312 @@
+//! Nelder–Mead downhill simplex over the normalized parameter space — a
+//! classic derivative-free baseline for the registry: where SPSA spends a
+//! dimension-independent 2–3 observations per iteration on a gradient
+//! *estimate*, the simplex pays n+1 observations just to get started and
+//! then 1–2 per reflect/expand/contract step, with an n-observation bill
+//! for every shrink.
+//!
+//! Broker integration:
+//! * the n+1-vertex initial simplex and every shrink step are dispatched
+//!   as ONE `try_eval_batch` call, so the independent probes fan across
+//!   the worker pool (and the values stay bit-identical to a sequential
+//!   loop at any worker count — the broker's ordered-dispatch contract);
+//! * the search is budget-truncation-safe: any `None`/short batch from
+//!   the broker is a graceful stop and the best vertex *observed so far*
+//!   (not the best simplex vertex) is returned;
+//! * iterates are projected onto [0,1]^n by coordinate clamping — the
+//!   same Γ every other tuner uses.
+//!
+//! The method is deterministic given θ₀ (no RNG), so the registry seed
+//! only reaches the objective's noise, never the search itself.
+
+use crate::config::ParameterSpace;
+
+use super::broker::EvalBroker;
+use super::registry::{TuneOutcome, Tuner};
+
+/// Standard Nelder–Mead coefficients plus the simplex construction step.
+#[derive(Clone, Debug)]
+pub struct NelderMeadConfig {
+    /// Initial simplex edge per coordinate (algorithm space).
+    pub step: f64,
+    /// Reflection coefficient (> 0).
+    pub alpha: f64,
+    /// Expansion coefficient (> 1).
+    pub gamma: f64,
+    /// Contraction coefficient (0 < rho ≤ 0.5).
+    pub rho: f64,
+    /// Shrink coefficient (0 < sigma < 1).
+    pub sigma: f64,
+    /// Stop when the simplex f-spread falls below this relative tolerance.
+    pub tol: f64,
+    /// Iteration cap for unlimited brokers (a budgeted broker stops the
+    /// loop by exhaustion first).
+    pub max_iters: u64,
+}
+
+impl Default for NelderMeadConfig {
+    fn default() -> Self {
+        NelderMeadConfig {
+            step: 0.15,
+            alpha: 1.0,
+            gamma: 2.0,
+            rho: 0.5,
+            sigma: 0.5,
+            tol: 1e-4,
+            max_iters: 200,
+        }
+    }
+}
+
+/// Nelder–Mead behind the [`Tuner`] interface.
+pub struct NelderMeadTuner {
+    pub config: NelderMeadConfig,
+}
+
+impl NelderMeadTuner {
+    pub fn new() -> NelderMeadTuner {
+        NelderMeadTuner { config: NelderMeadConfig::default() }
+    }
+}
+
+impl Default for NelderMeadTuner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn clamp_unit(theta: &mut [f64]) {
+    for t in theta.iter_mut() {
+        *t = t.clamp(0.0, 1.0);
+    }
+}
+
+/// Best-so-far tracker over every (θ, f) the search observes.
+struct Best {
+    theta: Vec<f64>,
+    f: f64,
+}
+
+impl Best {
+    fn seen(&mut self, theta: &[f64], f: f64) {
+        if f < self.f {
+            self.f = f;
+            self.theta = theta.to_vec();
+        }
+    }
+}
+
+impl Tuner for NelderMeadTuner {
+    fn name(&self) -> &'static str {
+        "nelder-mead"
+    }
+
+    // default cache policy (Quantized): a contracting simplex revisits
+    // quantized cells near its optimum — those replays are free
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, _seed: u64) -> TuneOutcome {
+        let cfg = &self.config;
+        let n = space.dim();
+        let x0 = space.default_theta();
+        let mut best = Best { theta: x0.clone(), f: f64::INFINITY };
+
+        // Initial simplex: θ₀ plus one vertex per coordinate, stepped away
+        // from the nearer box wall so every vertex is distinct — one batch.
+        let mut points: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+        points.push(x0.clone());
+        for i in 0..n {
+            let mut v = x0.clone();
+            v[i] = if v[i] + cfg.step <= 1.0 { v[i] + cfg.step } else { v[i] - cfg.step };
+            clamp_unit(&mut v);
+            points.push(v);
+        }
+        let fs = broker.try_eval_batch(&points);
+        for (p, &f) in points.iter().zip(&fs) {
+            best.seen(p, f);
+        }
+        if fs.len() < points.len() {
+            // budget could not even afford the initial simplex
+            return TuneOutcome {
+                best_theta: best.theta,
+                best_f: best.f,
+                history: Vec::new(),
+                model_evals: 0,
+                profiling_overhead_s: 0.0,
+            };
+        }
+        let mut simplex: Vec<(Vec<f64>, f64)> = points.into_iter().zip(fs).collect();
+
+        let mut iters = 0;
+        while iters < cfg.max_iters && !broker.exhausted() {
+            iters += 1;
+            // order best → worst (stable: ties keep insertion order)
+            simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+            let (fb, fw) = (simplex[0].1, simplex[n].1);
+            if fw - fb <= cfg.tol * fb.abs().max(1e-9) {
+                break; // simplex collapsed onto (noise around) one value
+            }
+            let f_second_worst = simplex[n - 1].1;
+
+            // centroid of all vertices but the worst
+            let mut centroid = vec![0.0; n];
+            for (v, _) in &simplex[..n] {
+                for (c, x) in centroid.iter_mut().zip(v) {
+                    *c += x / n as f64;
+                }
+            }
+            let along = |coef: f64| -> Vec<f64> {
+                let mut v: Vec<f64> = centroid
+                    .iter()
+                    .zip(&simplex[n].0)
+                    .map(|(c, w)| c + coef * (c - w))
+                    .collect();
+                clamp_unit(&mut v);
+                v
+            };
+
+            // reflect
+            let xr = along(cfg.alpha);
+            let Some(fr) = broker.try_eval(&xr) else { break };
+            best.seen(&xr, fr);
+
+            if fr < fb {
+                // expand
+                let xe = along(cfg.alpha * cfg.gamma);
+                let Some(fe) = broker.try_eval(&xe) else {
+                    simplex[n] = (xr, fr);
+                    break;
+                };
+                best.seen(&xe, fe);
+                simplex[n] = if fe < fr { (xe, fe) } else { (xr, fr) };
+            } else if fr < f_second_worst {
+                simplex[n] = (xr, fr);
+            } else {
+                // contract toward the better of the reflected/worst point
+                let xc = if fr < fw { along(cfg.alpha * cfg.rho) } else { along(-cfg.rho) };
+                let Some(fc) = broker.try_eval(&xc) else { break };
+                best.seen(&xc, fc);
+                if fc < fr.min(fw) {
+                    simplex[n] = (xc, fc);
+                } else {
+                    // shrink every non-best vertex toward the best — the
+                    // n new vertices are independent probes: one batch
+                    let targets: Vec<Vec<f64>> = simplex[1..]
+                        .iter()
+                        .map(|(v, _)| {
+                            let mut s: Vec<f64> = simplex[0]
+                                .0
+                                .iter()
+                                .zip(v)
+                                .map(|(b, x)| b + cfg.sigma * (x - b))
+                                .collect();
+                            clamp_unit(&mut s);
+                            s
+                        })
+                        .collect();
+                    let fs = broker.try_eval_batch(&targets);
+                    let truncated = fs.len() < targets.len();
+                    for (i, (t, f)) in targets.into_iter().zip(fs).enumerate() {
+                        best.seen(&t, f);
+                        simplex[i + 1] = (t, f);
+                    }
+                    if truncated {
+                        break; // mid-shrink exhaustion: keep best-so-far
+                    }
+                }
+            }
+        }
+
+        TuneOutcome {
+            best_theta: best.theta,
+            best_f: best.f,
+            history: Vec::new(),
+            model_evals: 0,
+            profiling_overhead_s: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::broker::{Budget, CachePolicy, EvalBroker};
+    use crate::tuner::objective::{Objective, QuadraticObjective, SimObjective};
+
+    #[test]
+    fn descends_noise_free_quadratic() {
+        let space = ParameterSpace::v1();
+        let target: Vec<f64> = (0..space.dim()).map(|i| 0.3 + 0.04 * i as f64).collect();
+        let mut obj = QuadraticObjective::new(target.clone(), 0.0, 1);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(600));
+        let out = NelderMeadTuner::new().tune(&mut broker, &space, 1);
+        assert!(out.best_f < 1.15, "best f {} (noise-free minimum 1.0)", out.best_f);
+        let err: f64 = out
+            .best_theta
+            .iter()
+            .zip(&target)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / target.len() as f64;
+        assert!(err < 0.15, "mean abs error {err}: {:?}", out.best_theta);
+    }
+
+    #[test]
+    fn budget_truncation_is_graceful_even_mid_simplex() {
+        let space = ParameterSpace::v1();
+        // budget smaller than the n+1 initial simplex (12 points for v1)
+        let mut obj = QuadraticObjective::new(vec![0.5; space.dim()], 0.02, 3);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(5));
+        let out = NelderMeadTuner::new().tune(&mut broker, &space, 3);
+        assert_eq!(broker.evals_used(), 5, "must spend exactly the affordable prefix");
+        assert!(out.best_f.is_finite(), "partial result must carry best-so-far");
+        assert_eq!(out.best_theta.len(), space.dim());
+    }
+
+    #[test]
+    fn never_overspends_and_tracks_broker_best() {
+        let space = ParameterSpace::v1();
+        for budget in [13, 25, 60] {
+            let mut obj = QuadraticObjective::new(vec![0.4; space.dim()], 0.05, 7);
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(budget));
+            let out = NelderMeadTuner::new().tune(&mut broker, &space, 7);
+            assert!(broker.evals_used() <= budget);
+            let (_, bf) = broker.best().expect("at least one observation");
+            assert_eq!(out.best_f, bf, "tuner best must equal broker best (budget {budget})");
+        }
+    }
+
+    #[test]
+    fn shrink_batches_reproduce_sequential_values_at_any_worker_count() {
+        // The whole search (init batch + shrink batches included) must
+        // trace identically through a parallel SimObjective.
+        use crate::cluster::ClusterSpec;
+        use crate::workloads::Benchmark;
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = crate::util::rng::Rng::seeded(21);
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let run_with = |workers: usize| {
+            let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 23)
+                .with_workers(workers);
+            let mut broker =
+                EvalBroker::new(&mut obj, Budget::obs(50)).with_cache(CachePolicy::Quantized);
+            let out = NelderMeadTuner::new().tune(&mut broker, &space, 23);
+            (out.best_theta, out.best_f, broker.evals_used())
+        };
+        assert_eq!(run_with(1), run_with(4));
+    }
+
+    #[test]
+    fn iterate_cap_stops_unlimited_brokers() {
+        let space = ParameterSpace::v1();
+        let mut obj = QuadraticObjective::new(vec![0.5; space.dim()], 0.1, 11);
+        let mut broker = EvalBroker::new(&mut obj, Budget::unlimited());
+        let tuner = NelderMeadTuner {
+            config: NelderMeadConfig { max_iters: 40, tol: 0.0, ..Default::default() },
+        };
+        let out = tuner.tune(&mut broker, &space, 11);
+        assert!(out.best_f.is_finite());
+        // init (n+1) + ≤ 2 evals/iter + occasional n-point shrinks
+        assert!(obj.evals() < 40 * (space.dim() as u64 + 2) + 20, "{} evals", obj.evals());
+    }
+}

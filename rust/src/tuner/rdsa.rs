@@ -1,0 +1,152 @@
+//! RDSA — random-direction stochastic approximation, the sibling
+//! noisy-gradient method the paper's §7 proposes as future work (citing
+//! Prashanth et al. [26]): instead of SPSA's Bernoulli ±1 simultaneous
+//! perturbation, one iteration probes along a single *gaussian direction*
+//! d and estimates ĝ(i) = d(i)·(f(θ+cd) − f(θ))/c.
+//!
+//! Everything else is deliberately shared with SPSA — the gain schedule
+//! (constant α, per-coordinate perturbation scales c(i), the `max_step`
+//! stability clip), the projection Γ onto [0,1]^n, and the per-iteration
+//! seed-stream derivation — so RDSA-vs-SPSA comparisons isolate exactly
+//! the perturbation distribution. The estimator itself lives in
+//! [`SpsaVariant::Rdsa`] inside the shared iteration loop; this file is
+//! the first-class registry face, forcing the estimator and delegating
+//! budget planning and broker-paced iteration (one iteration per
+//! `run_state` call through the pause path) to the shared SPSA tuner —
+//! one copy of the planning rule for the whole noisy-gradient family.
+//!
+//! Determinism: the iteration loop draws each round's Bernoulli signs
+//! *and* gaussian direction from an RNG seeded per iteration index, and
+//! dispatches all probes of an iteration as one ordered `eval_batch` —
+//! trajectories therefore reproduce bit-exactly across pause/resume, a
+//! metered broker vs a direct run, and any worker count (tested below).
+
+use crate::config::ParameterSpace;
+
+use super::broker::{CachePolicy, EvalBroker};
+use super::registry::{SpsaTuner, TuneOutcome, Tuner};
+use super::spsa::{SpsaConfig, SpsaVariant};
+
+/// RDSA behind the [`Tuner`] interface: SPSA's machinery with the
+/// gaussian-direction gradient estimator.
+pub struct RdsaTuner {
+    /// Shared gain schedule (α, `max_step`, `grad_avg`, termination); the
+    /// variant is forced to [`SpsaVariant::Rdsa`] at run time.
+    pub config: SpsaConfig,
+}
+
+impl RdsaTuner {
+    /// The paper's SPSA hyper-parameters with the §7 estimator swapped in.
+    pub fn paper() -> RdsaTuner {
+        RdsaTuner { config: SpsaConfig { variant: SpsaVariant::Rdsa, ..SpsaConfig::default() } }
+    }
+}
+
+impl Tuner for RdsaTuner {
+    fn name(&self) -> &'static str {
+        "rdsa"
+    }
+
+    fn cache_policy(&self) -> CachePolicy {
+        // like the rest of the SPSA family: a memo hit would skip the
+        // objective's next seed and break bit-exact trajectory replay
+        CachePolicy::Off
+    }
+
+    fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
+        // Delegate to the SPSA tuner with the estimator forced: the
+        // budget-to-whole-iterations planning rule and the result mapping
+        // live in ONE place, so the two noisy-gradient family members can
+        // never silently diverge.
+        let forced = SpsaConfig { variant: SpsaVariant::Rdsa, ..self.config.clone() };
+        SpsaTuner { config: forced }.tune(broker, space, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::tuner::broker::{Budget, EvalBroker};
+    use crate::tuner::objective::{QuadraticObjective, SimObjective};
+    use crate::util::rng::Rng;
+    use crate::workloads::Benchmark;
+
+    #[test]
+    fn rdsa_tuner_descends_and_plans_whole_iterations() {
+        let space = ParameterSpace::v1();
+        let tuner = RdsaTuner::paper(); // grad_avg 2 → 3 obs/iter
+        let mut obj = QuadraticObjective::new(vec![0.4; space.dim()], 0.01, 5);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(31));
+        let out = tuner.tune(&mut broker, &space, 5);
+        assert!(broker.evals_used() <= 30, "3-obs iterations can't spend 31");
+        assert_eq!(broker.evals_used() % 3, 0);
+        assert!(out.best_f.is_finite());
+        assert_eq!(out.best_theta.len(), space.dim());
+        assert!(!out.history.is_empty(), "RDSA must report its iteration history");
+    }
+
+    /// The satellite contract: with the same seed and the same gain
+    /// schedule, both noisy-gradient tuners reproduce their trajectories
+    /// bit-exactly across 1 vs N workers — every probe batch of an
+    /// iteration goes through the broker's ordered dispatch (the pause
+    /// path runs one iteration per `run_state` call), so pre-assigned
+    /// observation seeds make thread count invisible.
+    #[test]
+    fn rdsa_and_spsa_trajectories_bit_exact_across_worker_counts() {
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = Rng::seeded(14);
+        let w = Benchmark::Terasort.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let shared = SpsaConfig { grad_avg: 3, seed: 6, ..SpsaConfig::default() };
+
+        let mut finals = Vec::new();
+        for variant in [SpsaVariant::OneSided, SpsaVariant::Rdsa] {
+            let cfg = SpsaConfig { variant, ..shared.clone() };
+            let tuner: Box<dyn Tuner> = match variant {
+                SpsaVariant::Rdsa => Box::new(RdsaTuner { config: cfg }),
+                _ => Box::new(SpsaTuner { config: cfg }),
+            };
+            let run_with = |workers: usize| {
+                let mut obj =
+                    SimObjective::new(space.clone(), cluster.clone(), w.clone(), 17)
+                        .with_workers(workers);
+                let mut broker = EvalBroker::new(&mut obj, Budget::obs(20))
+                    .with_cache(tuner.cache_policy());
+                tuner.tune(&mut broker, &space, 6)
+            };
+            let seq = run_with(1);
+            let par = run_with(4);
+            assert_eq!(seq.history.len(), par.history.len(), "{variant:?}");
+            for (a, b) in seq.history.iter().zip(&par.history) {
+                assert_eq!(a.f_theta, b.f_theta, "{variant:?}");
+                assert_eq!(a.grad_norm, b.grad_norm, "{variant:?}");
+                assert_eq!(a.theta, b.theta, "{variant:?}");
+            }
+            assert_eq!(seq.best_theta, par.best_theta, "{variant:?}");
+            finals.push(seq);
+        }
+        // same seed, same schedule — but a different perturbation
+        // distribution must produce a different trajectory
+        assert_ne!(
+            finals[0].history.last().unwrap().theta,
+            finals[1].history.last().unwrap().theta,
+            "RDSA replayed SPSA's trajectory exactly — estimator not in effect"
+        );
+    }
+
+    #[test]
+    fn rdsa_variant_is_forced_even_if_config_disagrees() {
+        // A caller constructing RdsaTuner around a OneSided config still
+        // gets RDSA: the registry name must never lie about the estimator.
+        let space = ParameterSpace::v1();
+        let mis = RdsaTuner { config: SpsaConfig::default() }; // OneSided inside
+        let forced = RdsaTuner::paper();
+        let run = |t: &RdsaTuner| {
+            let mut obj = QuadraticObjective::new(vec![0.3; space.dim()], 0.0, 9);
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(12));
+            t.tune(&mut broker, &space, 3).best_theta
+        };
+        assert_eq!(run(&mis), run(&forced));
+    }
+}

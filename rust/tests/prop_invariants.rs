@@ -6,7 +6,8 @@ use hadoop_spsa::config::{HadoopVersion, ParamKind, ParameterSpace};
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::engine::{run_job, Split};
 use hadoop_spsa::sim::{map_output_for_split, simulate, ScenarioSpec, SimOptions};
-use hadoop_spsa::tuner::{SimObjective, Spsa, SpsaConfig, SpsaState};
+use hadoop_spsa::tuner::registry::{self, TunerContext};
+use hadoop_spsa::tuner::{Budget, EvalBroker, SimObjective, Spsa, SpsaConfig, SpsaState};
 use hadoop_spsa::util::json::Json;
 use hadoop_spsa::util::prop::{assert_close, assert_that, forall};
 use hadoop_spsa::util::rng::Rng;
@@ -346,6 +347,57 @@ fn spsa_iterates_stay_in_box_under_any_seed() {
                 format!("iterate escaped the box at iter {}", r.iter),
             )?;
             assert_that(r.f_theta > 0.0 && r.f_theta.is_finite(), "f finite")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_registry_tuner_respects_any_budget_and_its_first_observation() {
+    // The registry-wide budget algebra: for ANY observation budget N and
+    // ANY seed, every tuner (all ten entries) run through a metered broker
+    // reports evals_used ≤ N, and its broker-tracked best-so-far is no
+    // worse than the first thing it observed — a tuner may fail to
+    // improve, but it must never *lose* an observation it already made.
+    forall("registry tuners: budget + best-so-far", 6, |g| {
+        let version = if g.bool() { HadoopVersion::V1 } else { HadoopVersion::V2 };
+        let space = ParameterSpace::for_version(version);
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = Rng::seeded(g.u64_in(1, 1 << 32));
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let ctx = TunerContext { version, cluster: cluster.clone(), workload: w.clone() };
+        let budget = g.u64_in(8, 40);
+        let seed = g.u64_in(1, 1 << 40);
+        for e in registry::TUNERS {
+            let tuner = registry::create(e.name, &ctx).expect("registry entry instantiates");
+            let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(budget))
+                .with_cache(tuner.cache_policy());
+            let out = tuner.tune(&mut broker, &space, seed);
+            assert_that(
+                broker.evals_used() <= budget,
+                format!("{} overspent: {} > {budget}", e.name, broker.evals_used()),
+            )?;
+            assert_that(
+                out.best_theta.len() == space.dim(),
+                format!("{} returned a malformed θ", e.name),
+            )?;
+            if let Some(first) = broker.trace().first() {
+                // the tuner's RETURNED best (what a deployment would use)
+                // must be no worse than the first thing it observed — it
+                // may fail to improve, but never loses an observation it
+                // already made. Starfish is exempt: its best_f is a
+                // what-if model prediction, not a live observation.
+                if e.name != "starfish" {
+                    assert_that(
+                        out.best_f <= first.f,
+                        format!(
+                            "{}: returned best {} worse than first obs {}",
+                            e.name, out.best_f, first.f
+                        ),
+                    )?;
+                }
+            }
         }
         Ok(())
     });
