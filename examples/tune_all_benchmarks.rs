@@ -14,7 +14,9 @@
 //! This is the run recorded in EXPERIMENTS.md.
 
 use hadoop_spsa::config::HadoopVersion;
-use hadoop_spsa::coordinator::{run_campaign, Algo, ResultsDir, TrialSpec};
+use hadoop_spsa::coordinator::{
+    run_campaign, Algo, CampaignScheduler, ResultsDir, SchedulerPolicy, TrialSpec,
+};
 use hadoop_spsa::experiments::{self, ExpOptions};
 use hadoop_spsa::util::table::Table;
 use hadoop_spsa::workloads::Benchmark;
@@ -66,6 +68,53 @@ fn registry_sweep(opts: &ExpOptions) {
     opts.persist("registry_sweep", &table);
 }
 
+/// Scheduler sweep: the whole registry on Terasort under ONE shared
+/// modeled wall-clock budget, once per allocation policy. `Equal` is the
+/// time-to-best comparison (walltime experiment's frame); the
+/// `SuccessiveHalving` run shows culled tuners' unspent clock being
+/// reinvested in the survivors — the campaign-level answer to "which
+/// tuner deserves the cluster for the next hour?".
+fn scheduler_sweep(opts: &ExpOptions) {
+    let seed = opts.seeds()[0];
+    // ~40 000 modeled seconds of shared clock (≈ 11 cluster-hours) split
+    // across the ten registry tuners; quick mode halves it
+    let total = if opts.quick { 20_000.0 } else { 40_000.0 };
+    for policy in [SchedulerPolicy::Equal, SchedulerPolicy::SuccessiveHalving] {
+        let outs = CampaignScheduler::new(Benchmark::Terasort, HadoopVersion::V1, seed, total)
+            .with_policy(policy)
+            .run();
+        let mut table = Table::new(&format!(
+            "Scheduler sweep — {policy:?}, Terasort, {total:.0} s shared model clock"
+        ))
+        .header(vec![
+            "Tuner",
+            "Allocated (s)",
+            "Spent (s)",
+            "Obs",
+            "Time to best (s)",
+            "Best observed f (s)",
+            "Culled at rung",
+        ]);
+        for o in &outs {
+            table.row(vec![
+                o.algo.label().to_string(),
+                format!("{:.0}", o.allocated_s),
+                format!("{:.0}", o.elapsed_s),
+                o.observations.to_string(),
+                if o.observations > 0 { format!("{:.0}", o.time_to_best) } else { "-".into() },
+                if o.best_f.is_finite() { format!("{:.0}", o.best_f) } else { "-".into() },
+                o.culled_at_rung.map(|r| r.to_string()).unwrap_or_else(|| "survived".into()),
+            ]);
+        }
+        print!("{}", table.to_ascii());
+        let name = match policy {
+            SchedulerPolicy::Equal => "scheduler_sweep_equal",
+            SchedulerPolicy::SuccessiveHalving => "scheduler_sweep_halving",
+        };
+        opts.persist(name, &table);
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let out = ResultsDir::default_dir().expect("cannot create results/");
@@ -74,6 +123,12 @@ fn main() {
 
     println!("=== Registry sweep: all tuners, one budget ===\n");
     registry_sweep(&opts);
+
+    println!("\n=== Scheduler sweep: all tuners, one shared wall-clock budget ===\n");
+    scheduler_sweep(&opts);
+
+    println!("\n=== Walltime: time-to-best across the registry ===\n");
+    println!("{}", experiments::walltime::run(&opts));
 
     println!("\n=== Table 1: tuned parameter values ===\n");
     println!("{}", experiments::table1::run(&opts));

@@ -39,7 +39,11 @@ pub fn random_search(
     let n = broker.dim();
     let start_evals = broker.evals_used();
     let mut rng = Rng::seeded(seed);
-    let mut cap = if broker.budget().max_obs == u64::MAX {
+    // the fallback cap applies only when NO axis bounds the run: a budget
+    // with unlimited observations but finite batches or model time is the
+    // wall-clock-frame comparison (64-probe waves until time runs out) and
+    // must spend it, not stop at an arbitrary observation count
+    let mut cap = if broker.budget().is_unlimited() {
         UNLIMITED_FALLBACK_OBS
     } else {
         u64::MAX
@@ -98,6 +102,27 @@ mod tests {
         let mut broker = EvalBroker::new(&mut obj, Budget::unlimited());
         let res = random_search(&mut broker, vec![0.9, 0.9], 5);
         assert_eq!(res.observations, UNLIMITED_FALLBACK_OBS);
+    }
+
+    #[test]
+    fn time_limited_budget_overrides_the_fallback_cap() {
+        // The wall-clock comparison frame: unlimited observations, finite
+        // model time. Random search's 64-probe waves cost barely more than
+        // a single probe per wave (batch cost = max member duration +
+        // overhead), so the time budget buys far more observations than
+        // the old obs-only fallback allowed.
+        let mut obj = QuadraticObjective::new(vec![0.5; 2], 0.0, 1);
+        // noise-free f ≤ 1.5 on the unit box → each wave costs ≤ 6.5 s
+        // (default 5 s dispatch overhead): a 40 s cap affords ~6 waves
+        let mut broker =
+            EvalBroker::new(&mut obj, Budget::unlimited().with_model_time(40.0));
+        let res = random_search(&mut broker, vec![0.9, 0.9], 5);
+        assert!(broker.exhausted(), "time axis must be what stops the search");
+        assert!(
+            res.observations > UNLIMITED_FALLBACK_OBS,
+            "only {} obs — the fallback cap fired under a time budget",
+            res.observations
+        );
     }
 
     #[test]

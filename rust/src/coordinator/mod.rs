@@ -7,8 +7,9 @@ pub mod pool;
 pub mod results;
 
 pub use campaign::{
-    evaluate_theta, profile_for, run_campaign, run_trial, Algo, TrialOutcome, TrialSpec,
-    DEFAULT_TRIAL_BUDGET,
+    evaluate_theta, profile_for, run_campaign, run_trial, Algo, CampaignScheduler,
+    SchedulerOutcome, SchedulerPolicy, TrialOutcome, TrialSpec, DEFAULT_TRIAL_BUDGET,
+    SCHEDULER_OBS_GUARD,
 };
 pub use pool::{default_workers, env_workers, in_pool_worker, resolve_workers, run_parallel};
 pub use results::{outcome_json, ResultsDir};

@@ -64,6 +64,7 @@ pub fn outcome_json(o: &TrialOutcome) -> Json {
         .set("observations", Json::Num(o.observations as f64))
         .set("model_evals", Json::Num(o.model_evals as f64))
         .set("profiling_overhead_s", Json::Num(o.profiling_overhead_s))
+        .set("elapsed_model_s", Json::Num(o.elapsed_model_s))
         .set("tuning_wall_ms", Json::Num(o.tuning_wall_ms))
         .set("tuned_theta", Json::from_f64_slice(&o.tuned_theta));
     j

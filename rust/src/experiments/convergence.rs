@@ -189,6 +189,7 @@ mod tests {
     fn best_so_far_is_monotone_and_dense() {
         let rec = |obs: u64, f: f64, cached: bool| EvalRecord {
             obs,
+            model_time: obs as f64, // shape irrelevant to the obs-indexed curve
             theta: vec![0.5],
             f,
             cached,

@@ -11,5 +11,6 @@ pub mod holistic;
 pub mod robustness;
 pub mod table1;
 pub mod table2;
+pub mod walltime;
 
 pub use common::ExpOptions;

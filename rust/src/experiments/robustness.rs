@@ -106,6 +106,32 @@ pub fn run(opts: &ExpOptions) -> String {
         table.row(row);
     }
 
+    // The wall-clock axis under faults: retries and re-execution make
+    // every observation longer, so the SAME observation budget costs more
+    // modeled tuning time at higher failure tiers — the hidden price of
+    // tuning on a flaky cluster, averaged across benchmarks per tuner.
+    let mut clock =
+        Table::new("Robustness — modeled tuning wall-clock (s) per failure tier").header({
+            let mut h = vec!["Tuner".to_string()];
+            h.extend(rates.iter().map(|r| format!("@{:.0}%", r * 100.0)));
+            h
+        });
+    for &algo in &algos {
+        let mut row = vec![algo.label().to_string()];
+        for &rate in &rates {
+            let xs: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| {
+                    o.spec.algo == algo
+                        && (o.spec.scenario.task_failure_p - rate).abs() < 1e-9
+                })
+                .map(|o| o.elapsed_model_s)
+                .collect();
+            row.push(format!("{:.0}", crate::util::stats::mean(&xs)));
+        }
+        clock.row(row);
+    }
+
     // Convergence-under-faults summary (the acceptance criterion): SPSA's
     // tuned objective at the 5 % tier vs its failure-free tuned value.
     let mut report = String::new();
@@ -137,7 +163,10 @@ pub fn run(opts: &ExpOptions) -> String {
         "{within}/{judged} benchmarks within 10% of the failure-free tuned value\n\n"
     ));
     report.push_str(&table.to_ascii());
+    report.push('\n');
+    report.push_str(&clock.to_ascii());
     opts.persist("robustness", &table);
+    opts.persist("robustness_walltime", &clock);
     opts.persist_text("robustness_convergence", &report);
     report
 }
@@ -161,5 +190,9 @@ mod tests {
         assert!(report.contains("SPSA"), "missing SPSA column");
         assert!(report.contains("@5%"), "missing 5% failure tier");
         assert!(report.contains("ratio"), "missing convergence summary");
+        assert!(
+            report.contains("modeled tuning wall-clock"),
+            "missing the wall-clock-per-tier table"
+        );
     }
 }

@@ -44,6 +44,7 @@ pub fn run(opts: &ExpOptions) -> String {
         "Method",
         "Profiling time (sim)",
         "Live obs / budget",
+        "Model wall-clock (sim)",
         "Model evals",
         "Result vs default",
     ]);
@@ -66,6 +67,9 @@ pub fn run(opts: &ExpOptions) -> String {
                 "none".to_string()
             },
             format!("{}/{}", o.observations, budget.max_obs),
+            // the third budget axis, threaded through every trial: what
+            // the same observation budget costs in modeled wall-clock
+            if o.elapsed_model_s > 0.0 { fmt_secs(o.elapsed_model_s) } else { "none".into() },
             o.model_evals.to_string(),
             format!("-{:.0}%", o.pct_decrease()),
         ]);
@@ -94,5 +98,9 @@ mod tests {
         );
         assert!(report.contains("none")); // SPSA has no profiling phase
         assert!(report.contains("/60"), "budget column missing (quick = 60 obs)");
+        assert!(
+            report.contains("Model wall-clock"),
+            "the wall-clock axis is missing from the overhead table"
+        );
     }
 }

@@ -1,0 +1,308 @@
+//! Wall-clock experiment: **time-to-best** across the whole registry —
+//! the comparison frame of the successor literature (Tuneful, Fekry et
+//! al. 2020; Bao et al. 2018), where the currency is modeled wall-clock,
+//! not observations. The paper's economy claim (§6.6: SPSA needs 2–3
+//! observations per iteration) is re-examined in the currency an operator
+//! pays in: random search batches 64 probes into ONE parallel wave that
+//! costs barely more clock than SPSA's 3-probe wave, so obs-frugality and
+//! time-frugality rank the registry differently.
+//!
+//! Every tuner runs through a [`CampaignScheduler`] (policy `Equal`) with
+//! the same per-tuner slice of modeled clock — sized in multiples of the
+//! benchmark's own default-configuration duration, so the slice means the
+//! same thing for a 100 s job and a 3000 s one. Outputs:
+//!
+//! * one dense CSV per registry tuner (`walltime_<name>`): rows are a
+//!   uniform grid of modeled seconds, one column per benchmark with the
+//!   best-so-far f at that time — blank before the tuner's first wave
+//!   lands, forward-filled across cache hits, [`charge`] gaps and after
+//!   the run stops (like the Fig-6/7 obs-indexed curves);
+//! * `walltime_summary`: per tuner × benchmark, **obs-to-best AND
+//!   time-to-best** next to the spend on both axes and the verified
+//!   decrease vs default;
+//! * `walltime_scheduler`: a `SuccessiveHalving` run on the first
+//!   benchmark — allocations, cull rungs, and where the reclaimed time
+//!   went.
+//!
+//! [`charge`]: crate::tuner::EvalBroker::charge
+
+use crate::cluster::ClusterSpec;
+use crate::config::HadoopVersion;
+use crate::coordinator::{
+    evaluate_theta, profile_for, Algo, CampaignScheduler, SchedulerOutcome, SchedulerPolicy,
+};
+use crate::sim::{simulate, ScenarioSpec, SimOptions};
+use crate::tuner::{EvalRecord, DEFAULT_DISPATCH_OVERHEAD_S};
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+/// Rows of each dense per-tuner curve CSV.
+const GRID_POINTS: usize = 120;
+
+/// Per-tuner clock, in default-duration waves (one wave ≈ one
+/// default-config run + dispatch overhead).
+fn waves(opts: &ExpOptions) -> f64 {
+    if opts.quick {
+        12.0
+    } else {
+        32.0
+    }
+}
+
+/// Noise-free default-config execution time of a benchmark — the unit
+/// the time budgets are sized in (the scheduler tests reuse it so their
+/// budgets and this experiment's can never drift apart).
+pub(crate) fn calib_s(bench: Benchmark, version: HadoopVersion) -> f64 {
+    let space = crate::config::ParameterSpace::for_version(version);
+    let w = profile_for(bench, 1000);
+    simulate(
+        &ClusterSpec::paper_cluster(),
+        &space.default_config(),
+        &w,
+        &SimOptions { seed: 1, noise: false, scenario: ScenarioSpec::default() },
+    )
+    .exec_time_s
+}
+
+/// Dense best-so-far series over a modeled-seconds `grid`: entry `k` is
+/// the best f observed by time `grid[k]`. Times before the first record
+/// stay +∞ (rendered blank); between and after records the previous best
+/// carries forward — cache hits, charge gaps and post-stop times are all
+/// forward-filled. Relies on the trace's `model_time` being
+/// non-decreasing (batch members share their wave's completion time).
+pub fn best_so_far_by_time(trace: &[EvalRecord], grid: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(grid.len());
+    let (mut best, mut i) = (f64::INFINITY, 0);
+    for &t in grid {
+        while i < trace.len() && trace[i].model_time <= t {
+            best = best.min(trace[i].f);
+            i += 1;
+        }
+        out.push(best);
+    }
+    out
+}
+
+pub fn run(opts: &ExpOptions) -> String {
+    let version = HadoopVersion::V1;
+    let seed = opts.seeds()[0];
+    let all = Benchmark::all();
+    // quick mode keeps CI fast with a representative pair (like fig6/7)
+    let benches: &[Benchmark] = if opts.quick { &all[..2] } else { &all };
+    let n_tuners = Algo::all().len() as f64;
+
+    // one Equal-policy scheduler per benchmark: the whole registry under
+    // one shared clock, per-tuner slice = waves × (default duration + Δ)
+    let mut campaigns: Vec<(Benchmark, f64, Vec<SchedulerOutcome>)> = Vec::new();
+    for &bench in benches {
+        let per_tuner = waves(opts) * (calib_s(bench, version) + DEFAULT_DISPATCH_OVERHEAD_S);
+        let outs = CampaignScheduler::new(bench, version, seed, per_tuner * n_tuners).run();
+        campaigns.push((bench, per_tuner, outs));
+    }
+
+    let mut report = format!(
+        "== walltime — best-so-far vs modeled seconds, all registry tuners, Hadoop {} \
+         ({} default-duration waves of clock per tuner) ==\n",
+        version,
+        waves(opts)
+    );
+
+    // per-tuner dense curve CSV: one column per benchmark, a shared
+    // modeled-seconds axis spanning the largest per-benchmark slice
+    let t_max = campaigns.iter().map(|(_, per, _)| *per).fold(0.0_f64, f64::max);
+    let grid: Vec<f64> =
+        (1..=GRID_POINTS).map(|k| t_max * k as f64 / GRID_POINTS as f64).collect();
+    for (ai, algo) in Algo::all().into_iter().enumerate() {
+        let curves: Vec<Vec<f64>> = campaigns
+            .iter()
+            .map(|(_, _, outs)| best_so_far_by_time(&outs[ai].trace, &grid))
+            .collect();
+        let mut table = Table::new(&format!(
+            "walltime — {} best-so-far f (seconds) vs modeled seconds, Hadoop {}",
+            algo.label(),
+            version
+        ))
+        .header({
+            let mut h = vec!["model_seconds".to_string()];
+            h.extend(benches.iter().map(|b| b.label().to_string()));
+            h
+        });
+        for (k, &t) in grid.iter().enumerate() {
+            let mut row = vec![format!("{t:.1}")];
+            for c in &curves {
+                row.push(if c[k].is_finite() { format!("{:.3}", c[k]) } else { String::new() });
+            }
+            table.row(row);
+        }
+        opts.persist(&format!("walltime_{}", algo.name()), &table);
+    }
+
+    // summary: spend and first-hit on BOTH axes, plus verified quality
+    let mut summary = Table::new(&format!(
+        "walltime summary — obs-to-best and time-to-best per tuner, Hadoop {version}"
+    ))
+    .header(vec![
+        "Tuner",
+        "Benchmark",
+        "Obs spent",
+        "Model time spent (s)",
+        "Obs to best",
+        "Time to best (s)",
+        "Best observed f (s)",
+        "Result vs default",
+    ]);
+    for (bench, _, outs) in &campaigns {
+        let space = crate::config::ParameterSpace::for_version(version);
+        let cluster = ClusterSpec::paper_cluster();
+        let w = profile_for(*bench, 1000);
+        let (default_mean, _) = evaluate_theta(
+            &space,
+            &cluster,
+            &w,
+            &space.default_theta(),
+            5,
+            seed ^ 0xE7A1,
+            &ScenarioSpec::default(),
+        );
+        for o in outs {
+            let (tuned_mean, _) = evaluate_theta(
+                &space,
+                &cluster,
+                &w,
+                &o.best_theta,
+                5,
+                seed ^ 0xE7A1,
+                &ScenarioSpec::default(),
+            );
+            summary.row(vec![
+                o.algo.label().to_string(),
+                bench.label().to_string(),
+                o.observations.to_string(),
+                format!("{:.0}", o.elapsed_s),
+                if o.observations > 0 { o.obs_to_best.to_string() } else { "-".into() },
+                if o.observations > 0 { format!("{:.0}", o.time_to_best) } else { "-".into() },
+                if o.best_f.is_finite() { format!("{:.0}", o.best_f) } else { "-".into() },
+                format!("-{:.0}%", 100.0 * (default_mean - tuned_mean) / default_mean),
+            ]);
+        }
+    }
+    report.push_str(&summary.to_ascii());
+    opts.persist("walltime_summary", &summary);
+
+    // SuccessiveHalving demonstration on the first benchmark: same total
+    // clock, rung-by-rung culling with reinvested remainders
+    let (bench0, per_tuner0, _) = &campaigns[0];
+    let sha = CampaignScheduler::new(*bench0, version, seed, per_tuner0 * n_tuners)
+        .with_policy(SchedulerPolicy::SuccessiveHalving)
+        .run();
+    let mut sha_table = Table::new(&format!(
+        "walltime scheduler — SuccessiveHalving on {}, total clock {:.0} s",
+        bench0.label(),
+        per_tuner0 * n_tuners
+    ))
+    .header(vec![
+        "Tuner",
+        "Allocated (s)",
+        "Spent (s)",
+        "Obs",
+        "Culled at rung",
+        "Best observed f (s)",
+    ]);
+    for o in &sha {
+        sha_table.row(vec![
+            o.algo.label().to_string(),
+            format!("{:.0}", o.allocated_s),
+            format!("{:.0}", o.elapsed_s),
+            o.observations.to_string(),
+            o.culled_at_rung.map(|r| r.to_string()).unwrap_or_else(|| "survived".into()),
+            if o.best_f.is_finite() { format!("{:.0}", o.best_f) } else { "-".into() },
+        ]);
+    }
+    report.push('\n');
+    report.push_str(&sha_table.to_ascii());
+    opts.persist("walltime_scheduler", &sha_table);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ResultsDir;
+
+    #[test]
+    fn best_so_far_by_time_is_dense_and_forward_filled() {
+        let rec = |obs: u64, t: f64, f: f64, cached: bool| EvalRecord {
+            obs,
+            model_time: t,
+            theta: vec![0.5],
+            f,
+            cached,
+        };
+        // a 2-point first wave landing at t=10, a cache hit at the same
+        // elapsed time, then a charge gap until a wave at t=30
+        let trace = vec![
+            rec(2, 10.0, 12.0, false),
+            rec(2, 10.0, 9.0, false),
+            rec(2, 10.0, 11.0, true),
+            rec(7, 30.0, 8.0, false),
+        ];
+        let grid = vec![5.0, 10.0, 20.0, 30.0, 40.0];
+        let c = best_so_far_by_time(&trace, &grid);
+        assert!(c[0].is_infinite(), "before the first wave lands: blank");
+        assert_eq!(&c[1..], &[9.0, 9.0, 8.0, 8.0], "forward-filled between/after waves");
+        assert!(best_so_far_by_time(&[], &grid).iter().all(|v| v.is_infinite()));
+    }
+
+    #[test]
+    fn walltime_quick_emits_a_curve_per_registry_tuner_and_a_two_axis_summary() {
+        let dir = std::env::temp_dir().join(format!("hspsa-walltime-{}", std::process::id()));
+        let opts = ExpOptions {
+            quick: true,
+            out: Some(ResultsDir::new(&dir).expect("results dir")),
+        };
+        let report = run(&opts);
+
+        for algo in Algo::all() {
+            let path = dir.join(format!("walltime_{}.csv", algo.name()));
+            assert!(path.exists(), "missing walltime CSV for {}", algo.label());
+            let csv = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                csv.lines().count(),
+                GRID_POINTS + 1,
+                "{} curve is not dense",
+                algo.label()
+            );
+        }
+        let summary = std::fs::read_to_string(dir.join("walltime_summary.csv")).unwrap();
+        assert!(summary.contains("Obs to best"), "summary lost the obs-to-best column");
+        assert!(summary.contains("Time to best"), "summary lost the time-to-best column");
+        assert!(dir.join("walltime_scheduler.csv").exists());
+
+        // the report carries both frames for every tuner
+        for algo in Algo::all() {
+            assert!(report.contains(algo.label()), "summary missing {}", algo.label());
+        }
+        // under one shared clock the 64-probe wave must buy random search
+        // more observations than SPSA's 3-probe wave
+        let obs_of = |name: &str| -> u64 {
+            summary
+                .lines()
+                .find(|l| l.starts_with(&format!("{name},")))
+                .unwrap_or_else(|| panic!("{name} missing from summary CSV"))
+                .split(',')
+                .nth(2)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(
+            obs_of("Random") > obs_of("SPSA"),
+            "wall-clock frame lost: random {} obs vs spsa {}",
+            obs_of("Random"),
+            obs_of("SPSA")
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -6,7 +6,8 @@
 //!               compare against the benign cluster
 //!   tune        run a tuning algorithm on a benchmark
 //!   experiment  regenerate a paper table/figure (table1 | fig6 | fig7 |
-//!               fig8 | fig9 | table2 | robustness | headline | all)
+//!               fig8 | fig9 | table2 | robustness | walltime | headline |
+//!               all)
 //!   whatif      evaluate a configuration on the analytic model /
 //!               AOT artifact and compare with the simulator
 //!   list        show benchmarks, parameters and algorithms
@@ -254,6 +255,16 @@ fn cmd_tune() -> i32 {
         .flag("version", Some("v1"), "hadoop version (v1|v2)")
         .flag("tuner", Some("spsa"), "registry tuner name (see `repro list`)")
         .flag("budget", Some("90"), "live-observation budget (all tuners share this currency)")
+        .flag(
+            "max-batches",
+            Some("0"),
+            "dispatch-round cap, 0 = uncapped (one round ≈ one parallel wave)",
+        )
+        .flag(
+            "max-time",
+            Some("0"),
+            "modeled wall-clock cap in simulated seconds, 0 = uncapped",
+        )
         .flag("seed", Some("7"), "tuner seed")
         .flag("metric", Some("time"), "objective: time|spills|shuffle|reduce-spill (spsa only)")
         .parse_env(2);
@@ -268,8 +279,19 @@ fn cmd_tune() -> i32 {
         eprintln!("unknown tuner '{}' (see `repro list`)", p.get_str("tuner"));
         std::process::exit(2);
     });
-    let budget = match p.get_u64("budget") {
-        Ok(b) => Budget::obs(b),
+    let budget = match (|| -> Result<Budget, String> {
+        let mut b = Budget::obs(p.get_u64("budget")?);
+        let max_batches = p.get_u64("max-batches")?;
+        if max_batches > 0 {
+            b = b.with_batches(max_batches);
+        }
+        let max_time = p.get_f64("max-time")?;
+        if max_time > 0.0 {
+            b = b.with_model_time(max_time);
+        }
+        Ok(b)
+    })() {
+        Ok(b) => b,
         Err(e) => {
             eprintln!("{e}");
             return 2;
@@ -324,9 +346,16 @@ fn cmd_tune() -> i32 {
         o.pct_decrease()
     );
     println!(
-        "observations: {}/{}   model evals: {}   profiling: {}   tuner wall: {:.0} ms",
+        "observations: {}/{}   model wall-clock: {}{}   model evals: {}   profiling: {}   \
+         tuner wall: {:.0} ms",
         o.observations,
         o.spec.budget.max_obs,
+        fmt_secs(o.elapsed_model_s),
+        if o.spec.budget.max_model_time.is_finite() {
+            format!(" of {}", fmt_secs(o.spec.budget.max_model_time))
+        } else {
+            String::new()
+        },
         o.model_evals,
         if o.profiling_overhead_s > 0.0 {
             fmt_secs(o.profiling_overhead_s)
@@ -352,7 +381,7 @@ fn cmd_tune() -> i32 {
 fn cmd_experiment() -> i32 {
     let parsed = Args::new(
         "repro experiment",
-        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 robustness headline ablation holistic all)",
+        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 robustness walltime headline ablation holistic all)",
     )
     .switch("quick", "reduced seeds/iterations")
     .flag("out", Some("results"), "output directory for md/csv")
@@ -396,6 +425,10 @@ fn cmd_experiment() -> i32 {
     }
     if sel("robustness") {
         println!("{}", experiments::robustness::run(&opts));
+        ran = true;
+    }
+    if sel("walltime") {
+        println!("{}", experiments::walltime::run(&opts));
         ran = true;
     }
     if sel("holistic") {
@@ -473,6 +506,26 @@ fn cmd_whatif() -> i32 {
 }
 
 fn cmd_list() -> i32 {
+    let parsed = Args::new("repro list", "show benchmarks, parameters and tuners")
+        .switch(
+            "names",
+            "print only the canonical registry tuner names, one per line (CI diffs this \
+             against rust/tests/fixtures/registry_names.txt)",
+        )
+        .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    if p.get_bool("names") {
+        for name in hadoop_spsa::tuner::registry::names() {
+            println!("{name}");
+        }
+        return 0;
+    }
     println!("benchmarks:");
     for b in Benchmark::all() {
         println!(

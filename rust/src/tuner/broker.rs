@@ -15,7 +15,26 @@
 //!   `coordinator::pool` workers and stay bit-identical to the sequential
 //!   loop at any worker count (the PR 1 contract);
 //! * a uniform eval-trace ([`EvalRecord`]) and best-so-far tracking, so
-//!   every tuner gets a convergence history for free.
+//!   every tuner gets a convergence history for free;
+//! * a **modeled wall-clock cost model**: observations are not the
+//!   currency a cluster operator pays in — wall-clock is, and a tuner
+//!   that batches 64 probes per wave finishes the wave in (almost) the
+//!   same time as one that batches 3. Every dispatched batch is charged
+//!   `max(member simulated durations) + dispatch_overhead` — the max,
+//!   not the sum, because the batch members run as one parallel wave —
+//!   accumulated into [`EvalBroker::elapsed_model_time`] and capped by
+//!   the third budget axis, [`Budget::max_model_time`].
+//!
+//! **Time-axis truncation semantics.** The time axis is checked *before*
+//! a dispatch, never mid-wave: once `elapsed_model_time` reaches
+//! `max_model_time` the broker serves nothing further (`remaining() == 0`,
+//! `try_eval*` truncate/return `None` — the same graceful stop as the
+//! observation axes), but the wave that crossed the line is charged in
+//! full. `elapsed_model_time` therefore never exceeds `max_model_time`
+//! by more than one batch's cost ([`EvalBroker::max_batch_cost`]), and
+//! the cost model only *meters* — it never perturbs dispatch order,
+//! batch composition or observation seeds, so metered trajectories stay
+//! bit-identical to unmetered ones up to the truncation point.
 //!
 //! **Cache caveat (continuous-θ tuners).** A cache hit replays a past
 //! observation instead of consuming the objective's next seed, so the
@@ -28,20 +47,28 @@ use std::collections::HashMap;
 
 use super::objective::Objective;
 
-/// Hard evaluation budget of one tuning run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Hard evaluation budget of one tuning run: three independently
+/// exhaustible axes (observations, dispatch rounds, modeled wall-clock),
+/// each with the same graceful-truncation semantics — whichever runs out
+/// first stops the run, and the tuner keeps its best-so-far.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Budget {
     /// Maximum live observations (cache hits are free).
     pub max_obs: u64,
     /// Maximum dispatch rounds (each underlying `eval_batch` call is one
-    /// round — a wall-clock proxy: one round ≈ one parallel wave).
+    /// round — a coarse wall-clock proxy: one round ≈ one parallel wave).
     pub max_batches: u64,
+    /// Maximum modeled wall-clock, in simulated seconds
+    /// ([`EvalBroker::elapsed_model_time`]); `f64::INFINITY` = uncapped.
+    /// Checked before each dispatch, so a run may overshoot by at most
+    /// one batch's cost (see the module docs).
+    pub max_model_time: f64,
 }
 
 impl Budget {
     /// Observation budget with unlimited batches — the common case.
     pub fn obs(max_obs: u64) -> Budget {
-        Budget { max_obs, max_batches: u64::MAX }
+        Budget { max_obs, max_batches: u64::MAX, max_model_time: f64::INFINITY }
     }
 
     /// No limits (compat path for callers that meter elsewhere).
@@ -54,7 +81,39 @@ impl Budget {
         self.max_batches = max_batches;
         self
     }
+
+    /// Builder: additionally cap modeled wall-clock (simulated seconds).
+    pub fn with_model_time(mut self, max_model_time: f64) -> Budget {
+        assert!(max_model_time >= 0.0, "model-time budget must be non-negative");
+        self.max_model_time = max_model_time;
+        self
+    }
+
+    /// True when no axis constrains anything — the signal for tuners with
+    /// no intrinsic stopping rule (random search) to apply their own cap.
+    pub fn is_unlimited(&self) -> bool {
+        self.max_obs == u64::MAX
+            && self.max_batches == u64::MAX
+            && self.max_model_time.is_infinite()
+    }
 }
+
+/// Which budget axis stopped a run. Axes are checked in one documented,
+/// fixed order — **observations, then batches, then model time** — so an
+/// exactly-simultaneous exhaustion of several axes reports
+/// deterministically (observations win, then batches). Pinned by test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetAxis {
+    Observations,
+    Batches,
+    ModelTime,
+}
+
+/// Modeled per-wave dispatch overhead in simulated seconds: job
+/// submission, container scheduling and tear-down latency, charged once
+/// per dispatched batch regardless of its size — the term that makes a
+/// 3-probe wave and a 64-probe wave cost (almost) the same wall-clock.
+pub const DEFAULT_DISPATCH_OVERHEAD_S: f64 = 5.0;
 
 /// Whether the broker may serve repeat θs from memory.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,6 +130,11 @@ pub struct EvalRecord {
     /// Live observations consumed *after* this record (cache hits repeat
     /// the previous count).
     pub obs: u64,
+    /// Modeled wall-clock elapsed *after* this record, in simulated
+    /// seconds. Members of one dispatched batch all carry the post-wave
+    /// time (they finish together when the wave finishes); cache hits
+    /// repeat the previous elapsed time — replays are free in time too.
+    pub model_time: f64,
     pub theta: Vec<f64>,
     pub f: f64,
     pub cached: bool,
@@ -87,6 +151,13 @@ pub struct EvalBroker<'a> {
     evals_used: u64,
     batches_used: u64,
     cache_hits: u64,
+    /// Modeled per-wave dispatch overhead (see [`DEFAULT_DISPATCH_OVERHEAD_S`]).
+    dispatch_overhead_s: f64,
+    /// Modeled wall-clock spent so far (simulated seconds).
+    elapsed_model_time: f64,
+    /// Costliest single wave charged so far — the bound on how far the
+    /// time axis can overshoot (see the module docs).
+    max_batch_cost: f64,
     trace: Vec<EvalRecord>,
     best: Option<(Vec<f64>, f64)>,
 }
@@ -105,6 +176,9 @@ impl<'a> EvalBroker<'a> {
             evals_used: 0,
             batches_used: 0,
             cache_hits: 0,
+            dispatch_overhead_s: DEFAULT_DISPATCH_OVERHEAD_S,
+            elapsed_model_time: 0.0,
+            max_batch_cost: 0.0,
             trace: Vec::new(),
             best: None,
         }
@@ -129,12 +203,36 @@ impl<'a> EvalBroker<'a> {
         self.quant
     }
 
-    /// Observations still affordable (0 once either budget axis is spent).
-    pub fn remaining(&self) -> u64 {
-        if self.batches_used >= self.budget.max_batches {
-            return 0;
+    /// Modeled per-wave dispatch overhead, in simulated seconds.
+    pub fn with_dispatch_overhead(mut self, seconds: f64) -> Self {
+        assert!(seconds >= 0.0, "dispatch overhead must be non-negative");
+        self.dispatch_overhead_s = seconds;
+        self
+    }
+
+    /// Why the budget is spent, or `None` while every axis has room.
+    /// Axes are checked in the documented fixed order of [`BudgetAxis`]:
+    /// observations, then batches, then model time — an
+    /// exactly-simultaneous exhaustion reports the earlier axis.
+    pub fn stop_reason(&self) -> Option<BudgetAxis> {
+        if self.evals_used >= self.budget.max_obs {
+            return Some(BudgetAxis::Observations);
         }
-        self.budget.max_obs.saturating_sub(self.evals_used)
+        if self.batches_used >= self.budget.max_batches {
+            return Some(BudgetAxis::Batches);
+        }
+        if self.elapsed_model_time >= self.budget.max_model_time {
+            return Some(BudgetAxis::ModelTime);
+        }
+        None
+    }
+
+    /// Observations still affordable (0 once any budget axis is spent).
+    pub fn remaining(&self) -> u64 {
+        match self.stop_reason() {
+            Some(_) => 0,
+            None => self.budget.max_obs.saturating_sub(self.evals_used),
+        }
     }
 
     pub fn exhausted(&self) -> bool {
@@ -152,6 +250,20 @@ impl<'a> EvalBroker<'a> {
 
     pub fn cache_hits(&self) -> u64 {
         self.cache_hits
+    }
+
+    /// Modeled wall-clock spent so far, in simulated seconds: per
+    /// dispatched wave, the max of its members' simulated durations plus
+    /// the dispatch overhead, plus any [`EvalBroker::charge`]d external
+    /// time. Cache hits cost nothing.
+    pub fn elapsed_model_time(&self) -> f64 {
+        self.elapsed_model_time
+    }
+
+    /// Cost of the most expensive single wave charged so far — the bound
+    /// on the time axis's possible overshoot past `max_model_time`.
+    pub fn max_batch_cost(&self) -> f64 {
+        self.max_batch_cost
     }
 
     pub fn budget(&self) -> Budget {
@@ -178,11 +290,27 @@ impl<'a> EvalBroker<'a> {
 
     /// Account `n` live runs performed *outside* this broker's objective
     /// against the budget (e.g. PPABS profiling its training corpus, which
-    /// runs other workloads). Returns how many were granted; the caller
-    /// must scale its external work down to the grant.
-    pub fn charge(&mut self, n: u64) -> u64 {
+    /// runs other workloads), plus their modeled wall-clock `duration_s`
+    /// (e.g. the summed simulated seconds of the profiling runs — external
+    /// profiling is priced in the same currency as dispatched waves).
+    /// Returns how many runs were granted; the caller must scale its
+    /// external work down to the grant, and the charged time scales with
+    /// it (`duration_s · granted/n`). With `n == 0` the full `duration_s`
+    /// is charged as pure wall-clock — the pattern for pricing profiling
+    /// time that is only measurable *after* the observation grant. Like a
+    /// dispatched wave, a time charge may overshoot `max_model_time`;
+    /// every later request then sees `remaining() == 0`.
+    pub fn charge(&mut self, n: u64, duration_s: f64) -> u64 {
         let granted = n.min(self.remaining());
         self.evals_used += granted;
+        let charged_s = if n == 0 { duration_s } else { duration_s * granted as f64 / n as f64 };
+        self.elapsed_model_time += charged_s;
+        if charged_s > 0.0 {
+            // an external profiling block counts as one wave for the
+            // overshoot bound: elapsed ≤ max_model_time + max_batch_cost
+            // holds for charge-metered tuners (PPABS) too
+            self.max_batch_cost = self.max_batch_cost.max(charged_s);
+        }
         granted
     }
 
@@ -244,7 +372,22 @@ impl<'a> EvalBroker<'a> {
         } else {
             self.batches_used += 1;
             self.evals_used += dispatch.len() as u64;
-            self.objective.eval_batch(&dispatch)
+            let vs = self.objective.eval_batch(&dispatch);
+            // Wall-clock cost of the wave: its members run in parallel, so
+            // the wave takes as long as its slowest member (max, NOT sum —
+            // the parallelism contract), plus the per-dispatch overhead.
+            // Objectives that know their runs' simulated durations report
+            // them; for the rest the observation value is the documented
+            // proxy (exact for the ExecTime metric).
+            let durations = match self.objective.last_durations() {
+                Some(d) if d.len() == vs.len() => d,
+                _ => vs.clone(),
+            };
+            let slowest = durations.iter().cloned().fold(0.0_f64, f64::max);
+            let wave_cost = slowest + self.dispatch_overhead_s;
+            self.elapsed_model_time += wave_cost;
+            self.max_batch_cost = self.max_batch_cost.max(wave_cost);
+            vs
         };
         debug_assert_eq!(values.len(), dispatch.len());
         if self.policy == CachePolicy::Quantized {
@@ -269,6 +412,7 @@ impl<'a> EvalBroker<'a> {
             }
             self.trace.push(EvalRecord {
                 obs: self.evals_used,
+                model_time: self.elapsed_model_time,
                 theta: theta.clone(),
                 f,
                 cached,
@@ -426,11 +570,21 @@ mod tests {
     fn charge_meters_external_runs() {
         let mut obj = quad();
         let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
-        assert_eq!(b.charge(4), 4);
+        assert_eq!(b.charge(4, 100.0), 4);
         assert_eq!(b.evals_used(), 4);
-        assert_eq!(b.charge(20), 6, "grant clips to the remaining budget");
+        assert_eq!(b.elapsed_model_time(), 100.0);
+        assert_eq!(b.charge(20, 200.0), 6, "grant clips to the remaining budget");
         assert!(b.exhausted());
+        assert_eq!(
+            b.elapsed_model_time(),
+            100.0 + 200.0 * 6.0 / 20.0,
+            "charged time scales with the clipped grant"
+        );
         assert_eq!(obj.evals(), 0, "charge must not touch the objective");
+        // n == 0: price pure wall-clock (post-grant profiling measurement)
+        let before = b.elapsed_model_time();
+        assert_eq!(b.charge(0, 37.5), 0);
+        assert_eq!(b.elapsed_model_time(), before + 37.5);
     }
 
     #[test]
@@ -469,5 +623,137 @@ mod tests {
         let mut b = EvalBroker::new(&mut obj, Budget::obs(1));
         Objective::eval(&mut b, &[0.5, 0.5]);
         Objective::eval(&mut b, &[0.6, 0.6]); // caller bug: no remaining() check
+    }
+
+    // -----------------------------------------------------------------
+    // wall-clock cost model
+    // -----------------------------------------------------------------
+
+    /// Noise-free quadratic: f is deterministic and the broker's duration
+    /// fallback uses f itself, so wave costs are exactly computable.
+    fn quiet() -> QuadraticObjective {
+        QuadraticObjective::new(vec![0.0, 0.0], 0.0, 1)
+    }
+
+    #[test]
+    fn batch_cost_is_max_of_member_durations_plus_overhead() {
+        let mut obj = quiet();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10)).with_dispatch_overhead(7.0);
+        // f(θ) = 1 + θ·θ (noise-free): durations 1.25, 2.0, 1.08
+        let pts = vec![vec![0.5, 0.0], vec![1.0, 0.0], vec![0.2, 0.2]];
+        let fs = b.try_eval_batch(&pts);
+        assert_eq!(fs.len(), 3);
+        let want = 2.0 + 7.0; // max, NOT sum (1.25 + 2.0 + 1.08), + overhead
+        assert!((b.elapsed_model_time() - want).abs() < 1e-12, "{}", b.elapsed_model_time());
+        assert_eq!(b.max_batch_cost(), b.elapsed_model_time());
+        // a second wave accumulates
+        b.try_eval(&[0.5, 0.0]).unwrap();
+        assert!((b.elapsed_model_time() - (want + 1.25 + 7.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_hits_cost_no_model_time() {
+        let mut obj = quiet();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10))
+            .with_cache(CachePolicy::Quantized)
+            .with_dispatch_overhead(5.0);
+        b.try_eval(&[0.5, 0.5]).unwrap();
+        let after_first = b.elapsed_model_time();
+        assert!(after_first > 0.0);
+        b.try_eval(&[0.5, 0.5]).unwrap(); // memo hit: free in obs AND time
+        assert_eq!(b.elapsed_model_time(), after_first);
+        assert_eq!(b.trace()[1].model_time, after_first, "hit repeats the elapsed time");
+    }
+
+    #[test]
+    fn model_time_axis_truncates_gracefully_with_bounded_overshoot() {
+        let mut obj = quiet();
+        // each 1-point wave costs f + 5 ≥ 6: three waves cross a 14 s cap
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(1000).with_model_time(14.0))
+            .with_dispatch_overhead(5.0);
+        let mut waves = 0;
+        while b.try_eval(&[0.1, 0.1]).is_some() {
+            waves += 1;
+            assert!(waves < 100, "time axis never exhausted");
+        }
+        assert_eq!(b.stop_reason(), Some(BudgetAxis::ModelTime));
+        assert!(b.exhausted());
+        assert_eq!(b.remaining(), 0);
+        assert!(b.elapsed_model_time() >= 14.0);
+        assert!(
+            b.elapsed_model_time() <= 14.0 + b.max_batch_cost(),
+            "overshoot {} exceeds one batch cost {}",
+            b.elapsed_model_time() - 14.0,
+            b.max_batch_cost()
+        );
+        // graceful: best-so-far survives, batch requests serve nothing
+        assert!(b.best().is_some());
+        assert!(b.try_eval_batch(&[vec![0.2, 0.2]]).is_empty());
+    }
+
+    #[test]
+    fn stop_reason_axis_order_is_deterministic_and_documented() {
+        // Exactly-simultaneous exhaustion of the observation and batch
+        // axes: one 2-obs wave spends Budget{max_obs: 2, max_batches: 1}
+        // to the observation AND the round. The documented check order
+        // (observations, then batches, then model time) must report
+        // Observations — pinned here so the axis precedence can never
+        // silently flip.
+        let mut obj = quiet();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(2).with_batches(1));
+        let fs = b.try_eval_batch(&[vec![0.1, 0.1], vec![0.2, 0.2]]);
+        assert_eq!(fs.len(), 2);
+        assert!(b.exhausted());
+        assert_eq!(b.stop_reason(), Some(BudgetAxis::Observations));
+
+        // batches exhaust alone → Batches
+        let mut obj2 = quiet();
+        let mut b2 = EvalBroker::new(&mut obj2, Budget::obs(10).with_batches(1));
+        b2.try_eval(&[0.1, 0.1]).unwrap();
+        assert_eq!(b2.stop_reason(), Some(BudgetAxis::Batches));
+
+        // all three spent at once still reports Observations first
+        let mut obj3 = quiet();
+        let mut b3 =
+            EvalBroker::new(&mut obj3, Budget::obs(1).with_batches(1).with_model_time(1.0));
+        b3.try_eval(&[0.0, 0.0]).unwrap();
+        assert_eq!(b3.stop_reason(), Some(BudgetAxis::Observations));
+    }
+
+    #[test]
+    fn records_carry_post_wave_model_time() {
+        let mut obj = quiet();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10)).with_dispatch_overhead(5.0);
+        b.try_eval_batch(&[vec![0.5, 0.0], vec![1.0, 0.0]]);
+        let t1 = b.elapsed_model_time();
+        // both members of the wave finish when the wave finishes
+        assert_eq!(b.trace()[0].model_time, t1);
+        assert_eq!(b.trace()[1].model_time, t1);
+        b.try_eval(&[0.2, 0.2]).unwrap();
+        assert!(b.trace()[2].model_time > t1);
+        assert_eq!(b.trace()[2].model_time, b.elapsed_model_time());
+    }
+
+    #[test]
+    fn metering_does_not_perturb_values_or_seeds() {
+        // The acceptance contract: the cost model meters, it must not
+        // change what is dispatched — a time-capped run reproduces the
+        // uncapped run's observations bit-exactly up to truncation.
+        let thetas: Vec<Vec<f64>> = (0..6).map(|i| vec![0.1 * i as f64, 0.3]).collect();
+        let mut obj_a = quad();
+        let mut a = EvalBroker::new(&mut obj_a, Budget::obs(100));
+        let want: Vec<f64> = thetas.iter().filter_map(|t| a.try_eval(t)).collect();
+        let mut obj_b = quad();
+        let mut b = EvalBroker::new(&mut obj_b, Budget::obs(100).with_model_time(1e9));
+        let got: Vec<f64> = thetas.iter().filter_map(|t| b.try_eval(t)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn budget_unlimited_predicate() {
+        assert!(Budget::unlimited().is_unlimited());
+        assert!(!Budget::obs(10).is_unlimited());
+        assert!(!Budget::unlimited().with_batches(5).is_unlimited());
+        assert!(!Budget::unlimited().with_model_time(1e6).is_unlimited());
     }
 }

@@ -12,7 +12,9 @@ pub mod registry;
 pub mod spsa;
 pub mod tpe;
 
-pub use broker::{Budget, CachePolicy, EvalBroker, EvalRecord};
+pub use broker::{
+    Budget, BudgetAxis, CachePolicy, EvalBroker, EvalRecord, DEFAULT_DISPATCH_OVERHEAD_S,
+};
 pub use nelder_mead::{NelderMeadConfig, NelderMeadTuner};
 pub use objective::{Metric, Objective, ObsAgg, QuadraticObjective, SimObjective};
 pub use rdsa::RdsaTuner;

@@ -26,6 +26,19 @@ pub trait Objective {
     }
     /// Total observations made so far (the paper's cost metric: 2/iter).
     fn evals(&self) -> u64;
+
+    /// Modeled wall-clock durations, in simulated seconds, of the
+    /// observations served by the most recent `eval`/`eval_batch` call —
+    /// one entry per observation, in call order. `None` (the default)
+    /// tells the metering layer ([`EvalBroker`]) to fall back to the
+    /// observation values themselves: exact for `ExecTime`-metric
+    /// objectives (the observation IS the job's seconds), a documented
+    /// proxy for synthetic test objectives.
+    ///
+    /// [`EvalBroker`]: crate::tuner::broker::EvalBroker
+    fn last_durations(&self) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// Which job statistic the tuner minimizes. The paper's experiments use
@@ -136,6 +149,11 @@ pub struct SimObjective {
     /// else all-but-one core). 1 = sequential.
     workers: Option<usize>,
     evals: u64,
+    /// Simulated seconds of each observation in the most recent
+    /// `eval`/`eval_batch` call (see [`Objective::last_durations`]): the
+    /// run's real elapsed time — retries and aborts included — which for
+    /// a failed job is *not* the penalized score the tuner sees.
+    last_durs: Vec<f64>,
 }
 
 impl SimObjective {
@@ -156,6 +174,7 @@ impl SimObjective {
             agg: ObsAgg::Single,
             workers: None,
             evals: 0,
+            last_durs: Vec::new(),
         }
     }
 
@@ -246,7 +265,11 @@ impl Objective for SimObjective {
         match self.agg {
             ObsAgg::Single => {
                 let opts = self.next_opts();
-                self.score(&simulate(&self.cluster, &config, &self.workload, &opts))
+                let r = simulate(&self.cluster, &config, &self.workload, &opts);
+                // the run's real simulated seconds (an aborted run costs
+                // its time-to-abort, not the penalized score)
+                self.last_durs = vec![r.exec_time_s];
+                self.score(&r)
             }
             ObsAgg::Percentile { .. } => {
                 // the repeated runs of one observation are independent jobs
@@ -255,11 +278,12 @@ impl Objective for SimObjective {
                     .map(|_| crate::sim::SimJob { config: config.clone(), opts: self.next_opts() })
                     .collect();
                 let workers = crate::coordinator::pool::resolve_workers(self.workers);
-                let scores: Vec<f64> =
-                    crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers)
-                        .iter()
-                        .map(|r| self.score(r))
-                        .collect();
+                let runs = crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers);
+                let scores: Vec<f64> = runs.iter().map(|r| self.score(r)).collect();
+                // the repeats run as one parallel wave: the observation
+                // takes as long as its slowest run
+                self.last_durs =
+                    vec![runs.iter().map(|r| r.exec_time_s).fold(0.0_f64, f64::max)];
                 self.aggregate(&scores)
             }
         }
@@ -274,7 +298,17 @@ impl Objective for SimObjective {
     fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
         let workers = crate::coordinator::pool::resolve_workers(self.workers);
         if workers <= 1 || thetas.len() <= 1 {
-            return thetas.iter().map(|t| self.eval(t)).collect();
+            let mut durs = Vec::with_capacity(thetas.len());
+            let out = thetas
+                .iter()
+                .map(|t| {
+                    let f = self.eval(t);
+                    durs.push(self.last_durs[0]);
+                    f
+                })
+                .collect();
+            self.last_durs = durs;
+            return out;
         }
         let per_obs = self.runs_per_obs() as usize;
         let jobs: Vec<crate::sim::SimJob> = thetas
@@ -287,16 +321,23 @@ impl Objective for SimObjective {
             })
             .collect();
         let runs = crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers);
-        runs.chunks(per_obs)
-            .map(|chunk| {
-                let scores: Vec<f64> = chunk.iter().map(|r| self.score(r)).collect();
-                self.aggregate(&scores)
-            })
-            .collect()
+        let (mut out, mut durs) =
+            (Vec::with_capacity(thetas.len()), Vec::with_capacity(thetas.len()));
+        for chunk in runs.chunks(per_obs) {
+            let scores: Vec<f64> = chunk.iter().map(|r| self.score(r)).collect();
+            out.push(self.aggregate(&scores));
+            durs.push(chunk.iter().map(|r| r.exec_time_s).fold(0.0_f64, f64::max));
+        }
+        self.last_durs = durs;
+        out
     }
 
     fn evals(&self) -> u64 {
         self.evals
+    }
+
+    fn last_durations(&self) -> Option<Vec<f64>> {
+        Some(self.last_durs.clone())
     }
 }
 
@@ -435,6 +476,52 @@ mod tests {
         let mut one = objective().with_workers(1);
         let mut many = objective().with_workers(4);
         assert_eq!(one.eval_batch(&thetas), many.eval_batch(&thetas));
+    }
+
+    #[test]
+    fn durations_track_each_observation_at_any_worker_count() {
+        let thetas = probe_thetas(5);
+        let mut one = objective().with_workers(1);
+        one.eval_batch(&thetas);
+        let d1 = one.last_durations().expect("SimObjective reports durations");
+        let mut many = objective().with_workers(4);
+        many.eval_batch(&thetas);
+        assert_eq!(d1.len(), 5, "one duration per observation");
+        assert_eq!(d1, many.last_durations().unwrap());
+        assert!(d1.iter().all(|d| *d > 0.0 && d.is_finite()));
+    }
+
+    #[test]
+    fn benign_exectime_duration_equals_the_observation() {
+        // under ExecTime with no failure penalty, the observation IS the
+        // run's simulated seconds — the broker's fallback and the real
+        // duration coincide exactly
+        let mut o = objective();
+        let theta = o.space.default_theta();
+        let f = o.eval(&theta);
+        assert_eq!(o.last_durations().unwrap(), vec![f]);
+    }
+
+    #[test]
+    fn counter_metric_duration_is_still_seconds() {
+        // minimizing spilled records: the observation is a record count,
+        // but the wall-clock model must still be charged in seconds
+        let mut o = objective().with_metric(Metric::SpilledRecords);
+        let theta = o.space.default_theta();
+        let f = o.eval(&theta);
+        let d = o.last_durations().unwrap()[0];
+        assert_ne!(d, f, "duration must not be the counter value");
+        assert!(d > 0.0 && d < 1e7, "implausible run duration {d}");
+    }
+
+    #[test]
+    fn tail_aggregate_reports_one_duration_per_observation() {
+        let thetas = probe_thetas(3);
+        let mut o = objective().tail_p95(4).with_workers(1);
+        o.eval_batch(&thetas);
+        let d = o.last_durations().unwrap();
+        assert_eq!(d.len(), 3, "repeats fold into their observation's duration");
+        assert!(d.iter().all(|x| *x > 0.0));
     }
 
     #[test]

@@ -147,6 +147,12 @@ impl Tuner for SpsaTuner {
             // spend the whole budget unless the gradient calms first; the
             // config's own max_iters only caps unlimited-budget runs
             spsa.config.max_iters = (broker.remaining() / spsa.obs_per_iter()).max(1);
+        } else if !broker.budget().is_unlimited() {
+            // batch/model-time-limited with unlimited observations: no
+            // whole-iteration plan exists up front — iterate until the
+            // broker truncates (`run_broker` stops the moment the next
+            // iteration is unaffordable) or the gradient calms
+            spsa.config.max_iters = u64::MAX;
         }
         let res = spsa.run_broker(broker, space.default_theta());
         TuneOutcome {
@@ -285,12 +291,15 @@ impl Tuner for PpabsTuner {
             .map(|c| c.with_measurement_noise(&mut prof_rng, PROFILE_NOISE_SIGMA))
             .collect();
         // meter the corpus profiling against the shared live budget; a
-        // too-small budget shrinks the corpus (graceful degradation)
-        let granted = broker.charge(corpus.len() as u64) as usize;
+        // too-small budget shrinks the corpus (graceful degradation). The
+        // grant must precede training (it sizes the corpus), so the runs'
+        // wall-clock is priced afterwards, once it has been measured.
+        let granted = broker.charge(corpus.len() as u64, 0.0) as usize;
         if granted == 0 {
             return TuneOutcome::deploy(space.default_theta(), f64::INFINITY);
         }
         let ppabs = Ppabs::train(space, &self.cluster, &corpus[..granted], self.k, seed);
+        broker.charge(0, ppabs.profiling_overhead_s);
         TuneOutcome {
             best_theta: ppabs.configure(&self.workload),
             best_f: f64::INFINITY, // assigns a cluster config, never observes it
@@ -477,23 +486,19 @@ mod tests {
     }
 
     #[test]
-    fn registry_has_ten_entries() {
-        // the acceptance contract of the grown registry: `repro list`
-        // shows exactly these ten, in this order
+    fn registry_matches_the_committed_name_fixture() {
+        // One source of truth for "what tuners exist": CI diffs
+        // `repro list --names` against rust/tests/fixtures/registry_names.txt,
+        // and this test enforces the same fixture locally — growing the
+        // registry without updating the fixture fails here first, and the
+        // fix is a one-line fixture edit, not a YAML change.
+        let fixture = include_str!("../../tests/fixtures/registry_names.txt");
+        let want: Vec<&str> =
+            fixture.lines().map(str::trim).filter(|l| !l.is_empty()).collect();
         assert_eq!(
             names(),
-            vec![
-                "default",
-                "spsa",
-                "spsa-surrogate",
-                "starfish",
-                "ppabs",
-                "hillclimb",
-                "random",
-                "rdsa",
-                "nelder-mead",
-                "tpe",
-            ]
+            want,
+            "rust/tests/fixtures/registry_names.txt is out of date with TUNERS"
         );
     }
 
@@ -535,6 +540,43 @@ mod tests {
                 _ => assert!(broker.evals_used() > 0, "{} never observed", e.name),
             }
         }
+    }
+
+    #[test]
+    fn spsa_tuner_iterates_under_a_pure_time_budget() {
+        // Unlimited observations, finite model time: the planner cannot
+        // precompute whole iterations, so the broker's time axis must be
+        // what stops the run — gracefully, on an iteration boundary.
+        let c = ctx();
+        let space = ParameterSpace::for_version(c.version);
+        let calib = {
+            use crate::tuner::Objective;
+            let mut o = SimObjective::new(
+                space.clone(),
+                c.cluster.clone(),
+                c.workload.clone(),
+                3,
+            )
+            .noise_free();
+            o.eval(&space.default_theta())
+        };
+        let tuner = SpsaTuner::paper(); // 3 obs/iter
+        let mut obj =
+            SimObjective::new(space.clone(), c.cluster.clone(), c.workload.clone(), 3);
+        let cap = calib * 10.0;
+        let mut broker =
+            EvalBroker::new(&mut obj, Budget::unlimited().with_model_time(cap));
+        let out = tuner.tune(&mut broker, &space, 3);
+        assert!(broker.evals_used() > 0, "time budget afforded nothing");
+        assert_eq!(broker.evals_used() % 3, 0, "must stop on an iteration boundary");
+        assert!(
+            broker.elapsed_model_time() <= cap + broker.max_batch_cost(),
+            "time overshoot beyond one wave: {} > {} + {}",
+            broker.elapsed_model_time(),
+            cap,
+            broker.max_batch_cost()
+        );
+        assert!(!out.history.is_empty());
     }
 
     #[test]

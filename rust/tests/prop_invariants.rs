@@ -7,7 +7,10 @@ use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::engine::{run_job, Split};
 use hadoop_spsa::sim::{map_output_for_split, simulate, ScenarioSpec, SimOptions};
 use hadoop_spsa::tuner::registry::{self, TunerContext};
-use hadoop_spsa::tuner::{Budget, EvalBroker, SimObjective, Spsa, SpsaConfig, SpsaState};
+use hadoop_spsa::tuner::{
+    Budget, EvalBroker, Objective, QuadraticObjective, SimObjective, Spsa, SpsaConfig,
+    SpsaState,
+};
 use hadoop_spsa::util::json::Json;
 use hadoop_spsa::util::prop::{assert_close, assert_that, forall};
 use hadoop_spsa::util::rng::Rng;
@@ -400,6 +403,128 @@ fn every_registry_tuner_respects_any_budget_and_its_first_observation() {
             }
         }
         Ok(())
+    });
+}
+
+#[test]
+fn every_registry_tuner_respects_any_model_time_budget() {
+    // The wall-clock axis algebra, for ANY time cap and ANY seed, across
+    // all ten registry entries: (a) the time axis is checked before each
+    // wave, never mid-wave, so `elapsed_model_time` may exceed
+    // `max_model_time` by AT MOST one batch's cost (`max_batch_cost`,
+    // which also covers external `charge`s — PPABS); and (b) time
+    // truncation is graceful — the returned best is still no worse than
+    // the first observation the tuner made.
+    forall("registry tuners: model-time axis", 5, |g| {
+        let version = if g.bool() { HadoopVersion::V1 } else { HadoopVersion::V2 };
+        let space = ParameterSpace::for_version(version);
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = Rng::seeded(g.u64_in(1, 1 << 32));
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let ctx = TunerContext { version, cluster: cluster.clone(), workload: w.clone() };
+        let seed = g.u64_in(1, 1 << 40);
+        // size the cap in multiples of a real run so it binds mid-flight
+        // regardless of the simulator's absolute magnitudes
+        let calib = {
+            let mut o =
+                SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed).noise_free();
+            o.eval(&space.default_theta())
+        };
+        let cap = calib * g.f64_in(1.5, 8.0);
+        for e in registry::TUNERS {
+            let tuner = registry::create(e.name, &ctx).expect("registry entry instantiates");
+            let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+            let mut broker = EvalBroker::new(&mut obj, Budget::obs(400).with_model_time(cap))
+                .with_cache(tuner.cache_policy());
+            let out = tuner.tune(&mut broker, &space, seed);
+            assert_that(
+                broker.elapsed_model_time() <= cap + broker.max_batch_cost() + 1e-9,
+                format!(
+                    "{}: elapsed {} overshoots cap {} by more than one batch ({})",
+                    e.name,
+                    broker.elapsed_model_time(),
+                    cap,
+                    broker.max_batch_cost()
+                ),
+            )?;
+            assert_that(
+                out.best_theta.len() == space.dim(),
+                format!("{} returned a malformed θ under time truncation", e.name),
+            )?;
+            if let Some(first) = broker.trace().first() {
+                if e.name != "starfish" {
+                    assert_that(
+                        out.best_f <= first.f,
+                        format!(
+                            "{}: time-truncated best {} worse than first obs {}",
+                            e.name, out.best_f, first.f
+                        ),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_cost_is_max_not_sum_of_member_durations() {
+    // The parallelism contract: a dispatched wave's modeled cost is the
+    // max of its members' durations plus the dispatch overhead — never
+    // the sum. Noise-free quadratic ⇒ durations are exactly the returned
+    // values, so the wave cost is computable in closed form.
+    forall("batch cost = max (parallelism contract)", 150, |g| {
+        let n = g.usize_in(1, 6);
+        let k = g.usize_in(1, 12);
+        let overhead = g.f64_in(0.0, 20.0);
+        let mut obj = QuadraticObjective::new(g.unit_vec(n), 0.0, 1);
+        let mut broker =
+            EvalBroker::new(&mut obj, Budget::obs(1000)).with_dispatch_overhead(overhead);
+        let pts: Vec<Vec<f64>> = (0..k).map(|_| g.unit_vec(n)).collect();
+        let fs = broker.try_eval_batch(&pts);
+        assert_that(fs.len() == k, "whole batch served")?;
+        let max = fs.iter().cloned().fold(0.0_f64, f64::max);
+        let sum: f64 = fs.iter().sum();
+        assert_close(broker.elapsed_model_time(), max + overhead, 1e-9)?;
+        if k > 1 {
+            // f ≥ 1 everywhere, so sum > max strictly for k > 1
+            assert_that(
+                broker.elapsed_model_time() < sum + overhead,
+                "wave was billed as a sequential sum",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_wave_cost_is_slowest_member_plus_overhead() {
+    // Same contract on the real objective: the broker's charge for one
+    // wave equals the slowest member's simulated duration (independently
+    // recomputed from an identical objective) plus the overhead.
+    forall("sim wave cost", 5, |g| {
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = Rng::seeded(g.u64_in(1, 1 << 32));
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let seed = g.u64_in(1, 1 << 40);
+        let k = g.usize_in(2, 6);
+        let pts: Vec<Vec<f64>> = (0..k).map(|_| g.unit_vec(space.dim())).collect();
+
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(100));
+        broker.try_eval_batch(&pts);
+        let charged = broker.elapsed_model_time();
+
+        let mut twin = SimObjective::new(space, cluster, w, seed);
+        twin.eval_batch(&pts);
+        let durs = twin.last_durations().expect("SimObjective reports durations");
+        let slowest = durs.iter().cloned().fold(0.0_f64, f64::max);
+        assert_close(
+            charged,
+            slowest + hadoop_spsa::tuner::DEFAULT_DISPATCH_OVERHEAD_S,
+            1e-9,
+        )
     });
 }
 
