@@ -1,6 +1,10 @@
 //! Perf bench: the PJRT artifact hot path — batched what-if evaluations
 //! per second (configs/s) and compiled surrogate-SPSA steps per second.
 //! Target (DESIGN.md §8): ≥ 1e5 configs/s through the batch artifact.
+
+// SKIP notice prints to stderr so piped bench output stays parseable
+#![allow(clippy::print_stderr)]
+
 use hadoop_spsa::baselines::CostEvaluator;
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};

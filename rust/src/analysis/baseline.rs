@@ -1,0 +1,252 @@
+//! Findings baseline: the committed ledger of known findings that lets
+//! the CI gate ratchet ("no NEW findings") without demanding a big-bang
+//! cleanup. Entries are keyed by `(rule, file, trimmed line text)` with a
+//! count, so the match survives line-number drift from unrelated edits;
+//! every entry carries a justification, and an entry without one is
+//! itself a gating condition.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::{rules, Finding, LintReport};
+
+/// One baselined finding group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    /// Trimmed source-line text at the finding site (drift-resilient key).
+    pub text: String,
+    /// How many findings with this (rule, file, text) key are accepted.
+    pub count: usize,
+    pub justification: String,
+}
+
+/// A parsed baseline file.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// Result of diffing current findings against a [`Baseline`].
+#[derive(Debug, Default)]
+pub struct DiffOutcome {
+    /// Findings not covered by the baseline — these gate.
+    pub new: Vec<Finding>,
+    /// Baseline entries (or surplus counts) no current finding matches:
+    /// the finding was fixed; prune with `--update-baseline`. Advisory.
+    pub stale: Vec<BaselineEntry>,
+    /// Baseline entries with an empty justification — these gate too.
+    pub unjustified: Vec<BaselineEntry>,
+    /// Number of current findings absorbed by the baseline.
+    pub baselined: usize,
+}
+
+impl DiffOutcome {
+    /// True when the gate passes: nothing new, nothing unjustified.
+    pub fn clean(&self) -> bool {
+        self.new.is_empty() && self.unjustified.is_empty()
+    }
+}
+
+impl Baseline {
+    pub fn parse(src: &str) -> Result<Baseline> {
+        let root = Json::parse(src).map_err(|e| Error::msg(format!("baseline JSON: {e}")))?;
+        let arr = root
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| Error::msg("baseline JSON: missing 'entries' array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, item) in arr.iter().enumerate() {
+            let field = |k: &str| -> Result<String> {
+                item.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| Error::msg(format!("baseline entry {i}: missing '{k}'")))
+            };
+            let rule = field("rule")?;
+            if rules::find(&rule).is_none() {
+                return Err(Error::msg(format!("baseline entry {i}: unknown rule '{rule}'")));
+            }
+            entries.push(BaselineEntry {
+                rule,
+                file: field("file")?,
+                text: field("text")?,
+                count: item.get("count").and_then(|v| v.as_f64()).unwrap_or(1.0) as usize,
+                justification: item
+                    .get("justification")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        Ok(Baseline { entries })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<Json> = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let mut o = Json::obj();
+            o.set("rule", Json::Str(e.rule.clone()))
+                .set("file", Json::Str(e.file.clone()))
+                .set("text", Json::Str(e.text.clone()))
+                .set("count", Json::Num(e.count as f64))
+                .set("justification", Json::Str(e.justification.clone()));
+            entries.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("version", Json::Num(1.0)).set("entries", Json::Arr(entries));
+        root
+    }
+
+    /// Build a baseline that accepts exactly the given findings, stamping
+    /// each rule's default justification. When `prev` is supplied, hand
+    /// written justifications for keys that survive are preserved.
+    pub fn from_findings(findings: &[Finding], prev: Option<&Baseline>) -> Baseline {
+        let mut grouped: BTreeMap<(String, String, String), usize> = BTreeMap::new();
+        for f in findings {
+            *grouped.entry((f.rule.to_string(), f.file.clone(), f.text.clone())).or_insert(0) += 1;
+        }
+        let entries = grouped
+            .into_iter()
+            .map(|((rule, file, text), count)| {
+                let kept = prev.and_then(|b| {
+                    b.entries
+                        .iter()
+                        .find(|e| e.rule == rule && e.file == file && e.text == text)
+                        .filter(|e| !e.justification.is_empty())
+                        .map(|e| e.justification.clone())
+                });
+                let justification = kept.unwrap_or_else(|| {
+                    rules::find(&rule)
+                        .map(|r| r.baseline_justification.to_string())
+                        .unwrap_or_default()
+                });
+                BaselineEntry { rule, file, text, count, justification }
+            })
+            .collect();
+        Baseline { entries }
+    }
+
+    /// Diff current findings against this baseline. Matching is by
+    /// `(rule, file, text)` with counts: up to `count` findings per key are
+    /// absorbed; the excess is new; unconsumed baseline capacity is stale.
+    pub fn diff(&self, report: &LintReport) -> DiffOutcome {
+        let mut budget: BTreeMap<(&str, &str, &str), usize> = BTreeMap::new();
+        for e in &self.entries {
+            *budget.entry((&e.rule, &e.file, &e.text)).or_insert(0) += e.count;
+        }
+        let mut out = DiffOutcome::default();
+        for f in &report.findings {
+            let key = (f.rule, f.file.as_str(), f.text.as_str());
+            match budget.get_mut(&key) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    out.baselined += 1;
+                }
+                _ => out.new.push(f.clone()),
+            }
+        }
+        for e in &self.entries {
+            if e.justification.is_empty() {
+                out.unjustified.push(e.clone());
+            }
+            let left = budget
+                .get(&(e.rule.as_str(), e.file.as_str(), e.text.as_str()))
+                .copied()
+                .unwrap_or(0);
+            if left > 0 {
+                // report the residual once, on the first entry for the key
+                let mut stale = e.clone();
+                stale.count = left;
+                out.stale.push(stale);
+                if let Some(n) =
+                    budget.get_mut(&(e.rule.as_str(), e.file.as_str(), e.text.as_str()))
+                {
+                    *n = 0;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::source::SourceFile;
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: usize, src: &str) -> Finding {
+        let sf = SourceFile::parse(file, src);
+        Finding::new(rule, &sf, line, "msg".to_string())
+    }
+
+    fn report(findings: Vec<Finding>) -> LintReport {
+        LintReport { findings, suppressed: 0, files_scanned: 1 }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let f = finding("panic-hygiene", "tuner/x.rs", 1, "let a = o.unwrap();\n");
+        let b = Baseline::from_findings(&[f.clone(), f], None);
+        let parsed = Baseline::parse(&b.to_json().to_pretty()).expect("parse");
+        assert_eq!(parsed.entries, b.entries);
+        assert_eq!(parsed.entries[0].count, 2);
+        assert!(!parsed.entries[0].justification.is_empty());
+    }
+
+    #[test]
+    fn diff_splits_new_baselined_stale() {
+        let known = finding("panic-hygiene", "tuner/x.rs", 1, "let a = o.unwrap();\n");
+        let baseline = Baseline::from_findings(&[known.clone(), known.clone()], None);
+        // one matching finding (one stale surplus), one brand new
+        let fresh = finding("wall-clock", "sim/t.rs", 1, "let t = Instant::now();\n");
+        let d = baseline.diff(&report(vec![known, fresh]));
+        assert_eq!(d.baselined, 1);
+        assert_eq!(d.new.len(), 1);
+        assert_eq!(d.new[0].rule, "wall-clock");
+        assert_eq!(d.stale.len(), 1);
+        assert_eq!(d.stale[0].count, 1);
+        assert!(!d.clean());
+    }
+
+    #[test]
+    fn matching_survives_line_drift() {
+        let src_before = "let a = o.unwrap();\n";
+        let src_after = "// new comment pushed everything down\n\nlet a = o.unwrap();\n";
+        let baseline =
+            Baseline::from_findings(&[finding("panic-hygiene", "tuner/x.rs", 1, src_before)], None);
+        let moved = finding("panic-hygiene", "tuner/x.rs", 3, src_after);
+        let d = baseline.diff(&report(vec![moved]));
+        assert!(d.clean(), "same (rule,file,text) at a new line must still match");
+        assert_eq!(d.baselined, 1);
+    }
+
+    #[test]
+    fn unjustified_entries_gate() {
+        let f = finding("panic-hygiene", "tuner/x.rs", 1, "o.unwrap();\n");
+        let mut b = Baseline::from_findings(&[f.clone()], None);
+        b.entries[0].justification.clear();
+        let d = b.diff(&report(vec![f]));
+        assert_eq!(d.new.len(), 0);
+        assert_eq!(d.unjustified.len(), 1);
+        assert!(!d.clean());
+    }
+
+    #[test]
+    fn update_preserves_hand_written_justifications() {
+        let f = finding("panic-hygiene", "tuner/x.rs", 1, "o.unwrap();\n");
+        let mut prev = Baseline::from_findings(&[f.clone()], None);
+        prev.entries[0].justification = "reviewed: invariant held by construction".to_string();
+        let next = Baseline::from_findings(&[f], Some(&prev));
+        assert_eq!(next.entries[0].justification, "reviewed: invariant held by construction");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_rules() {
+        let src = r#"{"entries": [{"rule": "no-such-rule", "file": "a.rs", "text": "x"}]}"#;
+        assert!(Baseline::parse(src).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! Line/token-level Rust lexer for the lint engine.
+//!
+//! Deliberately **not** a parser (`syn` is unavailable in the offline
+//! build, DESIGN.md §7): the rules only need an identifier/punctuation
+//! stream with line numbers, with comments, string literals and char
+//! literals stripped so that `HashMap` inside a doc comment or a format
+//! string can never trigger a finding. Comments are captured separately —
+//! in-source suppressions (`// lint:allow(rule): why`) live there.
+
+/// Token class. The rules mostly match on [`Token::text`]; the kind
+/// disambiguates lifetimes from char literals and numbers from idents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Punct,
+    Lifetime,
+}
+
+/// One code token with its 1-indexed source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// Lexer output: the code-token stream plus every `//` comment (line
+/// comments and doc comments), keyed by line, for suppression parsing.
+#[derive(Debug, Default)]
+pub struct LexOutput {
+    pub tokens: Vec<Token>,
+    /// `(line, comment text without the leading slashes)`.
+    pub comments: Vec<(usize, String)>,
+}
+
+/// Multi-character punctuation kept as one token; everything the rules
+/// match on sequences of (`::` paths, `->` return types, `=>` arms).
+const MULTI_PUNCT: [&str; 3] = ["::", "->", "=>"];
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.src.get(self.pos).copied();
+        if let Some(c) = b {
+            self.pos += 1;
+            if c == b'\n' {
+                self.line += 1;
+            }
+        }
+        b
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Tokenize `src`. Never fails: unterminated strings/comments consume to
+/// end of input (the lint engine must degrade gracefully on any file the
+/// compiler itself would reject — it runs pre-build in CI).
+pub fn lex(src: &str) -> LexOutput {
+    let mut cur = Cursor { src: src.as_bytes(), pos: 0, line: 1 };
+    let mut out = LexOutput::default();
+
+    while let Some(b) = cur.peek(0) {
+        match b {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                cur.bump();
+            }
+            b'/' if cur.peek(1) == Some(b'/') => lex_line_comment(&mut cur, &mut out),
+            b'/' if cur.peek(1) == Some(b'*') => lex_block_comment(&mut cur),
+            b'"' => lex_string(&mut cur),
+            b'\'' => lex_quote(&mut cur, &mut out),
+            b'r' | b'b' if raw_or_byte_string_ahead(&cur) => lex_prefixed_string(&mut cur),
+            _ if is_ident_start(b) => lex_ident(&mut cur, &mut out),
+            _ if b.is_ascii_digit() => lex_number(&mut cur, &mut out),
+            _ => lex_punct(&mut cur, &mut out),
+        }
+    }
+    out
+}
+
+fn lex_line_comment(cur: &mut Cursor, out: &mut LexOutput) {
+    let line = cur.line;
+    let start = cur.pos;
+    while let Some(b) = cur.peek(0) {
+        if b == b'\n' {
+            break;
+        }
+        cur.bump();
+    }
+    let text = String::from_utf8_lossy(&cur.src[start..cur.pos])
+        .trim_start_matches('/')
+        .trim()
+        .to_string();
+    out.comments.push((line, text));
+}
+
+fn lex_block_comment(cur: &mut Cursor) {
+    // consume "/*", then run to the matching "*/" (block comments nest)
+    cur.bump();
+    cur.bump();
+    let mut depth = 1usize;
+    while depth > 0 {
+        match (cur.peek(0), cur.peek(1)) {
+            (Some(b'/'), Some(b'*')) => {
+                depth += 1;
+                cur.bump();
+                cur.bump();
+            }
+            (Some(b'*'), Some(b'/')) => {
+                depth -= 1;
+                cur.bump();
+                cur.bump();
+            }
+            (Some(_), _) => {
+                cur.bump();
+            }
+            (None, _) => break,
+        }
+    }
+}
+
+fn lex_string(cur: &mut Cursor) {
+    cur.bump(); // opening quote
+    while let Some(b) = cur.bump() {
+        match b {
+            b'\\' => {
+                cur.bump(); // escaped char (incl. \")
+            }
+            b'"' => break,
+            _ => {}
+        }
+    }
+}
+
+/// True when the cursor sits on `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` or
+/// `b'…'` — prefixed literals that must not lex as identifiers.
+fn raw_or_byte_string_ahead(cur: &Cursor) -> bool {
+    let mut i = 1; // past the r/b
+    if cur.peek(0) == Some(b'b') && cur.peek(1) == Some(b'r') {
+        i = 2;
+    }
+    if cur.peek(0) == Some(b'b') && cur.peek(1) == Some(b'\'') {
+        return true; // byte char b'x'
+    }
+    let mut j = i;
+    while cur.peek(j) == Some(b'#') {
+        j += 1;
+    }
+    cur.peek(j) == Some(b'"')
+}
+
+fn lex_prefixed_string(cur: &mut Cursor) {
+    // r / b / br prefix
+    if cur.peek(0) == Some(b'b') && cur.peek(1) == Some(b'\'') {
+        cur.bump(); // b
+        cur.bump(); // opening '
+        while let Some(b) = cur.bump() {
+            match b {
+                b'\\' => {
+                    cur.bump();
+                }
+                b'\'' => break,
+                _ => {}
+            }
+        }
+        return;
+    }
+    cur.bump();
+    if cur.peek(0) == Some(b'r') {
+        cur.bump();
+    }
+    let mut hashes = 0usize;
+    while cur.peek(0) == Some(b'#') {
+        hashes += 1;
+        cur.bump();
+    }
+    cur.bump(); // opening quote
+    if hashes == 0 {
+        // plain (byte) string: honors escapes
+        while let Some(b) = cur.bump() {
+            match b {
+                b'\\' => {
+                    cur.bump();
+                }
+                b'"' => break,
+                _ => {}
+            }
+        }
+        return;
+    }
+    // raw string: ends at `"` followed by `hashes` hash marks
+    while let Some(b) = cur.bump() {
+        if b == b'"' {
+            let mut k = 0;
+            while k < hashes && cur.peek(k) == Some(b'#') {
+                k += 1;
+            }
+            if k == hashes {
+                for _ in 0..hashes {
+                    cur.bump();
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// `'` starts either a char literal (`'a'`, `'\n'`) or a lifetime (`'a`).
+fn lex_quote(cur: &mut Cursor, out: &mut LexOutput) {
+    let line = cur.line;
+    let next = cur.peek(1);
+    let is_char_literal = match next {
+        Some(b'\\') => true,
+        Some(c) if is_ident_start(c) || c.is_ascii_digit() => cur.peek(2) == Some(b'\''),
+        Some(_) => true, // '(' ')' etc. are single-char literals
+        None => false,
+    };
+    if is_char_literal {
+        cur.bump(); // '
+        while let Some(b) = cur.bump() {
+            match b {
+                b'\\' => {
+                    cur.bump();
+                }
+                b'\'' => break,
+                _ => {}
+            }
+        }
+    } else {
+        // lifetime: consume 'ident
+        cur.bump();
+        let start = cur.pos;
+        while let Some(b) = cur.peek(0) {
+            if !is_ident_continue(b) {
+                break;
+            }
+            cur.bump();
+        }
+        out.tokens.push(Token {
+            kind: TokKind::Lifetime,
+            text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+            line,
+        });
+    }
+}
+
+fn lex_ident(cur: &mut Cursor, out: &mut LexOutput) {
+    let line = cur.line;
+    let start = cur.pos;
+    while let Some(b) = cur.peek(0) {
+        if !is_ident_continue(b) {
+            break;
+        }
+        cur.bump();
+    }
+    out.tokens.push(Token {
+        kind: TokKind::Ident,
+        text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+        line,
+    });
+}
+
+fn lex_number(cur: &mut Cursor, out: &mut LexOutput) {
+    let line = cur.line;
+    let start = cur.pos;
+    while let Some(b) = cur.peek(0) {
+        if is_ident_continue(b) {
+            cur.bump();
+        } else if b == b'.'
+            && cur.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false)
+            && !cur.src[start..cur.pos].contains(&b'.')
+        {
+            cur.bump(); // the one decimal point of 1.25 (never 0..n)
+        } else {
+            break;
+        }
+    }
+    out.tokens.push(Token {
+        kind: TokKind::Number,
+        text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+        line,
+    });
+}
+
+fn lex_punct(cur: &mut Cursor, out: &mut LexOutput) {
+    let line = cur.line;
+    for mp in MULTI_PUNCT {
+        let bytes = mp.as_bytes();
+        if cur.peek(0) == Some(bytes[0]) && cur.peek(1) == Some(bytes[1]) {
+            cur.bump();
+            cur.bump();
+            out.tokens.push(Token { kind: TokKind::Punct, text: mp.to_string(), line });
+            return;
+        }
+    }
+    if let Some(b) = cur.bump() {
+        out.tokens.push(Token {
+            kind: TokKind::Punct,
+            text: (b as char).to_string(),
+            line,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_paths_and_lines() {
+        let out = lex("use std::collections::HashMap;\nlet x = 1;");
+        let toks = &out.tokens;
+        assert_eq!(toks[0].text, "use");
+        assert!(toks.iter().any(|t| t.text == "HashMap" && t.line == 1));
+        assert!(toks.iter().any(|t| t.text == "x" && t.line == 2));
+        assert!(toks.iter().any(|t| t.text == "::" && t.kind == TokKind::Punct));
+    }
+
+    #[test]
+    fn comments_are_stripped_and_captured() {
+        let out = lex("// HashMap in a comment\nlet a = 1; // trailing note");
+        assert!(!out.tokens.iter().any(|t| t.text == "HashMap"));
+        assert_eq!(out.comments.len(), 2);
+        assert_eq!(out.comments[0], (1, "HashMap in a comment".to_string()));
+        assert_eq!(out.comments[1], (2, "trailing note".to_string()));
+    }
+
+    #[test]
+    fn block_comments_nest_and_strings_hide_tokens() {
+        let src = "/* outer /* HashMap */ still */ let s = \"Instant::now\";";
+        let t = texts(src);
+        assert!(!t.contains(&"HashMap".to_string()));
+        assert!(!t.contains(&"Instant".to_string()));
+        assert!(t.contains(&"s".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let t = texts(r##"let a = r#"HashMap " quote"# ; let b = "esc \" HashMap";"##);
+        assert!(!t.contains(&"HashMap".to_string()));
+        assert_eq!(t.iter().filter(|x| *x == ";").count(), 2);
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let out = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes: Vec<_> =
+            out.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(lifetimes.iter().all(|t| t.text == "a"));
+        // the char literals produced no ident tokens
+        let stray_char_ident =
+            out.tokens.iter().any(|t| t.text == "x" && t.kind == TokKind::Ident && t.line != 1);
+        assert!(!stray_char_ident);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let t = texts("let k = b\"HashMap\"; let c = b'h'; let r = br#\"SystemTime\"#;");
+        assert!(!t.contains(&"HashMap".to_string()));
+        assert!(!t.contains(&"SystemTime".to_string()));
+        assert_eq!(t.iter().filter(|x| *x == "=").count(), 3);
+    }
+
+    #[test]
+    fn numbers_including_hex_and_ranges() {
+        let out = lex("let a = 0x9E37_79B9; for i in 0..n { let f = 1.25; }");
+        assert!(out
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokKind::Number && t.text == "0x9E37_79B9"));
+        assert!(out.tokens.iter().any(|t| t.kind == TokKind::Number && t.text == "1.25"));
+        // 0..n lexes as number, punct, punct, ident — not one blob
+        assert!(out.tokens.iter().any(|t| t.text == "0"));
+        assert!(out.tokens.iter().any(|t| t.text == "n"));
+    }
+
+    #[test]
+    fn multi_punct_coalesced() {
+        let t = texts("fn f() -> Rng { a::b => c }");
+        assert!(t.contains(&"->".to_string()));
+        assert!(t.contains(&"::".to_string()));
+        assert!(t.contains(&"=>".to_string()));
+    }
+
+    #[test]
+    fn unterminated_string_degrades_gracefully() {
+        let out = lex("let s = \"never closed");
+        assert!(out.tokens.iter().any(|t| t.text == "s"));
+    }
+}

@@ -1,0 +1,186 @@
+//! In-repo determinism & metering lint engine (`repro lint`).
+//!
+//! A zero-dependency static-analysis pass over `rust/src/**` that enforces
+//! the repo's reproducibility contract *structurally* — the invariants the
+//! golden traces, 1-vs-N-worker bit-equality tests and resume-by-replay
+//! machinery already check dynamically:
+//!
+//! * `unordered-map` / `wall-clock` / `env-read` — determinism: no
+//!   HashMap/HashSet iteration, host clocks, or ad-hoc environment reads
+//!   in replayed code paths;
+//! * `seed-discipline` — all RNG streams keyed through `util::rng`;
+//! * `unmetered-eval` — live observations only through the `EvalBroker`;
+//! * `panic-hygiene` — no unwrap/expect/panic! in non-test library code;
+//! * `suppression` — every `lint:allow` carries a justification.
+//!
+//! The pipeline: [`lexer`] strips comments/strings and tokenizes,
+//! [`source`] recovers structure (test regions, enclosing fns,
+//! suppressions), [`rules`] runs the registry, [`baseline`] diffs the
+//! findings against the committed ledger, and [`report`] renders the
+//! table/JSON the CLI and CI consume.
+
+pub mod baseline;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Result};
+
+use source::SourceFile;
+
+/// One lint finding at a concrete source location.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    /// Stable rule id from the [`rules`] registry.
+    pub rule: &'static str,
+    /// Path relative to the lint root, forward slashes.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    /// Trimmed source text of the line — the baseline matching key.
+    pub text: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &SourceFile, line: usize, message: String) -> Finding {
+        Finding {
+            rule,
+            file: file.rel_path.clone(),
+            line,
+            text: file.line_text(line).to_string(),
+            message,
+        }
+    }
+}
+
+/// Outcome of linting a source tree.
+pub struct LintReport {
+    /// Unsuppressed findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a justified in-source `lint:allow`.
+    pub suppressed: usize,
+    pub files_scanned: usize,
+}
+
+/// Lint every `.rs` file under `root`. The walk is sorted so the report
+/// is byte-identical across filesystems.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking lint root {}", root.display()))?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for path in &files {
+        let content = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = rel_path(root, path);
+        let (mut file_findings, file_suppressed) = lint_source(&rel, &content);
+        findings.append(&mut file_findings);
+        suppressed += file_suppressed;
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport { findings, suppressed, files_scanned: files.len() })
+}
+
+/// Lint a single in-memory source file: run every registered rule, then
+/// drop findings covered by a justified suppression on the finding's own
+/// line or the line above. Returns (kept findings, suppressed count).
+pub fn lint_source(rel_path: &str, content: &str) -> (Vec<Finding>, usize) {
+    let file = SourceFile::parse(rel_path, content);
+    let mut raw = Vec::new();
+    for rule in rules::all() {
+        (rule.check)(&file, &mut raw);
+    }
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in raw {
+        let silenced = f.rule != rules::SUPPRESSION
+            && file.suppressions.iter().any(|s| {
+                !s.justification.is_empty()
+                    && (s.line == f.line || s.line + 1 == f.line)
+                    && s.rules.iter().any(|r| r == f.rule)
+            });
+        if silenced {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    (kept, suppressed)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("reading dir {}", dir.display()))?
+    {
+        let path = entry.context("bad dir entry")?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_silences_same_line_and_line_below() {
+        let src = "\
+// lint:allow(unordered-map): keyed lookups only, never iterated
+use std::collections::HashMap;
+fn f(m: &HashMap<u32, u32>) -> u32 { // lint:allow(unordered-map): keyed lookup
+    *m.get(&0).unwrap_or(&0)
+}
+";
+        let (findings, suppressed) = lint_source("tuner/x.rs", src);
+        assert_eq!(findings, vec![], "both HashMap sites are suppressed");
+        assert_eq!(suppressed, 2);
+    }
+
+    #[test]
+    fn unjustified_suppression_silences_nothing_and_is_reported() {
+        let src = "// lint:allow(unordered-map)\nuse std::collections::HashMap;\n";
+        let (findings, suppressed) = lint_source("tuner/x.rs", src);
+        assert_eq!(suppressed, 0);
+        let rules: Vec<&str> = findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"unordered-map"), "finding survives: {rules:?}");
+        assert!(rules.contains(&"suppression"), "empty justification reported: {rules:?}");
+    }
+
+    #[test]
+    fn suppression_only_covers_named_rules() {
+        let src = "// lint:allow(wall-clock): wrong rule named\nuse std::collections::HashMap;\n";
+        let (findings, _) = lint_source("tuner/x.rs", src);
+        assert!(findings.iter().any(|f| f.rule == "unordered-map"));
+    }
+
+    #[test]
+    fn findings_sorted_and_text_keyed() {
+        let src = "fn f() {\n    let a = o.unwrap();\n    let t = Instant::now();\n}\n";
+        let (findings, _) = lint_source("sim/x.rs", src);
+        assert_eq!(findings.len(), 2);
+        assert!(findings[0].line <= findings[1].line);
+        assert_eq!(findings[0].text, "let a = o.unwrap();");
+    }
+}

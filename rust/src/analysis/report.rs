@@ -1,0 +1,137 @@
+//! Finding reporters: a human table and stable machine-readable JSON.
+//! The JSON is what CI diffs and uploads — orderings are fully
+//! deterministic (findings sorted by file, line, rule; objects serialize
+//! with sorted keys via `util::json`).
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::baseline::DiffOutcome;
+use super::{Finding, LintReport};
+
+/// One JSON object per finding.
+fn finding_json(f: &Finding) -> Json {
+    let mut o = Json::obj();
+    o.set("rule", Json::Str(f.rule.to_string()))
+        .set("file", Json::Str(f.file.clone()))
+        .set("line", Json::Num(f.line as f64))
+        .set("text", Json::Str(f.text.clone()))
+        .set("message", Json::Str(f.message.clone()));
+    o
+}
+
+/// The machine-readable report CI gates on: every finding, the
+/// baseline-diff split, and a summary block. `diff` is the outcome
+/// against the committed baseline (`None` when run with no baseline —
+/// then every finding counts as new).
+pub fn to_json(report: &LintReport, diff: Option<&DiffOutcome>) -> Json {
+    let mut root = Json::obj();
+    root.set("version", Json::Num(1.0));
+    root.set("files_scanned", Json::Num(report.files_scanned as f64));
+
+    let new: Vec<&Finding> = match diff {
+        Some(d) => d.new.iter().collect(),
+        None => report.findings.iter().collect(),
+    };
+    root.set("new", Json::Arr(new.iter().map(|f| finding_json(f)).collect()));
+    root.set(
+        "findings",
+        Json::Arr(report.findings.iter().map(finding_json).collect()),
+    );
+    if let Some(d) = diff {
+        root.set(
+            "stale_baseline",
+            Json::Arr(
+                d.stale
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.set("rule", Json::Str(e.rule.clone()))
+                            .set("file", Json::Str(e.file.clone()))
+                            .set("text", Json::Str(e.text.clone()))
+                            .set("count", Json::Num(e.count as f64));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        root.set(
+            "unjustified_baseline",
+            Json::Arr(
+                d.unjustified
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.set("rule", Json::Str(e.rule.clone()))
+                            .set("file", Json::Str(e.file.clone()))
+                            .set("text", Json::Str(e.text.clone()));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+    }
+
+    let mut summary = Json::obj();
+    summary
+        .set("total", Json::Num(report.findings.len() as f64))
+        .set("new", Json::Num(new.len() as f64))
+        .set(
+            "baselined",
+            Json::Num(diff.map(|d| d.baselined).unwrap_or(0) as f64),
+        )
+        .set("suppressed", Json::Num(report.suppressed as f64))
+        .set(
+            "stale_baseline",
+            Json::Num(diff.map(|d| d.stale.len()).unwrap_or(0) as f64),
+        );
+    root.set("summary", summary);
+    root
+}
+
+/// Human-readable table of the findings that matter (new ones), plus a
+/// one-line summary of everything else.
+pub fn to_table(report: &LintReport, diff: Option<&DiffOutcome>) -> String {
+    let new: Vec<&Finding> = match diff {
+        Some(d) => d.new.iter().collect(),
+        None => report.findings.iter().collect(),
+    };
+    let mut out = String::new();
+    if new.is_empty() {
+        out.push_str("repro lint: clean");
+    } else {
+        let mut t = Table::new("repro lint findings").header(vec!["rule", "location", "finding"]);
+        for f in &new {
+            t.row(vec![
+                f.rule.to_string(),
+                format!("{}:{}", f.file, f.line),
+                f.message.clone(),
+            ]);
+        }
+        out.push_str(&t.to_ascii());
+    }
+    out.push_str(&format!(
+        "\n{} file(s) scanned; {} finding(s): {} new, {} baselined, {} suppressed in-source",
+        report.files_scanned,
+        report.findings.len(),
+        new.len(),
+        diff.map(|d| d.baselined).unwrap_or(0),
+        report.suppressed,
+    ));
+    if let Some(d) = diff {
+        if !d.stale.is_empty() {
+            out.push_str(&format!(
+                "\nstale baseline entries (fixed findings — prune with --update-baseline): {}",
+                d.stale.len()
+            ));
+        }
+        if !d.unjustified.is_empty() {
+            out.push_str(&format!(
+                "\nbaseline entries without a justification (gating): {}",
+                d.unjustified.len()
+            ));
+        }
+    }
+    out.push('\n');
+    out
+}

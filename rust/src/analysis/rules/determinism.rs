@@ -1,0 +1,109 @@
+//! Determinism lints: the invariants every golden trace, 1-vs-N-worker
+//! bit-equality test and resume-by-replay rung extension rest on. Scoped
+//! to the modules whose behavior feeds replayed trajectories — `sim`,
+//! `tuner`, `coordinator`, `baselines`; test code is exempt everywhere.
+
+use crate::analysis::source::SourceFile;
+use crate::analysis::Finding;
+
+pub const UNORDERED_MAP: &str = "unordered-map";
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const ENV_READ: &str = "env-read";
+
+/// Directories (relative to the lint root) whose code feeds deterministic
+/// replay. A HashMap iteration or wall-clock read anywhere here can change
+/// observation streams between runs.
+pub const DETERMINISM_SCOPE: &[&str] = &["sim/", "tuner/", "coordinator/", "baselines/"];
+
+/// `(file, enclosing fn)` locations sanctioned to read the process
+/// environment: the single env knob the repo exposes.
+const ENV_SANCTIONED: &[(&str, &str)] = &[("coordinator/pool.rs", "env_workers")];
+
+/// Unordered `std::collections` types whose iteration order is
+/// seed-for-seed nondeterministic (SipHash keyed per process).
+const UNORDERED_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// Identifiers that read real time. (`thread_rng` — entropy rather than
+/// time — is the seed-discipline rule's, and that one is repo-wide.)
+const CLOCK_IDENTS: &[&str] = &["Instant", "SystemTime"];
+
+pub fn check_unordered_map(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_scope(DETERMINISM_SCOPE) {
+        return;
+    }
+    for t in &file.tokens {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        if UNORDERED_TYPES.contains(&t.text.as_str()) {
+            out.push(Finding::new(
+                UNORDERED_MAP,
+                file,
+                t.line,
+                format!(
+                    "{} in determinism-scoped code: iteration order varies per \
+                     process and corrupts replay — use BTreeMap/BTreeSet or \
+                     drain through a sorted Vec",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+pub fn check_wall_clock(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_scope(DETERMINISM_SCOPE) {
+        return;
+    }
+    for t in &file.tokens {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        if CLOCK_IDENTS.contains(&t.text.as_str()) {
+            out.push(Finding::new(
+                WALL_CLOCK,
+                file,
+                t.line,
+                format!(
+                    "{} reads host wall-clock/entropy in determinism-scoped \
+                     code: modeled time must come from the simulator, noise \
+                     from util::rng seeded streams",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+pub fn check_env_read(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_scope(DETERMINISM_SCOPE) {
+        return;
+    }
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        // `env` used as a module path: std::env::var, env::args, …
+        let is_env_path = t.text == "env"
+            && matches!(file.tokens.get(i + 1), Some(n) if n.text == "::");
+        if !is_env_path {
+            continue;
+        }
+        let sanctioned = ENV_SANCTIONED.iter().any(|(f, func)| {
+            file.rel_path == *f && file.enclosing_fn(t.line) == Some(func)
+        });
+        if sanctioned {
+            continue;
+        }
+        out.push(Finding::new(
+            ENV_READ,
+            file,
+            t.line,
+            "process-environment access in determinism-scoped code: the one \
+             sanctioned env knob is coordinator::pool::env_workers \
+             (HSPSA_WORKERS) — route through it or hoist the read to the CLI \
+             layer"
+                .to_string(),
+        ));
+    }
+}

@@ -1,0 +1,54 @@
+//! Metering discipline: every live observation must flow through the
+//! budget-metered `EvalBroker` (`tuner/broker.rs`). A direct
+//! `Objective::eval` / `eval_batch` call anywhere else spends an
+//! observation the budget never sees — the cross-tuner comparisons (one
+//! shared observation currency, paper §6.6) silently stop being fair.
+
+use crate::analysis::source::SourceFile;
+use crate::analysis::Finding;
+
+pub const UNMETERED_EVAL: &str = "unmetered-eval";
+
+/// Directories whose code participates in budgeted tuning runs.
+const METERING_SCOPE: &[&str] = &["tuner/", "baselines/", "coordinator/", "experiments/"];
+
+/// Files sanctioned to call eval/eval_batch directly:
+/// * `tuner/broker.rs` — the meter itself;
+/// * `tuner/objective.rs` — the trait, its blanket impls and adapters;
+/// * `baselines/evaluator.rs` — the CostEvaluator adapter layer over
+///   what-if models and broker-backed objectives.
+const SANCTIONED_FILES: &[&str] =
+    &["tuner/broker.rs", "tuner/objective.rs", "baselines/evaluator.rs"];
+
+const EVAL_METHODS: &[&str] = &["eval", "eval_batch"];
+
+pub fn check_unmetered_eval(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_scope(METERING_SCOPE) || SANCTIONED_FILES.contains(&file.rel_path.as_str()) {
+        return;
+    }
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        // match `.eval(` / `.eval_batch(` — method calls only, so idents
+        // like `fn eval_batch` in trait impls or `try_eval` (the broker's
+        // own metered surface) never fire
+        let prev = i.checked_sub(1).and_then(|p| file.tokens.get(p));
+        let is_method_call = EVAL_METHODS.contains(&t.text.as_str())
+            && matches!(prev, Some(p) if p.text == ".")
+            && matches!(file.tokens.get(i + 1), Some(n) if n.text == "(");
+        if is_method_call {
+            out.push(Finding::new(
+                UNMETERED_EVAL,
+                file,
+                t.line,
+                format!(
+                    ".{}() bypasses the EvalBroker: live observations must be \
+                     served by broker.try_eval/try_eval_batch so the budget \
+                     meters them",
+                    t.text
+                ),
+            ));
+        }
+    }
+}

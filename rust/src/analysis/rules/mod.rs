@@ -1,0 +1,124 @@
+//! Rule registry: every lint the engine enforces, with its identity,
+//! one-line summary, and the default justification `--update-baseline`
+//! stamps on grandfathered findings.
+//!
+//! Adding a rule is one module + one [`RuleInfo`] entry here; the CLI,
+//! reporter, baseline differ, suppression matcher and CI gate pick it up
+//! with no further wiring.
+
+pub mod determinism;
+pub mod metering;
+pub mod panic_hygiene;
+pub mod seed;
+
+use super::source::SourceFile;
+use super::Finding;
+
+/// A registered lint rule.
+pub struct RuleInfo {
+    /// Stable rule id — the name used in `lint:allow(<rule>)`, baseline
+    /// entries and JSON output. Kebab-case, never renamed.
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Justification stamped on entries `--update-baseline` grandfathers.
+    pub baseline_justification: &'static str,
+    pub check: fn(&SourceFile, &mut Vec<Finding>),
+}
+
+/// The engine's rule set, in reporting order.
+pub fn all() -> &'static [RuleInfo] {
+    &[
+        RuleInfo {
+            name: determinism::UNORDERED_MAP,
+            summary: "HashMap/HashSet in determinism-scoped code (sim, tuner, \
+                      coordinator, baselines) — iteration order corrupts replay; \
+                      use BTreeMap/BTreeSet or a sorted drain",
+            baseline_justification: "grandfathered at lint introduction; audit \
+                                     confirmed keyed lookups only",
+            check: determinism::check_unordered_map,
+        },
+        RuleInfo {
+            name: determinism::WALL_CLOCK,
+            summary: "wall-clock source (Instant::now, SystemTime) in \
+                      determinism-scoped code — modeled time must come from \
+                      the simulator",
+            baseline_justification: "grandfathered at lint introduction; \
+                                     reporting-only measurement",
+            check: determinism::check_wall_clock,
+        },
+        RuleInfo {
+            name: determinism::ENV_READ,
+            summary: "process-environment read in determinism-scoped code \
+                      outside the sanctioned coordinator::pool::env_workers",
+            baseline_justification: "grandfathered at lint introduction",
+            check: determinism::check_env_read,
+        },
+        RuleInfo {
+            name: seed::SEED_DISCIPLINE,
+            summary: "RNG construction bypassing util::rng keyed streams \
+                      (foreign RNGs, hand-built generator state)",
+            baseline_justification: "grandfathered at lint introduction",
+            check: seed::check_seed_discipline,
+        },
+        RuleInfo {
+            name: metering::UNMETERED_EVAL,
+            summary: "direct Objective::eval/eval_batch outside tuner/broker.rs \
+                      — every live observation must be budget-metered",
+            baseline_justification: "grandfathered at lint introduction; \
+                                     model-side evaluation, no live observation",
+            check: metering::check_unmetered_eval,
+        },
+        RuleInfo {
+            name: panic_hygiene::PANIC_HYGIENE,
+            summary: "unwrap/expect/panic! in non-test library code",
+            baseline_justification: "grandfathered at lint introduction; panic \
+                                     guards an internal invariant — burn down \
+                                     over time",
+            check: panic_hygiene::check_panic_hygiene,
+        },
+        RuleInfo {
+            name: SUPPRESSION,
+            summary: "lint:allow without a justification — every suppression \
+                      must say why",
+            baseline_justification: "never baseline this rule: write the \
+                                     justification instead",
+            check: check_suppression_justification,
+        },
+    ]
+}
+
+/// Look a rule up by name.
+pub fn find(name: &str) -> Option<&'static RuleInfo> {
+    all().iter().find(|r| r.name == name)
+}
+
+/// Rule id: a `lint:allow` comment whose justification is missing/empty.
+pub const SUPPRESSION: &str = "suppression";
+
+fn check_suppression_justification(file: &SourceFile, out: &mut Vec<Finding>) {
+    for s in &file.suppressions {
+        if s.justification.is_empty() {
+            out.push(Finding::new(
+                SUPPRESSION,
+                file,
+                s.line,
+                format!(
+                    "lint:allow({}) has no justification — write \
+                     `lint:allow(<rule>): <why>`; an unjustified allow \
+                     suppresses nothing",
+                    s.rules.join(", ")
+                ),
+            ));
+        }
+        for r in &s.rules {
+            if find(r).is_none() {
+                out.push(Finding::new(
+                    SUPPRESSION,
+                    file,
+                    s.line,
+                    format!("lint:allow names unknown rule '{r}' (see `repro lint --help`)"),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Panic hygiene: `unwrap`/`expect`/`panic!` in non-test library code.
+//! A panic in a worker thread poisons the whole campaign (`run_parallel`
+//! joins workers and re-panics); library paths should return
+//! `util::error::Result` and let the CLI layer decide. Existing sites are
+//! grandfathered into the committed baseline and burned down over time —
+//! this rule's job is to stop NEW ones from landing unexamined.
+
+use crate::analysis::source::SourceFile;
+use crate::analysis::Finding;
+
+pub const PANIC_HYGIENE: &str = "panic-hygiene";
+
+/// Methods that panic on None/Err. Exact idents — `unwrap_or`,
+/// `unwrap_or_else`, `expect_err` etc. are distinct tokens and never fire.
+const PANICKING_METHODS: &[&str] = &["unwrap", "expect"];
+
+/// Macros that unconditionally panic.
+const PANICKING_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn check_panic_hygiene(file: &SourceFile, out: &mut Vec<Finding>) {
+    // A file that defines its own `fn expect` / `fn unwrap` (util/json.rs's
+    // parser does — it returns Result) is calling that method, not the
+    // panicking Option/Result one; skip the name file-wide.
+    let local: Vec<&str> =
+        PANICKING_METHODS.iter().copied().filter(|m| file.defines_fn(m)).collect();
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        let prev = i.checked_sub(1).and_then(|p| file.tokens.get(p));
+        let next = file.tokens.get(i + 1);
+        let is_panicking_method = PANICKING_METHODS.contains(&t.text.as_str())
+            && !local.contains(&t.text.as_str())
+            && matches!(prev, Some(p) if p.text == ".")
+            && matches!(next, Some(n) if n.text == "(");
+        let is_panicking_macro = PANICKING_MACROS.contains(&t.text.as_str())
+            && matches!(next, Some(n) if n.text == "!");
+        if is_panicking_method {
+            out.push(Finding::new(
+                PANIC_HYGIENE,
+                file,
+                t.line,
+                format!(
+                    ".{}() in non-test library code: prefer util::error::Result \
+                     (+ Context) so callers choose the failure mode",
+                    t.text
+                ),
+            ));
+        } else if is_panicking_macro {
+            out.push(Finding::new(
+                PANIC_HYGIENE,
+                file,
+                t.line,
+                format!(
+                    "{}! in non-test library code: prefer util::error::Result \
+                     (+ Context) so callers choose the failure mode",
+                    t.text
+                ),
+            ));
+        }
+    }
+}

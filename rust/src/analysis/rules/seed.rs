@@ -1,0 +1,71 @@
+//! Seed-stream discipline: every random stream in the repo must be a
+//! `util::rng` keyed stream (`Rng::seeded(seed)`, `rng.fork(tag)`). The
+//! replay contract — bit-exact trajectories at any worker count — only
+//! holds while generator *state* is constructed in exactly one place;
+//! a hand-built generator or a foreign RNG crate reintroduces per-process
+//! entropy the golden traces cannot see.
+//!
+//! Deriving a *seed* by mixing (`seed ^ round.wrapping_mul(GOLDEN)`) and
+//! passing it to `Rng::seeded` is the sanctioned keyed-stream pattern and
+//! is not flagged.
+
+use crate::analysis::source::SourceFile;
+use crate::analysis::Finding;
+
+pub const SEED_DISCIPLINE: &str = "seed-discipline";
+
+/// The one module allowed to build generator state.
+const SANCTIONED_FILE: &str = "util/rng.rs";
+
+/// Foreign / entropy-seeded RNG surfaces (the `rand` crate family).
+const FOREIGN_RNG: &[&str] =
+    &["thread_rng", "from_entropy", "seed_from_u64", "StdRng", "SmallRng", "ThreadRng"];
+
+/// Tokens that may legitimately precede `Rng {` without it being a struct
+/// literal (type positions, impl headers, trait objects, patterns).
+const NON_LITERAL_PREFIX: &[&str] =
+    &["->", "impl", "for", "mut", ":", "&", "dyn", "<", "as", "enum", "struct"];
+
+pub fn check_seed_discipline(file: &SourceFile, out: &mut Vec<Finding>) {
+    if file.rel_path == SANCTIONED_FILE {
+        return;
+    }
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.is_test_line(t.line) {
+            continue;
+        }
+        if FOREIGN_RNG.contains(&t.text.as_str()) {
+            out.push(Finding::new(
+                SEED_DISCIPLINE,
+                file,
+                t.line,
+                format!(
+                    "{} constructs an RNG outside util::rng: streams must be \
+                     keyed via Rng::seeded(seed)/rng.fork(tag) so every draw \
+                     is replayable",
+                    t.text
+                ),
+            ));
+            continue;
+        }
+        // `Rng { … }` struct literal: builds generator state by hand,
+        // bypassing the SplitMix64 seed expansion of Rng::seeded.
+        if t.text == "Rng"
+            && matches!(file.tokens.get(i + 1), Some(n) if n.text == "{")
+            && !matches!(
+                i.checked_sub(1).and_then(|p| file.tokens.get(p)),
+                Some(prev) if NON_LITERAL_PREFIX.contains(&prev.text.as_str())
+            )
+        {
+            out.push(Finding::new(
+                SEED_DISCIPLINE,
+                file,
+                t.line,
+                "hand-built Rng state outside util::rng: construct streams \
+                 with Rng::seeded(seed) (SplitMix64 expansion) or fork an \
+                 existing stream"
+                    .to_string(),
+            ));
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Per-file source model the rules run against: the token stream plus
+//! structural context recovered from it — which lines are test code
+//! (`#[cfg(test)]` / `#[test]` regions), which function encloses a line,
+//! and the in-source suppressions (`// lint:allow(rule): why`).
+
+use super::lexer::{lex, TokKind, Token};
+
+/// An in-source suppression comment:
+/// `// lint:allow(rule-a, rule-b): justification`.
+///
+/// It silences matching findings on its own line (trailing comment) and
+/// on the line directly below (comment-above style). A suppression with
+/// an empty justification silences nothing — the `suppression` rule
+/// reports it instead.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub justification: String,
+}
+
+/// One lexed + structurally annotated source file.
+pub struct SourceFile {
+    /// Path relative to the lint root, forward slashes (`tuner/broker.rs`).
+    pub rel_path: String,
+    /// Raw source lines (1-indexed access via [`SourceFile::line_text`]).
+    pub lines: Vec<String>,
+    /// Code tokens (comments/strings stripped).
+    pub tokens: Vec<Token>,
+    pub suppressions: Vec<Suppression>,
+    /// `test_lines[i]` — line `i + 1` is inside a test item's braces.
+    test_lines: Vec<bool>,
+    /// `(fn name, first line, last line)`, innermost-last for nested fns.
+    fn_ranges: Vec<(String, usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel_path: &str, content: &str) -> SourceFile {
+        let out = lex(content);
+        let lines: Vec<String> = content.lines().map(|l| l.to_string()).collect();
+        let n_lines = lines.len();
+        let (test_ranges, fn_ranges) = scan_structure(&out.tokens);
+        let mut test_lines = vec![false; n_lines];
+        for (a, b) in test_ranges {
+            for flag in test_lines.iter_mut().take(b.min(n_lines)).skip(a.saturating_sub(1)) {
+                *flag = true;
+            }
+        }
+        let suppressions = out
+            .comments
+            .iter()
+            .filter_map(|(line, text)| parse_suppression(*line, text))
+            .collect();
+        SourceFile {
+            rel_path: rel_path.to_string(),
+            lines,
+            tokens: out.tokens,
+            suppressions,
+            test_lines,
+            fn_ranges,
+        }
+    }
+
+    /// Trimmed text of a 1-indexed line (empty for out-of-range).
+    pub fn line_text(&self, line: usize) -> &str {
+        line.checked_sub(1)
+            .and_then(|i| self.lines.get(i))
+            .map(|s| s.trim())
+            .unwrap_or("")
+    }
+
+    /// True when the 1-indexed line sits inside `#[cfg(test)]` / `#[test]`
+    /// braces — rules skip test code.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line.checked_sub(1)
+            .and_then(|i| self.test_lines.get(i))
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// True when this file defines a `fn` with the given name (body
+    /// present). Lets rules tell a locally-defined method (`Parser::
+    /// expect`, which returns `Result`) from the panicking `Option::expect`.
+    pub fn defines_fn(&self, name: &str) -> bool {
+        self.fn_ranges.iter().any(|(n, _, _)| n == name)
+    }
+
+    /// Name of the innermost function whose body spans `line`.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&str> {
+        self.fn_ranges
+            .iter()
+            .filter(|(_, a, b)| (*a..=*b).contains(&line))
+            .min_by_key(|(_, a, b)| b - a)
+            .map(|(name, _, _)| name.as_str())
+    }
+
+    /// True when `path` (forward-slash, root-relative) starts with any of
+    /// the given directory prefixes.
+    pub fn in_scope(&self, prefixes: &[&str]) -> bool {
+        prefixes.iter().any(|p| self.rel_path.starts_with(p))
+    }
+}
+
+/// Recover test regions and fn body ranges from the token stream with a
+/// brace-depth walk — no AST, but exact enough for line attribution.
+#[allow(clippy::type_complexity)]
+fn scan_structure(
+    tokens: &[Token],
+) -> (Vec<(usize, usize)>, Vec<(String, usize, usize)>) {
+    let mut depth = 0usize;
+    let mut test_ranges: Vec<(usize, usize)> = Vec::new();
+    let mut test_stack: Vec<(usize, usize)> = Vec::new(); // (depth, open line)
+    let mut fn_ranges: Vec<(String, usize, usize)> = Vec::new();
+    let mut fn_stack: Vec<(String, usize, usize)> = Vec::new(); // (name, depth, open line)
+
+    // a seen test attribute waits for the item's opening brace; `;` at
+    // zero paren/bracket nesting cancels it (`#[cfg(test)] mod t;`)
+    let mut pending_test = false;
+    let mut pending_fn: Option<String> = None;
+    let mut guard = 0isize; // ( [ nesting since the pending attr / fn kw
+
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "#") if matches!(tokens.get(i + 1), Some(n) if n.text == "[") => {
+                // scan the attribute to its matching `]`
+                let mut j = i + 2;
+                let mut bdepth = 1usize;
+                let mut idents: Vec<&str> = Vec::new();
+                while j < tokens.len() && bdepth > 0 {
+                    match tokens[j].text.as_str() {
+                        "[" => bdepth += 1,
+                        "]" => bdepth -= 1,
+                        _ => {
+                            if tokens[j].kind == TokKind::Ident {
+                                idents.push(&tokens[j].text);
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+                if is_test_attr(&idents) {
+                    pending_test = true;
+                    guard = 0;
+                }
+                i = j;
+                continue;
+            }
+            (TokKind::Ident, "fn") => {
+                if let Some(next) = tokens.get(i + 1) {
+                    if next.kind == TokKind::Ident {
+                        pending_fn = Some(next.text.clone());
+                        guard = 0;
+                    }
+                }
+            }
+            (TokKind::Punct, "(") | (TokKind::Punct, "[") => guard += 1,
+            (TokKind::Punct, ")") | (TokKind::Punct, "]") => guard -= 1,
+            (TokKind::Punct, ";") if guard <= 0 => {
+                // item ended without a body: attr / fn decl consumed
+                pending_test = false;
+                pending_fn = None;
+            }
+            (TokKind::Punct, "{") => {
+                depth += 1;
+                if pending_test && guard <= 0 {
+                    test_stack.push((depth, t.line));
+                    pending_test = false;
+                }
+                if let Some(name) = pending_fn.take() {
+                    if guard <= 0 {
+                        fn_stack.push((name, depth, t.line));
+                    }
+                }
+            }
+            (TokKind::Punct, "}") => {
+                if let Some(&(d, open)) = test_stack.last() {
+                    if d == depth {
+                        test_stack.pop();
+                        test_ranges.push((open, t.line));
+                    }
+                }
+                if let Some((_, d, _)) = fn_stack.last() {
+                    if *d == depth {
+                        if let Some((name, _, open)) = fn_stack.pop() {
+                            fn_ranges.push((name, open, t.line));
+                        }
+                    }
+                }
+                depth = depth.saturating_sub(1);
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    // unterminated regions (lexer degrades gracefully) close at EOF
+    let eof = tokens.last().map(|t| t.line).unwrap_or(0);
+    for (_, open) in test_stack {
+        test_ranges.push((open, eof));
+    }
+    for (name, _, open) in fn_stack {
+        fn_ranges.push((name, open, eof));
+    }
+    (test_ranges, fn_ranges)
+}
+
+/// `#[test]`, `#[tokio::test]`-style, or `#[cfg(test)]` — but never
+/// `#[cfg(not(test))]`.
+fn is_test_attr(idents: &[&str]) -> bool {
+    let has_test = idents.iter().any(|s| *s == "test");
+    let has_not = idents.iter().any(|s| *s == "not");
+    has_test && !has_not
+}
+
+/// Parse `lint:allow(rule-a, rule-b): justification` out of a comment.
+/// The directive must open the comment — prose *mentioning* `lint:allow`
+/// mid-sentence (docs like these) is not a suppression.
+fn parse_suppression(line: usize, comment: &str) -> Option<Suppression> {
+    let rest = comment.strip_prefix("lint:allow(")?;
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let after = rest[close + 1..].trim_start();
+    let justification = after.strip_prefix(':').map(|j| j.trim().to_string()).unwrap_or_default();
+    Some(Suppression { line, rules, justification })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+use std::collections::BTreeMap;
+
+pub fn outer(x: [u8; 4]) -> u32 {
+    helper(x[0])
+}
+
+fn helper(v: u8) -> u32 {
+    v as u32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn inner_test() {
+        let m = std::collections::HashMap::<u32, u32>::new();
+        assert!(m.is_empty());
+    }
+}
+"#;
+
+    #[test]
+    fn test_regions_cover_cfg_test_mod() {
+        let f = SourceFile::parse("x/y.rs", SRC);
+        assert!(!f.is_test_line(4), "outer fn is not test code");
+        assert!(!f.is_test_line(8));
+        assert!(f.is_test_line(16), "HashMap line inside mod tests");
+        assert!(f.is_test_line(17));
+    }
+
+    #[test]
+    fn fn_ranges_track_enclosing_function() {
+        let f = SourceFile::parse("x/y.rs", SRC);
+        assert_eq!(f.enclosing_fn(5), Some("outer"));
+        assert_eq!(f.enclosing_fn(9), Some("helper"));
+        assert_eq!(f.enclosing_fn(2), None);
+        // `[u8; 4]` in the signature must not cancel fn tracking
+        assert_eq!(f.enclosing_fn(16), Some("inner_test"));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nmod real {\n    fn f() {}\n}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.is_test_line(3));
+    }
+
+    #[test]
+    fn semicolon_cancels_pending_attr() {
+        let src = "#[cfg(test)]\nmod tests;\nfn live() {\n    work();\n}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.is_test_line(4), "mod tests; must not swallow the next item");
+    }
+
+    #[test]
+    fn suppressions_parse_with_and_without_justification() {
+        let src = "// lint:allow(unordered-map): keyed lookups only, never iterated\n\
+                   let a = 1;\n\
+                   let b = 2; // lint:allow(wall-clock, env-read)\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert_eq!(f.suppressions.len(), 2);
+        assert_eq!(f.suppressions[0].line, 1);
+        assert_eq!(f.suppressions[0].rules, vec!["unordered-map"]);
+        assert!(!f.suppressions[0].justification.is_empty());
+        assert_eq!(f.suppressions[1].line, 3);
+        assert_eq!(f.suppressions[1].rules.len(), 2);
+        assert!(f.suppressions[1].justification.is_empty());
+    }
+
+    #[test]
+    fn scope_prefix_match() {
+        let f = SourceFile::parse("tuner/broker.rs", "fn x() {}\n");
+        assert!(f.in_scope(&["tuner/", "sim/"]));
+        assert!(!f.in_scope(&["coordinator/"]));
+    }
+}

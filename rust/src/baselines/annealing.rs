@@ -44,6 +44,7 @@ pub fn simulated_annealing(
     assert_eq!(start.len(), n);
     let mut rng = Rng::seeded(cfg.seed);
     let mut current = start;
+    // lint:allow(unmetered-eval): CostEvaluator is the analytic what-if model — model-side evals, no live observation spent
     let mut current_cost = evaluator.eval_batch(std::slice::from_ref(&current))[0];
     let scale = current_cost.abs().max(1e-9);
     let mut best = current.clone();
@@ -64,6 +65,7 @@ pub fn simulated_annealing(
                 }
             })
             .collect();
+        // lint:allow(unmetered-eval): CostEvaluator is the analytic what-if model — model-side evals, no live observation spent
         let cost = evaluator.eval_batch(std::slice::from_ref(&candidate))[0];
         evals += 1;
         let delta = (cost - current_cost) / scale;

@@ -58,6 +58,7 @@ pub fn rrs(evaluator: &mut dyn CostEvaluator, cfg: &RrsConfig) -> RrsResult {
         // ---- explore ---------------------------------------------------
         let k = cfg.explore_samples.min(cfg.budget - used);
         let pts: Vec<Vec<f64>> = (0..k).map(|_| (0..n).map(|_| rng.f64()).collect()).collect();
+        // lint:allow(unmetered-eval): CostEvaluator is the analytic what-if model — model-side evals, no live observation spent
         let costs = evaluator.eval_batch(&pts);
         used += k;
         let mut center = best_theta.clone();
@@ -85,6 +86,7 @@ pub fn rrs(evaluator: &mut dyn CostEvaluator, cfg: &RrsConfig) -> RrsResult {
                         .collect()
                 })
                 .collect();
+            // lint:allow(unmetered-eval): CostEvaluator is the analytic what-if model — model-side evals, no live observation spent
             let costs = evaluator.eval_batch(&pts);
             used += k;
             let (mut improved, mut round_best, mut round_theta) =

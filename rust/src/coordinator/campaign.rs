@@ -201,10 +201,10 @@ impl TrialOutcome {
 /// costs ~150 ms and campaigns request the same profile for every trial
 /// (§Perf optimization 1 — see EXPERIMENTS.md).
 pub fn profile_for(benchmark: Benchmark, seed: u64) -> WorkloadProfile {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     use std::sync::{Mutex, OnceLock};
-    static CACHE: OnceLock<Mutex<HashMap<(Benchmark, u64), WorkloadProfile>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    static CACHE: OnceLock<Mutex<BTreeMap<(Benchmark, u64), WorkloadProfile>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
     if let Some(p) = cache.lock().unwrap().get(&(benchmark, seed)) {
         return p.clone();
     }
@@ -259,6 +259,7 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
     let tuner = registry::create(spec.algo.name(), &ctx)
         .expect("every Algo maps to a registry entry");
 
+    // lint:allow(wall-clock): tuning_wall_ms is reporting-only (walltime table) — never feeds modeled results or seeds
     let t0 = std::time::Instant::now();
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
         .with_scenario(spec.scenario.clone());

@@ -106,6 +106,7 @@ fn parse_workers(raw: &str) -> Option<usize> {
 
 /// One-time warning for a garbage `HSPSA_WORKERS` value (once per process,
 /// not once per pool dispatch — objectives resolve workers per batch).
+#[allow(clippy::print_stderr)] // deliberate operator-facing warning channel
 fn warn_bad_env_workers_once(raw: &str) {
     use std::sync::Once;
     static WARNED: Once = Once::new();

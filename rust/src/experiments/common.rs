@@ -49,6 +49,7 @@ impl ExpOptions {
     }
 
     /// Persist a table if an output directory is configured.
+    #[allow(clippy::print_stderr)] // best-effort persistence: warn, don't fail the run
     pub fn persist(&self, name: &str, table: &crate::util::table::Table) {
         if let Some(dir) = &self.out {
             if let Err(e) = dir.write_table(name, table) {
@@ -57,6 +58,7 @@ impl ExpOptions {
         }
     }
 
+    #[allow(clippy::print_stderr)] // best-effort persistence: warn, don't fail the run
     pub fn persist_text(&self, name: &str, text: &str) {
         if let Some(dir) = &self.out {
             if let Err(e) = dir.write_text(name, text) {

@@ -27,6 +27,7 @@
 
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
+pub mod analysis;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

@@ -10,7 +10,12 @@
 //!               all)
 //!   whatif      evaluate a configuration on the analytic model /
 //!               AOT artifact and compare with the simulator
+//!   lint        run the in-repo determinism & metering lints over
+//!               rust/src and diff against the committed baseline
 //!   list        show benchmarks, parameters and algorithms
+
+// the CLI's error/usage surface: stderr is the right channel here
+#![allow(clippy::print_stderr)]
 
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
@@ -34,11 +39,12 @@ fn main() {
         "tune" => cmd_tune(),
         "experiment" => cmd_experiment(),
         "whatif" => cmd_whatif(),
+        "lint" => cmd_lint(),
         "list" => cmd_list(),
         _ => {
             println!(
                 "repro — Performance Tuning of Hadoop MapReduce: A Noisy Gradient Approach\n\n\
-                 USAGE: repro <run|scenario|tune|experiment|whatif|list> [flags]\n\
+                 USAGE: repro <run|scenario|tune|experiment|whatif|lint|list> [flags]\n\
                  Run `repro <cmd> --help` for per-command flags."
             );
             0
@@ -503,6 +509,111 @@ fn cmd_whatif() -> i32 {
         println!("AOT artifact        : skipped (run `make artifacts`)");
     }
     0
+}
+
+fn cmd_lint() -> i32 {
+    use hadoop_spsa::analysis::{self, baseline::Baseline, report, rules};
+
+    let parsed = Args::new(
+        "repro lint",
+        "static determinism/metering lints over rust/src, diffed against the committed baseline",
+    )
+    .flag("root", Some("rust/src"), "source tree to lint")
+    .flag("format", Some("table"), "output format (table|json)")
+    .flag(
+        "baseline",
+        Some("rust/tests/fixtures/lint/baseline.json"),
+        "baseline findings ledger to diff against",
+    )
+    .switch("update-baseline", "rewrite the baseline to accept exactly the current findings")
+    .switch("no-baseline", "ignore the baseline: any finding at all fails")
+    .switch("rules", "list the registered rules and exit")
+    .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    if p.get_bool("rules") {
+        let mut t = Table::new("repro lint rules").header(vec!["rule", "summary"]);
+        for r in rules::all() {
+            t.row(vec![r.name, r.summary]);
+        }
+        print!("{}", t.to_ascii());
+        return 0;
+    }
+
+    let root = std::path::PathBuf::from(p.get_str("root"));
+    let lint_report = match analysis::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repro lint: {e}");
+            return 2;
+        }
+    };
+    let baseline_path = p.get_str("baseline");
+
+    if p.get_bool("update-baseline") {
+        let prev = std::fs::read_to_string(&baseline_path)
+            .ok()
+            .and_then(|s| Baseline::parse(&s).ok());
+        let next = Baseline::from_findings(&lint_report.findings, prev.as_ref());
+        // to_pretty already ends with the file's single trailing newline
+        let body = next.to_json().to_pretty();
+        if let Err(e) = std::fs::write(&baseline_path, body) {
+            eprintln!("repro lint: writing {baseline_path}: {e}");
+            return 2;
+        }
+        println!(
+            "wrote {} entr{} to {baseline_path} ({} finding(s) accepted)",
+            next.entries.len(),
+            if next.entries.len() == 1 { "y" } else { "ies" },
+            lint_report.findings.len(),
+        );
+        return 0;
+    }
+
+    let baseline = if p.get_bool("no-baseline") {
+        None
+    } else {
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(s) => match Baseline::parse(&s) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    eprintln!("repro lint: {baseline_path}: {e}");
+                    return 2;
+                }
+            },
+            Err(e) => {
+                eprintln!(
+                    "repro lint: reading {baseline_path}: {e}\n\
+                     (run `repro lint --update-baseline` to create it, or pass --no-baseline)"
+                );
+                return 2;
+            }
+        }
+    };
+    let diff = baseline.as_ref().map(|b| b.diff(&lint_report));
+
+    match p.get_str("format").as_str() {
+        "json" => println!("{}", report::to_json(&lint_report, diff.as_ref()).to_pretty()),
+        "table" => print!("{}", report::to_table(&lint_report, diff.as_ref())),
+        other => {
+            eprintln!("unknown format '{other}' (want table|json)");
+            return 2;
+        }
+    }
+    let clean = match &diff {
+        Some(d) => d.clean(),
+        None => lint_report.findings.is_empty(),
+    };
+    if clean {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_list() -> i32 {

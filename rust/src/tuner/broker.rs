@@ -43,7 +43,7 @@
 //! the quantum. Tuners whose trajectories must replay exactly — the SPSA
 //! family — declare [`CachePolicy::Off`] via `Tuner::cache_policy`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::objective::Objective;
 
@@ -147,7 +147,7 @@ pub struct EvalBroker<'a> {
     policy: CachePolicy,
     /// Cache quantization step per coordinate (θ ∈ [0,1]).
     quant: f64,
-    memo: HashMap<Vec<i64>, f64>,
+    memo: BTreeMap<Vec<i64>, f64>,
     evals_used: u64,
     batches_used: u64,
     cache_hits: u64,
@@ -172,7 +172,7 @@ impl<'a> EvalBroker<'a> {
             budget,
             policy: CachePolicy::Off,
             quant: 1e-6,
-            memo: HashMap::new(),
+            memo: BTreeMap::new(),
             evals_used: 0,
             batches_used: 0,
             cache_hits: 0,
@@ -342,7 +342,7 @@ impl<'a> EvalBroker<'a> {
         }
         let mut plan: Vec<Source> = Vec::with_capacity(thetas.len());
         let mut dispatch: Vec<Vec<f64>> = Vec::new();
-        let mut pending: HashMap<Vec<i64>, usize> = HashMap::new();
+        let mut pending: BTreeMap<Vec<i64>, usize> = BTreeMap::new();
         let affordable = self.remaining();
         for theta in thetas {
             let use_cache = self.policy == CachePolicy::Quantized;
@@ -513,6 +513,45 @@ mod tests {
         assert_eq!(b.batches_used(), 2);
         assert_eq!(b.remaining(), 0, "batch budget spent");
         assert!(b.try_eval(&[0.3, 0.3]).is_none());
+    }
+
+    #[test]
+    fn memo_values_independent_of_population_order() {
+        // The memo/pending maps are BTreeMaps (`repro lint`'s
+        // unordered-map rule): whatever order keys were inserted in, a
+        // revisited θ must replay the exact value it was first observed
+        // at, and identically-fed brokers must expose identical traces.
+        let pts: Vec<Vec<f64>> = (0..6).map(|i| vec![0.1 * i as f64, 0.05 * i as f64]).collect();
+        let mut fwd_obj = quad();
+        let mut fwd =
+            EvalBroker::new(&mut fwd_obj, Budget::obs(100)).with_cache(CachePolicy::Quantized);
+        let fwd_vals = fwd.try_eval_batch(&pts);
+
+        let mut rev_pts = pts.clone();
+        rev_pts.reverse();
+        let mut rev_obj = quad();
+        let mut rev =
+            EvalBroker::new(&mut rev_obj, Budget::obs(100)).with_cache(CachePolicy::Quantized);
+        let rev_vals = rev.try_eval_batch(&rev_pts);
+
+        // each broker replays its own first-observed value for every θ —
+        // the cache key lookup is exact whatever order keys went in
+        // (observed *values* differ between the runs: the noise stream is
+        // positional by design)
+        for (p, want) in pts.iter().zip(&fwd_vals) {
+            assert_eq!(fwd.try_eval(p), Some(*want));
+        }
+        for (p, want) in rev_pts.iter().zip(&rev_vals) {
+            assert_eq!(rev.try_eval(p), Some(*want));
+        }
+        assert_eq!(fwd.evals_used(), rev.evals_used(), "replays are cache hits on both");
+
+        // and two identically-fed brokers produce bit-identical traces
+        let mut twin_obj = quad();
+        let mut twin =
+            EvalBroker::new(&mut twin_obj, Budget::obs(100)).with_cache(CachePolicy::Quantized);
+        let twin_vals = twin.try_eval_batch(&pts);
+        assert_eq!(fwd_vals, twin_vals);
     }
 
     #[test]

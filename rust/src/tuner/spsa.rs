@@ -410,6 +410,7 @@ impl Spsa {
                 }
             }
 
+            // lint:allow(unmetered-eval): registry runs reach this loop via run_broker, which passes the metered EvalBroker through the Objective facade
             let fs = objective.eval_batch(&points);
             debug_assert_eq!(fs.len(), points.len());
 

@@ -156,7 +156,7 @@ impl Tuner for TpeTuner {
             let trace = broker.trace();
             let observed: Vec<(Vec<f64>, f64)> =
                 trace.iter().map(|r| (r.theta.clone(), r.f)).collect();
-            let mut seen: std::collections::HashSet<Vec<i64>> =
+            let mut seen: std::collections::BTreeSet<Vec<i64>> =
                 observed.iter().map(|(t, _)| quant_key(t, quantum)).collect();
 
             // the quantile split needs at least one point on each side, so

@@ -23,8 +23,9 @@ use super::corpus::{
 };
 use super::profile::WorkloadProfile;
 
-/// The five paper benchmarks.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// The five paper benchmarks. `Ord` follows declaration order and keys
+/// the deterministic profile cache (`coordinator::profile_for`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Benchmark {
     Terasort,
     Grep,

@@ -115,11 +115,11 @@ pub fn generate_tera(n_records: u64, rng: &mut Rng) -> Vec<u8> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
 
     #[test]
     fn words_unique_per_rank() {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for r in 1..2000 {
             assert!(seen.insert(word_for_rank(r)), "dup word at rank {r}");
         }
@@ -141,7 +141,7 @@ mod tests {
         let mut rng = Rng::seeded(2);
         let data = generate_text(&TextCorpusSpec::default(), 200_000, &mut rng);
         let text = String::from_utf8(data).unwrap();
-        let mut counts: HashMap<&str, u64> = HashMap::new();
+        let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
         for w in text.split_whitespace() {
             *counts.entry(w).or_default() += 1;
         }

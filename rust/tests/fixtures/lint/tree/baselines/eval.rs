@@ -1,0 +1,25 @@
+//! unmetered-eval fixture: direct `.eval`/`.eval_batch` method calls are
+//! findings; trait declarations, impl headers and string mentions are not.
+
+pub const DOC: &str = "never call .eval( directly — go through the broker";
+
+pub trait CostEvaluator {
+    fn dim(&self) -> usize;
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64>;
+}
+
+pub trait Objective {
+    fn eval(&mut self, theta: &[f64]) -> f64;
+}
+
+pub fn bad_batch(e: &mut dyn CostEvaluator, pts: &[Vec<f64>]) -> Vec<f64> {
+    e.eval_batch(pts)
+}
+
+pub fn bad_single(o: &mut dyn Objective, t: &[f64]) -> f64 {
+    o.eval(t)
+}
+
+pub fn allowed(e: &mut dyn CostEvaluator, pts: &[Vec<f64>]) -> Vec<f64> {
+    e.eval_batch(pts) // lint:allow(unmetered-eval): fixture — model-side evaluator, no live observation
+}

@@ -1,0 +1,14 @@
+//! env-read fixture: the sanctioned (coordinator/pool.rs, env_workers)
+//! location reads the environment without a finding; any other function
+//! in scope does not.
+
+/// Mirrors the real `coordinator::pool::env_workers` — the one sanctioned
+/// env knob.
+pub fn env_workers() -> Option<usize> {
+    let raw = std::env::var("HSPSA_WORKERS").ok()?;
+    raw.trim().parse().ok()
+}
+
+pub fn sneaky_knob() -> bool {
+    std::env::var("HSPSA_SNEAKY").is_ok()
+}

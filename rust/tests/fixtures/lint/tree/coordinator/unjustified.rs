@@ -1,0 +1,13 @@
+//! suppression-rule fixture: a `lint:allow` with no justification is
+//! itself a finding and silences nothing; so is a typo'd rule name.
+
+pub fn not_allowed() -> u64 {
+    // lint:allow(wall-clock)
+    let _t = std::time::SystemTime::now();
+    0
+}
+
+// lint:allow(no-such-rule): the rule name is a typo
+pub fn typo() -> u64 {
+    0
+}

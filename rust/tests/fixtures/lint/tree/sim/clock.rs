@@ -1,0 +1,22 @@
+//! wall-clock fixture: a true positive, a justified suppression, and a
+//! test-module guard.
+
+pub fn bad() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}
+
+pub fn allowed() -> u64 {
+    // lint:allow(wall-clock): fixture — reporting-only timer, never enters modeled results
+    let _t = std::time::SystemTime::now();
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn guard() {
+        // exempt: tests may time things
+        let _ = std::time::Instant::now();
+    }
+}

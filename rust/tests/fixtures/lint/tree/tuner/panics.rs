@@ -1,0 +1,32 @@
+//! panic-hygiene fixture: unwrap/expect/panic! in library code are
+//! findings; `unwrap_or*` and `#[test]` functions are not.
+
+pub fn bad_unwrap(o: Option<u8>) -> u8 {
+    o.unwrap()
+}
+
+pub fn bad_expect(r: Result<u8, ()>) -> u8 {
+    r.expect("fixture")
+}
+
+pub fn bad_panic(x: u8) -> u8 {
+    if x > 250 {
+        panic!("fixture overflow");
+    }
+    x
+}
+
+pub fn guard_unwrap_or(o: Option<u8>) -> u8 {
+    o.unwrap_or(0).min(o.unwrap_or_default())
+}
+
+pub fn allowed(o: Option<u8>) -> u8 {
+    o.unwrap() // lint:allow(panic-hygiene): fixture — caller guarantees Some
+}
+
+#[test]
+fn test_guard() {
+    // exempt: tests panic on purpose
+    assert_eq!(bad_unwrap(Some(1)), 1);
+    Some(3u8).unwrap();
+}

@@ -1,0 +1,23 @@
+//! seed-discipline fixture: foreign RNGs and hand-built generator state
+//! are findings; `-> Rng {` signatures and `Rng::seeded` keyed streams
+//! are not.
+
+use crate::util::rng::Rng;
+
+pub fn foreign() -> u64 {
+    let mut r = thread_rng();
+    r.next_u64()
+}
+
+pub fn hand_built() -> Rng {
+    Rng { s: [1, 2, 3, 4], gauss_spare: None }
+}
+
+pub fn allowed() -> u64 {
+    // lint:allow(seed-discipline): fixture — documenting the foreign-RNG pattern
+    StdRng::seed_from_u64(7).next_u64()
+}
+
+pub fn keyed(seed: u64, round: u64) -> Rng {
+    Rng::seeded(seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}

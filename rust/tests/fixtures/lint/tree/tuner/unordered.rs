@@ -1,0 +1,22 @@
+//! unordered-map fixture: true positives, a justified suppression, and a
+//! test-module guard. (Fixture files are lint inputs, never compiled.)
+
+use std::collections::HashMap;
+
+pub fn build() -> HashMap<String, u64> {
+    HashMap::new()
+}
+
+// lint:allow(unordered-map): fixture — keyed lookups only, never iterated
+pub fn allowed() -> std::collections::HashMap<u8, u8> {
+    Default::default()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn guard() {
+        // exempt: test code may hash freely
+        let _m = std::collections::HashSet::<u8>::new();
+    }
+}

@@ -1,0 +1,8 @@
+//! Scope guard: util/ is outside the determinism scope, so an unordered
+//! map here is fine (nothing in util/ feeds replayed trajectories).
+
+use std::collections::HashMap;
+
+pub fn ok() -> HashMap<u8, u8> {
+    HashMap::new()
+}

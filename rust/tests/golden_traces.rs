@@ -10,6 +10,9 @@
 //! intentional simulator change, rerun with `GOLDEN_REGEN=1` and commit
 //! the rewritten fixtures.
 
+// mismatch diffs print to stderr so they survive test-harness capture
+#![allow(clippy::print_stderr)]
+
 use std::collections::BTreeMap;
 use std::fs;
 use std::path::PathBuf;

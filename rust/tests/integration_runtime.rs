@@ -6,6 +6,9 @@
 //! `cargo test` works before `make artifacts`; `make test` always builds
 //! artifacts first.
 
+// SKIP notices print to stderr so they are visible under `cargo test -q`
+#![allow(clippy::print_stderr)]
+
 use hadoop_spsa::baselines::CostEvaluator;
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};

@@ -1,0 +1,151 @@
+//! End-to-end tests for `repro lint`: the fixture tree pins every rule's
+//! true positives, suppressions, and false-positive guards to exact
+//! counts; the committed baseline must gate the real `rust/src` tree
+//! clean; and an injected violation must fail the gate through the same
+//! JSON differ CI consumes.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+
+use hadoop_spsa::analysis::baseline::Baseline;
+use hadoop_spsa::analysis::{lint_source, lint_tree, report, rules};
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn rule_counts(findings: &[hadoop_spsa::analysis::Finding]) -> BTreeMap<&'static str, usize> {
+    let mut counts = BTreeMap::new();
+    for f in findings {
+        *counts.entry(f.rule).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[test]
+fn fixture_tree_produces_exact_per_rule_counts() {
+    let report = lint_tree(&repo_path("rust/tests/fixtures/lint/tree")).expect("lint fixtures");
+    assert_eq!(report.files_scanned, 8);
+    assert_eq!(report.suppressed, 6, "justified in-fixture suppressions");
+    let counts = rule_counts(&report.findings);
+    let expect: BTreeMap<&str, usize> = [
+        ("unordered-map", 3),
+        ("wall-clock", 2),
+        ("env-read", 1),
+        ("seed-discipline", 2),
+        ("unmetered-eval", 2),
+        ("panic-hygiene", 3),
+        ("suppression", 2),
+    ]
+    .into_iter()
+    .collect();
+    assert_eq!(counts, expect, "all findings: {:#?}", report.findings);
+    assert_eq!(report.findings.len(), 15);
+}
+
+#[test]
+fn every_rule_in_the_registry_fires_on_the_fixture_tree() {
+    let report = lint_tree(&repo_path("rust/tests/fixtures/lint/tree")).expect("lint fixtures");
+    let counts = rule_counts(&report.findings);
+    for rule in rules::all() {
+        assert!(
+            counts.contains_key(rule.name),
+            "rule '{}' has no fixture coverage",
+            rule.name
+        );
+    }
+}
+
+#[test]
+fn committed_baseline_gates_the_real_tree_clean() {
+    let report = lint_tree(&repo_path("rust/src")).expect("lint rust/src");
+    let src = fs::read_to_string(repo_path("rust/tests/fixtures/lint/baseline.json"))
+        .expect("read committed baseline");
+    let baseline = Baseline::parse(&src).expect("parse committed baseline");
+    let diff = baseline.diff(&report);
+    assert!(
+        diff.new.is_empty(),
+        "unbaselined findings in rust/src — fix them, suppress with a justified \
+         lint:allow, or rerun `repro lint --update-baseline`:\n{:#?}",
+        diff.new
+    );
+    assert!(
+        diff.unjustified.is_empty(),
+        "baseline entries missing a justification: {:#?}",
+        diff.unjustified
+    );
+    assert!(
+        diff.stale.is_empty(),
+        "stale baseline entries (the finding was fixed — prune with \
+         `repro lint --update-baseline`): {:#?}",
+        diff.stale
+    );
+}
+
+#[test]
+fn committed_baseline_is_in_canonical_serialized_form() {
+    // `--update-baseline` must be a no-op on a clean tree: re-serializing
+    // the parsed ledger reproduces the committed bytes exactly.
+    let src = fs::read_to_string(repo_path("rust/tests/fixtures/lint/baseline.json"))
+        .expect("read committed baseline");
+    let baseline = Baseline::parse(&src).expect("parse committed baseline");
+    let mut reserialized = baseline.to_json().to_pretty();
+    // to_pretty ends with one newline, as the committed file does
+    assert_eq!(reserialized.pop(), Some('\n'));
+    assert_eq!(src.trim_end(), reserialized, "baseline.json is not in canonical form");
+    for e in &baseline.entries {
+        assert!(
+            !e.justification.is_empty(),
+            "entry without justification: {} {} {:?}",
+            e.rule,
+            e.file,
+            e.text
+        );
+    }
+}
+
+#[test]
+fn injected_violation_fails_the_gate_through_the_json_differ() {
+    // Simulate the CI gate on a tree where someone lands a HashMap in
+    // tuner code: the finding must surface in the JSON report's `new`
+    // array even with the full committed baseline applied.
+    let mut report = lint_tree(&repo_path("rust/src")).expect("lint rust/src");
+    let injected = "pub fn memo() -> std::collections::HashMap<u64, f64> {\n\
+                    \x20   std::collections::HashMap::new()\n\
+                    }\n";
+    let (mut findings, _) = lint_source("tuner/injected.rs", injected);
+    assert!(!findings.is_empty(), "injected source must violate unordered-map");
+    report.findings.append(&mut findings);
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+
+    let src = fs::read_to_string(repo_path("rust/tests/fixtures/lint/baseline.json"))
+        .expect("read committed baseline");
+    let baseline = Baseline::parse(&src).expect("parse committed baseline");
+    let diff = baseline.diff(&report);
+    assert!(!diff.clean(), "gate must fail on the injected violation");
+    assert!(diff.new.iter().all(|f| f.file == "tuner/injected.rs"));
+    assert_eq!(rule_counts(&diff.new)["unordered-map"], 2);
+
+    // and the machine-readable report CI parses says the same
+    let json = report::to_json(&report, Some(&diff));
+    let new_len = json.get("new").and_then(|v| v.as_arr()).map(|a| a.len());
+    assert_eq!(new_len, Some(2));
+    let summary_new = json
+        .get("summary")
+        .and_then(|s| s.get("new"))
+        .and_then(|v| v.as_f64());
+    assert_eq!(summary_new, Some(2.0));
+}
+
+#[test]
+fn update_baseline_flow_round_trips_to_a_clean_diff() {
+    let report = lint_tree(&repo_path("rust/tests/fixtures/lint/tree")).expect("lint fixtures");
+    let baseline = Baseline::from_findings(&report.findings, None);
+    let diff = baseline.diff(&report);
+    assert!(diff.clean());
+    assert_eq!(diff.baselined, report.findings.len());
+    assert!(diff.stale.is_empty());
+}
