@@ -58,12 +58,8 @@ pub fn kmeans(points: &[Vec<f64>], k: usize, iters: u64, seed: u64) -> KmeansRes
         let mut changed = false;
         for (i, p) in points.iter().enumerate() {
             let best = (0..centroids.len())
-                .min_by(|&a, &b| {
-                    dist2(p, &centroids[a])
-                        .partial_cmp(&dist2(p, &centroids[b]))
-                        .unwrap()
-                })
-                .unwrap();
+                .min_by(|&a, &b| dist2(p, &centroids[a]).total_cmp(&dist2(p, &centroids[b])))
+                .unwrap_or(0);
             if assignment[i] != best {
                 assignment[i] = best;
                 changed = true;
@@ -99,11 +95,7 @@ pub fn kmeans(points: &[Vec<f64>], k: usize, iters: u64, seed: u64) -> KmeansRes
 /// Index of the centroid nearest to `point`.
 pub fn nearest(centroids: &[Vec<f64>], point: &[f64]) -> usize {
     (0..centroids.len())
-        .min_by(|&a, &b| {
-            dist2(point, &centroids[a])
-                .partial_cmp(&dist2(point, &centroids[b]))
-                .unwrap()
-        })
+        .min_by(|&a, &b| dist2(point, &centroids[a]).total_cmp(&dist2(point, &centroids[b])))
         .unwrap_or(0)
 }
 

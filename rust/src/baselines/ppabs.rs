@@ -102,7 +102,7 @@ impl Ppabs {
                 .min_by(|(_, a), (_, b)| {
                     let da: f64 = a.iter().zip(centroid).map(|(x, y)| (x - y) * (x - y)).sum();
                     let db: f64 = b.iter().zip(centroid).map(|(x, y)| (x - y) * (x - y)).sum();
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .map(|(i, _)| i)
                 .unwrap_or(0);

@@ -552,11 +552,8 @@ impl CampaignScheduler {
             }
 
             if rung + 1 < rungs && survivors.len() > 1 {
-                let mut ranked = survivors.clone();
-                ranked.sort_by(|&a, &b| {
-                    let fa = outcomes[a].as_ref().expect("ran this rung").best_f;
-                    let fb = outcomes[b].as_ref().expect("ran this rung").best_f;
-                    fa.total_cmp(&fb).then(a.cmp(&b))
+                let ranked = rank_by_observed_f(&survivors, |i| {
+                    outcomes[i].as_ref().map_or(f64::INFINITY, |o| o.best_f)
                 });
                 let keep = ranked.len().div_ceil(2);
                 for &i in &ranked[keep..] {
@@ -587,9 +584,42 @@ impl CampaignScheduler {
     }
 }
 
+/// Rank candidate indices ascending by observed f, ties (and everything
+/// non-finite) broken by index — the `SuccessiveHalving` cull order. NaN
+/// keys map to +∞ first: a poisoned trial must rank last (and be culled),
+/// not panic the rung or — under `total_cmp`, where NaN sorts *above*
+/// +∞ — shuffle legitimate ∞-ranked tuners.
+fn rank_by_observed_f(candidates: &[usize], best_f_of: impl Fn(usize) -> f64) -> Vec<usize> {
+    let key = |i: usize| {
+        let f = best_f_of(i);
+        if f.is_nan() {
+            f64::INFINITY
+        } else {
+            f
+        }
+    };
+    let mut ranked = candidates.to_vec();
+    ranked.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+    ranked
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rung_cull_rank_is_nan_and_inf_proof() {
+        // one poisoned trial (NaN), one that never observed (+∞), dupes —
+        // the cull order stays total, deterministic and panic-free
+        let fs = [0.5, f64::NAN, 0.2, f64::INFINITY, f64::NAN, 0.2];
+        let idx: Vec<usize> = (0..fs.len()).collect();
+        let ranked = rank_by_observed_f(&idx, |i| fs[i]);
+        assert_eq!(ranked, vec![2, 5, 0, 1, 3, 4]);
+        // the worst half culled by `run()` is the NaN/∞ tail, never a
+        // finite performer
+        let keep = ranked.len().div_ceil(2);
+        assert!(ranked[..keep].iter().all(|&i| fs[i].is_finite()));
+    }
 
     #[test]
     fn algo_label_round_trips_case_insensitively() {

@@ -214,6 +214,32 @@ mod tests {
     }
 
     #[test]
+    fn best_so_far_by_obs_shrugs_off_nan_and_inf_observations() {
+        // `f64::min` keeps the non-NaN operand, so a poisoned observation
+        // (NaN score from a degenerate config) must neither stick as the
+        // best nor blank later entries.
+        let rec = |obs: u64, f: f64| EvalRecord {
+            obs,
+            model_time: obs as f64,
+            theta: vec![0.5],
+            f,
+            cached: false,
+        };
+        let trace = vec![
+            rec(1, f64::NAN),
+            rec(2, f64::INFINITY),
+            rec(3, 9.0),
+            rec(4, f64::NAN),
+            rec(5, 7.0),
+        ];
+        let c = best_so_far_by_obs(&trace);
+        // before any finite observation the curve stays +inf, never NaN
+        assert!(c[0].is_infinite() && !c[0].is_nan());
+        assert!(c[1].is_infinite());
+        assert_eq!(&c[2..], &[9.0, 9.0, 7.0]);
+    }
+
+    #[test]
     fn fig6_emits_a_curve_per_registry_tuner_and_spsa_converges() {
         let dir = std::env::temp_dir().join(format!("hspsa-fig6-{}", std::process::id()));
         let opts =

@@ -8,6 +8,7 @@ pub mod comparison;
 pub mod convergence;
 pub mod headline;
 pub mod holistic;
+pub mod perf;
 pub mod robustness;
 pub mod table1;
 pub mod table2;

@@ -1,0 +1,310 @@
+//! `repro bench` — the simulator perf-measurement layer (ROADMAP item 1's
+//! missing baseline): run the hot-path workloads from `benches/perf_sim.rs`
+//! / `perf_batch.rs` under the micro-bench harness, reduce each case to
+//! median ns/run, ns/event and events/sec (plus allocation metering when
+//! the counting allocator is installed — binary only, see `util::alloc`),
+//! and diff against the committed `BENCH_sim.json` trajectory point with a
+//! deliberately generous gate.
+//!
+//! Numbers are machine-dependent; the gate guards against order-of-
+//! magnitude regressions (an accidental clone in the event loop, a
+//! per-event allocation), not single-digit percent drift. The committed
+//! baseline is regenerated with `repro bench --update-baseline` on the CI
+//! runner class, never on a laptop.
+
+use crate::cluster::ClusterSpec;
+use crate::config::ParameterSpace;
+use crate::coordinator::profile_for;
+use crate::sim::{
+    simulate_batch, simulate_with_buffers, ScenarioSpec, SimBuffers, SimJob, SimOptions,
+};
+use crate::util::alloc;
+use crate::util::bench::{bench, black_box};
+use crate::util::json::Json;
+use crate::workloads::Benchmark;
+
+/// Regression gate: ns/event may grow at most this factor over baseline.
+pub const NS_PER_EVENT_FACTOR: f64 = 4.0;
+/// Allocation gate: allocs/run ≤ factor × baseline + slack.
+pub const ALLOCS_FACTOR: f64 = 1.25;
+pub const ALLOCS_SLACK: f64 = 512.0;
+/// Peak-live-bytes gate: ≤ factor × baseline + slack.
+pub const PEAK_FACTOR: f64 = 1.5;
+pub const PEAK_SLACK: f64 = 65536.0;
+
+/// One measured benchmark × scenario point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CaseResult {
+    pub name: String,
+    /// Events dispatched by one run — deterministic (fixed seed), so the
+    /// committed value doubles as a cheap physics cross-check.
+    pub events_per_run: u64,
+    pub median_ns_per_run: f64,
+    pub ns_per_event: f64,
+    pub events_per_sec: f64,
+    /// Allocator calls per run; `None` when the counting allocator is not
+    /// installed (library/test builds).
+    pub allocs_per_run: Option<f64>,
+    /// Process-wide live-heap high-water mark after this case ran. The
+    /// counter is monotone, so the value folds in every earlier case —
+    /// comparable across runs because case order is fixed.
+    pub peak_live_bytes: Option<f64>,
+}
+
+/// The fail5 tier of the golden matrix (kept in sync with
+/// `rust/tests/golden_traces.rs`): failures + two slow nodes + one mid-job
+/// crash + speculation.
+fn faulty_scenario() -> ScenarioSpec {
+    ScenarioSpec::default()
+        .with_failures(0.05)
+        .with_max_attempts(8)
+        .with_slow_node(2, 0.6)
+        .with_slow_node(5, 0.7)
+        .with_crash(240.0, 1)
+        .with_speculation(true)
+}
+
+/// Measure one case. `run` executes the workload once and returns the
+/// event count it dispatched; the first call doubles as warm-up and the
+/// reference event count.
+fn measure<F: FnMut() -> u64>(name: &str, quick: bool, mut run: F) -> CaseResult {
+    let events_per_run = run();
+    // allocation metering over a fixed window, separate from the timed
+    // loop so the snapshot reads don't sit on the timed path
+    let alloc_runs: u64 = if quick { 3 } else { 10 };
+    let before = alloc::snapshot();
+    for _ in 0..alloc_runs {
+        black_box(run());
+    }
+    let after = alloc::snapshot();
+    let metered = alloc::metering_available();
+    let allocs_per_run = if metered {
+        Some((after.total_allocs.saturating_sub(before.total_allocs)) as f64 / alloc_runs as f64)
+    } else {
+        None
+    };
+    let (warmup, min_iters, min_time_s) = if quick { (1, 5, 0.05) } else { (2, 20, 0.5) };
+    let r = bench(name, warmup, min_iters, min_time_s, || {
+        black_box(run());
+    });
+    let ev = events_per_run.max(1) as f64;
+    CaseResult {
+        name: name.to_string(),
+        events_per_run,
+        median_ns_per_run: r.median_ns,
+        ns_per_event: r.median_ns / ev,
+        events_per_sec: ev * 1e9 / r.median_ns.max(1e-9),
+        allocs_per_run,
+        peak_live_bytes: if metered { Some(after.peak_live_bytes as f64) } else { None },
+    }
+}
+
+/// Run the full case matrix: 5 paper benchmarks × {benign, fail5}, the
+/// tuned Terasort-95reducers profile, and a sequential 8-job
+/// `simulate_batch` wave (the buffer-reuse path). Case order is fixed —
+/// the peak-live metric depends on it.
+pub fn run_all(quick: bool) -> Vec<CaseResult> {
+    let cluster = ClusterSpec::paper_cluster();
+    let space = ParameterSpace::v1();
+    let config = space.default_config();
+    let mut out = Vec::new();
+    let mut bufs = SimBuffers::new();
+    for b in Benchmark::all() {
+        let w = profile_for(b, 1000);
+        for (stag, scenario) in [("benign", ScenarioSpec::default()), ("fail5", faulty_scenario())]
+        {
+            let opts = SimOptions { seed: 42, noise: true, scenario };
+            let name = format!("sim/{}/{stag}", b.label().replace(' ', "_"));
+            out.push(measure(&name, quick, || {
+                simulate_with_buffers(&cluster, &config, &w, &opts, &mut bufs).counters.events
+            }));
+        }
+    }
+    // tuned configuration (more reducers = more events), as in perf_sim.rs
+    let w = profile_for(Benchmark::Terasort, 1000);
+    let mut tuned = space.default_config();
+    tuned.reduce_tasks = 95;
+    tuned.io_sort_mb = 500;
+    let opts = SimOptions { seed: 42, noise: true, ..Default::default() };
+    out.push(measure("sim/Terasort-95reducers/benign", quick, || {
+        simulate_with_buffers(&cluster, &tuned, &w, &opts, &mut bufs).counters.events
+    }));
+    // sequential batch wave: one buffer pool amortized across 8 jobs
+    let jobs: Vec<SimJob> = (0..8)
+        .map(|i| SimJob {
+            config: config.clone(),
+            opts: SimOptions { seed: i + 1, noise: true, ..Default::default() },
+        })
+        .collect();
+    out.push(measure("batch/Terasort-8jobs/seq", quick, || {
+        simulate_batch(&cluster, jobs.clone(), &w, 1).iter().map(|r| r.counters.events).sum()
+    }));
+    out
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
+/// Serialize results in the committed `BENCH_sim.json` shape.
+pub fn to_json(cases: &[CaseResult], quick: bool) -> Json {
+    let mut root = Json::obj();
+    root.set("generated_by", Json::Str("repro bench".into()))
+        .set("quick", Json::Bool(quick))
+        .set(
+            "note",
+            Json::Str(
+                "Simulator perf trajectory point. Machine-dependent medians; the CI gate \
+                 is deliberately generous (see README, Performance & benchmarking). \
+                 Regenerate on the CI runner class with `repro bench --update-baseline`."
+                    .into(),
+            ),
+        );
+    let mut arr = Vec::new();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(c.name.clone()))
+            .set("events_per_run", Json::Num(c.events_per_run as f64))
+            .set("median_ns_per_run", Json::Num(c.median_ns_per_run))
+            .set("ns_per_event", Json::Num(c.ns_per_event))
+            .set("events_per_sec", Json::Num(c.events_per_sec))
+            .set("allocs_per_run", opt_num(c.allocs_per_run))
+            .set("peak_live_bytes", opt_num(c.peak_live_bytes));
+        arr.push(j);
+    }
+    root.set("cases", Json::Arr(arr));
+    root
+}
+
+/// Extract the case list from a parsed baseline document. Unknown shapes
+/// degrade to an empty list (→ advisory mode), never an error: the first
+/// committed baseline intentionally has no cases until CI seals real
+/// numbers.
+pub fn parse_cases(doc: &Json) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    let Some(cases) = doc.get("cases").and_then(Json::as_arr) else {
+        return out;
+    };
+    for c in cases {
+        let Some(name) = c.get("name").and_then(Json::as_str) else {
+            continue;
+        };
+        let num = |k: &str| c.get(k).and_then(Json::as_f64);
+        out.push(CaseResult {
+            name: name.to_string(),
+            events_per_run: num("events_per_run").unwrap_or(0.0) as u64,
+            median_ns_per_run: num("median_ns_per_run").unwrap_or(0.0),
+            ns_per_event: num("ns_per_event").unwrap_or(0.0),
+            events_per_sec: num("events_per_sec").unwrap_or(0.0),
+            allocs_per_run: num("allocs_per_run"),
+            peak_live_bytes: num("peak_live_bytes"),
+        });
+    }
+    out
+}
+
+/// Diff fresh results against a baseline. Returns one human-readable
+/// violation per breached gate; cases absent from the baseline (or metrics
+/// recorded as null on either side) are advisory and produce nothing.
+pub fn check(current: &[CaseResult], baseline: &[CaseResult]) -> Vec<String> {
+    let mut violations = Vec::new();
+    for cur in current {
+        let Some(base) = baseline.iter().find(|b| b.name == cur.name) else {
+            continue;
+        };
+        if base.ns_per_event > 0.0 && cur.ns_per_event > base.ns_per_event * NS_PER_EVENT_FACTOR {
+            violations.push(format!(
+                "{}: ns/event {:.1} exceeds {NS_PER_EVENT_FACTOR}x baseline {:.1}",
+                cur.name, cur.ns_per_event, base.ns_per_event
+            ));
+        }
+        if let (Some(c), Some(b)) = (cur.allocs_per_run, base.allocs_per_run) {
+            if c > b * ALLOCS_FACTOR + ALLOCS_SLACK {
+                violations.push(format!(
+                    "{}: allocs/run {c:.0} exceeds {ALLOCS_FACTOR}x baseline {b:.0} + {ALLOCS_SLACK:.0}",
+                    cur.name
+                ));
+            }
+        }
+        if let (Some(c), Some(b)) = (cur.peak_live_bytes, base.peak_live_bytes) {
+            if c > b * PEAK_FACTOR + PEAK_SLACK {
+                violations.push(format!(
+                    "{}: peak live bytes {c:.0} exceeds {PEAK_FACTOR}x baseline {b:.0} + {PEAK_SLACK:.0}",
+                    cur.name
+                ));
+            }
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(name: &str, ns_per_event: f64, allocs: Option<f64>, peak: Option<f64>) -> CaseResult {
+        CaseResult {
+            name: name.to_string(),
+            events_per_run: 1000,
+            median_ns_per_run: ns_per_event * 1000.0,
+            ns_per_event,
+            events_per_sec: 1e9 / ns_per_event,
+            allocs_per_run: allocs,
+            peak_live_bytes: peak,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_cases() {
+        let cases =
+            vec![case("sim/Terasort/benign", 120.0, Some(40.0), Some(1e6)), case("x", 5.0, None, None)];
+        let doc = to_json(&cases, true);
+        let parsed = Json::parse(&doc.to_pretty()).expect("own output parses");
+        assert_eq!(parse_cases(&parsed), cases);
+        assert_eq!(parsed.get("quick").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn empty_or_alien_baseline_is_advisory() {
+        let cur = vec![case("a", 100.0, Some(10.0), Some(1e6))];
+        assert!(check(&cur, &[]).is_empty());
+        assert!(check(&cur, &[case("other", 1.0, None, None)]).is_empty());
+        let doc = Json::parse("{\"note\": \"no cases yet\"}").expect("valid json");
+        assert!(parse_cases(&doc).is_empty());
+    }
+
+    #[test]
+    fn gates_trip_on_order_of_magnitude_regressions() {
+        let base = vec![case("a", 100.0, Some(100.0), Some(1e6))];
+        // within the generous envelope: 2x time, +25% allocs, +50% peak
+        let ok = vec![case("a", 200.0, Some(125.0), Some(1.5e6))];
+        assert!(check(&ok, &base).is_empty());
+        let slow = vec![case("a", 500.0, Some(100.0), Some(1e6))];
+        assert_eq!(check(&slow, &base).len(), 1);
+        let leaky = vec![case("a", 100.0, Some(5000.0), Some(1e8))];
+        assert_eq!(check(&leaky, &base).len(), 2);
+    }
+
+    #[test]
+    fn null_metrics_skip_their_gates() {
+        let base = vec![case("a", 100.0, None, None)];
+        let cur = vec![case("a", 150.0, Some(1e9), Some(1e12))];
+        assert!(check(&cur, &base).is_empty(), "null baseline metrics must not gate");
+    }
+
+    #[test]
+    fn measure_reports_consistent_event_arithmetic() {
+        let mut n = 0u64;
+        let r = measure("test/noop", true, || {
+            n += 1;
+            black_box(n);
+            2000
+        });
+        assert_eq!(r.events_per_run, 2000);
+        assert!(r.ns_per_event >= 0.0);
+        assert!((r.ns_per_event - r.median_ns_per_run / 2000.0).abs() < 1e-9);
+        // library/test builds have no counting allocator installed
+        assert_eq!(r.allocs_per_run, None);
+        assert_eq!(r.peak_live_bytes, None);
+    }
+}

@@ -256,6 +256,24 @@ mod tests {
     }
 
     #[test]
+    fn best_so_far_by_time_shrugs_off_nan_and_inf_observations() {
+        // `f64::min` keeps the non-NaN operand: a NaN observation (e.g. a
+        // poisoned score) must not stick as the best or blank the curve.
+        let rec = |t: f64, f: f64| EvalRecord {
+            obs: 1,
+            model_time: t,
+            theta: vec![0.5],
+            f,
+            cached: false,
+        };
+        let trace =
+            vec![rec(10.0, f64::NAN), rec(20.0, 9.0), rec(30.0, f64::NAN), rec(40.0, 7.0)];
+        let c = best_so_far_by_time(&trace, &[10.0, 20.0, 30.0, 40.0]);
+        assert!(c[0].is_infinite() && !c[0].is_nan(), "NaN-only prefix stays +inf");
+        assert_eq!(&c[1..], &[9.0, 9.0, 7.0]);
+    }
+
+    #[test]
     fn walltime_quick_emits_a_curve_per_registry_tuner_and_a_two_axis_summary() {
         let dir = std::env::temp_dir().join(format!("hspsa-walltime-{}", std::process::id()));
         let opts = ExpOptions {

@@ -12,6 +12,9 @@
 //!               AOT artifact and compare with the simulator
 //!   lint        run the in-repo determinism & metering lints over
 //!               rust/src and diff against the committed baseline
+//!   bench       measure the simulator hot path (median ns/event,
+//!               events/sec, allocation metering) and diff against the
+//!               committed BENCH_sim.json perf baseline
 //!   list        show benchmarks, parameters and algorithms
 
 // the CLI's error/usage surface: stderr is the right channel here
@@ -30,6 +33,11 @@ use hadoop_spsa::util::units::fmt_secs;
 use hadoop_spsa::whatif::{cost_for_theta, ClusterFeatures};
 use hadoop_spsa::workloads::Benchmark;
 
+/// Meter allocation traffic for `repro bench`. Binary-only: the library
+/// and test targets keep the system allocator (see `util::alloc`).
+#[global_allocator]
+static ALLOC: hadoop_spsa::util::alloc::CountingAlloc = hadoop_spsa::util::alloc::CountingAlloc;
+
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let cmd = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
@@ -40,11 +48,12 @@ fn main() {
         "experiment" => cmd_experiment(),
         "whatif" => cmd_whatif(),
         "lint" => cmd_lint(),
+        "bench" => cmd_bench(),
         "list" => cmd_list(),
         _ => {
             println!(
                 "repro — Performance Tuning of Hadoop MapReduce: A Noisy Gradient Approach\n\n\
-                 USAGE: repro <run|scenario|tune|experiment|whatif|lint|list> [flags]\n\
+                 USAGE: repro <run|scenario|tune|experiment|whatif|lint|bench|list> [flags]\n\
                  Run `repro <cmd> --help` for per-command flags."
             );
             0
@@ -613,6 +622,88 @@ fn cmd_lint() -> i32 {
         0
     } else {
         1
+    }
+}
+
+fn cmd_bench() -> i32 {
+    use hadoop_spsa::experiments::perf;
+    use hadoop_spsa::util::json::Json;
+
+    let parsed = Args::new(
+        "repro bench",
+        "measure the simulator hot path and diff against the committed perf baseline",
+    )
+    .flag("baseline", Some("BENCH_sim.json"), "committed perf baseline to compare against")
+    .flag("out", None, "also write the fresh results to this JSON file")
+    .switch("quick", "short CI-friendly measurement (noisier medians)")
+    .switch("check", "exit 1 when a case regresses past the generous gate")
+    .switch("update-baseline", "rewrite the baseline file with the fresh results")
+    .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let quick = p.get_bool("quick");
+    let results = perf::run_all(quick);
+    let doc = perf::to_json(&results, quick);
+    println!("\n{} case(s) measured", results.len());
+
+    let baseline_path = p.get_str("baseline");
+    if p.get_bool("update-baseline") {
+        if let Err(e) = std::fs::write(&baseline_path, doc.to_pretty()) {
+            eprintln!("repro bench: writing {baseline_path}: {e}");
+            return 2;
+        }
+        println!("wrote {} case(s) to {baseline_path}", results.len());
+        return 0;
+    }
+    if let Some(out) = p.get("out") {
+        if let Err(e) = std::fs::write(out, doc.to_pretty()) {
+            eprintln!("repro bench: writing {out}: {e}");
+            return 2;
+        }
+        println!("results written to {out}");
+    }
+
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(s) => match Json::parse(&s) {
+            Ok(j) => perf::parse_cases(&j),
+            Err(e) => {
+                eprintln!("repro bench: {baseline_path}: {e}");
+                return 2;
+            }
+        },
+        Err(e) => {
+            eprintln!(
+                "repro bench: reading {baseline_path}: {e}\n\
+                 (run `repro bench --update-baseline` to create it)"
+            );
+            return 2;
+        }
+    };
+    if baseline.is_empty() {
+        println!(
+            "baseline {baseline_path} has no cases yet — advisory run \
+             (regenerate with `repro bench --update-baseline` on the CI runner class)"
+        );
+        return 0;
+    }
+    let violations = perf::check(&results, &baseline);
+    if violations.is_empty() {
+        println!("all {} case(s) within the regression gate", results.len());
+        return 0;
+    }
+    for v in &violations {
+        println!("REGRESSION {v}");
+    }
+    if p.get_bool("check") {
+        1
+    } else {
+        println!("(advisory: pass --check to fail on regressions)");
+        0
     }
 }
 

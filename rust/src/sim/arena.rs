@@ -1,0 +1,173 @@
+//! Slab-style attempt arena and the fixed-capacity running-attempt set —
+//! the allocation-free bookkeeping behind the simulator's hot path.
+//!
+//! [`Arena`] is an append-only id-indexed store: ids are dense `usize`s in
+//! launch order, lookups are plain indexing, and `clear` rewinds length
+//! while keeping capacity for the next run (the `SimBuffers` reuse path).
+//! Nothing in the API requires `T: Clone` — event handling borrows records
+//! in place (see the non-`Clone` payload test below, the contract ISSUE 7
+//! pins).
+//!
+//! [`RunningSet`] holds the live attempt ids of one task. The scheduler
+//! launches at most an original plus one speculative backup per task
+//! (`backups > 0` guards a second), so two inline slots suffice — a `Copy`
+//! value replacing the former per-task `Vec<usize>`.
+
+/// Append-only slab keyed by dense insertion-order ids.
+pub struct Arena<T> {
+    items: Vec<T>,
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Self {
+        Arena { items: Vec::new() }
+    }
+
+    /// Insert `item`, returning its id (== insertion count so far).
+    pub fn push(&mut self, item: T) -> usize {
+        self.items.push(item);
+        self.items.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Drop all items, keeping the backing capacity for reuse.
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> std::ops::Index<usize> for Arena<T> {
+    type Output = T;
+    fn index(&self, id: usize) -> &T {
+        &self.items[id]
+    }
+}
+
+impl<T> std::ops::IndexMut<usize> for Arena<T> {
+    fn index_mut(&mut self, id: usize) -> &mut T {
+        &mut self.items[id]
+    }
+}
+
+/// Live attempt ids of one task: the original and at most one speculative
+/// backup. `Copy`, so task state moves without heap traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunningSet {
+    ids: [usize; 2],
+    len: u8,
+}
+
+impl RunningSet {
+    /// Add an id. The scheduler's `backups > 0` guard makes a third live
+    /// attempt unreachable; a debug build asserts it, a release build
+    /// drops the overflow.
+    pub fn push(&mut self, id: usize) {
+        debug_assert!(self.len < 2, "a task runs at most an original and one backup");
+        if (self.len as usize) < 2 {
+            self.ids[self.len as usize] = id;
+            self.len += 1;
+        }
+    }
+
+    /// Remove `id` if present, preserving the order of the remainder.
+    pub fn remove(&mut self, id: usize) {
+        if self.len >= 1 && self.ids[0] == id {
+            self.ids[0] = self.ids[1];
+            self.len -= 1;
+        } else if self.len == 2 && self.ids[1] == id {
+            self.len -= 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The live ids, oldest first.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.ids[..self.len as usize]
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deliberately NOT `Clone`: stable Rust cannot write a negative
+    /// trait bound, so compiling the arena (and the simulator's event
+    /// handling) against a clone-less payload *is* the proof that the
+    /// hot path no longer clones attempt records.
+    struct NoClone {
+        x: u64,
+    }
+
+    #[test]
+    fn arena_works_without_clone() {
+        let mut a: Arena<NoClone> = Arena::new();
+        assert!(a.is_empty());
+        let i0 = a.push(NoClone { x: 10 });
+        let i1 = a.push(NoClone { x: 20 });
+        assert_eq!((i0, i1), (0, 1));
+        assert_eq!(a.len(), 2);
+        a[i0].x += 1;
+        assert_eq!(a[i0].x, 11);
+        assert_eq!(a[i1].x, 20);
+        a.clear();
+        assert!(a.is_empty());
+        // ids restart densely after a clear (per-run reuse semantics)
+        assert_eq!(a.push(NoClone { x: 30 }), 0);
+    }
+
+    #[test]
+    fn running_set_push_remove_preserves_order() {
+        let mut s = RunningSet::default();
+        assert!(s.is_empty());
+        s.push(7);
+        s.push(9);
+        assert_eq!(s.as_slice(), &[7, 9]);
+        s.remove(7);
+        assert_eq!(s.as_slice(), &[9]);
+        s.remove(42); // absent id: no-op
+        assert_eq!(s.as_slice(), &[9]);
+        s.remove(9);
+        assert!(s.is_empty());
+        // removing the newer of two keeps the older in place
+        s.push(1);
+        s.push(2);
+        s.remove(2);
+        assert_eq!(s.as_slice(), &[1]);
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn running_set_take_resets_to_empty() {
+        let mut s = RunningSet::default();
+        s.push(3);
+        s.push(4);
+        let taken = std::mem::take(&mut s);
+        assert_eq!(taken.as_slice(), &[3, 4]);
+        assert!(s.is_empty());
+    }
+}

@@ -11,7 +11,7 @@ use crate::config::HadoopConfig;
 use crate::coordinator::pool::{resolve_workers, run_parallel};
 use crate::workloads::WorkloadProfile;
 
-use super::simulator::{simulate, SimOptions};
+use super::simulator::{simulate_with_buffers, SimBuffers, SimOptions};
 use super::trace::JobRunResult;
 
 /// One entry of a simulation batch.
@@ -26,6 +26,13 @@ pub struct SimJob {
 /// `simulate(cluster, &jobs[i].config, w, &jobs[i].opts)` exactly,
 /// independent of `workers` and scheduling — seeds travel with the jobs,
 /// not with the threads.
+///
+/// Allocation: each lane (the sequential path, or one worker chunk) runs
+/// its whole share of the batch through a single [`SimBuffers`] pool, so a
+/// 64-probe wave performs one warm-up allocation per lane rather than 64
+/// full simulator builds. Safe because `Sim::new` fully re-initializes
+/// every buffer from the job's own spec — run N's state cannot leak into
+/// run N+1 (see `buffer_reuse_matches_fresh_buffers` below).
 pub fn simulate_batch(
     cluster: &ClusterSpec,
     jobs: Vec<SimJob>,
@@ -33,22 +40,41 @@ pub fn simulate_batch(
     workers: usize,
 ) -> Vec<JobRunResult> {
     if workers <= 1 || jobs.len() <= 1 {
+        let mut bufs = SimBuffers::new();
         return jobs
             .into_iter()
-            .map(|j| simulate(cluster, &j.config, w, &j.opts))
+            .map(|j| simulate_with_buffers(cluster, &j.config, w, &j.opts, &mut bufs))
             .collect();
     }
     let cluster = Arc::new(cluster.clone());
     let w = Arc::new(w.clone());
-    let thunks: Vec<Box<dyn FnOnce() -> JobRunResult + Send>> = jobs
+    // Chunk the job list so each worker thunk reuses one buffer pool
+    // across its whole slice; flattening chunk results in order preserves
+    // the job-order contract.
+    let n = jobs.len();
+    let per = n.div_ceil(workers.min(n));
+    let mut chunks: Vec<Vec<SimJob>> = Vec::new();
+    let mut jobs = jobs;
+    while jobs.len() > per {
+        let tail = jobs.split_off(per);
+        chunks.push(std::mem::replace(&mut jobs, tail));
+    }
+    chunks.push(jobs);
+    let thunks: Vec<Box<dyn FnOnce() -> Vec<JobRunResult> + Send>> = chunks
         .into_iter()
-        .map(|j| {
+        .map(|chunk| {
             let cluster = Arc::clone(&cluster);
             let w = Arc::clone(&w);
-            Box::new(move || simulate(&cluster, &j.config, &w, &j.opts)) as _
+            Box::new(move || {
+                let mut bufs = SimBuffers::new();
+                chunk
+                    .into_iter()
+                    .map(|j| simulate_with_buffers(&cluster, &j.config, &w, &j.opts, &mut bufs))
+                    .collect()
+            }) as _
         })
         .collect();
-    run_parallel(thunks, workers)
+    run_parallel(thunks, workers).into_iter().flatten().collect()
 }
 
 /// `simulate_batch` with the worker count resolved from the environment
@@ -121,5 +147,50 @@ mod tests {
             assert_eq!(a.phases, b.phases);
             assert_eq!(a.job_failed, b.job_failed);
         }
+    }
+
+    #[test]
+    fn buffer_reuse_matches_fresh_buffers() {
+        // Run N must be independent of run N-1 sharing its buffer pool: a
+        // fail-heavy job (dead nodes, killed attempts, retry counters, a
+        // populated arena) precedes a benign job in the same sequential
+        // lane, and each batch element must equal its standalone
+        // fresh-buffer `simulate` twin bit for bit.
+        use crate::sim::simulator::simulate;
+        use crate::sim::ScenarioSpec;
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut rng = Rng::seeded(5);
+        let w = Benchmark::Wordcount.profile_scaled(200_000, 1 << 30, &mut rng);
+        let faulty = ScenarioSpec::default()
+            .with_failures(0.2)
+            .with_max_attempts(10)
+            .with_crash(60.0, 2)
+            .with_slow_node(3, 0.4)
+            .with_speculation(true);
+        let jobs: Vec<SimJob> = vec![
+            SimJob {
+                config: space.default_config(),
+                opts: SimOptions { seed: 900, noise: true, scenario: faulty },
+            },
+            SimJob {
+                config: space.default_config(),
+                opts: SimOptions { seed: 901, noise: true, ..Default::default() },
+            },
+        ];
+        let batch = simulate_batch(&cluster, jobs.clone(), &w, 1);
+        assert!(
+            batch[0].counters.killed_attempts + batch[0].counters.map_failures > 0,
+            "first job must actually dirty the pool"
+        );
+        for (got, job) in batch.iter().zip(&jobs) {
+            let solo = simulate(&cluster, &job.config, &w, &job.opts);
+            assert_eq!(got.exec_time_s, solo.exec_time_s);
+            assert_eq!(got.counters, solo.counters);
+            assert_eq!(got.phases, solo.phases);
+            assert_eq!(got.job_failed, solo.job_failed);
+        }
+        // no scenario state bled into the benign second run
+        assert_eq!(batch[1].counters.killed_attempts + batch[1].counters.map_failures, 0);
     }
 }

@@ -1,13 +1,55 @@
-//! Discrete-event calendar: a min-heap of (time, sequence, payload) events.
+//! Discrete-event calendar: deterministic event queues keyed by
+//! `(time, sequence)` — the sequence number breaks same-time ties in
+//! insertion order so simulation results are bit-reproducible for a given
+//! seed regardless of queue internals.
 //!
-//! The sequence number breaks ties deterministically so simulation results
-//! are bit-reproducible for a given seed regardless of heap internals.
+//! Two interchangeable implementations sit behind [`EventQueue`]:
+//!
+//! * [`CalendarQueue`] (the default) — a bucketed calendar queue tuned for
+//!   the simulator's near-monotone schedule horizon: events are binned
+//!   into a power-of-two ring of *day* buckets and pop sweeps days from
+//!   the current clock, so the common case touches one small unsorted
+//!   bucket instead of rebalancing a heap. See `sim/README.md` for the
+//!   invariants.
+//! * [`HeapQueue`] — the original `BinaryHeap` implementation, kept as the
+//!   reference oracle. The `heap-queue` cargo feature makes it the build
+//!   default; `EventQueue::with_kind` selects it at runtime (golden-trace
+//!   equality tests run both and demand bit-identical digests).
+//!
+//! Both queues share one contract: `pop` yields the queued event with the
+//! smallest `(time, seq)`; `schedule` clamps past times to `now`; the
+//! clock is the time of the last popped event.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Simulated time in seconds.
 pub type SimTime = f64;
+
+/// Which implementation an [`EventQueue`] dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Bucketed calendar queue (the production default).
+    Calendar,
+    /// The original binary-heap queue (reference oracle).
+    Heap,
+}
+
+impl QueueKind {
+    /// The build default: [`QueueKind::Calendar`], unless the `heap-queue`
+    /// cargo feature pins the legacy binary heap.
+    pub fn default_kind() -> QueueKind {
+        if cfg!(feature = "heap-queue") {
+            QueueKind::Heap
+        } else {
+            QueueKind::Calendar
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HeapQueue: the original BinaryHeap implementation
+// ---------------------------------------------------------------------------
 
 struct Entry<T> {
     time: SimTime,
@@ -40,16 +82,16 @@ impl<T> PartialOrd for Entry<T> {
     }
 }
 
-/// Deterministic event queue.
-pub struct EventQueue<T> {
+/// Deterministic min-heap event queue (the pre-calendar implementation).
+pub struct HeapQueue<T> {
     heap: BinaryHeap<Entry<T>>,
     seq: u64,
     now: SimTime,
 }
 
-impl<T> EventQueue<T> {
+impl<T> HeapQueue<T> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+        HeapQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
     }
 
     /// Current simulation clock (time of the last popped event).
@@ -86,6 +128,312 @@ impl<T> EventQueue<T> {
     pub fn len(&self) -> usize {
         self.heap.len()
     }
+
+    /// Empty the queue and rewind the clock/sequence to zero, keeping the
+    /// heap's backing allocation for the next run.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
+    }
+}
+
+impl<T> Default for HeapQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CalendarQueue: bucketed days, unsorted buckets, min-scan pop
+// ---------------------------------------------------------------------------
+
+/// Ring size the calendar starts with (power of two).
+const INITIAL_BUCKETS: usize = 16;
+/// Day-width clamp: keeps `time / width` well inside f64's exact-integer
+/// range for any simulated horizon, and bounds how many ring cycles a
+/// clustered schedule can span.
+const MIN_WIDTH: SimTime = 1e-6;
+const MAX_WIDTH: SimTime = 1e9;
+
+struct CalEntry<T> {
+    time: SimTime,
+    seq: u64,
+    payload: T,
+}
+
+/// Bucketed calendar event queue.
+///
+/// Invariants (see `sim/README.md`):
+/// * every queued time is ≥ `now` (schedule clamps), so the next event's
+///   *day* `floor(time / width)` is ≥ the clock's day — pop sweeps days
+///   upward from the clock and the first day holding an event holds the
+///   global minimum;
+/// * all events of one day land in exactly one bucket (`day mod ring`),
+///   so one unsorted-bucket min-scan per day suffices;
+/// * pop order is a pure function of the queued `(time, seq)` pairs —
+///   never of ring geometry — so resizes and buffer reuse cannot perturb
+///   simulation physics.
+pub struct CalendarQueue<T> {
+    /// Power-of-two ring of unsorted day buckets.
+    buckets: Vec<Vec<CalEntry<T>>>,
+    /// Width of one day in simulated seconds.
+    width: SimTime,
+    len: usize,
+    seq: u64,
+    now: SimTime,
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(INITIAL_BUCKETS);
+        buckets.resize_with(INITIAL_BUCKETS, Vec::new);
+        CalendarQueue { buckets, width: 1.0, len: 0, seq: 0, now: 0.0 }
+    }
+
+    /// Current simulation clock (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    fn day_of(&self, t: SimTime) -> u64 {
+        (t / self.width) as u64
+    }
+
+    fn bucket_of(&self, t: SimTime) -> usize {
+        (self.day_of(t) & (self.buckets.len() as u64 - 1)) as usize
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to now).
+    pub fn schedule(&mut self, at: SimTime, payload: T) {
+        let at = if at < self.now { self.now } else { at };
+        debug_assert!(at.is_finite(), "scheduling at non-finite time");
+        if self.len + 1 > 2 * self.buckets.len() {
+            self.grow();
+        }
+        let b = self.bucket_of(at);
+        self.buckets[b].push(CalEntry { time: at, seq: self.seq, payload });
+        self.seq += 1;
+        self.len += 1;
+    }
+
+    /// Schedule `payload` after a delay from the current clock.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: T) {
+        let now = self.now;
+        self.schedule(now + delay.max(0.0), payload);
+    }
+
+    /// Double the ring and re-derive the day width from the queued time
+    /// span. Deterministic and content-only: geometry is a pure function
+    /// of what is queued, never of wall clock or capacity history (and
+    /// pop order does not depend on geometry at all).
+    fn grow(&mut self) {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for bucket in &self.buckets {
+            for e in bucket {
+                lo = lo.min(e.time);
+                hi = hi.max(e.time);
+            }
+        }
+        let span = (hi - lo).max(0.0);
+        self.width = (span / self.len.max(1) as f64).clamp(MIN_WIDTH, MAX_WIDTH);
+        let nb = self.buckets.len() * 2;
+        let mut old = std::mem::take(&mut self.buckets);
+        self.buckets = Vec::with_capacity(nb);
+        self.buckets.resize_with(nb, Vec::new);
+        for bucket in &mut old {
+            for e in bucket.drain(..) {
+                let b = self.bucket_of(e.time);
+                self.buckets[b].push(e);
+            }
+        }
+    }
+
+    /// `(bucket, index)` of the minimum `(time, seq)` entry across the
+    /// whole ring — the sparse-tail fallback when no event lives within
+    /// one ring cycle of days from the clock.
+    fn global_min(&self) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, SimTime, u64)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some((_, _, bt, bs)) => e.time < bt || (e.time == bt && e.seq < bs),
+                };
+                if better {
+                    best = Some((b, i, e.time, e.seq));
+                }
+            }
+        }
+        best.map(|(b, i, _, _)| (b, i))
+    }
+
+    /// Pop the next event, advancing the clock.
+    ///
+    /// Sweeps days upward from the clock's day: since every queued time is
+    /// ≥ `now` and a day's events live in exactly one bucket, the first
+    /// day holding an event holds the global `(time, seq)` minimum. After
+    /// one full ring cycle of empty days, falls back to a global min-scan.
+    pub fn pop(&mut self) -> Option<(SimTime, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len() as u64;
+        let start_day = self.day_of(self.now);
+        let mut found: Option<(usize, usize)> = None;
+        for step in 0..nb {
+            let day = start_day.wrapping_add(step);
+            let b = (day & (nb - 1)) as usize;
+            let mut best: Option<(usize, SimTime, u64)> = None;
+            for (i, e) in self.buckets[b].iter().enumerate() {
+                if self.day_of(e.time) != day {
+                    continue; // a different ring cycle of this bucket
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, bt, bs)) => e.time < bt || (e.time == bt && e.seq < bs),
+                };
+                if better {
+                    best = Some((i, e.time, e.seq));
+                }
+            }
+            if let Some((i, _, _)) = best {
+                found = Some((b, i));
+                break;
+            }
+        }
+        let (b, i) = match found {
+            Some(x) => x,
+            None => self.global_min()?, // unreachable None: len > 0
+        };
+        let e = self.buckets[b].swap_remove(i);
+        self.len -= 1;
+        self.now = e.time;
+        Some((e.time, e.payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Empty the queue and rewind the clock/sequence to zero, keeping the
+    /// ring's backing allocations (and its adapted geometry — harmless,
+    /// since pop order never depends on geometry) for the next run.
+    pub fn clear(&mut self) {
+        for bucket in &mut self.buckets {
+            bucket.clear();
+        }
+        self.len = 0;
+        self.seq = 0;
+        self.now = 0.0;
+    }
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EventQueue: the dispatching facade the simulator uses
+// ---------------------------------------------------------------------------
+
+enum QueueImpl<T> {
+    Calendar(CalendarQueue<T>),
+    Heap(HeapQueue<T>),
+}
+
+/// Deterministic event queue — a thin facade over [`CalendarQueue`] /
+/// [`HeapQueue`] selected by [`QueueKind`].
+pub struct EventQueue<T> {
+    q: QueueImpl<T>,
+}
+
+impl<T> EventQueue<T> {
+    /// The build-default implementation (see [`QueueKind::default_kind`]).
+    pub fn new() -> Self {
+        Self::with_kind(QueueKind::default_kind())
+    }
+
+    pub fn with_kind(kind: QueueKind) -> Self {
+        let q = match kind {
+            QueueKind::Calendar => QueueImpl::Calendar(CalendarQueue::new()),
+            QueueKind::Heap => QueueImpl::Heap(HeapQueue::new()),
+        };
+        EventQueue { q }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match &self.q {
+            QueueImpl::Calendar(_) => QueueKind::Calendar,
+            QueueImpl::Heap(_) => QueueKind::Heap,
+        }
+    }
+
+    /// Reset to an empty queue at clock zero for `kind`, reusing the
+    /// current backing storage when the kind is unchanged (the per-run
+    /// buffer-reuse path).
+    pub fn reset(&mut self, kind: QueueKind) {
+        if self.kind() == kind {
+            match &mut self.q {
+                QueueImpl::Calendar(q) => q.clear(),
+                QueueImpl::Heap(q) => q.clear(),
+            }
+        } else {
+            *self = Self::with_kind(kind);
+        }
+    }
+
+    /// Current simulation clock (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        match &self.q {
+            QueueImpl::Calendar(q) => q.now(),
+            QueueImpl::Heap(q) => q.now(),
+        }
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to now).
+    pub fn schedule(&mut self, at: SimTime, payload: T) {
+        match &mut self.q {
+            QueueImpl::Calendar(q) => q.schedule(at, payload),
+            QueueImpl::Heap(q) => q.schedule(at, payload),
+        }
+    }
+
+    /// Schedule `payload` after a delay from the current clock.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: T) {
+        match &mut self.q {
+            QueueImpl::Calendar(q) => q.schedule_in(delay, payload),
+            QueueImpl::Heap(q) => q.schedule_in(delay, payload),
+        }
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(SimTime, T)> {
+        match &mut self.q {
+            QueueImpl::Calendar(q) => q.pop(),
+            QueueImpl::Heap(q) => q.pop(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match &self.q {
+            QueueImpl::Calendar(q) => q.is_empty(),
+            QueueImpl::Heap(q) => q.is_empty(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.q {
+            QueueImpl::Calendar(q) => q.len(),
+            QueueImpl::Heap(q) => q.len(),
+        }
+    }
 }
 
 impl<T> Default for EventQueue<T> {
@@ -97,55 +445,173 @@ impl<T> Default for EventQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{assert_that, forall};
+
+    const KINDS: [QueueKind; 2] = [QueueKind::Calendar, QueueKind::Heap];
 
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule(3.0, "c");
-        q.schedule(1.0, "a");
-        q.schedule(2.0, "b");
-        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(3.0, "c");
+            q.schedule(1.0, "a");
+            q.schedule(2.0, "b");
+            let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, vec!["a", "b", "c"], "{kind:?}");
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        q.schedule(1.0, 1);
-        q.schedule(1.0, 2);
-        q.schedule(1.0, 3);
-        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, vec![1, 2, 3]);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(1.0, 1);
+            q.schedule(1.0, 2);
+            q.schedule(1.0, 3);
+            let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, vec![1, 2, 3], "{kind:?}");
+        }
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.schedule(5.0, ());
-        q.schedule(2.0, ());
-        let (t1, _) = q.pop().unwrap();
-        let (t2, _) = q.pop().unwrap();
-        assert!(t1 <= t2);
-        assert_eq!(q.now(), 5.0);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(5.0, ());
+            q.schedule(2.0, ());
+            let (t1, _) = q.pop().unwrap();
+            let (t2, _) = q.pop().unwrap();
+            assert!(t1 <= t2, "{kind:?}");
+            assert_eq!(q.now(), 5.0, "{kind:?}");
+        }
     }
 
     #[test]
     fn past_events_clamp_to_now() {
-        let mut q = EventQueue::new();
-        q.schedule(10.0, "late");
-        q.pop();
-        q.schedule(3.0, "early"); // in the past — clamped
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t, 10.0);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(10.0, "late");
+            q.pop();
+            q.schedule(3.0, "early"); // in the past — clamped
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, 10.0, "{kind:?}");
+        }
     }
 
     #[test]
     fn schedule_in_is_relative() {
-        let mut q = EventQueue::new();
-        q.schedule(4.0, "x");
-        q.pop();
-        q.schedule_in(2.5, "y");
-        let (t, _) = q.pop().unwrap();
-        assert!((t - 6.5).abs() < 1e-12);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(4.0, "x");
+            q.pop();
+            q.schedule_in(2.5, "y");
+            let (t, _) = q.pop().unwrap();
+            assert!((t - 6.5).abs() < 1e-12, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn calendar_fifo_ties_hold_across_bucket_wraps() {
+        // Initial geometry: 16 buckets × width 1.0 — times 0.5 and 16.5
+        // share bucket 0 across a full ring wrap. FIFO `seq` tie-breaks
+        // must hold within each day, and the near day must drain first.
+        let mut q = CalendarQueue::new();
+        q.schedule(16.5, "far-1");
+        q.schedule(0.5, "near-1");
+        q.schedule(0.5, "near-2");
+        q.schedule(16.5, "far-2");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["near-1", "near-2", "far-1", "far-2"]);
+    }
+
+    #[test]
+    fn calendar_sparse_far_future_uses_global_fallback() {
+        // One event many ring cycles past the clock: the day sweep finds
+        // nothing within one cycle and the global min-scan must take over.
+        let mut q = CalendarQueue::new();
+        q.schedule(1.0e7, "far");
+        q.schedule(1.0e7, "far-2"); // FIFO holds on the fallback path too
+        assert_eq!(q.pop().map(|(_, p)| p), Some("far"));
+        assert_eq!(q.pop().map(|(_, p)| p), Some("far-2"));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn calendar_grow_preserves_pop_order() {
+        // 100 events force two ring doublings mid-stream; order must stay
+        // a pure function of (time, seq).
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapQueue::new();
+        for i in 0..100u64 {
+            // times collide in pairs to exercise ties while growing
+            let t = ((i / 2) * 7 % 50) as f64 * 3.5;
+            cal.schedule(t, i);
+            heap.schedule(t, i);
+        }
+        assert_eq!(cal.len(), 100);
+        for _ in 0..100 {
+            assert_eq!(cal.pop(), heap.pop());
+        }
+        assert!(cal.pop().is_none() && heap.pop().is_none());
+    }
+
+    #[test]
+    fn reset_reuses_storage_and_rewinds_the_clock() {
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(9.0, 1);
+            q.pop();
+            q.schedule(11.0, 2);
+            q.reset(kind);
+            assert!(q.is_empty());
+            assert_eq!(q.now(), 0.0);
+            assert_eq!(q.kind(), kind);
+            // a fresh schedule starts the sequence again at zero: ties
+            // behave exactly as on a brand-new queue
+            q.schedule(1.0, 10);
+            q.schedule(1.0, 20);
+            assert_eq!(q.pop(), Some((1.0, 10)));
+            assert_eq!(q.pop(), Some((1.0, 20)));
+        }
+        // switching kinds rebuilds the backing store
+        let mut q: EventQueue<u8> = EventQueue::with_kind(QueueKind::Heap);
+        q.reset(QueueKind::Calendar);
+        assert_eq!(q.kind(), QueueKind::Calendar);
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_interleaved_schedules() {
+        // The pop-order-equivalence property the golden digests rely on:
+        // any interleaving of schedules and pops — same-time ties, past
+        // clamps, wide day jumps (bucket wraps), grow mid-stream — yields
+        // the identical (time, payload) stream from both implementations.
+        forall("calendar ≡ heap pop order", 200, |g| {
+            let mut cal = CalendarQueue::new();
+            let mut heap = HeapQueue::new();
+            let ops = g.usize_in(1, 120);
+            let mut next_id = 0u64;
+            for _ in 0..ops {
+                if g.bool() || cal.is_empty() {
+                    // cluster times so ties actually occur, with rare
+                    // far-future jumps to force ring wraps
+                    let base = g.f64_in(0.0, 40.0).floor();
+                    let t = if g.u64_in(0, 9) == 0 { base * 1000.0 } else { base };
+                    cal.schedule(t, next_id);
+                    heap.schedule(t, next_id);
+                    next_id += 1;
+                } else {
+                    let (a, b) = (cal.pop(), heap.pop());
+                    assert_that(a == b, format!("mid-stream pop diverged: {a:?} vs {b:?}"))?;
+                }
+            }
+            loop {
+                let (a, b) = (cal.pop(), heap.pop());
+                assert_that(a == b, format!("drain pop diverged: {a:?} vs {b:?}"))?;
+                if a.is_none() {
+                    break;
+                }
+            }
+            assert_that(cal.now() == heap.now(), "clocks diverged")
+        });
     }
 }

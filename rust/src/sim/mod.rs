@@ -5,6 +5,7 @@
 //! full §2.3 data path and returns the wall-clock execution time (the SPSA
 //! objective) plus a phase/counter trace.
 
+pub mod arena;
 pub mod batch;
 pub mod constants;
 pub mod event;
@@ -14,10 +15,11 @@ pub mod scenario;
 pub mod simulator;
 pub mod trace;
 
+pub use arena::{Arena, RunningSet};
 pub use batch::{simulate_batch, simulate_batch_auto, SimJob};
-pub use event::{EventQueue, SimTime};
+pub use event::{CalendarQueue, EventQueue, HeapQueue, QueueKind, SimTime};
 pub use map_task::{map_output_for_split, map_task_cost, MapTaskCost, TaskRates};
 pub use reduce_task::{reduce_task_cost, ReduceTaskCost};
 pub use scenario::{NodeCrash, NodeSlowdown, ScenarioSpec, TaskKind};
-pub use simulator::{simulate, SimOptions};
+pub use simulator::{simulate, simulate_with_buffers, simulate_with_queue, SimBuffers, SimOptions};
 pub use trace::{JobRunResult, PhaseBreakdown, SimCounters};

@@ -27,8 +27,9 @@ use crate::workloads::WorkloadProfile;
 // (placement uses a sequential seeded Rng at init; task noise and scenario
 // fates come from keyed per-attempt streams in `scenario::attempt_rng`)
 
+use super::arena::{Arena, RunningSet};
 use super::constants::*;
-use super::event::EventQueue;
+use super::event::{EventQueue, QueueKind};
 use super::map_task::{map_output_for_split, map_task_cost, TaskRates};
 use super::reduce_task::reduce_task_cost;
 use super::scenario::{self, ScenarioSpec, TaskKind};
@@ -89,7 +90,7 @@ struct TaskState {
     /// Attempts ever launched (ordinal for keyed noise/fate derivation).
     attempts_launched: u64,
     /// Live attempt ids (original and at most one speculative copy).
-    running: Vec<usize>,
+    running: RunningSet,
     /// Speculative copies ever launched (at most one per task).
     backups: u64,
 }
@@ -106,8 +107,11 @@ struct AttemptCounters {
     output_bytes: u64,
 }
 
-/// One in-flight (or finished) task attempt.
-#[derive(Clone)]
+/// One in-flight (or finished) task attempt. Deliberately **not**
+/// `Clone`: records live in the attempt [`Arena`] and every event handler
+/// borrows them in place — termination paths copy out the small
+/// [`Retired`] summary instead of the whole record (phase breakdown
+/// included), which was the hot path's top allocation source.
 struct AttemptInfo {
     kind: TaskKind,
     task: usize,
@@ -125,10 +129,57 @@ struct AttemptInfo {
     counters: AttemptCounters,
 }
 
+/// The slice of an attempt record the termination paths read after
+/// retirement — a `Copy` summary, so no full-struct clone leaves the
+/// arena.
+#[derive(Clone, Copy)]
+struct Retired {
+    kind: TaskKind,
+    task: usize,
+    slot: usize,
+    speculative: bool,
+    start_s: f64,
+}
+
 fn kind_index(kind: TaskKind) -> usize {
     match kind {
         TaskKind::Map => 0,
         TaskKind::Reduce => 1,
+    }
+}
+
+/// Reusable per-run allocation pool for the simulator: every growable
+/// scheduler structure a run needs, handed back when the run finishes so
+/// the next run starts from warmed capacity instead of a fresh heap. One
+/// pool serves a whole `simulate_batch` wave (per worker), so a 64-probe
+/// wave allocates its scheduler state once, not 64×.
+///
+/// Fields are private: a pool is only ever filled and cleared by the
+/// simulator. `Namenode`/`HdfsFile`/`ResourceTracker` state is still
+/// rebuilt per run (block placement is seed-dependent); the pool covers
+/// the scheduler's hot structures. Reuse is physics-free — a run's result
+/// is bit-identical whether its pool is fresh or warmed (see the
+/// buffer-independence tests).
+#[derive(Default)]
+pub struct SimBuffers {
+    q: EventQueue<Event>,
+    node_pending: Vec<Vec<usize>>,
+    pending_maps: Vec<usize>,
+    map_assigned: Vec<bool>,
+    pending_reduces: Vec<usize>,
+    map_tasks: Vec<TaskState>,
+    red_tasks: Vec<TaskState>,
+    attempts: Arena<AttemptInfo>,
+    node_dead: Vec<bool>,
+    map_slots: Vec<Slot>,
+    reduce_slots: Vec<Slot>,
+    /// Scratch id list for crash/abort victim sweeps.
+    scratch: Vec<usize>,
+}
+
+impl SimBuffers {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -161,9 +212,12 @@ struct Sim<'a> {
     /// Scheduler state per map / reduce task.
     map_tasks: Vec<TaskState>,
     red_tasks: Vec<TaskState>,
-    /// Registry of every attempt ever launched.
-    attempts: Vec<AttemptInfo>,
+    /// Registry of every attempt ever launched (slab arena, id = launch
+    /// order).
+    attempts: Arena<AttemptInfo>,
     node_dead: Vec<bool>,
+    /// Scratch id list for crash/abort victim sweeps (no per-event Vec).
+    scratch: Vec<usize>,
     /// InitialFill has fired (guards crash handlers scheduled before
     /// JOB_SETUP_S from launching the map wave early).
     job_started: bool,
@@ -190,7 +244,30 @@ impl<'a> Sim<'a> {
         config: &'a HadoopConfig,
         w: &'a WorkloadProfile,
         opts: &'a SimOptions,
+        kind: QueueKind,
+        bufs: SimBuffers,
     ) -> Self {
+        // Move the pooled buffers in, reset them, and refill — `run`
+        // hands them back. Capacity survives; contents never do, so a
+        // warmed pool and a fresh one are indistinguishable to physics.
+        let SimBuffers {
+            mut q,
+            mut node_pending,
+            mut pending_maps,
+            mut map_assigned,
+            mut pending_reduces,
+            mut map_tasks,
+            mut red_tasks,
+            mut attempts,
+            mut node_dead,
+            mut map_slots,
+            mut reduce_slots,
+            mut scratch,
+        } = bufs;
+        q.reset(kind);
+        attempts.clear();
+        scratch.clear();
+
         let mut rng = Rng::seeded(opts.seed);
         let mut namenode = Namenode::new(cluster.workers(), config.dfs_replication as u32);
 
@@ -215,14 +292,14 @@ impl<'a> Sim<'a> {
         // Interleave slots across nodes (slot k of every node, then slot
         // k+1, …) so partially-filled waves spread over the whole cluster —
         // matching how a real scheduler balances task placement.
-        let mut map_slots = Vec::new();
+        map_slots.clear();
         for s in 0..cluster.map_slots_per_node {
             for node in 0..cluster.workers() {
                 let _ = s;
                 map_slots.push(Slot { node, tasks_run: 0, busy: false, dead: false });
             }
         }
-        let mut reduce_slots = Vec::new();
+        reduce_slots.clear();
         for s in 0..cluster.reduce_slots_per_node {
             for node in 0..cluster.workers() {
                 let _ = s;
@@ -237,32 +314,49 @@ impl<'a> Sim<'a> {
         counters.map_waves = n_maps.div_ceil(cluster.total_map_slots() as u64);
         counters.reduce_waves = n_reduces.div_ceil(cluster.total_reduce_slots() as u64);
 
-        // per-node locality queues
-        let mut node_pending: Vec<Vec<usize>> = vec![Vec::new(); cluster.workers() as usize];
+        // per-node locality queues (inner capacity survives reuse)
+        for v in &mut node_pending {
+            v.clear();
+        }
+        node_pending.resize_with(cluster.workers() as usize, Vec::new);
         for (t, block) in file.blocks.iter().enumerate() {
             for &r in &block.replicas {
                 node_pending[r as usize].push(t);
             }
         }
 
+        pending_maps.clear();
+        pending_maps.extend(0..n_maps as usize);
+        map_assigned.clear();
+        map_assigned.resize(n_maps as usize, false);
+        pending_reduces.clear();
+        pending_reduces.extend(0..n_reduces as usize);
+        map_tasks.clear();
+        map_tasks.resize(n_maps as usize, TaskState::default());
+        red_tasks.clear();
+        red_tasks.resize(n_reduces as usize, TaskState::default());
+        node_dead.clear();
+        node_dead.resize(cluster.workers() as usize, false);
+
         Sim {
             config,
             w,
             opts,
-            q: EventQueue::new(),
+            q,
             tracker: ResourceTracker::new(cluster),
             phases: PhaseBreakdown::default(),
             counters,
             node_pending,
-            pending_maps: (0..n_maps as usize).collect(),
+            pending_maps,
             pending_cursor: 0,
-            map_assigned: vec![false; n_maps as usize],
+            map_assigned,
             maps_launched: 0,
-            pending_reduces: (0..n_reduces as usize).collect(),
-            map_tasks: vec![TaskState::default(); n_maps as usize],
-            red_tasks: vec![TaskState::default(); n_reduces as usize],
-            attempts: Vec::new(),
-            node_dead: vec![false; cluster.workers() as usize],
+            pending_reduces,
+            map_tasks,
+            red_tasks,
+            attempts,
+            node_dead,
+            scratch,
             job_started: false,
             reduce_phase_started: false,
             spec_scheduled: [false; 2],
@@ -398,8 +492,7 @@ impl<'a> Sim<'a> {
         let fate =
             self.opts.scenario.attempt_fate(self.opts.seed, TaskKind::Map, task as u64, ord);
         let end = now + setup + work * fate.unwrap_or(1.0);
-        let id = self.attempts.len();
-        self.attempts.push(AttemptInfo {
+        let id = self.attempts.push(AttemptInfo {
             kind: TaskKind::Map,
             task,
             slot: slot_idx,
@@ -485,8 +578,7 @@ impl<'a> Sim<'a> {
         let fate =
             self.opts.scenario.attempt_fate(self.opts.seed, TaskKind::Reduce, task as u64, ord);
         let end = now + setup + work * fate.unwrap_or(1.0);
-        let id = self.attempts.len();
-        self.attempts.push(AttemptInfo {
+        let id = self.attempts.push(AttemptInfo {
             kind: TaskKind::Reduce,
             task,
             slot: slot_idx,
@@ -570,7 +662,7 @@ impl<'a> Sim<'a> {
             if ts.completed || ts.backups > 0 || ts.running.len() != 1 {
                 continue;
             }
-            let id = ts.running[0];
+            let id = ts.running.as_slice()[0];
             let a = &self.attempts[id];
             if a.speculative || a.end_s - now < SPECULATIVE_MIN_REMAINING_S {
                 continue;
@@ -642,22 +734,32 @@ impl<'a> Sim<'a> {
 
     /// Shared teardown of every attempt-termination path (success, failure,
     /// kill): mark the attempt dead, give back its tracker resources and
-    /// free its slot. Returns the attempt record for the caller's
-    /// path-specific accounting. Callers must check `alive` first.
-    fn retire_attempt(&mut self, id: usize) -> AttemptInfo {
+    /// free its slot. Returns the [`Retired`] summary — the handful of
+    /// fields the callers' path-specific accounting reads — while the full
+    /// record stays put in the arena, borrowed, never cloned. Callers must
+    /// check `alive` first.
+    fn retire_attempt(&mut self, id: usize) -> Retired {
         debug_assert!(self.attempts[id].alive, "retiring a dead attempt");
-        self.attempts[id].alive = false;
-        let a = self.attempts[id].clone();
-        self.tracker.release(a.node, Resource::Cpu);
-        self.tracker.release(a.node, Resource::Disk);
-        if a.holds_net {
-            self.tracker.release(a.node, Resource::Net);
+        let a = &mut self.attempts[id];
+        a.alive = false;
+        let (node, holds_net) = (a.node, a.holds_net);
+        let r = Retired {
+            kind: a.kind,
+            task: a.task,
+            slot: a.slot,
+            speculative: a.speculative,
+            start_s: a.start_s,
+        };
+        self.tracker.release(node, Resource::Cpu);
+        self.tracker.release(node, Resource::Disk);
+        if holds_net {
+            self.tracker.release(node, Resource::Net);
         }
-        match a.kind {
-            TaskKind::Map => self.map_slots[a.slot].busy = false,
-            TaskKind::Reduce => self.reduce_slots[a.slot].busy = false,
+        match r.kind {
+            TaskKind::Map => self.map_slots[r.slot].busy = false,
+            TaskKind::Reduce => self.reduce_slots[r.slot].busy = false,
         }
-        a
+        r
     }
 
     /// Kill a live attempt (losing speculation copy or node-loss victim):
@@ -682,7 +784,7 @@ impl<'a> Sim<'a> {
             TaskKind::Map => std::mem::take(&mut self.map_tasks[a.task].running),
             TaskKind::Reduce => std::mem::take(&mut self.red_tasks[a.task].running),
         };
-        for sib in siblings {
+        for &sib in siblings.as_slice() {
             if sib != attempt {
                 self.kill_attempt(sib, t);
             }
@@ -694,9 +796,11 @@ impl<'a> Sim<'a> {
         if a.speculative {
             self.counters.speculative_wins += 1;
         }
-        // Commit the successful attempt's work.
-        self.phases.add(&a.phases);
-        let c = &a.counters;
+        // Commit the successful attempt's work straight from the arena:
+        // `phases`/`counters` and `attempts` are disjoint fields, so the
+        // record is borrowed in place (no `Clone` on `AttemptInfo`).
+        self.phases.add(&self.attempts[attempt].phases);
+        let c = self.attempts[attempt].counters;
         match a.kind {
             TaskKind::Map => {
                 self.counters.data_local_maps += c.data_local as u64;
@@ -745,7 +849,7 @@ impl<'a> Sim<'a> {
                 TaskKind::Map => &mut self.map_tasks[a.task],
                 TaskKind::Reduce => &mut self.red_tasks[a.task],
             };
-            ts.running.retain(|&x| x != attempt);
+            ts.running.remove(attempt);
             ts.failed_attempts += 1;
             (ts.failed_attempts, !ts.completed && ts.running.is_empty())
         };
@@ -787,10 +891,13 @@ impl<'a> Sim<'a> {
                 s.dead = true;
             }
         }
-        let victims: Vec<usize> = (0..self.attempts.len())
-            .filter(|&i| self.attempts[i].alive && self.attempts[i].node == node)
-            .collect();
-        for id in victims {
+        let mut victims = std::mem::take(&mut self.scratch);
+        victims.clear();
+        victims.extend(
+            (0..self.attempts.len())
+                .filter(|&i| self.attempts[i].alive && self.attempts[i].node == node),
+        );
+        for &id in &victims {
             self.kill_attempt(id, t);
             let (kind, task) = (self.attempts[id].kind, self.attempts[id].task);
             let orphaned = {
@@ -798,20 +905,23 @@ impl<'a> Sim<'a> {
                     TaskKind::Map => &mut self.map_tasks[task],
                     TaskKind::Reduce => &mut self.red_tasks[task],
                 };
-                ts.running.retain(|&x| x != id);
+                ts.running.remove(id);
                 !ts.completed && ts.running.is_empty()
             };
             if orphaned {
                 match kind {
                     TaskKind::Map => {
                         // Re-queue the lost split, locality-first on the
-                        // surviving replica holders.
+                        // surviving replica holders. `file` and
+                        // `node_pending` are disjoint fields, so the
+                        // replica list is walked in place, not cloned.
                         self.map_assigned[task] = false;
                         self.maps_launched = self.maps_launched.saturating_sub(1);
-                        let replicas = self.file.blocks[task].replicas.clone();
-                        for r in replicas {
-                            if !self.node_dead[r as usize] {
-                                self.node_pending[r as usize].push(task);
+                        let (file, node_pending, node_dead) =
+                            (&self.file, &mut self.node_pending, &self.node_dead);
+                        for &r in &file.blocks[task].replicas {
+                            if !node_dead[r as usize] {
+                                node_pending[r as usize].push(task);
                             }
                         }
                         self.pending_maps.push(task);
@@ -820,11 +930,12 @@ impl<'a> Sim<'a> {
                 }
             }
         }
+        self.scratch = victims;
         self.fill_map_slots();
         self.fill_reduce_slots();
     }
 
-    fn run(mut self) -> JobRunResult {
+    fn run(mut self) -> (JobRunResult, SimBuffers) {
         let crash_schedule: Vec<(usize, f64)> = self
             .opts
             .scenario
@@ -840,6 +951,7 @@ impl<'a> Sim<'a> {
         self.q.schedule(JOB_SETUP_S, Event::InitialFill);
 
         while let Some((t, ev)) = self.q.pop() {
+            self.counters.events += 1;
             match ev {
                 Event::InitialFill => {
                     self.job_started = true;
@@ -869,11 +981,13 @@ impl<'a> Sim<'a> {
             // partial work as waste exactly like any other kill, so the
             // failed run's phase breakdown stays consistent.
             let now = self.q.now();
-            let live: Vec<usize> =
-                (0..self.attempts.len()).filter(|&i| self.attempts[i].alive).collect();
-            for id in live {
+            let mut live = std::mem::take(&mut self.scratch);
+            live.clear();
+            live.extend((0..self.attempts.len()).filter(|&i| self.attempts[i].alive));
+            for &id in &live {
                 self.kill_attempt(id, now);
             }
+            self.scratch = live;
         }
 
         let complete =
@@ -884,13 +998,28 @@ impl<'a> Sim<'a> {
         } else {
             self.q.now().max(self.maps_done_s)
         };
-        JobRunResult {
+        let result = JobRunResult {
             exec_time_s: end + JOB_CLEANUP_S,
             phases: self.phases,
             counters: self.counters,
             maps_done_s: self.maps_done_s,
             job_failed,
-        }
+        };
+        let bufs = SimBuffers {
+            q: self.q,
+            node_pending: self.node_pending,
+            pending_maps: self.pending_maps,
+            map_assigned: self.map_assigned,
+            pending_reduces: self.pending_reduces,
+            map_tasks: self.map_tasks,
+            red_tasks: self.red_tasks,
+            attempts: self.attempts,
+            node_dead: self.node_dead,
+            map_slots: self.map_slots,
+            reduce_slots: self.reduce_slots,
+            scratch: self.scratch,
+        };
+        (result, bufs)
     }
 }
 
@@ -901,7 +1030,49 @@ pub fn simulate(
     w: &WorkloadProfile,
     opts: &SimOptions,
 ) -> JobRunResult {
-    Sim::new(cluster, config, w, opts).run()
+    let mut bufs = SimBuffers::new();
+    simulate_with_buffers(cluster, config, w, opts, &mut bufs)
+}
+
+/// [`simulate`] reusing the caller's buffer pool: run N+1 inherits run
+/// N's capacity. Results are bit-identical to fresh buffers — pooling is
+/// an allocation optimization, never a physics input.
+pub fn simulate_with_buffers(
+    cluster: &ClusterSpec,
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    opts: &SimOptions,
+    bufs: &mut SimBuffers,
+) -> JobRunResult {
+    run_with(cluster, config, w, opts, QueueKind::default_kind(), bufs)
+}
+
+/// [`simulate`] on an explicitly chosen event-queue implementation — the
+/// hook the golden-trace equality tests use to prove the calendar queue
+/// and the legacy heap produce bit-identical physics.
+pub fn simulate_with_queue(
+    cluster: &ClusterSpec,
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    opts: &SimOptions,
+    kind: QueueKind,
+) -> JobRunResult {
+    let mut bufs = SimBuffers::new();
+    run_with(cluster, config, w, opts, kind, &mut bufs)
+}
+
+fn run_with(
+    cluster: &ClusterSpec,
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    opts: &SimOptions,
+    kind: QueueKind,
+    bufs: &mut SimBuffers,
+) -> JobRunResult {
+    let taken = std::mem::take(bufs);
+    let (result, returned) = Sim::new(cluster, config, w, opts, kind, taken).run();
+    *bufs = returned;
+    result
 }
 
 #[cfg(test)]
@@ -1327,5 +1498,94 @@ mod tests {
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.phases, b.phases);
         assert_eq!(a.job_failed, b.job_failed);
+    }
+
+    // -- fast path: arena, buffer reuse, queue equivalence -----------------
+
+    fn busy_scenario() -> ScenarioSpec {
+        ScenarioSpec::default()
+            .with_failures(0.15)
+            .with_max_attempts(10)
+            .with_crash(60.0, 2)
+            .with_slow_node(5, 0.5)
+            .with_speculation(true)
+    }
+
+    #[test]
+    fn event_handling_does_not_require_clone_on_attempts() {
+        // `AttemptInfo` deliberately has no `Clone` impl (stable Rust
+        // cannot state a negative bound, so compiling this file *is* the
+        // proof — see also `arena::tests::arena_works_without_clone`).
+        // Runtime leg: a scenario run that exercises every termination
+        // path (done / failed / killed / crash victims / speculative
+        // races) over a *reused* arena matches the fresh-arena run bit
+        // for bit.
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let opts = SimOptions { seed: 23, noise: true, scenario: busy_scenario() };
+        let fresh = simulate(&cluster, &cfg, &workload(), &opts);
+        assert!(fresh.counters.killed_attempts > 0 || fresh.counters.map_failures > 0);
+        let mut bufs = SimBuffers::new();
+        let first = simulate_with_buffers(&cluster, &cfg, &workload(), &opts, &mut bufs);
+        let reused = simulate_with_buffers(&cluster, &cfg, &workload(), &opts, &mut bufs);
+        for r in [&first, &reused] {
+            assert_eq!(r.exec_time_s, fresh.exec_time_s);
+            assert_eq!(r.counters, fresh.counters);
+            assert_eq!(r.phases, fresh.phases);
+        }
+    }
+
+    #[test]
+    fn buffer_reuse_is_independent_of_the_previous_run() {
+        // A fail-heavy job leaves the pool full of dead slots, retry
+        // counters and a populated arena; the benign job that follows in
+        // the same pool must match its standalone fresh-buffer twin.
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let faulty_opts =
+            SimOptions { seed: 40, noise: true, scenario: busy_scenario() };
+        let benign_opts = o(41, true);
+        let mut bufs = SimBuffers::new();
+        let faulty = simulate_with_buffers(&cluster, &cfg, &workload(), &faulty_opts, &mut bufs);
+        let benign = simulate_with_buffers(&cluster, &cfg, &workload(), &benign_opts, &mut bufs);
+        let solo_faulty = simulate(&cluster, &cfg, &workload(), &faulty_opts);
+        let solo_benign = simulate(&cluster, &cfg, &workload(), &benign_opts);
+        assert_eq!(faulty.exec_time_s, solo_faulty.exec_time_s);
+        assert_eq!(faulty.counters, solo_faulty.counters);
+        assert_eq!(benign.exec_time_s, solo_benign.exec_time_s);
+        assert_eq!(benign.counters, solo_benign.counters);
+        assert_eq!(benign.phases, solo_benign.phases);
+        // the benign run really saw none of the faulty run's state
+        assert_eq!(benign.counters.killed_attempts + benign.counters.map_failures, 0);
+    }
+
+    #[test]
+    fn calendar_and_heap_queue_runs_are_bit_identical() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        for opts in [o(7, true), SimOptions { seed: 23, noise: true, scenario: busy_scenario() }]
+        {
+            let cal = simulate_with_queue(&cluster, &cfg, &workload(), &opts, QueueKind::Calendar);
+            let heap = simulate_with_queue(&cluster, &cfg, &workload(), &opts, QueueKind::Heap);
+            assert_eq!(cal.exec_time_s, heap.exec_time_s);
+            assert_eq!(cal.counters, heap.counters);
+            assert_eq!(cal.phases, heap.phases);
+            assert_eq!(cal.job_failed, heap.job_failed);
+        }
+    }
+
+    #[test]
+    fn events_counter_meters_dispatches() {
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let r = simulate(&cluster, &cfg, &workload(), &SimOptions::default());
+        // at least InitialFill + one Done event per task attempt
+        assert!(
+            r.counters.events > r.counters.map_attempts + r.counters.reduce_attempts,
+            "events={}",
+            r.counters.events
+        );
+        let again = simulate(&cluster, &cfg, &workload(), &SimOptions::default());
+        assert_eq!(r.counters.events, again.counters.events, "event count must be deterministic");
     }
 }

@@ -64,7 +64,7 @@ impl PhaseBreakdown {
             ("output write", self.output_write),
             ("wasted (failed/killed attempts)", self.wasted),
         ];
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 }
@@ -114,6 +114,12 @@ pub struct SimCounters {
     pub killed_attempts: u64,
     /// Workers permanently lost to scheduled crashes.
     pub nodes_lost: u64,
+
+    // -- metering (not physics) --------------------------------------------
+    /// Discrete events dispatched by the simulator's main loop. Perf
+    /// metering for `repro bench` (ns/event denominators), not a modeled
+    /// quantity — deliberately excluded from golden-trace digests.
+    pub events: u64,
 }
 
 /// Result of one simulated job execution.

@@ -417,9 +417,12 @@ impl<'a> EvalBroker<'a> {
                 f,
                 cached,
             });
+            // NaN-hygiene: `f < bf` is already false for NaN candidates,
+            // but the first observation lands via the None arm — a NaN
+            // there would poison best-so-far for the whole trial.
             let better = match &self.best {
                 Some((_, bf)) => f < *bf,
-                None => true,
+                None => !f.is_nan(),
             };
             if better {
                 self.best = Some((theta.clone(), f));
@@ -467,6 +470,46 @@ mod tests {
 
     fn quad() -> QuadraticObjective {
         QuadraticObjective::new(vec![0.3, 0.7], 0.05, 9)
+    }
+
+    /// Pathological objective: first observation NaN, second +inf, then
+    /// finite — the NaN-hygiene probe for best-so-far tracking.
+    struct NanThenFinite {
+        evals: u64,
+    }
+
+    impl Objective for NanThenFinite {
+        fn dim(&self) -> usize {
+            1
+        }
+
+        fn eval(&mut self, _theta: &[f64]) -> f64 {
+            self.evals += 1;
+            match self.evals {
+                1 => f64::NAN,
+                2 => f64::INFINITY,
+                _ => 5.0,
+            }
+        }
+
+        fn evals(&self) -> u64 {
+            self.evals
+        }
+    }
+
+    #[test]
+    fn nan_first_observation_does_not_poison_best_so_far() {
+        let mut obj = NanThenFinite { evals: 0 };
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        assert!(b.try_eval(&[0.1]).is_some());
+        assert!(b.best().is_none(), "a NaN observation must not become the best");
+        assert!(b.try_eval(&[0.2]).is_some());
+        // +inf is comparable — a legitimate (terrible) best
+        assert_eq!(b.best().map(|(_, f)| f), Some(f64::INFINITY));
+        assert!(b.try_eval(&[0.3]).is_some());
+        let (_, bf) = b.best().expect("finite best");
+        assert_eq!(bf, 5.0);
+        assert!(!bf.is_nan());
     }
 
     #[test]

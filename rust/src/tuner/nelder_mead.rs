@@ -140,7 +140,9 @@ impl Tuner for NelderMeadTuner {
         while iters < cfg.max_iters && !broker.exhausted() {
             iters += 1;
             // order best → worst (stable: ties keep insertion order)
-            simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+            // total_cmp: a NaN vertex sorts worst and gets replaced first
+            // (Equal-on-NaN left it stuck wherever it sat)
+            simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
             let (fb, fw) = (simplex[0].1, simplex[n].1);
             if fw - fb <= cfg.tol * fb.abs().max(1e-9) {
                 break; // simplex collapsed onto (noise around) one value

@@ -4,7 +4,7 @@
 use crate::cluster::ClusterSpec;
 use crate::config::ParameterSpace;
 use crate::sim::constants::FAILED_JOB_PENALTY;
-use crate::sim::{simulate, JobRunResult, ScenarioSpec, SimOptions};
+use crate::sim::{simulate_with_buffers, JobRunResult, ScenarioSpec, SimBuffers, SimOptions};
 use crate::util::stats::percentile;
 use crate::workloads::WorkloadProfile;
 
@@ -149,6 +149,9 @@ pub struct SimObjective {
     /// else all-but-one core). 1 = sequential.
     workers: Option<usize>,
     evals: u64,
+    /// Reused simulator buffer pool for the sequential `Single` eval path:
+    /// thousands of SPSA observations share one arena/queue allocation.
+    bufs: SimBuffers,
     /// Simulated seconds of each observation in the most recent
     /// `eval`/`eval_batch` call (see [`Objective::last_durations`]): the
     /// run's real elapsed time — retries and aborts included — which for
@@ -174,6 +177,7 @@ impl SimObjective {
             agg: ObsAgg::Single,
             workers: None,
             evals: 0,
+            bufs: SimBuffers::new(),
             last_durs: Vec::new(),
         }
     }
@@ -265,7 +269,13 @@ impl Objective for SimObjective {
         match self.agg {
             ObsAgg::Single => {
                 let opts = self.next_opts();
-                let r = simulate(&self.cluster, &config, &self.workload, &opts);
+                let r = simulate_with_buffers(
+                    &self.cluster,
+                    &config,
+                    &self.workload,
+                    &opts,
+                    &mut self.bufs,
+                );
                 // the run's real simulated seconds (an aborted run costs
                 // its time-to-abort, not the penalized score)
                 self.last_durs = vec![r.exec_time_s];

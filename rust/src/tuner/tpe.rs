@@ -175,7 +175,9 @@ impl Tuner for TpeTuner {
             } else {
                 // good/bad quantile split over the broker trace
                 let mut sorted = observed;
-                sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+                // total_cmp: NaN observations sort to the bad tail instead
+                // of comparing Equal and drifting into the good split
+                sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
                 let n_good = ((cfg.gamma * sorted.len() as f64).ceil() as usize)
                     .clamp(1, sorted.len() - 1);
                 let (good, bad) = sorted.split_at(n_good);
@@ -210,7 +212,7 @@ impl Tuner for TpeTuner {
                     })
                     .collect();
                 // stable sort: ties keep draw order → deterministic
-                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+                scored.sort_by(|a, b| b.0.total_cmp(&a.0));
 
                 // batch-propose the top *uncached* candidates
                 let cap = (cfg.batch as u64).min(broker.remaining()) as usize;

@@ -11,6 +11,10 @@ use super::stats::OnlineStats;
 pub struct BenchResult {
     pub name: String,
     pub mean_ns: f64,
+    /// Median of the per-iteration samples — the robust central figure
+    /// `repro bench` baselines on (a page fault or scheduler hiccup moves
+    /// the mean, not the median).
+    pub median_ns: f64,
     pub stddev_ns: f64,
     pub iters: u64,
 }
@@ -53,6 +57,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u64, min_iters: u64, min_time_s: f6
         f();
     }
     let mut stats = OnlineStats::new();
+    let mut samples: Vec<f64> = Vec::new();
     let mut total = 0.0;
     let mut iters = 0u64;
     while iters < min_iters || total < min_time_s {
@@ -60,15 +65,19 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u64, min_iters: u64, min_time_s: f6
         f();
         let dt = t0.elapsed().as_secs_f64();
         stats.push(dt * 1e9);
+        samples.push(dt * 1e9);
         total += dt;
         iters += 1;
         if iters > 10_000_000 {
             break; // safety valve
         }
     }
+    samples.sort_by(f64::total_cmp);
+    let median_ns = if samples.is_empty() { 0.0 } else { samples[samples.len() / 2] };
     let r = BenchResult {
         name: name.to_string(),
         mean_ns: stats.mean(),
+        median_ns,
         stddev_ns: stats.stddev(),
         iters,
     };
@@ -101,6 +110,7 @@ mod tests {
         assert!(r.iters >= 10);
         assert!(n >= r.iters);
         assert!(r.mean_ns >= 0.0);
+        assert!(r.median_ns >= 0.0);
     }
 
     #[test]

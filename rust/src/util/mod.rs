@@ -5,6 +5,7 @@
 //! `clap`, `criterion` or `proptest` (see DESIGN.md §7); each submodule is a
 //! small, tested stand-in scoped to exactly what this project needs.
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod error;

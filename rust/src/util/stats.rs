@@ -105,7 +105,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
     let q = if q.is_nan() { 50.0 } else { q.clamp(0.0, 100.0) };
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total order: a NaN sample (e.g. a poisoned observation) sorts to the
+    // high end instead of panicking mid-rank
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = q / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -189,6 +191,17 @@ mod tests {
         assert_eq!(percentile(&xs, f64::INFINITY), 4.0);
         assert!(percentile(&xs, f64::NAN).is_finite());
         assert_eq!(percentile(&[7.5], 250.0), 7.5);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // a NaN sample used to panic `partial_cmp().unwrap()` mid-sort;
+        // under total_cmp it sorts above +inf and low percentiles stay
+        // meaningful
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

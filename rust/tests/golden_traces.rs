@@ -20,7 +20,9 @@ use std::path::PathBuf;
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
 use hadoop_spsa::coordinator::profile_for;
-use hadoop_spsa::sim::{simulate, JobRunResult, ScenarioSpec, SimOptions};
+use hadoop_spsa::sim::{
+    simulate, simulate_with_queue, JobRunResult, QueueKind, ScenarioSpec, SimOptions,
+};
 use hadoop_spsa::workloads::Benchmark;
 
 fn fixture_path() -> PathBuf {
@@ -79,8 +81,15 @@ fn digest(r: &JobRunResult) -> String {
     )
 }
 
-/// Compute the full golden matrix: key → digest.
+/// Compute the full golden matrix: key → digest. The default entry point
+/// runs the production `simulate` path (whatever queue it ships with).
 fn compute_matrix() -> BTreeMap<String, String> {
+    compute_matrix_with(None)
+}
+
+/// Same matrix with the event-queue implementation pinned explicitly —
+/// `None` exercises the production `simulate` path.
+fn compute_matrix_with(kind: Option<QueueKind>) -> BTreeMap<String, String> {
     let cluster = ClusterSpec::paper_cluster();
     let mut out = BTreeMap::new();
     for (vtag, version) in [("v1", HadoopVersion::V1), ("v2", HadoopVersion::V2)] {
@@ -92,7 +101,10 @@ fn compute_matrix() -> BTreeMap<String, String> {
                 [("benign", ScenarioSpec::default()), ("fail5", faulty_scenario())]
             {
                 let opts = SimOptions { seed: 42, noise: true, scenario };
-                let r = simulate(&cluster, &config, &w, &opts);
+                let r = match kind {
+                    None => simulate(&cluster, &config, &w, &opts),
+                    Some(k) => simulate_with_queue(&cluster, &config, &w, &opts, k),
+                };
                 let key = format!("{vtag}/{}/{stag}", bench.label().replace(' ', "_"));
                 out.insert(key, digest(&r));
             }
@@ -195,6 +207,25 @@ fn golden_traces_match_fixtures() {
             "recorded {fresh} new golden fixture(s) — commit rust/tests/golden/traces.tsv"
         );
     }
+}
+
+#[test]
+fn calendar_and_heap_queues_produce_identical_digests() {
+    // The calendar queue replaced the BinaryHeap on the hot path; its pop
+    // order must be indistinguishable — every golden case (all 5 benchmarks
+    // × both versions × benign/fail5) digests bit-identically under either
+    // implementation, and both agree with the production path.
+    let cal = compute_matrix_with(Some(QueueKind::Calendar));
+    let heap = compute_matrix_with(Some(QueueKind::Heap));
+    assert_eq!(cal.len(), 20, "5 benchmarks × 2 versions × 2 scenarios");
+    for (key, want) in &cal {
+        let got = &heap[key];
+        if want != got {
+            print_field_diff(key, want, got);
+        }
+        assert_eq!(want, got, "queue implementations diverged on {key}");
+    }
+    assert_eq!(cal, compute_matrix(), "production path disagrees with pinned queues");
 }
 
 #[test]

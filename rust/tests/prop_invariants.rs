@@ -5,7 +5,9 @@
 use hadoop_spsa::config::{HadoopVersion, ParamKind, ParameterSpace};
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::engine::{run_job, Split};
-use hadoop_spsa::sim::{map_output_for_split, simulate, ScenarioSpec, SimOptions};
+use hadoop_spsa::sim::{
+    map_output_for_split, simulate, simulate_with_queue, QueueKind, ScenarioSpec, SimOptions,
+};
 use hadoop_spsa::tuner::registry::{self, TunerContext};
 use hadoop_spsa::tuner::{
     Budget, EvalBroker, Objective, QuadraticObjective, SimObjective, Spsa, SpsaConfig,
@@ -205,6 +207,41 @@ fn scenario_processes_every_split_exactly_once() {
             assert_that(c.map_attempts >= c.n_maps, "attempts under successes")?;
         }
         assert_that(a.exec_time_s.is_finite() && a.exec_time_s > 0.0, "finite positive")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn queue_implementations_are_interchangeable_under_any_scenario() {
+    // The pop-order contract at full-simulation level: for ANY workload,
+    // ANY configuration, ANY fault scenario and ANY seed, the calendar
+    // queue and the legacy binary heap drive bit-identical runs — pop
+    // order is a pure function of queued (time, seq), so the physics
+    // cannot see which structure served the events.
+    forall("calendar ≡ heap at simulation level", 15, |g| {
+        let mut w = any_profile(g);
+        w.input_bytes = g.u64_in(256 << 20, 4 << 30);
+        let space = if g.bool() { ParameterSpace::v1() } else { ParameterSpace::v2() };
+        let theta = g.unit_vec(space.dim());
+        let cfg = space.materialize(&theta);
+        let cluster = ClusterSpec::paper_cluster();
+        let opts = SimOptions {
+            seed: g.u64_in(1, 1 << 40),
+            noise: true,
+            scenario: any_scenario(g),
+        };
+        let cal = simulate_with_queue(&cluster, &cfg, &w, &opts, QueueKind::Calendar);
+        let heap = simulate_with_queue(&cluster, &cfg, &w, &opts, QueueKind::Heap);
+        assert_that(
+            cal.exec_time_s.to_bits() == heap.exec_time_s.to_bits(),
+            format!("exec diverged: cal {} heap {}", cal.exec_time_s, heap.exec_time_s),
+        )?;
+        assert_that(cal.counters == heap.counters, "counters diverged")?;
+        assert_that(
+            cal.phases.total().to_bits() == heap.phases.total().to_bits(),
+            "phase breakdown diverged",
+        )?;
+        assert_that(cal.job_failed == heap.job_failed, "failure verdict diverged")?;
         Ok(())
     });
 }
