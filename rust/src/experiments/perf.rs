@@ -16,7 +16,8 @@ use crate::cluster::ClusterSpec;
 use crate::config::ParameterSpace;
 use crate::coordinator::profile_for;
 use crate::sim::{
-    simulate_batch, simulate_with_buffers, ScenarioSpec, SimBuffers, SimJob, SimOptions,
+    simulate_batch, simulate_with_buffers, ScenarioSpec, SimBuffers, SimCounters, SimJob,
+    SimOptions,
 };
 use crate::util::alloc;
 use crate::util::bench::{bench, black_box};
@@ -49,6 +50,34 @@ pub struct CaseResult {
     /// counter is monotone, so the value folds in every earlier case —
     /// comparable across runs because case order is fixed.
     pub peak_live_bytes: Option<f64>,
+    /// Cost-model evaluations per (steady-state) run — after the warm-up
+    /// run, so warm-cache cases report their warm number. Deterministic;
+    /// informational, never gated.
+    pub cost_evals_per_run: u64,
+    /// Warm-cache lookups served per (steady-state) run. Informational.
+    pub warm_hits_per_run: u64,
+}
+
+/// The per-run meter sample a bench case's closure reports: the event
+/// count (ns/event denominator) plus the costing meters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunMeter {
+    pub events: u64,
+    pub cost_evals: u64,
+    pub warm_hits: u64,
+}
+
+impl RunMeter {
+    pub fn of(c: &SimCounters) -> Self {
+        RunMeter { events: c.events, cost_evals: c.cost_evals, warm_hits: c.warm_hits }
+    }
+
+    /// Fold another run into this sample (multi-run cases: batch waves).
+    pub fn add(&mut self, c: &SimCounters) {
+        self.events += c.events;
+        self.cost_evals += c.cost_evals;
+        self.warm_hits += c.warm_hits;
+    }
 }
 
 /// The fail5 tier of the golden matrix (kept in sync with
@@ -64,11 +93,15 @@ fn faulty_scenario() -> ScenarioSpec {
         .with_speculation(true)
 }
 
-/// Measure one case. `run` executes the workload once and returns the
-/// event count it dispatched; the first call doubles as warm-up and the
-/// reference event count.
-fn measure<F: FnMut() -> u64>(name: &str, quick: bool, mut run: F) -> CaseResult {
-    let events_per_run = run();
+/// Measure one case. `run` executes the workload once and returns its
+/// [`RunMeter`]. The first call is a discarded warm-up; the second call's
+/// meter is the reference, so cases sharing a buffer pool report their
+/// steady-state (warm) costing meters. The event count is deterministic
+/// and identical across runs either way.
+fn measure<F: FnMut() -> RunMeter>(name: &str, quick: bool, mut run: F) -> CaseResult {
+    black_box(run());
+    let meter = run();
+    let events_per_run = meter.events;
     // allocation metering over a fixed window, separate from the timed
     // loop so the snapshot reads don't sit on the timed path
     let alloc_runs: u64 = if quick { 3 } else { 10 };
@@ -96,6 +129,8 @@ fn measure<F: FnMut() -> u64>(name: &str, quick: bool, mut run: F) -> CaseResult
         events_per_sec: ev * 1e9 / r.median_ns.max(1e-9),
         allocs_per_run,
         peak_live_bytes: if metered { Some(after.peak_live_bytes as f64) } else { None },
+        cost_evals_per_run: meter.cost_evals,
+        warm_hits_per_run: meter.warm_hits,
     }
 }
 
@@ -116,7 +151,9 @@ pub fn run_all(quick: bool) -> Vec<CaseResult> {
             let opts = SimOptions { seed: 42, noise: true, scenario };
             let name = format!("sim/{}/{stag}", b.label().replace(' ', "_"));
             out.push(measure(&name, quick, || {
-                simulate_with_buffers(&cluster, &config, &w, &opts, &mut bufs).counters.events
+                RunMeter::of(
+                    &simulate_with_buffers(&cluster, &config, &w, &opts, &mut bufs).counters,
+                )
             }));
         }
     }
@@ -127,7 +164,7 @@ pub fn run_all(quick: bool) -> Vec<CaseResult> {
     tuned.io_sort_mb = 500;
     let opts = SimOptions { seed: 42, noise: true, ..Default::default() };
     out.push(measure("sim/Terasort-95reducers/benign", quick, || {
-        simulate_with_buffers(&cluster, &tuned, &w, &opts, &mut bufs).counters.events
+        RunMeter::of(&simulate_with_buffers(&cluster, &tuned, &w, &opts, &mut bufs).counters)
     }));
     // sequential batch wave: one buffer pool amortized across 8 jobs
     let jobs: Vec<SimJob> = (0..8)
@@ -137,7 +174,33 @@ pub fn run_all(quick: bool) -> Vec<CaseResult> {
         })
         .collect();
     out.push(measure("batch/Terasort-8jobs/seq", quick, || {
-        simulate_batch(&cluster, jobs.clone(), &w, 1).iter().map(|r| r.counters.events).sum()
+        let mut m = RunMeter::default();
+        for r in simulate_batch(&cluster, jobs.clone(), &w, 1) {
+            m.add(&r.counters);
+        }
+        m
+    }));
+    // Level-1 showcase: a benign homogeneous run priced entirely through
+    // the per-run cost tables. Own pool so its meters aren't colored by
+    // the mixed traffic above; the alloc meter verifies the launch paths
+    // stay allocation-free (no per-launch TaskRates).
+    let mut hom_bufs = SimBuffers::new();
+    let opts = SimOptions { seed: 42, noise: true, ..Default::default() };
+    out.push(measure("sim/homogeneous-costing/benign", quick, || {
+        RunMeter::of(&simulate_with_buffers(&cluster, &config, &w, &opts, &mut hom_bufs).counters)
+    }));
+    // Level-2 showcase: a percentile wave (same θ/profile/cluster, seeds
+    // varied) through one pool. After the cold first run every wave is a
+    // warm benign twin, so the steady-state meter reports warm_hits > 0
+    // and far fewer cost_evals than the cold homogeneous case above.
+    let mut wave_bufs = SimBuffers::new();
+    out.push(measure("warm/Terasort-percentile-wave", quick, || {
+        let mut m = RunMeter::default();
+        for k in 0..4 {
+            let opts = SimOptions { seed: 4242 + k, noise: true, ..Default::default() };
+            m.add(&simulate_with_buffers(&cluster, &config, &w, &opts, &mut wave_bufs).counters);
+        }
+        m
     }));
     out
 }
@@ -169,7 +232,9 @@ pub fn to_json(cases: &[CaseResult], quick: bool) -> Json {
             .set("ns_per_event", Json::Num(c.ns_per_event))
             .set("events_per_sec", Json::Num(c.events_per_sec))
             .set("allocs_per_run", opt_num(c.allocs_per_run))
-            .set("peak_live_bytes", opt_num(c.peak_live_bytes));
+            .set("peak_live_bytes", opt_num(c.peak_live_bytes))
+            .set("cost_evals_per_run", Json::Num(c.cost_evals_per_run as f64))
+            .set("warm_hits_per_run", Json::Num(c.warm_hits_per_run as f64));
         arr.push(j);
     }
     root.set("cases", Json::Arr(arr));
@@ -198,9 +263,23 @@ pub fn parse_cases(doc: &Json) -> Vec<CaseResult> {
             events_per_sec: num("events_per_sec").unwrap_or(0.0),
             allocs_per_run: num("allocs_per_run"),
             peak_live_bytes: num("peak_live_bytes"),
+            cost_evals_per_run: num("cost_evals_per_run").unwrap_or(0.0) as u64,
+            warm_hits_per_run: num("warm_hits_per_run").unwrap_or(0.0) as u64,
         });
     }
     out
+}
+
+/// Baseline case names no longer present in the current case list —
+/// advisory, so a renamed or removed case can't silently rot in
+/// `BENCH_sim.json` while `check` skips it. Reseal the baseline with
+/// `repro bench --update-baseline` to clear them.
+pub fn stale_cases(current: &[CaseResult], baseline: &[CaseResult]) -> Vec<String> {
+    baseline
+        .iter()
+        .filter(|b| !current.iter().any(|c| c.name == b.name))
+        .map(|b| b.name.clone())
+        .collect()
 }
 
 /// Diff fresh results against a baseline. Returns one human-readable
@@ -251,13 +330,17 @@ mod tests {
             events_per_sec: 1e9 / ns_per_event,
             allocs_per_run: allocs,
             peak_live_bytes: peak,
+            cost_evals_per_run: 0,
+            warm_hits_per_run: 0,
         }
     }
 
     #[test]
     fn json_roundtrip_preserves_cases() {
-        let cases =
+        let mut cases =
             vec![case("sim/Terasort/benign", 120.0, Some(40.0), Some(1e6)), case("x", 5.0, None, None)];
+        cases[0].cost_evals_per_run = 77;
+        cases[0].warm_hits_per_run = 3;
         let doc = to_json(&cases, true);
         let parsed = Json::parse(&doc.to_pretty()).expect("own output parses");
         assert_eq!(parse_cases(&parsed), cases);
@@ -298,13 +381,39 @@ mod tests {
         let r = measure("test/noop", true, || {
             n += 1;
             black_box(n);
-            2000
+            RunMeter { events: 2000, cost_evals: 150, warm_hits: 7 }
         });
         assert_eq!(r.events_per_run, 2000);
+        assert_eq!(r.cost_evals_per_run, 150);
+        assert_eq!(r.warm_hits_per_run, 7);
         assert!(r.ns_per_event >= 0.0);
         assert!((r.ns_per_event - r.median_ns_per_run / 2000.0).abs() < 1e-9);
         // library/test builds have no counting allocator installed
         assert_eq!(r.allocs_per_run, None);
         assert_eq!(r.peak_live_bytes, None);
+    }
+
+    #[test]
+    fn stale_baseline_cases_are_flagged_not_ignored() {
+        let cur = vec![case("a", 100.0, None, None)];
+        let base =
+            vec![case("a", 100.0, None, None), case("sim/renamed/benign", 1.0, None, None)];
+        assert_eq!(stale_cases(&cur, &base), vec!["sim/renamed/benign".to_string()]);
+        // stale entries are advisory: they never become gate violations
+        assert!(check(&cur, &base).is_empty());
+        assert!(stale_cases(&base, &base).is_empty());
+    }
+
+    #[test]
+    fn empty_baseline_never_hard_gates() {
+        // The first committed BENCH_sim.json carries no cases until CI
+        // seals real numbers; an empty baseline must produce neither
+        // violations nor stale flags, so the gate cannot trip vacuously.
+        let doc = Json::parse("{\"cases\": []}").expect("valid json");
+        let base = parse_cases(&doc);
+        assert!(base.is_empty());
+        let cur = vec![case("a", 100.0, Some(10.0), Some(1e6))];
+        assert!(check(&cur, &base).is_empty());
+        assert!(stale_cases(&cur, &base).is_empty());
     }
 }

@@ -691,6 +691,14 @@ fn cmd_bench() -> i32 {
         );
         return 0;
     }
+    // Stale baseline entries (cases renamed or removed since the baseline
+    // was sealed) are flagged but never affect the exit code.
+    for name in perf::stale_cases(&results, &baseline) {
+        println!(
+            "STALE baseline case '{name}' is no longer measured — advisory; \
+             reseal with `repro bench --update-baseline`"
+        );
+    }
     let violations = perf::check(&results, &baseline);
     if violations.is_empty() {
         println!("all {} case(s) within the regression gate", results.len());

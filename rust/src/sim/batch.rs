@@ -39,11 +39,28 @@ pub fn simulate_batch(
     w: &WorkloadProfile,
     workers: usize,
 ) -> Vec<JobRunResult> {
+    let mut bufs = SimBuffers::new();
+    simulate_batch_with_buffers(cluster, jobs, w, workers, &mut bufs)
+}
+
+/// [`simulate_batch`] threading the caller's buffer pool through the
+/// sequential path, so the pool's warm cost cache (`sim::cost`) carries
+/// across consecutive batches — `SimObjective`'s percentile waves re-run
+/// the same (config, workload) with only seeds varied, exactly the warm
+/// case. Parallel chunks still get their own pools (pools never cross
+/// threads); since pooling and warm reuse are bit-invisible, results
+/// stay independent of the worker count either way.
+pub fn simulate_batch_with_buffers(
+    cluster: &ClusterSpec,
+    jobs: Vec<SimJob>,
+    w: &WorkloadProfile,
+    workers: usize,
+    bufs: &mut SimBuffers,
+) -> Vec<JobRunResult> {
     if workers <= 1 || jobs.len() <= 1 {
-        let mut bufs = SimBuffers::new();
         return jobs
             .into_iter()
-            .map(|j| simulate_with_buffers(cluster, &j.config, w, &j.opts, &mut bufs))
+            .map(|j| simulate_with_buffers(cluster, &j.config, w, &j.opts, bufs))
             .collect();
     }
     let cluster = Arc::new(cluster.clone());
@@ -192,5 +209,42 @@ mod tests {
         }
         // no scenario state bled into the benign second run
         assert_eq!(batch[1].counters.killed_attempts + batch[1].counters.map_failures, 0);
+    }
+
+    #[test]
+    fn caller_pool_batches_are_warm_and_bit_identical() {
+        // A same-(config, workload) seed wave through one caller-owned
+        // pool — the SimObjective percentile shape — must (a) actually
+        // engage the warm cost cache after the first run, and (b) stay
+        // bit-identical to fresh-pool batches at any worker count.
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut rng = Rng::seeded(7);
+        let w = Benchmark::Terasort.profile_scaled(200_000, 1 << 30, &mut rng);
+        let jobs: Vec<SimJob> = (0..5)
+            .map(|i| SimJob {
+                config: space.default_config(),
+                opts: SimOptions { seed: 300 + i, noise: true, ..Default::default() },
+            })
+            .collect();
+        let mut bufs = SimBuffers::new();
+        let warm = simulate_batch_with_buffers(&cluster, jobs.clone(), &w, 1, &mut bufs);
+        let fresh = simulate_batch(&cluster, jobs.clone(), &w, 1);
+        let par = simulate_batch(&cluster, jobs, &w, 3);
+        for ((a, b), c) in warm.iter().zip(&fresh).zip(&par) {
+            assert_eq!(a.exec_time_s, b.exec_time_s);
+            assert_eq!(a.counters, b.counters);
+            assert_eq!(a.phases, b.phases);
+            assert_eq!(b.counters, c.counters);
+            assert_eq!(b.exec_time_s, c.exec_time_s);
+        }
+        // Cost tables are seed-independent (block layout is not a
+        // function of the RNG), so runs 2.. of the wave serve warm hits
+        // and evaluate (far) fewer costs than the cold first run.
+        if matches!(crate::sim::CostMode::default_mode(), crate::sim::CostMode::Table) {
+            assert_eq!(warm[0].counters.warm_hits, 0);
+            assert!(warm[1].counters.warm_hits > 0, "wave run 2 never hit the warm cache");
+            assert!(warm[1].counters.cost_evals < warm[0].counters.cost_evals);
+        }
     }
 }

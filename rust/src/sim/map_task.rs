@@ -17,8 +17,9 @@ pub struct TaskRates {
     pub cpu_ops_per_sec: f64,
 }
 
-/// Cost breakdown of one map task.
-#[derive(Clone, Debug, Default)]
+/// Cost breakdown of one map task. `Copy` (all-scalar) so the costing
+/// memo in `sim::cost` can store and serve it by value.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct MapTaskCost {
     pub read_s: f64,
     pub map_cpu_s: f64,

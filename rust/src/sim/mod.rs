@@ -8,6 +8,7 @@
 pub mod arena;
 pub mod batch;
 pub mod constants;
+pub mod cost;
 pub mod event;
 pub mod map_task;
 pub mod reduce_task;
@@ -16,10 +17,14 @@ pub mod simulator;
 pub mod trace;
 
 pub use arena::{Arena, RunningSet};
-pub use batch::{simulate_batch, simulate_batch_auto, SimJob};
+pub use batch::{simulate_batch, simulate_batch_auto, simulate_batch_with_buffers, SimJob};
+pub use cost::{CostMode, WarmCache};
 pub use event::{CalendarQueue, EventQueue, HeapQueue, QueueKind, SimTime};
 pub use map_task::{map_output_for_split, map_task_cost, MapTaskCost, TaskRates};
 pub use reduce_task::{reduce_task_cost, ReduceTaskCost};
 pub use scenario::{NodeCrash, NodeSlowdown, ScenarioSpec, TaskKind};
-pub use simulator::{simulate, simulate_with_buffers, simulate_with_queue, SimBuffers, SimOptions};
+pub use simulator::{
+    simulate, simulate_with_buffers, simulate_with_cost_mode, simulate_with_queue, SimBuffers,
+    SimOptions,
+};
 pub use trace::{JobRunResult, PhaseBreakdown, SimCounters};

@@ -9,8 +9,9 @@ use super::map_task::TaskRates;
 use crate::config::HadoopConfig;
 use crate::workloads::WorkloadProfile;
 
-/// Cost breakdown of one reduce task.
-#[derive(Clone, Debug, Default)]
+/// Cost breakdown of one reduce task. `Copy` (all-scalar) so the
+/// costing memo in `sim::cost` can store and serve it by value.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct ReduceTaskCost {
     /// Network fetch time for this reducer's partition.
     pub shuffle_s: f64,

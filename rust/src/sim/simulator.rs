@@ -29,9 +29,10 @@ use crate::workloads::WorkloadProfile;
 
 use super::arena::{Arena, RunningSet};
 use super::constants::*;
+use super::cost::{CostMode, WarmCache};
 use super::event::{EventQueue, QueueKind};
-use super::map_task::{map_output_for_split, map_task_cost, TaskRates};
-use super::reduce_task::reduce_task_cost;
+use super::map_task::{map_output_for_split, map_task_cost, MapTaskCost, TaskRates};
+use super::reduce_task::{reduce_task_cost, ReduceTaskCost};
 use super::scenario::{self, ScenarioSpec, TaskKind};
 use super::trace::{JobRunResult, PhaseBreakdown, SimCounters};
 
@@ -175,6 +176,13 @@ pub struct SimBuffers {
     reduce_slots: Vec<Slot>,
     /// Scratch id list for crash/abort victim sweeps.
     scratch: Vec<usize>,
+    /// Cross-run warm state for the costing fast path (cost tables +
+    /// attempt-0 noise prefix — see `sim::cost`). Unlike the other pool
+    /// fields its *contents* deliberately survive between runs; it is
+    /// still physics-free, because a memo hit returns the pure cost
+    /// functions' own earlier output (table ≡ direct is property- and
+    /// golden-tested).
+    warm: WarmCache,
 }
 
 impl SimBuffers {
@@ -187,6 +195,12 @@ struct Sim<'a> {
     config: &'a HadoopConfig,
     w: &'a WorkloadProfile,
     opts: &'a SimOptions,
+    /// How attempts are priced: memoized cost tables (`Table`) or a
+    /// fresh cost-model evaluation per launch (`Direct`).
+    cost_mode: CostMode,
+    /// Cost tables + attempt-0 noise prefix (used in `Table` mode only;
+    /// handed back through `SimBuffers` so the next run can inherit it).
+    warm: WarmCache,
 
     q: EventQueue<Event>,
     tracker: ResourceTracker,
@@ -245,11 +259,14 @@ impl<'a> Sim<'a> {
         w: &'a WorkloadProfile,
         opts: &'a SimOptions,
         kind: QueueKind,
+        cost_mode: CostMode,
         bufs: SimBuffers,
     ) -> Self {
         // Move the pooled buffers in, reset them, and refill — `run`
-        // hands them back. Capacity survives; contents never do, so a
-        // warmed pool and a fresh one are indistinguishable to physics.
+        // hands them back. Capacity survives; contents never do (except
+        // the warm cost cache, whose reuse is physics-free by
+        // construction), so a warmed pool and a fresh one are
+        // indistinguishable to physics.
         let SimBuffers {
             mut q,
             mut node_pending,
@@ -263,6 +280,7 @@ impl<'a> Sim<'a> {
             mut map_slots,
             mut reduce_slots,
             mut scratch,
+            mut warm,
         } = bufs;
         q.reset(kind);
         attempts.clear();
@@ -282,12 +300,20 @@ impl<'a> Sim<'a> {
         let file = namenode.create_file(&w.name, w.input_bytes, split_bytes, &mut rng);
         let n_maps = file.blocks.len() as u64;
 
-        // total shuffle volume (pre-compression) is known analytically
-        let total_shuffle_raw: f64 = file
-            .blocks
-            .iter()
-            .map(|b| map_output_for_split(config, w, b.size).raw_bytes)
-            .sum();
+        // total shuffle volume (pre-compression) is known analytically;
+        // in Table mode the per-split raw bytes come from (and seed) the
+        // warm cache's split classes — bit-identical, same values summed
+        // in the same order
+        let table = matches!(cost_mode, CostMode::Table);
+        let total_shuffle_raw: f64 = if table {
+            warm.begin_run(cluster, config, w, &opts.scenario);
+            warm.assign_splits(config, w, file.blocks.iter().map(|b| b.size))
+        } else {
+            file.blocks
+                .iter()
+                .map(|b| map_output_for_split(config, w, b.size).raw_bytes)
+                .sum()
+        };
 
         // Interleave slots across nodes (slot k of every node, then slot
         // k+1, …) so partially-filled waves spread over the whole cluster —
@@ -308,6 +334,21 @@ impl<'a> Sim<'a> {
         }
 
         let n_reduces = config.reduce_tasks.max(1);
+
+        // Attempt-0 noise prefix: every task's first attempt draws its
+        // noise exactly once per run anyway, so prefilling is free on a
+        // cold run — and a warm run with the same seed (scenario twins)
+        // inherits the whole prefix instead of redrawing it. Noise is
+        // keyed (seed, kind, task, attempt), so the factors are
+        // independent of scenario and scheduling order.
+        if table && opts.noise {
+            let seed = opts.seed;
+            warm.ensure_noise_prefix(seed, n_maps as usize, n_reduces as usize, |map, task| {
+                let kind = if map { TaskKind::Map } else { TaskKind::Reduce };
+                raw_noise_factor(seed, kind, task, 0)
+            });
+        }
+
         let mut counters = SimCounters::default();
         counters.n_maps = n_maps;
         counters.n_reduces = n_reduces;
@@ -342,6 +383,8 @@ impl<'a> Sim<'a> {
             config,
             w,
             opts,
+            cost_mode,
+            warm,
             q,
             tracker: ResourceTracker::new(cluster),
             phases: PhaseBreakdown::default(),
@@ -378,18 +421,23 @@ impl<'a> Sim<'a> {
 
     /// Per-attempt multiplicative duration noise, keyed by
     /// `(seed, kind, task, attempt)` so it is independent of scheduling
-    /// order and identical between benign and scenario runs.
-    fn noise_factor_for(&self, kind: TaskKind, task: usize, attempt: u64) -> f64 {
+    /// order and identical between benign and scenario runs. Attempt-0
+    /// factors are served from the warm prefix in `Table` mode — the
+    /// prefix stores [`raw_noise_factor`]'s own output, so the fast path
+    /// is bit-identical to redrawing.
+    fn noise_factor_for(&mut self, kind: TaskKind, task: usize, attempt: u64) -> f64 {
         if !self.opts.noise {
             return 1.0;
         }
-        let mut rng =
-            scenario::attempt_rng(self.opts.seed, scenario::NOISE_SALT, kind, task as u64, attempt);
-        let mut m = rng.lognormal_unit_mean(TASK_NOISE_SIGMA);
-        if rng.bernoulli(STRAGGLER_P) {
-            m *= STRAGGLER_FACTOR;
+        if attempt == 0 && matches!(self.cost_mode, CostMode::Table) {
+            if let Some((m, inherited)) = self.warm.noise0(matches!(kind, TaskKind::Map), task) {
+                if inherited {
+                    self.counters.warm_hits += 1;
+                }
+                return m;
+            }
         }
-        m
+        raw_noise_factor(self.opts.seed, kind, task, attempt)
     }
 
     /// Contention-adjusted resource rates on `node`, scaled by the
@@ -401,6 +449,67 @@ impl<'a> Sim<'a> {
             net_bw: self.tracker.net_bw(node) * speed,
             cpu_ops_per_sec: self.tracker.cpu_rate(node) * speed,
         }
+    }
+
+    /// Price one map attempt. In `Table` mode the cost is served from
+    /// the memo keyed by node class × split class × locality × the
+    /// post-acquire contention triple — every input `map_task_cost`
+    /// reads is either in that key or pinned by the warm signature, so a
+    /// hit is bit-identical to evaluating. Key overflow (pathological
+    /// class counts / user counts) falls back to direct evaluation.
+    fn map_cost(&mut self, node: u32, task: usize, split: u64, local: bool) -> MapTaskCost {
+        if matches!(self.cost_mode, CostMode::Table) {
+            let cpu = self.tracker.users(node, Resource::Cpu);
+            let disk = self.tracker.users(node, Resource::Disk);
+            let net = self.tracker.users(node, Resource::Net);
+            if let Some(key) = self.warm.map_key(node, task, local, cpu, disk, net) {
+                if let Some((cost, inherited)) = self.warm.lookup_map(key) {
+                    if inherited {
+                        self.counters.warm_hits += 1;
+                    }
+                    return cost;
+                }
+                self.counters.cost_evals += 1;
+                let cost = map_task_cost(self.config, self.w, split, local, &self.rates_for(node));
+                self.warm.insert_map(key, cost);
+                return cost;
+            }
+        }
+        self.counters.cost_evals += 1;
+        map_task_cost(self.config, self.w, split, local, &self.rates_for(node))
+    }
+
+    /// Price one reduce attempt (see [`Sim::map_cost`]). The volume
+    /// class (hot partition vs uniform rest) stands in for the exact
+    /// volume in the key — the class↔volume mapping is a function of
+    /// (config, workload) only, which the warm signature pins.
+    fn reduce_cost(&mut self, node: u32, task: usize, vol: f64) -> ReduceTaskCost {
+        if matches!(self.cost_mode, CostMode::Table) {
+            let cpu = self.tracker.users(node, Resource::Cpu);
+            let disk = self.tracker.users(node, Resource::Disk);
+            let net = self.tracker.users(node, Resource::Net);
+            let vol_class = if self.n_reduces > 1 && task > 0 { 1 } else { 0 };
+            if let Some(key) = self.warm.red_key(node, vol_class, cpu, disk, net) {
+                if let Some((cost, inherited)) = self.warm.lookup_red(key) {
+                    if inherited {
+                        self.counters.warm_hits += 1;
+                    }
+                    return cost;
+                }
+                self.counters.cost_evals += 1;
+                let cost = reduce_task_cost(
+                    self.config,
+                    self.w,
+                    vol as u64,
+                    self.n_maps,
+                    &self.rates_for(node),
+                );
+                self.warm.insert_red(key, cost);
+                return cost;
+            }
+        }
+        self.counters.cost_evals += 1;
+        reduce_task_cost(self.config, self.w, vol as u64, self.n_maps, &self.rates_for(node))
     }
 
     fn setup_time(slot: &mut Slot, reuse: u64) -> f64 {
@@ -462,9 +571,8 @@ impl<'a> Sim<'a> {
         if !local {
             self.tracker.acquire(node, Resource::Net);
         }
-        let rates = self.rates_for(node);
         let split = self.file.blocks[task].size;
-        let cost = map_task_cost(self.config, self.w, split, local, &rates);
+        let cost = self.map_cost(node, task, split, local);
         let reuse = self.config.effective_jvm_reuse();
         let setup = Self::setup_time(&mut self.map_slots[slot_idx], reuse);
         let ord = self.map_tasks[task].attempts_launched;
@@ -533,9 +641,8 @@ impl<'a> Sim<'a> {
         self.tracker.acquire(node, Resource::Cpu);
         self.tracker.acquire(node, Resource::Disk);
         self.tracker.acquire(node, Resource::Net);
-        let rates = self.rates_for(node);
         let vol = self.reduce_volume(task);
-        let cost = reduce_task_cost(self.config, self.w, vol as u64, self.n_maps, &rates);
+        let cost = self.reduce_cost(node, task, vol);
         let reuse = self.config.effective_jvm_reuse();
         let setup = Self::setup_time(&mut self.reduce_slots[slot_idx], reuse);
         let ord = self.red_tasks[task].attempts_launched;
@@ -1018,9 +1125,23 @@ impl<'a> Sim<'a> {
             map_slots: self.map_slots,
             reduce_slots: self.reduce_slots,
             scratch: self.scratch,
+            warm: self.warm,
         };
         (result, bufs)
     }
+}
+
+/// Draw the `(seed, kind, task, attempt)`-keyed noise multiplier
+/// (lognormal × occasional straggler). The warm cache's attempt-0
+/// prefix stores exactly these values — any fallback to this function
+/// is therefore bit-identical to a prefix hit.
+fn raw_noise_factor(seed: u64, kind: TaskKind, task: usize, attempt: u64) -> f64 {
+    let mut rng = scenario::attempt_rng(seed, scenario::NOISE_SALT, kind, task as u64, attempt);
+    let mut m = rng.lognormal_unit_mean(TASK_NOISE_SIGMA);
+    if rng.bernoulli(STRAGGLER_P) {
+        m *= STRAGGLER_FACTOR;
+    }
+    m
 }
 
 /// Simulate one job execution; returns wall-clock time and full trace.
@@ -1044,7 +1165,7 @@ pub fn simulate_with_buffers(
     opts: &SimOptions,
     bufs: &mut SimBuffers,
 ) -> JobRunResult {
-    run_with(cluster, config, w, opts, QueueKind::default_kind(), bufs)
+    run_with(cluster, config, w, opts, QueueKind::default_kind(), CostMode::default_mode(), bufs)
 }
 
 /// [`simulate`] on an explicitly chosen event-queue implementation — the
@@ -1058,7 +1179,23 @@ pub fn simulate_with_queue(
     kind: QueueKind,
 ) -> JobRunResult {
     let mut bufs = SimBuffers::new();
-    run_with(cluster, config, w, opts, kind, &mut bufs)
+    run_with(cluster, config, w, opts, kind, CostMode::default_mode(), &mut bufs)
+}
+
+/// [`simulate`] on an explicitly chosen costing mode, reusing the
+/// caller's buffer pool — the hook the equality tests use to prove the
+/// memoized cost tables (cold and warm) and the direct per-launch
+/// costing fallback produce bit-identical physics. A fresh pool makes
+/// `Table` mode cold; reusing one across runs exercises the warm cache.
+pub fn simulate_with_cost_mode(
+    cluster: &ClusterSpec,
+    config: &HadoopConfig,
+    w: &WorkloadProfile,
+    opts: &SimOptions,
+    mode: CostMode,
+    bufs: &mut SimBuffers,
+) -> JobRunResult {
+    run_with(cluster, config, w, opts, QueueKind::default_kind(), mode, bufs)
 }
 
 fn run_with(
@@ -1067,10 +1204,11 @@ fn run_with(
     w: &WorkloadProfile,
     opts: &SimOptions,
     kind: QueueKind,
+    mode: CostMode,
     bufs: &mut SimBuffers,
 ) -> JobRunResult {
     let taken = std::mem::take(bufs);
-    let (result, returned) = Sim::new(cluster, config, w, opts, kind, taken).run();
+    let (result, returned) = Sim::new(cluster, config, w, opts, kind, mode, taken).run();
     *bufs = returned;
     result
 }
@@ -1572,6 +1710,81 @@ mod tests {
             assert_eq!(cal.phases, heap.phases);
             assert_eq!(cal.job_failed, heap.job_failed);
         }
+    }
+
+    #[test]
+    fn table_and_direct_costing_runs_are_bit_identical() {
+        // The costing analogue of the queue test: memoized cost tables
+        // (cold and warm) against the direct per-launch fallback, under
+        // both a benign and a busy scenario.
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        for opts in [o(7, true), SimOptions { seed: 23, noise: true, scenario: busy_scenario() }]
+        {
+            let mut pool = SimBuffers::new();
+            let cold =
+                simulate_with_cost_mode(&cluster, &cfg, &workload(), &opts, CostMode::Table, &mut pool);
+            let warm =
+                simulate_with_cost_mode(&cluster, &cfg, &workload(), &opts, CostMode::Table, &mut pool);
+            let direct = simulate_with_cost_mode(
+                &cluster,
+                &cfg,
+                &workload(),
+                &opts,
+                CostMode::Direct,
+                &mut SimBuffers::new(),
+            );
+            for r in [&cold, &warm] {
+                assert_eq!(r.exec_time_s, direct.exec_time_s);
+                assert_eq!(r.counters, direct.counters);
+                assert_eq!(r.phases, direct.phases);
+                assert_eq!(r.job_failed, direct.job_failed);
+            }
+            // Direct mode evaluates every attempt; the table collapses a
+            // homogeneous run to a handful of distinct keys.
+            assert_eq!(
+                direct.counters.cost_evals,
+                direct.counters.map_attempts + direct.counters.reduce_attempts
+            );
+            assert!(cold.counters.cost_evals < direct.counters.cost_evals);
+        }
+    }
+
+    #[test]
+    fn warm_twin_reuses_cost_tables_and_noise_prefix() {
+        // The acceptance shape: a benign run followed by its faulty twin
+        // (same seed, same config/workload) in one pool. The twin must
+        // (a) be bit-identical to a cold standalone run, and (b) show
+        // warm hits and fewer cost evaluations than that cold run.
+        let cluster = ClusterSpec::paper_cluster();
+        let cfg = ParameterSpace::v1().default_config();
+        let benign = o(42, true);
+        let faulty = SimOptions { seed: 42, noise: true, scenario: busy_scenario() };
+        let mut pool = SimBuffers::new();
+        let first =
+            simulate_with_cost_mode(&cluster, &cfg, &workload(), &benign, CostMode::Table, &mut pool);
+        let twin =
+            simulate_with_cost_mode(&cluster, &cfg, &workload(), &faulty, CostMode::Table, &mut pool);
+        let cold = simulate_with_cost_mode(
+            &cluster,
+            &cfg,
+            &workload(),
+            &faulty,
+            CostMode::Table,
+            &mut SimBuffers::new(),
+        );
+        assert_eq!(twin.exec_time_s, cold.exec_time_s);
+        assert_eq!(twin.counters, cold.counters);
+        assert_eq!(twin.phases, cold.phases);
+        assert_eq!(twin.job_failed, cold.job_failed);
+        assert_eq!(first.counters.warm_hits, 0, "first run in a fresh pool is cold");
+        assert!(twin.counters.warm_hits > 0, "twin never hit the warm cache");
+        assert!(
+            twin.counters.cost_evals < cold.counters.cost_evals,
+            "warm twin must evaluate fewer costs than cold ({} vs {})",
+            twin.counters.cost_evals,
+            cold.counters.cost_evals
+        );
     }
 
     #[test]

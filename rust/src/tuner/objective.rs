@@ -149,8 +149,12 @@ pub struct SimObjective {
     /// else all-but-one core). 1 = sequential.
     workers: Option<usize>,
     evals: u64,
-    /// Reused simulator buffer pool for the sequential `Single` eval path:
-    /// thousands of SPSA observations share one arena/queue allocation.
+    /// Reused simulator buffer pool for the sequential eval paths
+    /// (`Single` evals and 1-worker/percentile batches): thousands of
+    /// SPSA observations share one arena/queue allocation, and the warm
+    /// cost cache (`sim::cost`) carries across repeated observations of
+    /// the same (config, workload) — percentile waves and re-probed θ
+    /// points pay the cost model once, not per run.
     bufs: SimBuffers,
     /// Simulated seconds of each observation in the most recent
     /// `eval`/`eval_batch` call (see [`Objective::last_durations`]): the
@@ -283,12 +287,20 @@ impl Objective for SimObjective {
             }
             ObsAgg::Percentile { .. } => {
                 // the repeated runs of one observation are independent jobs
-                // and fan across the pool like any other batch
+                // and fan across the pool like any other batch; the
+                // sequential path threads the owned buffer pool through,
+                // so the wave's runs 2.. hit the warm cost cache
                 let jobs: Vec<crate::sim::SimJob> = (0..self.runs_per_obs())
                     .map(|_| crate::sim::SimJob { config: config.clone(), opts: self.next_opts() })
                     .collect();
                 let workers = crate::coordinator::pool::resolve_workers(self.workers);
-                let runs = crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers);
+                let runs = crate::sim::simulate_batch_with_buffers(
+                    &self.cluster,
+                    jobs,
+                    &self.workload,
+                    workers,
+                    &mut self.bufs,
+                );
                 let scores: Vec<f64> = runs.iter().map(|r| self.score(r)).collect();
                 // the repeats run as one parallel wave: the observation
                 // takes as long as its slowest run
@@ -330,7 +342,13 @@ impl Objective for SimObjective {
                     .collect::<Vec<_>>()
             })
             .collect();
-        let runs = crate::sim::simulate_batch(&self.cluster, jobs, &self.workload, workers);
+        let runs = crate::sim::simulate_batch_with_buffers(
+            &self.cluster,
+            jobs,
+            &self.workload,
+            workers,
+            &mut self.bufs,
+        );
         let (mut out, mut durs) =
             (Vec::with_capacity(thetas.len()), Vec::with_capacity(thetas.len()));
         for chunk in runs.chunks(per_obs) {
@@ -671,6 +689,23 @@ mod tests {
         let b = par.eval_batch(&thetas);
         assert_eq!(a, b);
         assert_eq!(seq.evals(), par.evals());
+    }
+
+    #[test]
+    fn warm_cost_cache_never_changes_percentile_observations() {
+        // workers=1 threads the objective's one buffer pool — and its
+        // warm cost cache — through every percentile repeat; workers=4
+        // gives each chunk a fresh (cold) pool. The observations must be
+        // bit-identical either way: warm reuse is an allocation/CPU
+        // optimization, never a physics input.
+        let thetas = probe_thetas(4);
+        let mut warm = objective().tail_p95(6).with_workers(1);
+        let mut cold = objective().tail_p95(6).with_workers(4);
+        assert_eq!(warm.eval_batch(&thetas), cold.eval_batch(&thetas));
+        // and interleaved single evals keep sharing the same warm pool
+        let f1 = warm.eval(&thetas[0]);
+        let f2 = cold.eval(&thetas[0]);
+        assert_eq!(f1, f2);
     }
 
     #[test]

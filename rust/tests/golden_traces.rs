@@ -21,7 +21,8 @@ use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::config::{HadoopVersion, ParameterSpace};
 use hadoop_spsa::coordinator::profile_for;
 use hadoop_spsa::sim::{
-    simulate, simulate_with_queue, JobRunResult, QueueKind, ScenarioSpec, SimOptions,
+    simulate, simulate_with_cost_mode, simulate_with_queue, CostMode, JobRunResult, QueueKind,
+    ScenarioSpec, SimBuffers, SimOptions,
 };
 use hadoop_spsa::workloads::Benchmark;
 
@@ -105,6 +106,31 @@ fn compute_matrix_with(kind: Option<QueueKind>) -> BTreeMap<String, String> {
                     None => simulate(&cluster, &config, &w, &opts),
                     Some(k) => simulate_with_queue(&cluster, &config, &w, &opts, k),
                 };
+                let key = format!("{vtag}/{}/{stag}", bench.label().replace(' ', "_"));
+                out.insert(key, digest(&r));
+            }
+        }
+    }
+    out
+}
+
+/// Same matrix with the task-costing path pinned explicitly, threading
+/// every case through the caller's buffer pool — under `CostMode::Table`
+/// this exercises the warm cost cache across all 20 cases (each
+/// (version, benchmark, scenario) change resets or revalidates it).
+fn compute_matrix_cost(mode: CostMode, bufs: &mut SimBuffers) -> BTreeMap<String, String> {
+    let cluster = ClusterSpec::paper_cluster();
+    let mut out = BTreeMap::new();
+    for (vtag, version) in [("v1", HadoopVersion::V1), ("v2", HadoopVersion::V2)] {
+        let space = ParameterSpace::for_version(version);
+        let config = space.default_config();
+        for bench in Benchmark::all() {
+            let w = profile_for(bench, 1000);
+            for (stag, scenario) in
+                [("benign", ScenarioSpec::default()), ("fail5", faulty_scenario())]
+            {
+                let opts = SimOptions { seed: 42, noise: true, scenario };
+                let r = simulate_with_cost_mode(&cluster, &config, &w, &opts, mode, bufs);
                 let key = format!("{vtag}/{}/{stag}", bench.label().replace(' ', "_"));
                 out.insert(key, digest(&r));
             }
@@ -211,21 +237,53 @@ fn golden_traces_match_fixtures() {
 
 #[test]
 fn calendar_and_heap_queues_produce_identical_digests() {
-    // The calendar queue replaced the BinaryHeap on the hot path; its pop
-    // order must be indistinguishable — every golden case (all 5 benchmarks
-    // × both versions × benign/fail5) digests bit-identically under either
-    // implementation, and both agree with the production path.
+    // The calendar queue replaced the BinaryHeap, and the cost tables +
+    // warm cache replaced per-launch direct costing — every fast path must
+    // be indistinguishable. All 20 golden cases (5 benchmarks × both
+    // versions × benign/fail5) must digest bit-identically under either
+    // queue, under direct costing, and under the table/warm path sharing
+    // one buffer pool across the whole matrix; all four agree with the
+    // production `simulate` path.
     let cal = compute_matrix_with(Some(QueueKind::Calendar));
     let heap = compute_matrix_with(Some(QueueKind::Heap));
+    let direct = compute_matrix_cost(CostMode::Direct, &mut SimBuffers::new());
+    let mut warm_bufs = SimBuffers::new();
+    let table = compute_matrix_cost(CostMode::Table, &mut warm_bufs);
     assert_eq!(cal.len(), 20, "5 benchmarks × 2 versions × 2 scenarios");
     for (key, want) in &cal {
-        let got = &heap[key];
-        if want != got {
-            print_field_diff(key, want, got);
+        for (path, got) in [("heap queue", &heap[key]), ("direct costing", &direct[key]),
+            ("table costing", &table[key])]
+        {
+            if want != got {
+                print_field_diff(key, want, got);
+            }
+            assert_eq!(want, got, "{path} diverged on {key}");
         }
-        assert_eq!(want, got, "queue implementations diverged on {key}");
     }
-    assert_eq!(cal, compute_matrix(), "production path disagrees with pinned queues");
+    assert_eq!(cal, compute_matrix(), "production path disagrees with pinned variants");
+
+    // Warm engagement proof: replay one golden case twice through the
+    // matrix pool. The pool's signature is pinned to the LAST matrix case,
+    // so the first replay is a cold reset; the second is a warm benign
+    // twin — bit-identical digest, warm hits served from inherited state,
+    // and strictly fewer cost evaluations than its cold run.
+    let cluster = ClusterSpec::paper_cluster();
+    let config = ParameterSpace::for_version(HadoopVersion::V1).default_config();
+    let w = profile_for(Benchmark::Terasort, 1000);
+    let opts = SimOptions { seed: 42, noise: true, ..Default::default() };
+    let cold =
+        simulate_with_cost_mode(&cluster, &config, &w, &opts, CostMode::Table, &mut warm_bufs);
+    let twin =
+        simulate_with_cost_mode(&cluster, &config, &w, &opts, CostMode::Table, &mut warm_bufs);
+    assert_eq!(digest(&twin), table["v1/Terasort/benign"], "warm twin diverged from golden");
+    assert_eq!(cold.counters.warm_hits, 0, "cold replay must start from a signature reset");
+    assert!(twin.counters.warm_hits > 0, "warm twin never hit the warm cache");
+    assert!(
+        twin.counters.cost_evals < cold.counters.cost_evals,
+        "warm twin did not amortize cost evaluations ({} vs {})",
+        twin.counters.cost_evals,
+        cold.counters.cost_evals
+    );
 }
 
 #[test]

@@ -6,7 +6,8 @@ use hadoop_spsa::config::{HadoopVersion, ParamKind, ParameterSpace};
 use hadoop_spsa::cluster::ClusterSpec;
 use hadoop_spsa::engine::{run_job, Split};
 use hadoop_spsa::sim::{
-    map_output_for_split, simulate, simulate_with_queue, QueueKind, ScenarioSpec, SimOptions,
+    map_output_for_split, simulate, simulate_with_cost_mode, simulate_with_queue, CostMode,
+    QueueKind, ScenarioSpec, SimBuffers, SimOptions,
 };
 use hadoop_spsa::tuner::registry::{self, TunerContext};
 use hadoop_spsa::tuner::{
@@ -242,6 +243,98 @@ fn queue_implementations_are_interchangeable_under_any_scenario() {
             "phase breakdown diverged",
         )?;
         assert_that(cal.job_failed == heap.job_failed, "failure verdict diverged")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_tables_and_direct_costing_are_bit_identical() {
+    // The costing contract at full-simulation level: for ANY workload, ANY
+    // configuration, ANY fault scenario and ANY seed, the per-run cost
+    // tables — cold AND warm through a shared buffer pool — and per-launch
+    // direct costing drive bit-identical runs. Memoization only dedups
+    // evaluations of identical (node class, item, contention) triples, so
+    // the physics cannot see which path priced an attempt.
+    forall("table ≡ direct costing at simulation level", 12, |g| {
+        let mut w = any_profile(g);
+        w.input_bytes = g.u64_in(256 << 20, 4 << 30);
+        let space = if g.bool() { ParameterSpace::v1() } else { ParameterSpace::v2() };
+        let theta = g.unit_vec(space.dim());
+        let cfg = space.materialize(&theta);
+        let cluster = ClusterSpec::paper_cluster();
+        let opts = SimOptions {
+            seed: g.u64_in(1, 1 << 40),
+            noise: true,
+            scenario: any_scenario(g),
+        };
+        let mut bufs = SimBuffers::new();
+        let cold = simulate_with_cost_mode(&cluster, &cfg, &w, &opts, CostMode::Table, &mut bufs);
+        let warm = simulate_with_cost_mode(&cluster, &cfg, &w, &opts, CostMode::Table, &mut bufs);
+        let direct = simulate_with_cost_mode(
+            &cluster,
+            &cfg,
+            &w,
+            &opts,
+            CostMode::Direct,
+            &mut SimBuffers::new(),
+        );
+        for (path, r) in [("cold table", &cold), ("warm table", &warm)] {
+            assert_that(
+                r.exec_time_s.to_bits() == direct.exec_time_s.to_bits(),
+                format!(
+                    "{path}: exec diverged: {} vs direct {}",
+                    r.exec_time_s, direct.exec_time_s
+                ),
+            )?;
+            assert_that(r.counters == direct.counters, format!("{path}: counters diverged"))?;
+            assert_that(
+                r.phases.total().to_bits() == direct.phases.total().to_bits(),
+                format!("{path}: phase breakdown diverged"),
+            )?;
+            assert_that(
+                r.job_failed == direct.job_failed,
+                format!("{path}: failure verdict diverged"),
+            )?;
+        }
+        // identical (config, workload, seed) twin ⇒ the warm run must
+        // actually reuse inherited state, never re-evaluate more
+        assert_that(warm.counters.warm_hits > 0, "warm twin never hit the warm cache")?;
+        assert_that(
+            warm.counters.cost_evals <= cold.counters.cost_evals,
+            "warm twin evaluated more costs than its cold run",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn warm_and_cold_percentile_objectives_are_bit_identical() {
+    // SimObjective threads one buffer pool (and thus the warm cost cache)
+    // through its percentile waves; a sequential warm objective and a
+    // parallel one (fresh pools per worker chunk) must observe the exact
+    // same values for ANY workload, θ sequence and seed.
+    forall("warm ≡ cold percentile objective", 5, |g| {
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let w = any_profile(g);
+        let seed = g.u64_in(1, 1 << 40);
+        let thetas: Vec<Vec<f64>> = (0..3).map(|_| g.unit_vec(space.dim())).collect();
+        let mut warm = SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed)
+            .tail_p95(4)
+            .with_workers(1);
+        let mut cold =
+            SimObjective::new(space, cluster, w, seed).tail_p95(4).with_workers(4);
+        for (i, t) in thetas.iter().enumerate() {
+            let a = warm.eval(t);
+            let b = cold.eval(t);
+            assert_that(
+                a.to_bits() == b.to_bits(),
+                format!("θ[{i}]: warm {a} != cold {b}"),
+            )?;
+        }
+        let ba = warm.eval_batch(&thetas);
+        let bb = cold.eval_batch(&thetas);
+        assert_that(ba == bb, "eval_batch diverged between warm and cold pools")?;
         Ok(())
     });
 }
