@@ -240,6 +240,28 @@ impl ParameterSpace {
         &self.params[i]
     }
 
+    /// The search-space view after dimension pruning (Tuneful §3): keep
+    /// only the parameters where `keep[i]` is true, in order. The result
+    /// drives a tuner's *proposals* (defaults, perturbations, projection)
+    /// over the free coordinates; it is NOT materializable — expanding a
+    /// reduced θ back to the full space (frozen coordinates pinned to
+    /// defaults) is [`FrozenObjective`]'s job before any simulation runs.
+    /// At least one parameter must be kept.
+    ///
+    /// [`FrozenObjective`]: crate::tuner::objective::FrozenObjective
+    pub fn subspace(&self, keep: &[bool]) -> ParameterSpace {
+        assert_eq!(keep.len(), self.dim(), "keep-mask dimension mismatch");
+        let params: Vec<ParamSpec> = self
+            .params
+            .iter()
+            .zip(keep)
+            .filter(|(_, &k)| k)
+            .map(|(p, _)| p.clone())
+            .collect();
+        assert!(!params.is_empty(), "cannot prune every parameter");
+        ParameterSpace { version: self.version, extended: self.extended, params }
+    }
+
     pub fn names(&self) -> Vec<&'static str> {
         self.params.iter().map(|p| p.name).collect()
     }
@@ -329,6 +351,31 @@ impl ParameterSpace {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn subspace_keeps_order_defaults_and_metadata() {
+        let full = ParameterSpace::v1();
+        let mut keep = vec![false; full.dim()];
+        keep[1] = true;
+        keep[4] = true;
+        let sub = full.subspace(&keep);
+        assert_eq!(sub.dim(), 2);
+        assert_eq!(sub.version, full.version);
+        assert_eq!(sub.spec(0).name, full.spec(1).name);
+        assert_eq!(sub.spec(1).name, full.spec(4).name);
+        assert_eq!(
+            sub.default_theta(),
+            vec![full.default_theta()[1], full.default_theta()[4]]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot prune every parameter")]
+    fn subspace_rejects_empty_mask() {
+        let full = ParameterSpace::v1();
+        let keep = vec![false; full.dim()];
+        let _ = full.subspace(&keep);
+    }
 
     #[test]
     fn both_spaces_have_11_params() {

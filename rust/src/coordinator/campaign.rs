@@ -13,7 +13,9 @@ use crate::cluster::ClusterSpec;
 use crate::config::{HadoopVersion, ParameterSpace};
 use crate::sim::{simulate_batch_auto, ScenarioSpec, SimJob, SimOptions};
 use crate::tuner::registry::{self, TunerContext};
-use crate::tuner::{Budget, EvalBroker, EvalRecord, IterRecord, SimObjective};
+use crate::tuner::{
+    Budget, EvalBroker, EvalRecord, FrozenObjective, IterRecord, SimObjective,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, stddev};
 use crate::workloads::{Benchmark, WorkloadProfile};
@@ -187,6 +189,17 @@ pub struct TrialOutcome {
     /// PPABS, whose corpus profiling is metered via `EvalBroker::charge`
     /// (runs of *other* workloads never enter this trial's trace).
     pub eval_trace: Vec<EvalRecord>,
+    /// `true` when the deployed `tuned_theta`'s claimed f replays a
+    /// store-served value from an earlier campaign that no live
+    /// observation of this run matched or beat — the deployment is
+    /// noise-frozen (see [`ObsSource::Store`]). Always `false` for cold
+    /// (service-less) trials.
+    ///
+    /// [`ObsSource::Store`]: crate::tuner::ObsSource
+    pub noise_frozen: bool,
+    /// Observations served free by the cross-campaign store (warm-start
+    /// seeds + store-tier lookup hits). 0 for cold trials.
+    pub store_hits: u64,
 }
 
 impl TrialOutcome {
@@ -243,10 +256,74 @@ pub fn evaluate_theta(
     (mean(&runs), stddev(&runs))
 }
 
+/// Cross-campaign warm-start context for one trial — assembled by the
+/// service layer ([`coordinator::service`]) from the observation store's
+/// records for campaigns whose workload fingerprint matched this request.
+///
+/// [`coordinator::service`]: crate::coordinator::service
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Prior observations `(full-dimensional θ, f)`, noise-frozen at
+    /// their original draw. Ingested into the broker as free
+    /// [`ObsSource::Store`] records (and, for `Quantized`-policy tuners,
+    /// attached as a store cache tier).
+    ///
+    /// [`ObsSource::Store`]: crate::tuner::ObsSource
+    pub records: Vec<(Vec<f64>, f64)>,
+    /// θ-cell size the records' store was keyed under (coarser than the
+    /// broker memo's 1e-6, so cross-seed revisits actually hit).
+    pub store_quant: f64,
+    /// Dimension-pruning mask (Tuneful §3): `true` freezes that
+    /// parameter at its default for the whole trial. Empty = no pruning.
+    /// Only meaningful for direct-search tuners — model-based tuners
+    /// (Starfish, PPABS, surrogate SPSA) need the full space for their
+    /// what-if features, and the service never prunes them.
+    pub frozen: Vec<bool>,
+}
+
+impl WarmStart {
+    pub fn new(records: Vec<(Vec<f64>, f64)>, store_quant: f64) -> WarmStart {
+        WarmStart { records, store_quant, frozen: Vec::new() }
+    }
+}
+
+/// Expand a reduced θ (one entry per non-frozen coordinate, in index
+/// order) back to the full space: frozen coordinates come from
+/// `template`. With an all-false (or empty) mask this is the identity.
+pub fn expand_theta(template: &[f64], frozen: &[bool], reduced: &[f64]) -> Vec<f64> {
+    if frozen.iter().all(|&fz| !fz) {
+        return reduced.to_vec();
+    }
+    let mut full = template.to_vec();
+    let mut j = 0;
+    for (i, &fz) in frozen.iter().enumerate() {
+        if !fz && j < reduced.len() {
+            full[i] = reduced[j];
+            j += 1;
+        }
+    }
+    full
+}
+
 /// Run one tuning trial end to end: resolve the algorithm from the
 /// registry, let it spend the trial's budget through a metered broker,
 /// then verify tuned vs default on the simulator.
 pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
+    run_trial_warmed(spec, None)
+}
+
+/// [`run_trial`], optionally warm-started from a cross-campaign
+/// [`WarmStart`]: prior records are served to the tuner for free (store
+/// tier + ingested incumbent seeds, both flagged [`ObsSource::Store`]),
+/// and a pruning mask shrinks the search space the tuner sees — the
+/// objective still evaluates full-dimensional configurations via
+/// [`FrozenObjective`], and every θ in the returned outcome/trace is
+/// expanded back to the full space. With `warm == None` this is
+/// bit-identical to the historical cold path.
+///
+/// [`ObsSource::Store`]: crate::tuner::ObsSource
+/// [`FrozenObjective`]: crate::tuner::FrozenObjective
+pub fn run_trial_warmed(spec: &TrialSpec, warm: Option<&WarmStart>) -> TrialOutcome {
     let space = ParameterSpace::for_version(spec.version);
     let cluster = ClusterSpec::paper_cluster();
     // fixed profiling seed: all algorithms tune the *same* workload
@@ -259,16 +336,91 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
     let tuner = registry::create(spec.algo.name(), &ctx)
         .expect("every Algo maps to a registry entry");
 
+    let full_dim = space.dim();
+    let template = space.default_theta();
+    // honor the pruning mask only when it is well-formed and keeps ≥ 1 dim
+    let frozen: Vec<bool> = match warm {
+        Some(ws)
+            if ws.frozen.len() == full_dim
+                && ws.frozen.iter().any(|&fz| fz)
+                && !ws.frozen.iter().all(|&fz| fz) =>
+        {
+            ws.frozen.clone()
+        }
+        _ => vec![false; full_dim],
+    };
+    let pruned = frozen.iter().any(|&fz| fz);
+    let search_space = if pruned {
+        let keep: Vec<bool> = frozen.iter().map(|&fz| !fz).collect();
+        space.subspace(&keep)
+    } else {
+        space.clone()
+    };
+
     // lint:allow(wall-clock): tuning_wall_ms is reporting-only (walltime table) — never feeds modeled results or seeds
     let t0 = std::time::Instant::now();
     let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), spec.seed)
         .with_scenario(spec.scenario.clone());
+    // the freeze adapter is an identity layer when nothing is pruned, so
+    // cold trials take the exact same code path (and values) as before
+    let mut fobj = FrozenObjective::new(&mut obj, template.clone(), &frozen);
     let mut broker =
-        EvalBroker::new(&mut obj, spec.budget).with_cache(tuner.cache_policy());
-    let out = tuner.tune(&mut broker, &space, spec.seed);
+        EvalBroker::new(&mut fobj, spec.budget).with_cache(tuner.cache_policy());
+
+    if let Some(ws) = warm {
+        // project prior full-dim records onto the reduced view: under
+        // pruning only records whose frozen coordinates share the
+        // template's store cell describe the function the tuner explores
+        let quant = if ws.store_quant > 0.0 { ws.store_quant } else { 1e-6 };
+        let cell = |x: f64| (x / quant).round() as i64;
+        let reduced: Vec<(Vec<f64>, f64)> = ws
+            .records
+            .iter()
+            .filter(|(t, _)| {
+                t.len() == full_dim
+                    && frozen
+                        .iter()
+                        .zip(t.iter().zip(&template))
+                        .all(|(&fz, (&x, &d))| !fz || cell(x) == cell(d))
+            })
+            .map(|(t, f)| {
+                let r: Vec<f64> = t
+                    .iter()
+                    .zip(&frozen)
+                    .filter(|(_, &fz)| !fz)
+                    .map(|(&x, _)| x)
+                    .collect();
+                (r, *f)
+            })
+            .collect();
+        broker = broker.with_store_tier(quant, &reduced);
+        // seed the trace: every prior record replays for free at obs 0,
+        // so best-so-far starts at the matched campaigns' incumbent
+        for (t, f) in &reduced {
+            broker.ingest(t, *f);
+        }
+    }
+
+    let mut out = tuner.tune(&mut broker, &search_space, spec.seed);
+    // Satellite bugfix: a store-served incumbent can beat everything the
+    // tuner measured live — deploy the better configuration, but flag it
+    // noise-frozen (its f was observed under an earlier campaign's noise
+    // stream and never re-verified here).
+    if broker.best_noise_frozen() {
+        if let Some((bt, bf)) = broker.best() {
+            // NaN/∞-safe: replace unless the tuner's claim is already ≤
+            if out.best_f.is_nan() || out.best_f > bf {
+                out.best_theta = bt.to_vec();
+                out.best_f = bf;
+                out.noise_frozen = true;
+            }
+        }
+    }
+    let noise_frozen = out.noise_frozen;
+    let store_hits = broker.store_hits();
     let observations = broker.evals_used();
     let elapsed_model_s = broker.elapsed_model_time();
-    let eval_trace = broker.take_trace();
+    let mut eval_trace = broker.take_trace();
     let tuning_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     assert!(
         observations <= spec.budget.max_obs,
@@ -277,12 +429,20 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
         spec.budget.max_obs
     );
 
+    // everything leaving this function is full-dimensional
+    let tuned_theta = expand_theta(&template, &frozen, &out.best_theta);
+    if pruned {
+        for r in &mut eval_trace {
+            r.theta = expand_theta(&template, &frozen, &r.theta);
+        }
+    }
+
     const EVAL_SEED: u64 = 0xE7A1;
     let (tuned_mean_s, tuned_std_s) = evaluate_theta(
         &space,
         &cluster,
         &w,
-        &out.best_theta,
+        &tuned_theta,
         5,
         spec.seed ^ EVAL_SEED,
         &spec.scenario,
@@ -299,7 +459,7 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
 
     TrialOutcome {
         spec: spec.clone(),
-        tuned_theta: out.best_theta,
+        tuned_theta,
         tuned_mean_s,
         tuned_std_s,
         default_mean_s,
@@ -310,6 +470,8 @@ pub fn run_trial(spec: &TrialSpec) -> TrialOutcome {
         elapsed_model_s,
         history: out.history,
         eval_trace,
+        noise_frozen,
+        store_hits,
     }
 }
 

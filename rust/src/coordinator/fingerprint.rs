@@ -1,0 +1,212 @@
+//! Workload fingerprinting (Tuneful §3 / the recurring-jobs premise):
+//! decide whether an incoming tuning request is "the same workload" as a
+//! prior campaign, so its observations can be amortized.
+//!
+//! A fingerprint has two parts:
+//!
+//! * a **size axis** — `log2(input bytes)`, so a 2× input is distance 1
+//!   regardless of absolute scale;
+//! * a **shape vector** — scale-free ratios from the
+//!   [`WorkloadProfile`] (selectivities, skew, compressibility,
+//!   per-record CPU) concatenated with the *phase-profile vector* of a
+//!   noise-free default-configuration simulation: each
+//!   [`PhaseBreakdown`] phase as a fraction of total work, plus
+//!   [`SimCounters`] data-flow ratios (map output / shuffle / final
+//!   output bytes over input bytes). Two jobs that move data through
+//!   the same phases in the same proportions fingerprint alike even if
+//!   their profiles were measured differently.
+//!
+//! [`affinity`] maps a fingerprint pair into `(0, 1]`: exactly `1` iff
+//! the fingerprints are identical, strictly decreasing in both shape
+//! distance and size distance (property-tested: reflexive, and a 2×
+//! input of the same shape scores strictly below an identical job).
+//!
+//! [`PhaseBreakdown`]: crate::sim::PhaseBreakdown
+//! [`SimCounters`]: crate::sim::SimCounters
+//! [`affinity`]: Fingerprint::affinity
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::cluster::ClusterSpec;
+use crate::config::{HadoopVersion, ParameterSpace};
+use crate::sim::{simulate, JobRunResult, ScenarioSpec, SimOptions};
+use crate::workloads::{Benchmark, WorkloadProfile};
+
+use super::campaign::profile_for;
+use super::store::version_tag;
+
+/// Weight of one doubling of input size in the affinity denominator:
+/// a 2× input with an identical shape scores 1/(1+0.25) = 0.8.
+pub const SIZE_WEIGHT: f64 = 0.25;
+
+/// Workload fingerprint: size axis + scale-free shape vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    /// `log2(input bytes)` — one unit per input doubling.
+    pub log2_input: f64,
+    /// Scale-free shape components (profile ratios + phase fractions +
+    /// data-flow ratios), in a fixed documented order.
+    pub shape: Vec<f64>,
+}
+
+impl Fingerprint {
+    /// Build from a measured profile and one noise-free
+    /// default-configuration run of the same workload.
+    pub fn new(w: &WorkloadProfile, r: &JobRunResult) -> Fingerprint {
+        let input = (w.input_bytes as f64).max(1.0);
+        let mut shape = vec![
+            // profile shape: what the job does per byte/record
+            w.map_selectivity_bytes,
+            w.map_selectivity_records,
+            w.combiner_reduction,
+            w.reduce_selectivity_bytes,
+            w.partition_skew,
+            w.compress_ratio,
+            // per-record CPU on a log scale: 10× the ops is one unit
+            (1.0 + w.map_cpu_ops_per_record).log10(),
+            (1.0 + w.reduce_cpu_ops_per_record).log10(),
+        ];
+        // phase-profile vector: where the simulated time goes
+        let p = &r.phases;
+        let total = p.total().max(1e-9);
+        shape.extend_from_slice(&[
+            p.task_setup / total,
+            p.map_read / total,
+            p.map_cpu / total,
+            p.map_spill / total,
+            p.map_merge / total,
+            p.shuffle / total,
+            p.reduce_merge / total,
+            p.reduce_cpu / total,
+            p.output_write / total,
+        ]);
+        // data-flow ratios from the counters
+        let c = &r.counters;
+        shape.extend_from_slice(&[
+            c.map_output_bytes as f64 / input,
+            c.shuffled_bytes as f64 / input,
+            c.output_bytes as f64 / input,
+        ]);
+        Fingerprint { log2_input: input.log2(), shape }
+    }
+
+    /// Match quality in `(0, 1]`: `1` iff identical; strictly decreasing
+    /// in accumulated per-component relative shape distance and in size
+    /// distance ([`SIZE_WEIGHT`] per input doubling). Shape distances
+    /// are *summed*, not averaged — every component that disagrees digs
+    /// the score further down, so workloads differing in several shape
+    /// axes (different benchmarks) fall well below a merely-rescaled
+    /// self. Fingerprints of different shape lengths never match
+    /// (affinity 0).
+    pub fn affinity(&self, other: &Fingerprint) -> f64 {
+        if self.shape.len() != other.shape.len() || self.shape.is_empty() {
+            return 0.0;
+        }
+        let size_d = (self.log2_input - other.log2_input).abs();
+        let shape_d: f64 = self
+            .shape
+            .iter()
+            .zip(&other.shape)
+            .map(|(a, b)| {
+                let denom = a.abs() + b.abs();
+                if denom > 0.0 {
+                    (a - b).abs() / denom
+                } else {
+                    0.0 // both zero: identical component
+                }
+            })
+            .sum();
+        1.0 / (1.0 + shape_d + SIZE_WEIGHT * size_d)
+    }
+}
+
+/// The fingerprint of a benchmark's paper workload under `version`:
+/// profile (fixed profiling seed 1000, like every campaign) + one
+/// noise-free default-config simulation. Cached — the simulation runs
+/// once per (benchmark, version) per process.
+pub fn fingerprint_for(benchmark: Benchmark, version: HadoopVersion) -> Fingerprint {
+    static CACHE: OnceLock<Mutex<BTreeMap<(Benchmark, u8), Fingerprint>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let key = (benchmark, version_tag(version));
+    // a poisoned lock only means another thread panicked mid-insert of a
+    // by-construction-identical value: recover the map rather than panic
+    let mut guard = match cache.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(fp) = guard.get(&key) {
+        return fp.clone();
+    }
+    let w = profile_for(benchmark, 1000);
+    let space = ParameterSpace::for_version(version);
+    let r = simulate(
+        &ClusterSpec::paper_cluster(),
+        &space.default_config(),
+        &w,
+        &SimOptions { seed: 1, noise: false, scenario: ScenarioSpec::default() },
+    );
+    let fp = Fingerprint::new(&w, &r);
+    guard.insert(key, fp.clone());
+    fp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fp_of(bench: Benchmark, bytes: u64) -> Fingerprint {
+        // same rng seed and sample size for every call: the measured
+        // profile *ratios* are identical per benchmark; only the target
+        // size (and hence the simulated phase mix) varies
+        let mut rng = Rng::seeded(7);
+        let w = bench.profile_scaled(200_000, bytes, &mut rng);
+        let space = ParameterSpace::v1();
+        let r = simulate(
+            &ClusterSpec::paper_cluster(),
+            &space.default_config(),
+            &w,
+            &SimOptions { seed: 1, noise: false, scenario: ScenarioSpec::default() },
+        );
+        Fingerprint::new(&w, &r)
+    }
+
+    #[test]
+    fn affinity_is_reflexive_and_scale_monotone() {
+        let a = fp_of(Benchmark::Grep, 1 << 30);
+        let b = fp_of(Benchmark::Grep, 1 << 31); // 2× input, same shape
+        assert_eq!(a.affinity(&a), 1.0, "identical fingerprints score exactly 1");
+        let ab = a.affinity(&b);
+        assert!(ab < 1.0, "a 2× input matches with strictly lower affinity: {ab}");
+        assert_eq!(ab, b.affinity(&a), "affinity is symmetric");
+    }
+
+    #[test]
+    fn different_benchmarks_score_below_a_rescaled_self() {
+        let g1 = fp_of(Benchmark::Grep, 1 << 30);
+        let g2 = fp_of(Benchmark::Grep, 1 << 31);
+        let t1 = fp_of(Benchmark::Terasort, 1 << 30);
+        assert!(
+            g1.affinity(&t1) < g1.affinity(&g2),
+            "cross-benchmark affinity {} must stay below same-shape-rescaled {}",
+            g1.affinity(&t1),
+            g1.affinity(&g2)
+        );
+    }
+
+    #[test]
+    fn mismatched_shape_lengths_never_match() {
+        let a = fp_of(Benchmark::Grep, 1 << 30);
+        let mut b = a.clone();
+        b.shape.pop();
+        assert_eq!(a.affinity(&b), 0.0);
+    }
+
+    #[test]
+    fn fingerprint_for_is_cached_and_deterministic() {
+        let a = fingerprint_for(Benchmark::Terasort, HadoopVersion::V1);
+        let b = fingerprint_for(Benchmark::Terasort, HadoopVersion::V1);
+        assert_eq!(a, b);
+    }
+}

@@ -3,13 +3,22 @@
 //! results — the operational shell around the SPSA process of paper §6.
 
 pub mod campaign;
+pub mod fingerprint;
 pub mod pool;
 pub mod results;
+pub mod service;
+pub mod store;
 
 pub use campaign::{
-    evaluate_theta, profile_for, run_campaign, run_trial, Algo, CampaignScheduler,
-    SchedulerOutcome, SchedulerPolicy, TrialOutcome, TrialSpec, DEFAULT_TRIAL_BUDGET,
-    SCHEDULER_OBS_GUARD,
+    evaluate_theta, expand_theta, profile_for, run_campaign, run_trial, run_trial_warmed,
+    Algo, CampaignScheduler, SchedulerOutcome, SchedulerPolicy, TrialOutcome, TrialSpec,
+    WarmStart, DEFAULT_TRIAL_BUDGET, SCHEDULER_OBS_GUARD,
 };
+pub use fingerprint::{fingerprint_for, Fingerprint};
 pub use pool::{default_workers, env_workers, in_pool_worker, resolve_workers, run_parallel};
 pub use results::{outcome_json, ResultsDir};
+pub use service::{
+    parse_script, prune_mask, service_outcome_json, stream_json, ServiceConfig,
+    ServiceOutcome, TuningRequest, TuningService,
+};
+pub use store::{scenario_sig, ObservationStore, StoreKey, StoredObs};

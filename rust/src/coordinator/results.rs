@@ -66,6 +66,8 @@ pub fn outcome_json(o: &TrialOutcome) -> Json {
         .set("profiling_overhead_s", Json::Num(o.profiling_overhead_s))
         .set("elapsed_model_s", Json::Num(o.elapsed_model_s))
         .set("tuning_wall_ms", Json::Num(o.tuning_wall_ms))
+        .set("noise_frozen", Json::Bool(o.noise_frozen))
+        .set("store_hits", Json::Num(o.store_hits as f64))
         .set("tuned_theta", Json::from_f64_slice(&o.tuned_theta));
     j
 }

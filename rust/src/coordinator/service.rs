@@ -1,0 +1,546 @@
+//! The multi-tenant tuning service: a long-running, in-process
+//! coordinator that admits a stream of tuning requests and amortizes
+//! observations across them (ROADMAP item 2 — Tuneful's cross-job
+//! observation economy on top of the metered broker).
+//!
+//! Per request: fingerprint the workload ([`fingerprint_for`]), match it
+//! against prior campaigns with the same `(benchmark, version,
+//! scenario)` store key, and when the affinity clears the configured
+//! threshold, **warm-start** the trial — prior store records are served
+//! to the tuner for free (flagged [`ObsSource::Store`], i.e.
+//! noise-frozen) and, for direct-search tuners with enough evidence,
+//! insignificant dimensions are **pruned** to their defaults (Tuneful
+//! §3) before SPSA/TPE ever run. Live observations harvested from the
+//! trial's trace are inserted back into the [`ObservationStore`] so the
+//! next tenant pays even less.
+//!
+//! Requests are processed strictly in admission order and every data
+//! structure iterates in key order, so replaying the same request
+//! stream (same seeds) is **bit-identical** — at any worker count, with
+//! or without store hits. `repro serve --script <requests.tsv>` replays
+//! a stream from disk and CI diffs two replays byte for byte.
+//!
+//! [`ObsSource::Store`]: crate::tuner::ObsSource
+
+use crate::tuner::{live_best, Budget};
+use crate::util::json::Json;
+use crate::workloads::Benchmark;
+
+use super::campaign::{run_trial_warmed, Algo, TrialOutcome, TrialSpec, WarmStart};
+use super::fingerprint::{fingerprint_for, Fingerprint};
+use super::store::{scenario_sig, version_tag, ObservationStore, DEFAULT_STORE_CAPACITY, DEFAULT_STORE_QUANT};
+
+/// Service knobs. The defaults are what `repro serve` runs with.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Store θ-cell size (coarser than the broker memo, see
+    /// [`DEFAULT_STORE_QUANT`]).
+    pub store_quant: f64,
+    /// Store capacity before deterministic FIFO eviction.
+    pub store_capacity: usize,
+    /// Minimum fingerprint affinity for a prior campaign to warm-start a
+    /// request. 1.0 = identical; a 2× input of the same shape scores
+    /// ≈ 0.8 (see [`Fingerprint::affinity`]).
+    pub match_threshold: f64,
+    /// A dimension freezes when its observed binned-mean f-range is at
+    /// most this fraction of the overall observed f-range.
+    pub prune_threshold: f64,
+    /// Minimum matched store records before pruning is attempted —
+    /// below this the evidence is too thin to freeze anything.
+    pub min_records_for_pruning: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            store_quant: DEFAULT_STORE_QUANT,
+            store_capacity: DEFAULT_STORE_CAPACITY,
+            match_threshold: 0.6,
+            prune_threshold: 0.05,
+            min_records_for_pruning: 12,
+        }
+    }
+}
+
+/// One tenant's tuning request: who asks, and the trial they want.
+#[derive(Clone, Debug)]
+pub struct TuningRequest {
+    pub tenant: String,
+    pub spec: TrialSpec,
+}
+
+/// What the service hands back per request: the trial outcome plus the
+/// amortization story (what was reused, what was frozen, what was
+/// actually verified live).
+#[derive(Clone, Debug)]
+pub struct ServiceOutcome {
+    pub tenant: String,
+    /// Campaign ordinal assigned by the service (admission order).
+    pub campaign: u64,
+    pub outcome: TrialOutcome,
+    /// `true` when a prior campaign cleared the match threshold and its
+    /// records seeded this trial.
+    pub warm_started: bool,
+    /// The matched campaign's ordinal, if any.
+    pub matched_campaign: Option<u64>,
+    /// Fingerprint affinity to the matched campaign (0 when cold).
+    pub affinity: f64,
+    /// Store records served to the broker as free warm-start seeds.
+    pub seeded_records: usize,
+    /// Indices of parameters frozen to defaults by significance pruning.
+    pub frozen_dims: Vec<usize>,
+    /// First **live-verified** best: f of the best live observation
+    /// (∞ when the trial made none — e.g. a pure store replay).
+    pub live_best_f: f64,
+    /// Live observations spent when the live best was first achieved.
+    pub live_obs_to_best: u64,
+    /// Modeled seconds elapsed when the live best was first achieved.
+    pub live_time_to_best: f64,
+}
+
+struct CampaignInfo {
+    id: u64,
+    benchmark: Benchmark,
+    version_tag: u8,
+    scenario_sig: u64,
+    fingerprint: Fingerprint,
+}
+
+/// Significance-aware dimension pruning (Tuneful §3): rank parameters by
+/// the f-variation observed across stored records and freeze the ones
+/// that demonstrably do not matter. Per dimension, θ is bucketed into 4
+/// bins over [0, 1] and the spread of per-bin mean f is the dimension's
+/// observed effect; a dimension freezes only when (a) at least two bins
+/// have evidence and (b) the spread is at most `threshold_frac` of the
+/// overall observed f-range — so a parameter whose observed f-range
+/// exceeds the significance threshold is **never** frozen
+/// (property-tested). Returns an all-false mask when the overall range
+/// is degenerate.
+pub fn prune_mask(records: &[(Vec<f64>, f64)], dim: usize, threshold_frac: f64) -> Vec<bool> {
+    const BINS: usize = 4;
+    let mut mask = vec![false; dim];
+    let finite: Vec<&(Vec<f64>, f64)> = records
+        .iter()
+        .filter(|(t, f)| t.len() == dim && f.is_finite())
+        .collect();
+    if finite.len() < 2 {
+        return mask;
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, f) in &finite {
+        lo = lo.min(*f);
+        hi = hi.max(*f);
+    }
+    let global_range = hi - lo;
+    if global_range <= 0.0 {
+        return mask; // no observed variation at all — nothing to rank
+    }
+    let threshold = threshold_frac * global_range;
+    for (d, m) in mask.iter_mut().enumerate() {
+        let mut sum = [0.0_f64; BINS];
+        let mut n = [0_u64; BINS];
+        for (t, f) in &finite {
+            let x = t[d].clamp(0.0, 1.0);
+            let b = ((x * BINS as f64) as usize).min(BINS - 1);
+            sum[b] += *f;
+            n[b] += 1;
+        }
+        let means: Vec<f64> =
+            (0..BINS).filter(|&b| n[b] > 0).map(|b| sum[b] / n[b] as f64).collect();
+        if means.len() < 2 {
+            continue; // the records never varied this θ: no evidence to freeze on
+        }
+        let mut mlo = f64::INFINITY;
+        let mut mhi = f64::NEG_INFINITY;
+        for m in &means {
+            mlo = mlo.min(*m);
+            mhi = mhi.max(*m);
+        }
+        *m = mhi - mlo <= threshold;
+    }
+    // never hand the trial an all-frozen space
+    if mask.iter().all(|&fz| fz) {
+        mask = vec![false; dim];
+    }
+    mask
+}
+
+/// Can this algorithm search a pruned (reduced-dimension) space? The
+/// model-based tuners derive what-if features from the full parameter
+/// vector and must see every dimension; pruning targets the
+/// direct-search family — exactly Tuneful's "before SPSA/TPE run".
+fn prunable(algo: Algo) -> bool {
+    !matches!(algo, Algo::Default | Algo::SpsaSurrogate | Algo::Starfish | Algo::Ppabs)
+}
+
+/// The long-running, in-process tuning service.
+pub struct TuningService {
+    config: ServiceConfig,
+    store: ObservationStore,
+    campaigns: Vec<CampaignInfo>,
+    next_campaign: u64,
+}
+
+impl Default for TuningService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TuningService {
+    pub fn new() -> Self {
+        Self::with_config(ServiceConfig::default())
+    }
+
+    pub fn with_config(config: ServiceConfig) -> Self {
+        let store = ObservationStore::new()
+            .with_quant(config.store_quant)
+            .with_capacity(config.store_capacity);
+        TuningService { config, store, campaigns: Vec::new(), next_campaign: 0 }
+    }
+
+    /// The shared observation store (counters, size) for reporting.
+    pub fn store(&self) -> &ObservationStore {
+        &self.store
+    }
+
+    /// Admit one request: fingerprint → match → warm-start/prune → run →
+    /// harvest. Strictly sequential and deterministic.
+    pub fn submit(&mut self, req: &TuningRequest) -> ServiceOutcome {
+        let spec = &req.spec;
+        let campaign = self.next_campaign;
+        self.next_campaign += 1;
+        let fp = fingerprint_for(spec.benchmark, spec.version);
+        let vtag = version_tag(spec.version);
+        let sig = scenario_sig(&spec.scenario);
+
+        // best-affinity prior campaign over the same store key; ties go
+        // to the earliest campaign (stable under replay)
+        let mut matched: Option<(u64, f64)> = None;
+        for c in &self.campaigns {
+            if c.benchmark != spec.benchmark || c.version_tag != vtag || c.scenario_sig != sig
+            {
+                continue;
+            }
+            let a = fp.affinity(&c.fingerprint);
+            let better = match matched {
+                Some((_, best)) => a > best,
+                None => true,
+            };
+            if better {
+                matched = Some((c.id, a));
+            }
+        }
+        let matched = matched.filter(|&(_, a)| a >= self.config.match_threshold);
+
+        let (warm, seeded_records, frozen_dims) = match matched {
+            Some(_) => {
+                let records: Vec<(Vec<f64>, f64)> = self
+                    .store
+                    .records_for(spec.benchmark, spec.version, &spec.scenario)
+                    .iter()
+                    .map(|r| (r.theta.clone(), r.f))
+                    .collect();
+                if records.is_empty() {
+                    (None, 0, Vec::new())
+                } else {
+                    let dim =
+                        crate::config::ParameterSpace::for_version(spec.version).dim();
+                    let mask = if prunable(spec.algo)
+                        && records.len() >= self.config.min_records_for_pruning
+                    {
+                        prune_mask(&records, dim, self.config.prune_threshold)
+                    } else {
+                        Vec::new()
+                    };
+                    let frozen_dims: Vec<usize> = mask
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &fz)| fz)
+                        .map(|(i, _)| i)
+                        .collect();
+                    let n = records.len();
+                    let mut ws = WarmStart::new(records, self.store.quant());
+                    ws.frozen = mask;
+                    (Some(ws), n, frozen_dims)
+                }
+            }
+            None => (None, 0, Vec::new()),
+        };
+
+        let outcome = run_trial_warmed(spec, warm.as_ref());
+
+        // harvest: every live, finite observation joins the store under
+        // this campaign's ordinal (first-write-wins per θ cell)
+        for r in &outcome.eval_trace {
+            if r.source == crate::tuner::ObsSource::Live && r.f.is_finite() {
+                self.store.insert(
+                    spec.benchmark,
+                    spec.version,
+                    &spec.scenario,
+                    &r.theta,
+                    r.f,
+                    campaign,
+                );
+            }
+        }
+        self.campaigns.push(CampaignInfo {
+            id: campaign,
+            benchmark: spec.benchmark,
+            version_tag: vtag,
+            scenario_sig: sig,
+            fingerprint: fp,
+        });
+
+        let (live_best_f, live_obs_to_best, live_time_to_best) =
+            match live_best(&outcome.eval_trace) {
+                Some(r) => (r.f, r.obs, r.model_time),
+                None => (f64::INFINITY, 0, 0.0),
+            };
+        ServiceOutcome {
+            tenant: req.tenant.clone(),
+            campaign,
+            warm_started: warm.is_some(),
+            matched_campaign: matched.map(|(id, _)| id),
+            affinity: matched.map(|(_, a)| a).unwrap_or(0.0),
+            seeded_records,
+            frozen_dims,
+            live_best_f,
+            live_obs_to_best,
+            live_time_to_best,
+            outcome,
+        }
+    }
+
+    /// Replay a whole request stream in admission order.
+    pub fn run_stream(&mut self, reqs: &[TuningRequest]) -> Vec<ServiceOutcome> {
+        reqs.iter().map(|r| self.submit(r)).collect()
+    }
+}
+
+/// Parse a `repro serve` request script: one request per line,
+/// whitespace-separated `tenant benchmark version tuner seed budget`
+/// columns; blank lines and `#` comments skipped.
+pub fn parse_script(text: &str) -> Result<Vec<TuningRequest>, String> {
+    let mut reqs = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split_whitespace().collect();
+        if cols.len() != 6 {
+            return Err(format!(
+                "line {}: expected 6 columns (tenant benchmark version tuner seed budget), got {}",
+                ln + 1,
+                cols.len()
+            ));
+        }
+        let benchmark = Benchmark::from_name(cols[1])
+            .ok_or_else(|| format!("line {}: unknown benchmark '{}'", ln + 1, cols[1]))?;
+        let version = match cols[2].to_ascii_lowercase().as_str() {
+            "v1" | "1" => crate::config::HadoopVersion::V1,
+            "v2" | "2" => crate::config::HadoopVersion::V2,
+            other => return Err(format!("line {}: unknown version '{other}'", ln + 1)),
+        };
+        let algo = Algo::from_name(cols[3])
+            .ok_or_else(|| format!("line {}: unknown tuner '{}'", ln + 1, cols[3]))?;
+        let seed: u64 = cols[4]
+            .parse()
+            .map_err(|_| format!("line {}: bad seed '{}'", ln + 1, cols[4]))?;
+        let budget: u64 = cols[5]
+            .parse()
+            .map_err(|_| format!("line {}: bad budget '{}'", ln + 1, cols[5]))?;
+        reqs.push(TuningRequest {
+            tenant: cols[0].to_string(),
+            spec: TrialSpec::new(benchmark, version, algo, seed)
+                .with_budget(Budget::obs(budget)),
+        });
+    }
+    if reqs.is_empty() {
+        return Err("request script contains no requests".into());
+    }
+    Ok(reqs)
+}
+
+/// Deterministic JSON for one service outcome. Excludes every
+/// wall-clock-derived field (`tuning_wall_ms`) by construction — the
+/// serve replay gate diffs this byte for byte across runs.
+pub fn service_outcome_json(o: &ServiceOutcome) -> Json {
+    let t = &o.outcome;
+    let mut j = Json::obj();
+    j.set("tenant", Json::Str(o.tenant.clone()))
+        .set("campaign", Json::Num(o.campaign as f64))
+        .set("benchmark", Json::Str(t.spec.benchmark.label().into()))
+        .set("version", Json::Str(t.spec.version.label().into()))
+        .set("tuner", Json::Str(t.spec.algo.label().into()))
+        .set("seed", Json::Num(t.spec.seed as f64))
+        .set("budget_obs", Json::Num(t.spec.budget.max_obs as f64))
+        .set("warm_started", Json::Bool(o.warm_started))
+        .set(
+            "matched_campaign",
+            match o.matched_campaign {
+                Some(id) => Json::Num(id as f64),
+                None => Json::Null,
+            },
+        )
+        .set("affinity", Json::Num(o.affinity))
+        .set("seeded_records", Json::Num(o.seeded_records as f64))
+        .set(
+            "frozen_dims",
+            Json::Arr(o.frozen_dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+        )
+        .set("observations", Json::Num(t.observations as f64))
+        .set("store_hits", Json::Num(t.store_hits as f64))
+        .set("noise_frozen", Json::Bool(t.noise_frozen))
+        .set("elapsed_model_s", Json::Num(t.elapsed_model_s))
+        .set("tuned_mean_s", Json::Num(t.tuned_mean_s))
+        .set("tuned_std_s", Json::Num(t.tuned_std_s))
+        .set("default_mean_s", Json::Num(t.default_mean_s))
+        .set("pct_decrease", Json::Num(t.pct_decrease()))
+        .set(
+            "live_best_f",
+            if o.live_best_f.is_finite() { Json::Num(o.live_best_f) } else { Json::Null },
+        )
+        .set("live_obs_to_best", Json::Num(o.live_obs_to_best as f64))
+        .set("live_time_to_best", Json::Num(o.live_time_to_best))
+        .set("tuned_theta", Json::from_f64_slice(&t.tuned_theta));
+    j
+}
+
+/// Deterministic JSON for a whole replayed stream, plus store counters.
+pub fn stream_json(outcomes: &[ServiceOutcome], store: &ObservationStore) -> Json {
+    let (inserts, hits, evictions) = store.counters();
+    let mut s = Json::obj();
+    s.set("size", Json::Num(store.len() as f64))
+        .set("inserts", Json::Num(inserts as f64))
+        .set("lookup_hits", Json::Num(hits as f64))
+        .set("evictions", Json::Num(evictions as f64));
+    let mut j = Json::obj();
+    j.set(
+        "requests",
+        Json::Arr(outcomes.iter().map(service_outcome_json).collect()),
+    )
+    .set("store", s);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HadoopVersion;
+
+    fn req(tenant: &str, algo: Algo, seed: u64, budget: u64) -> TuningRequest {
+        TuningRequest {
+            tenant: tenant.into(),
+            spec: TrialSpec::new(Benchmark::Grep, HadoopVersion::V1, algo, seed)
+                .with_budget(Budget::obs(budget)),
+        }
+    }
+
+    #[test]
+    fn second_request_warm_starts_from_the_first() {
+        let mut svc = TuningService::new();
+        let cold = svc.submit(&req("alice", Algo::Spsa, 11, 18));
+        assert!(!cold.warm_started);
+        assert_eq!(cold.outcome.store_hits, 0);
+        assert!(!svc.store().is_empty(), "live observations were harvested");
+        let warm = svc.submit(&req("bob", Algo::Spsa, 23, 18));
+        assert!(warm.warm_started, "same benchmark+version+scenario must match");
+        assert_eq!(warm.matched_campaign, Some(0));
+        assert!(warm.affinity >= 1.0 - 1e-12, "identical workload: affinity 1");
+        assert!(warm.seeded_records > 0);
+        assert!(warm.outcome.store_hits > 0, "warm seeds count as store hits");
+        // the warm trace starts with free store records at obs 0
+        let first = &warm.outcome.eval_trace[0];
+        assert_eq!(first.obs, 0);
+        assert_eq!(first.source, crate::tuner::ObsSource::Store);
+    }
+
+    #[test]
+    fn warm_start_reaches_cold_best_with_fewer_live_obs() {
+        let mut svc = TuningService::new();
+        let cold = svc.submit(&req("alice", Algo::HillClimb, 11, 18));
+        let cold_best = cold.live_best_f;
+        assert!(cold_best.is_finite());
+        let warm = svc.submit(&req("bob", Algo::HillClimb, 23, 18));
+        // obs spent when the warm trial's best-so-far first reached the
+        // cold trial's best (store seeds replay at obs 0)
+        let mut best = f64::INFINITY;
+        let mut obs_to_reach = None;
+        for r in &warm.outcome.eval_trace {
+            if !r.f.is_nan() && r.f < best {
+                best = r.f;
+            }
+            if best <= cold_best {
+                obs_to_reach = Some(r.obs);
+                break;
+            }
+        }
+        let warm_obs = obs_to_reach.expect("warm run must reach the cold best");
+        assert_eq!(warm_obs, 0, "the cold best itself replays for free at obs 0");
+    }
+
+    #[test]
+    fn different_scenarios_never_cross_match() {
+        let mut svc = TuningService::new();
+        svc.submit(&req("alice", Algo::Spsa, 11, 12));
+        let mut r2 = req("bob", Algo::Spsa, 23, 12);
+        r2.spec = r2.spec.with_scenario(crate::sim::ScenarioSpec::default().with_failures(0.05));
+        let out = svc.submit(&r2);
+        assert!(!out.warm_started, "a faulty scenario must not reuse benign observations");
+    }
+
+    #[test]
+    fn prune_mask_never_freezes_a_significant_dimension() {
+        // dim 0 swings f across its range; dim 1 has no effect
+        let mut records = Vec::new();
+        for i in 0..16 {
+            let x = i as f64 / 15.0;
+            records.push((vec![x, (i % 4) as f64 / 3.0], 100.0 + 50.0 * x));
+        }
+        let mask = prune_mask(&records, 2, 0.05);
+        assert!(!mask[0], "a dimension moving f by the full range must stay free");
+        assert!(mask[1], "a dimension with no observed effect freezes");
+    }
+
+    #[test]
+    fn prune_mask_needs_variation_evidence() {
+        // every record at the same θ: no bins to compare, nothing freezes
+        let records: Vec<(Vec<f64>, f64)> =
+            (0..8).map(|i| (vec![0.5, 0.5], 100.0 + i as f64)).collect();
+        assert_eq!(prune_mask(&records, 2, 0.05), vec![false, false]);
+    }
+
+    #[test]
+    fn parse_script_round_trips_and_rejects_garbage() {
+        let good = "# stream\nalice terasort v1 spsa 11 24\nbob grep v2 tpe 23 12\n";
+        let reqs = parse_script(good).expect("valid script");
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].tenant, "alice");
+        assert_eq!(reqs[0].spec.benchmark, Benchmark::Terasort);
+        assert_eq!(reqs[1].spec.version, HadoopVersion::V2);
+        assert_eq!(reqs[1].spec.budget.max_obs, 12);
+        assert!(parse_script("alice terasort v1 spsa 11\n").is_err(), "missing column");
+        assert!(parse_script("alice nope v1 spsa 11 24\n").is_err(), "bad benchmark");
+        assert!(parse_script("alice terasort v3 spsa 11 24\n").is_err(), "bad version");
+        assert!(parse_script("alice terasort v1 nope 11 24\n").is_err(), "bad tuner");
+        assert!(parse_script("# only comments\n").is_err(), "empty stream");
+    }
+
+    #[test]
+    fn replayed_stream_is_bit_identical() {
+        let script = "a grep v1 spsa 11 12\nb grep v1 hillclimb 23 12\na grep v1 spsa 11 12\n";
+        let reqs = parse_script(script).expect("valid script");
+        let run = |reqs: &[TuningRequest]| {
+            let mut svc = TuningService::new();
+            let outs = svc.run_stream(reqs);
+            stream_json(&outs, svc.store()).to_pretty()
+        };
+        let one = run(&reqs);
+        let two = run(&reqs);
+        assert_eq!(one, two, "same stream, same seeds → byte-identical result JSON");
+        assert!(one.contains("\"warm_started\": true"), "the repeat request warm-starts");
+    }
+}

@@ -1,0 +1,329 @@
+//! Cross-campaign observation store: the broker's per-trial memo cache
+//! promoted to a service-scoped tier (Tuneful's amortization claim —
+//! production tuners pay for an observation once *across* jobs and
+//! users, not once per trial).
+//!
+//! Keying is `(benchmark, workload version, scenario signature,
+//! store-quantized θ)`. The θ quantum is deliberately **coarse**
+//! (default 0.02 per coordinate vs the broker memo's 1e-6) so revisits
+//! from different seeds and different tuners land in the same cell —
+//! which is exactly why a served value is *noise-frozen*: it was
+//! observed at a nearby θ under a different noise stream, and consumers
+//! must flag it ([`ObsSource::Store`]) rather than present it as a fresh
+//! measurement.
+//!
+//! Determinism contract (enforced by `repro lint` and the service replay
+//! gate): `BTreeMap` keys only — iteration order is the key order, never
+//! a hash seed's; eviction is by a **logical insertion tick**, never
+//! wall-clock.
+//!
+//! [`ObsSource::Store`]: crate::tuner::ObsSource
+
+use std::collections::BTreeMap;
+
+use crate::config::HadoopVersion;
+use crate::sim::ScenarioSpec;
+use crate::workloads::Benchmark;
+
+/// Default per-coordinate θ-cell size. Coarser than any tuner's step so
+/// cross-seed/cross-tuner revisits of "the same" configuration hit.
+pub const DEFAULT_STORE_QUANT: f64 = 0.02;
+
+/// Default capacity (entries) before FIFO eviction kicks in.
+pub const DEFAULT_STORE_CAPACITY: usize = 65_536;
+
+/// Deterministic signature of a [`ScenarioSpec`]: FNV-1a over the exact
+/// bit patterns of its fields, in declaration order. Two specs collide
+/// iff they describe bit-identical fault schedules — no hash seeds, no
+/// float rounding.
+pub fn scenario_sig(s: &ScenarioSpec) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn mix(h: u64, x: u64) -> u64 {
+        (h ^ x).wrapping_mul(PRIME)
+    }
+    let mut h = OFFSET;
+    h = mix(h, s.task_failure_p.to_bits());
+    h = mix(h, s.max_attempts);
+    for c in &s.node_crashes {
+        h = mix(h, c.at_s.to_bits());
+        h = mix(h, u64::from(c.node));
+    }
+    for n in &s.slow_nodes {
+        h = mix(h, u64::from(n.node));
+        h = mix(h, n.speed.to_bits());
+    }
+    h = mix(h, u64::from(s.speculative_maps));
+    h = mix(h, u64::from(s.speculative_reduces));
+    h
+}
+
+pub(crate) fn version_tag(v: HadoopVersion) -> u8 {
+    match v {
+        HadoopVersion::V1 => 1,
+        HadoopVersion::V2 => 2,
+    }
+}
+
+/// Full store key: workload identity + scenario + θ cell. `Ord` derives
+/// from field order, so a `(benchmark, version, scenario)` prefix scan
+/// is one `range` walk.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct StoreKey {
+    pub benchmark: Benchmark,
+    pub version_tag: u8,
+    pub scenario_sig: u64,
+    /// Per-coordinate `round(θ_i / quant)` cell of the observed θ.
+    pub cell: Vec<i64>,
+}
+
+/// One stored observation: the *first* value ever observed in its cell
+/// (first-write-wins, like the broker memo — replays are stable).
+#[derive(Clone, Debug)]
+pub struct StoredObs {
+    /// Exact θ as observed (full-dimensional, not the cell center).
+    pub theta: Vec<f64>,
+    /// Observed f, frozen at its original noise draw.
+    pub f: f64,
+    /// Ordinal of the campaign/request that produced it.
+    pub campaign: u64,
+    /// Logical insertion tick — the deterministic eviction order.
+    tick: u64,
+}
+
+/// The campaign-/service-scoped observation store.
+pub struct ObservationStore {
+    quant: f64,
+    capacity: usize,
+    map: BTreeMap<StoreKey, StoredObs>,
+    /// tick → key, for O(log n) oldest-first eviction.
+    order: BTreeMap<u64, StoreKey>,
+    tick: u64,
+    inserts: u64,
+    hits: u64,
+    evictions: u64,
+}
+
+impl Default for ObservationStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObservationStore {
+    pub fn new() -> Self {
+        ObservationStore {
+            quant: DEFAULT_STORE_QUANT,
+            capacity: DEFAULT_STORE_CAPACITY,
+            map: BTreeMap::new(),
+            order: BTreeMap::new(),
+            tick: 0,
+            inserts: 0,
+            hits: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn with_quant(mut self, quant: f64) -> Self {
+        assert!(quant > 0.0, "store quantization step must be positive");
+        self.quant = quant;
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        assert!(capacity > 0, "store capacity must be positive");
+        self.capacity = capacity;
+        self
+    }
+
+    /// The per-coordinate θ-cell size.
+    pub fn quant(&self) -> f64 {
+        self.quant
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lifetime counters: (inserts accepted, lookup hits, evictions).
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.inserts, self.hits, self.evictions)
+    }
+
+    fn cell(&self, theta: &[f64]) -> Vec<i64> {
+        theta.iter().map(|t| (t / self.quant).round() as i64).collect()
+    }
+
+    fn key(
+        &self,
+        benchmark: Benchmark,
+        version: HadoopVersion,
+        scenario: &ScenarioSpec,
+        theta: &[f64],
+    ) -> StoreKey {
+        StoreKey {
+            benchmark,
+            version_tag: version_tag(version),
+            scenario_sig: scenario_sig(scenario),
+            cell: self.cell(theta),
+        }
+    }
+
+    /// Record one observation. First write per cell wins; a revisit of an
+    /// occupied cell is a no-op (the stored value is what replays —
+    /// re-observing under another noise stream must not perturb earlier
+    /// consumers' results). Evicts oldest-tick entries past capacity.
+    pub fn insert(
+        &mut self,
+        benchmark: Benchmark,
+        version: HadoopVersion,
+        scenario: &ScenarioSpec,
+        theta: &[f64],
+        f: f64,
+        campaign: u64,
+    ) {
+        if f.is_nan() {
+            return; // a NaN can never serve as a replayable observation
+        }
+        let key = self.key(benchmark, version, scenario, theta);
+        if self.map.contains_key(&key) {
+            return;
+        }
+        let tick = self.tick;
+        self.tick += 1;
+        self.order.insert(tick, key.clone());
+        self.map.insert(key, StoredObs { theta: theta.to_vec(), f, campaign, tick });
+        self.inserts += 1;
+        while self.map.len() > self.capacity {
+            // oldest logical tick goes first — wall-clock never enters
+            let oldest = self.order.keys().next().copied();
+            if let Some(t) = oldest {
+                if let Some(k) = self.order.remove(&t) {
+                    self.map.remove(&k);
+                    self.evictions += 1;
+                }
+            }
+        }
+    }
+
+    /// Serve the stored observation for `theta`'s cell, if any.
+    pub fn lookup(
+        &mut self,
+        benchmark: Benchmark,
+        version: HadoopVersion,
+        scenario: &ScenarioSpec,
+        theta: &[f64],
+    ) -> Option<&StoredObs> {
+        let key = self.key(benchmark, version, scenario, theta);
+        let hit = self.map.get(&key);
+        if hit.is_some() {
+            self.hits += 1;
+        }
+        hit
+    }
+
+    /// All records for one `(benchmark, version, scenario)` prefix, in
+    /// cell order — the deterministic record set warm-start and pruning
+    /// work from.
+    pub fn records_for(
+        &self,
+        benchmark: Benchmark,
+        version: HadoopVersion,
+        scenario: &ScenarioSpec,
+    ) -> Vec<&StoredObs> {
+        let lo = StoreKey {
+            benchmark,
+            version_tag: version_tag(version),
+            scenario_sig: scenario_sig(scenario),
+            cell: Vec::new(), // empty sorts before every non-empty cell
+        };
+        self.map
+            .range(lo.clone()..)
+            .take_while(|(k, _)| {
+                k.benchmark == lo.benchmark
+                    && k.version_tag == lo.version_tag
+                    && k.scenario_sig == lo.scenario_sig
+            })
+            .map(|(_, v)| v)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn benign() -> ScenarioSpec {
+        ScenarioSpec::default()
+    }
+
+    #[test]
+    fn first_write_wins_and_lookup_is_cell_based() {
+        let mut s = ObservationStore::new().with_quant(0.1);
+        s.insert(Benchmark::Terasort, HadoopVersion::V1, &benign(), &[0.33, 0.7], 10.0, 0);
+        // same cell, different exact θ and different value: no-op
+        s.insert(Benchmark::Terasort, HadoopVersion::V1, &benign(), &[0.31, 0.71], 99.0, 1);
+        assert_eq!(s.len(), 1);
+        let hit = s
+            .lookup(Benchmark::Terasort, HadoopVersion::V1, &benign(), &[0.29, 0.69])
+            .expect("same cell");
+        assert_eq!(hit.f, 10.0);
+        assert_eq!(hit.campaign, 0);
+        // different benchmark → different key space
+        assert!(s
+            .lookup(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.33, 0.7])
+            .is_none());
+        assert_eq!(s.counters(), (1, 1, 0));
+    }
+
+    #[test]
+    fn nan_observations_are_rejected() {
+        let mut s = ObservationStore::new();
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.5], f64::NAN, 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn eviction_is_oldest_logical_tick_first() {
+        let mut s = ObservationStore::new().with_quant(0.1).with_capacity(2);
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.1], 1.0, 0);
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.5], 2.0, 0);
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.9], 3.0, 0);
+        assert_eq!(s.len(), 2);
+        assert!(
+            s.lookup(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.1]).is_none(),
+            "the first-inserted entry is the evicted one"
+        );
+        assert!(s.lookup(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.9]).is_some());
+        assert_eq!(s.counters().2, 1);
+    }
+
+    #[test]
+    fn records_for_scans_exactly_one_prefix_in_cell_order() {
+        let mut s = ObservationStore::new().with_quant(0.1);
+        let faulty = ScenarioSpec::default().with_failures(0.05);
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.9, 0.1], 3.0, 0);
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &benign(), &[0.1, 0.9], 1.0, 0);
+        s.insert(Benchmark::Grep, HadoopVersion::V2, &benign(), &[0.1, 0.9], 7.0, 0);
+        s.insert(Benchmark::Grep, HadoopVersion::V1, &faulty, &[0.1, 0.9], 9.0, 0);
+        s.insert(Benchmark::Terasort, HadoopVersion::V1, &benign(), &[0.1, 0.9], 5.0, 0);
+        let recs = s.records_for(Benchmark::Grep, HadoopVersion::V1, &benign());
+        let fs: Vec<f64> = recs.iter().map(|r| r.f).collect();
+        assert_eq!(fs, vec![1.0, 3.0], "only the matching prefix, cell-ordered");
+    }
+
+    #[test]
+    fn scenario_sig_separates_specs_and_is_stable() {
+        let a = ScenarioSpec::default();
+        let b = ScenarioSpec::default().with_failures(0.05);
+        let c = ScenarioSpec::default().with_crash(120.0, 3);
+        assert_eq!(scenario_sig(&a), scenario_sig(&a.clone()));
+        assert_ne!(scenario_sig(&a), scenario_sig(&b));
+        assert_ne!(scenario_sig(&a), scenario_sig(&c));
+        assert_ne!(scenario_sig(&b), scenario_sig(&c));
+    }
+}

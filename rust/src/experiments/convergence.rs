@@ -184,6 +184,7 @@ pub fn run(version: HadoopVersion, opts: &ExpOptions) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::ResultsDir;
+    use crate::tuner::ObsSource;
 
     #[test]
     fn best_so_far_is_monotone_and_dense() {
@@ -193,6 +194,7 @@ mod tests {
             theta: vec![0.5],
             f,
             cached,
+            source: if cached { ObsSource::Memo } else { ObsSource::Live },
         };
         // live, live, cache hit (same obs), then a charge gap to obs 6
         let trace = vec![
@@ -224,6 +226,7 @@ mod tests {
             theta: vec![0.5],
             f,
             cached: false,
+            source: ObsSource::Live,
         };
         let trace = vec![
             rec(1, f64::NAN),

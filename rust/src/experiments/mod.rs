@@ -12,6 +12,7 @@ pub mod perf;
 pub mod robustness;
 pub mod table1;
 pub mod table2;
+pub mod tenancy;
 pub mod walltime;
 
 pub use common::ExpOptions;

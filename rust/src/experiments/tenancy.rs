@@ -1,0 +1,200 @@
+//! Multi-tenancy experiment: does the cross-campaign observation store
+//! actually amortize? For every benchmark × representative tuner, a
+//! fresh [`TuningService`] admits a **cold** request (empty store) and
+//! then a **warm** one (different tenant, different seed, same
+//! workload). The warm trial inherits the cold trial's live
+//! observations as free noise-frozen store records, so the claim under
+//! test is Tuneful's: the warm tenant reaches the cold run's best f
+//! with strictly fewer live observations.
+//!
+//! Output (`tenancy_summary`): per benchmark × tuner, the cold run's
+//! obs-to-best next to the warm run's live observations spent to reach
+//! that same f, plus seeded-record/store-hit counts and the warm run's
+//! own live-verified best — the noise-frozen replay and the fresh
+//! measurement are never conflated (satellite bugfix).
+
+use crate::config::HadoopVersion;
+use crate::coordinator::{Algo, ServiceOutcome, TrialSpec, TuningRequest, TuningService};
+use crate::tuner::{Budget, EvalRecord};
+use crate::util::table::Table;
+use crate::workloads::Benchmark;
+
+use super::common::ExpOptions;
+
+/// Representative tuners: the paper's contribution (cache policy `Off`),
+/// a hill climber and TPE (both `Quantized`, so they exercise the store
+/// tier on lookups too).
+const TUNERS: [Algo; 3] = [Algo::Spsa, Algo::HillClimb, Algo::Tpe];
+
+const COLD_SEED: u64 = 11;
+const WARM_SEED: u64 = 23;
+
+/// Live observations spent when the trace's best-so-far (any source —
+/// store seeds replay at obs 0) first reaches `target`. `None` if never.
+pub fn obs_to_reach(trace: &[EvalRecord], target: f64) -> Option<u64> {
+    let mut best = f64::INFINITY;
+    for r in trace {
+        if !r.f.is_nan() && r.f < best {
+            best = r.f;
+        }
+        if best <= target {
+            return Some(r.obs);
+        }
+    }
+    None
+}
+
+/// One cold/warm pair on a fresh service.
+pub struct TenancyRow {
+    pub benchmark: Benchmark,
+    pub algo: Algo,
+    pub cold: ServiceOutcome,
+    pub warm: ServiceOutcome,
+    /// Live obs the warm run spent to reach the cold run's best f
+    /// (`None`: never reached it).
+    pub warm_obs_to_cold_best: Option<u64>,
+}
+
+/// Run the cold/warm pair for one benchmark × tuner on a fresh service.
+pub fn run_pair(bench: Benchmark, algo: Algo, budget: Budget) -> TenancyRow {
+    let mut svc = TuningService::new();
+    let req = |tenant: &str, seed: u64| TuningRequest {
+        tenant: tenant.into(),
+        spec: TrialSpec::new(bench, HadoopVersion::V1, algo, seed).with_budget(budget),
+    };
+    let cold = svc.submit(&req("cold-tenant", COLD_SEED));
+    let warm = svc.submit(&req("warm-tenant", WARM_SEED));
+    let warm_obs_to_cold_best = if cold.live_best_f.is_finite() {
+        obs_to_reach(&warm.outcome.eval_trace, cold.live_best_f)
+    } else {
+        None
+    };
+    TenancyRow { benchmark: bench, algo, cold, warm, warm_obs_to_cold_best }
+}
+
+pub fn run(opts: &ExpOptions) -> String {
+    let all = Benchmark::all();
+    let benches: &[Benchmark] = if opts.quick { &all[..2] } else { &all };
+
+    let mut table = Table::new(
+        "tenancy — cold vs warm obs-to-best per tuner (warm tenant seeded from the \
+         cold tenant's campaign via the observation store)",
+    )
+    .header(vec![
+        "Benchmark",
+        "Tuner",
+        "Cold obs",
+        "Cold obs to best",
+        "Cold best f (s)",
+        "Warm obs",
+        "Warm obs to cold best",
+        "Warm seeded records",
+        "Warm store hits",
+        "Warm live best f (s)",
+        "Warm deploy noise-frozen",
+    ]);
+    let mut rows = Vec::new();
+    for &bench in benches {
+        for algo in TUNERS {
+            rows.push(run_pair(bench, algo, opts.budget()));
+        }
+    }
+    let mut amortized = 0usize;
+    let mut pairs = 0usize;
+    for r in &rows {
+        let cold_live = r.cold.live_obs_to_best;
+        table.row(vec![
+            r.benchmark.label().to_string(),
+            r.algo.label().to_string(),
+            r.cold.outcome.observations.to_string(),
+            cold_live.to_string(),
+            if r.cold.live_best_f.is_finite() {
+                format!("{:.0}", r.cold.live_best_f)
+            } else {
+                "-".into()
+            },
+            r.warm.outcome.observations.to_string(),
+            r.warm_obs_to_cold_best.map(|o| o.to_string()).unwrap_or_else(|| "-".into()),
+            r.warm.seeded_records.to_string(),
+            r.warm.outcome.store_hits.to_string(),
+            if r.warm.live_best_f.is_finite() {
+                format!("{:.0}", r.warm.live_best_f)
+            } else {
+                "-".into()
+            },
+            if r.warm.outcome.noise_frozen { "yes".into() } else { "no".to_string() },
+        ]);
+        pairs += 1;
+        if let Some(w) = r.warm_obs_to_cold_best {
+            if w < cold_live {
+                amortized += 1;
+            }
+        }
+    }
+
+    let mut report = String::from(
+        "== tenancy — cross-campaign amortization: warm tenants reuse cold tenants' \
+         observations ==\n",
+    );
+    report.push_str(&table.to_ascii());
+    report.push_str(&format!(
+        "\namortized (warm reached cold best with strictly fewer live obs): {amortized}/{pairs} pairs\n",
+    ));
+    opts.persist("tenancy_summary", &table);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_to_reach_walks_best_so_far() {
+        let rec = |obs: u64, f: f64| EvalRecord {
+            obs,
+            model_time: 0.0,
+            theta: vec![0.5],
+            f,
+            cached: false,
+            source: crate::tuner::ObsSource::Live,
+        };
+        let trace = vec![rec(0, 10.0), rec(3, f64::NAN), rec(3, 8.0), rec(6, 9.0)];
+        assert_eq!(obs_to_reach(&trace, 10.0), Some(0));
+        assert_eq!(obs_to_reach(&trace, 8.5), Some(3), "NaN never counts as progress");
+        assert_eq!(obs_to_reach(&trace, 1.0), None);
+    }
+
+    #[test]
+    fn warm_tenant_amortizes_on_every_quick_pair() {
+        // The acceptance claim, on the quick benchmark slice: the warm
+        // tenant starts from the cold tenant's incumbent (free store
+        // seeds at obs 0), so it reaches the cold best with strictly
+        // fewer live observations than the cold run spent.
+        let opts = ExpOptions::quick();
+        let all = Benchmark::all();
+        for &bench in &all[..2] {
+            for algo in TUNERS {
+                let r = run_pair(bench, algo, opts.budget());
+                assert!(!r.cold.warm_started, "{bench:?}/{algo:?}: first request is cold");
+                assert!(r.warm.warm_started, "{bench:?}/{algo:?}: repeat workload must match");
+                assert!(r.warm.seeded_records > 0, "{bench:?}/{algo:?}: no records seeded");
+                assert!(r.warm.outcome.store_hits > 0, "{bench:?}/{algo:?}: no store hits");
+                let w = r
+                    .warm_obs_to_cold_best
+                    .unwrap_or_else(|| panic!("{bench:?}/{algo:?}: warm never reached cold best"));
+                assert!(
+                    w < r.cold.live_obs_to_best,
+                    "{bench:?}/{algo:?}: warm spent {w} live obs vs cold {}",
+                    r.cold.live_obs_to_best
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tenancy_quick_report_counts_amortized_pairs() {
+        let report = run(&ExpOptions::quick());
+        assert!(report.contains("Warm obs to cold best"));
+        assert!(report.contains("amortized"), "report lost the amortization tally");
+    }
+}

@@ -32,7 +32,7 @@ use crate::coordinator::{
     evaluate_theta, profile_for, Algo, CampaignScheduler, SchedulerOutcome, SchedulerPolicy,
 };
 use crate::sim::{simulate, ScenarioSpec, SimOptions};
-use crate::tuner::{EvalRecord, DEFAULT_DISPATCH_OVERHEAD_S};
+use crate::tuner::{live_best, EvalRecord, DEFAULT_DISPATCH_OVERHEAD_S};
 use crate::util::table::Table;
 use crate::workloads::Benchmark;
 
@@ -139,7 +139,11 @@ pub fn run(opts: &ExpOptions) -> String {
         opts.persist(&format!("walltime_{}", algo.name()), &table);
     }
 
-    // summary: spend and first-hit on BOTH axes, plus verified quality
+    // summary: spend and first-hit on BOTH axes, plus verified quality.
+    // "Best observed" counts every trace record (cache replays included);
+    // the live columns restrict to ObsSource::Live — fresh measurements
+    // under THIS run's noise stream — so a noise-frozen store/cache replay
+    // can never masquerade as a verified result (satellite bugfix).
     let mut summary = Table::new(&format!(
         "walltime summary — obs-to-best and time-to-best per tuner, Hadoop {version}"
     ))
@@ -151,6 +155,8 @@ pub fn run(opts: &ExpOptions) -> String {
         "Obs to best",
         "Time to best (s)",
         "Best observed f (s)",
+        "Obs to live best",
+        "Live best f (s)",
         "Result vs default",
     ]);
     for (bench, _, outs) in &campaigns {
@@ -176,6 +182,7 @@ pub fn run(opts: &ExpOptions) -> String {
                 seed ^ 0xE7A1,
                 &ScenarioSpec::default(),
             );
+            let live = live_best(&o.trace);
             summary.row(vec![
                 o.algo.label().to_string(),
                 bench.label().to_string(),
@@ -184,6 +191,8 @@ pub fn run(opts: &ExpOptions) -> String {
                 if o.observations > 0 { o.obs_to_best.to_string() } else { "-".into() },
                 if o.observations > 0 { format!("{:.0}", o.time_to_best) } else { "-".into() },
                 if o.best_f.is_finite() { format!("{:.0}", o.best_f) } else { "-".into() },
+                live.map(|r| r.obs.to_string()).unwrap_or_else(|| "-".into()),
+                live.map(|r| format!("{:.0}", r.f)).unwrap_or_else(|| "-".into()),
                 format!("-{:.0}%", 100.0 * (default_mean - tuned_mean) / default_mean),
             ]);
         }
@@ -230,6 +239,7 @@ pub fn run(opts: &ExpOptions) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::ResultsDir;
+    use crate::tuner::ObsSource;
 
     #[test]
     fn best_so_far_by_time_is_dense_and_forward_filled() {
@@ -239,6 +249,7 @@ mod tests {
             theta: vec![0.5],
             f,
             cached,
+            source: if cached { ObsSource::Memo } else { ObsSource::Live },
         };
         // a 2-point first wave landing at t=10, a cache hit at the same
         // elapsed time, then a charge gap until a wave at t=30
@@ -265,6 +276,7 @@ mod tests {
             theta: vec![0.5],
             f,
             cached: false,
+            source: ObsSource::Live,
         };
         let trace =
             vec![rec(10.0, f64::NAN), rec(20.0, 9.0), rec(30.0, f64::NAN), rec(40.0, 7.0)];
@@ -296,6 +308,10 @@ mod tests {
         let summary = std::fs::read_to_string(dir.join("walltime_summary.csv")).unwrap();
         assert!(summary.contains("Obs to best"), "summary lost the obs-to-best column");
         assert!(summary.contains("Time to best"), "summary lost the time-to-best column");
+        // regression (noise-frozen bugfix): the live-verified best must be
+        // reported alongside the raw best-observed column
+        assert!(summary.contains("Obs to live best"), "summary lost the live-obs column");
+        assert!(summary.contains("Live best f (s)"), "summary lost the live-best column");
         assert!(dir.join("walltime_scheduler.csv").exists());
 
         // the report carries both frames for every tuner

@@ -6,8 +6,11 @@
 //!               compare against the benign cluster
 //!   tune        run a tuning algorithm on a benchmark
 //!   experiment  regenerate a paper table/figure (table1 | fig6 | fig7 |
-//!               fig8 | fig9 | table2 | robustness | walltime | headline |
-//!               all)
+//!               fig8 | fig9 | table2 | robustness | walltime | tenancy |
+//!               headline | all)
+//!   serve       replay a multi-tenant request stream through the tuning
+//!               service (cross-campaign observation store, warm starts)
+//!               and print the deterministic result JSON
 //!   whatif      evaluate a configuration on the analytic model /
 //!               AOT artifact and compare with the simulator
 //!   lint        run the in-repo determinism & metering lints over
@@ -46,6 +49,7 @@ fn main() {
         "scenario" => cmd_scenario(),
         "tune" => cmd_tune(),
         "experiment" => cmd_experiment(),
+        "serve" => cmd_serve(),
         "whatif" => cmd_whatif(),
         "lint" => cmd_lint(),
         "bench" => cmd_bench(),
@@ -53,7 +57,7 @@ fn main() {
         _ => {
             println!(
                 "repro — Performance Tuning of Hadoop MapReduce: A Noisy Gradient Approach\n\n\
-                 USAGE: repro <run|scenario|tune|experiment|whatif|lint|bench|list> [flags]\n\
+                 USAGE: repro <run|scenario|tune|experiment|serve|whatif|lint|bench|list> [flags]\n\
                  Run `repro <cmd> --help` for per-command flags."
             );
             0
@@ -396,7 +400,7 @@ fn cmd_tune() -> i32 {
 fn cmd_experiment() -> i32 {
     let parsed = Args::new(
         "repro experiment",
-        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 robustness walltime headline ablation holistic all)",
+        "regenerate a paper table/figure (positional: table1 fig6 fig7 fig8 fig9 table2 robustness walltime tenancy headline ablation holistic all)",
     )
     .switch("quick", "reduced seeds/iterations")
     .flag("out", Some("results"), "output directory for md/csv")
@@ -446,6 +450,10 @@ fn cmd_experiment() -> i32 {
         println!("{}", experiments::walltime::run(&opts));
         ran = true;
     }
+    if sel("tenancy") {
+        println!("{}", experiments::tenancy::run(&opts));
+        ran = true;
+    }
     if sel("holistic") {
         println!("{}", experiments::holistic::run(&opts));
         ran = true;
@@ -462,6 +470,63 @@ fn cmd_experiment() -> i32 {
     if !ran {
         eprintln!("unknown experiment '{which}'");
         return 2;
+    }
+    0
+}
+
+fn cmd_serve() -> i32 {
+    use hadoop_spsa::coordinator::{parse_script, stream_json, TuningService};
+
+    let parsed = Args::new(
+        "repro serve",
+        "replay a multi-tenant request stream through the tuning service and print the \
+         deterministic result JSON (byte-identical across replays at any worker count)",
+    )
+    .flag(
+        "script",
+        Some("rust/tests/fixtures/service/requests.tsv"),
+        "request script: one 'tenant benchmark version tuner seed budget' line per request",
+    )
+    .flag("out", None, "also write the result JSON to this file")
+    .parse_env(2);
+    let p = match parsed {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return 2;
+        }
+    };
+    let script_path = p.get_str("script");
+    let text = match std::fs::read_to_string(&script_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("repro serve: reading {script_path}: {e}");
+            return 2;
+        }
+    };
+    let reqs = match parse_script(&text) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repro serve: {script_path}: {e}");
+            return 2;
+        }
+    };
+    let mut svc = TuningService::new();
+    let outcomes = svc.run_stream(&reqs);
+    let json = stream_json(&outcomes, svc.store()).to_pretty();
+    if let Some(out) = p.get("out") {
+        if let Err(e) = std::fs::write(out, &json) {
+            eprintln!("repro serve: writing {out}: {e}");
+            return 2;
+        }
+        let warm = outcomes.iter().filter(|o| o.warm_started).count();
+        println!(
+            "{} request(s) served ({} warm-started), result written to {out}",
+            outcomes.len(),
+            warm
+        );
+    } else {
+        println!("{json}");
     }
     0
 }

@@ -124,6 +124,25 @@ pub enum CachePolicy {
     Quantized,
 }
 
+/// Where an observation's value came from — the provenance axis of the
+/// trace. `Live` values were measured by the objective during this run;
+/// everything else replays a number observed earlier (same trial for
+/// `Memo`, a previous campaign for `Store`) under a *different* noise
+/// stream, i.e. the value is **noise-frozen** at its original draw.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsSource {
+    /// Dispatched to the objective in this run.
+    Live,
+    /// Served from this trial's quantized memo cache (or a within-batch
+    /// duplicate of a point dispatched in the same wave).
+    Memo,
+    /// Served from a cross-campaign [`ObservationStore`] tier — observed
+    /// in an earlier campaign, possibly at a nearby (store-quantized) θ.
+    ///
+    /// [`ObservationStore`]: crate::coordinator::ObservationStore
+    Store,
+}
+
 /// One observed point of the uniform convergence trace.
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
@@ -137,7 +156,31 @@ pub struct EvalRecord {
     pub model_time: f64,
     pub theta: Vec<f64>,
     pub f: f64,
+    /// `true` iff the value was served from memory (`source != Live`).
     pub cached: bool,
+    /// Provenance of the value (live / memo replay / store replay).
+    pub source: ObsSource,
+}
+
+/// The record where the best **live-measured** f was *first* achieved:
+/// store- and memo-served replays are skipped, so the result is the
+/// first live-verified best — the honest counterpart of a best-so-far
+/// that warm-start seeding can otherwise set at obs 0 for free. NaN
+/// observations are ignored; `None` when the trace has no live record
+/// with a non-NaN f.
+pub fn live_best(trace: &[EvalRecord]) -> Option<&EvalRecord> {
+    let mut best: Option<&EvalRecord> = None;
+    for r in trace {
+        if r.source != ObsSource::Live || r.f.is_nan() {
+            continue;
+        }
+        // strict `<` keeps the FIRST record achieving the best f
+        match best {
+            Some(b) if r.f >= b.f => {}
+            _ => best = Some(r),
+        }
+    }
+    best
 }
 
 /// Budget-metered, memoizing, trace-keeping wrapper around an objective.
@@ -160,6 +203,17 @@ pub struct EvalBroker<'a> {
     max_batch_cost: f64,
     trace: Vec<EvalRecord>,
     best: Option<(Vec<f64>, f64)>,
+    /// Provenance of the current `best` (meaningless while `best` is None).
+    best_source: ObsSource,
+    /// Best point among **live** observations only — what the trial
+    /// actually measured this run, never a noise-frozen replay.
+    best_live: Option<(Vec<f64>, f64)>,
+    /// Cross-campaign store tier: consulted on memo miss, keyed by the
+    /// (coarser) `store_quant` θ-cell. Populated by
+    /// [`EvalBroker::with_store_tier`]; empty outside a service context.
+    store: BTreeMap<Vec<i64>, f64>,
+    store_quant: f64,
+    store_hits: u64,
 }
 
 impl<'a> EvalBroker<'a> {
@@ -181,6 +235,11 @@ impl<'a> EvalBroker<'a> {
             max_batch_cost: 0.0,
             trace: Vec::new(),
             best: None,
+            best_source: ObsSource::Live,
+            best_live: None,
+            store: BTreeMap::new(),
+            store_quant: 1e-6,
+            store_hits: 0,
         }
     }
 
@@ -208,6 +267,51 @@ impl<'a> EvalBroker<'a> {
         assert!(seconds >= 0.0, "dispatch overhead must be non-negative");
         self.dispatch_overhead_s = seconds;
         self
+    }
+
+    /// Attach a cross-campaign store tier: `(θ, f)` pairs observed by
+    /// earlier campaigns, keyed by the (typically much coarser) store
+    /// quantum. Consulted on memo miss for [`CachePolicy::Quantized`]
+    /// tuners; hits are free in observations AND model time, recorded
+    /// with [`ObsSource::Store`] — i.e. noise-frozen. The tier is
+    /// deliberately **inert under [`CachePolicy::Off`]**: SPSA-family
+    /// tuners keep their bit-exact seed streams, and warm-start for them
+    /// goes through [`EvalBroker::ingest`] instead. First entry per cell
+    /// wins (replay-stable, like the memo).
+    pub fn with_store_tier(mut self, quant: f64, entries: &[(Vec<f64>, f64)]) -> Self {
+        assert!(quant > 0.0, "store quantization step must be positive");
+        self.store_quant = quant;
+        for (theta, f) in entries {
+            let k: Vec<i64> = theta.iter().map(|t| (t / quant).round() as i64).collect();
+            self.store.entry(k).or_insert(*f);
+        }
+        self
+    }
+
+    /// Seed the trace with one observation served by the cross-campaign
+    /// store *before* the tuner runs: a free [`ObsSource::Store`] record
+    /// (no observation, no model time) that participates in best-so-far
+    /// tracking. This is how a matched prior campaign's incumbent reaches
+    /// a warm-started trial for **every** cache policy — under
+    /// [`CachePolicy::Off`] the tuner itself never sees the value, so its
+    /// seed stream stays bit-exact, but the trial's best already starts
+    /// at the incumbent. Under `Quantized` the value also lands in the
+    /// memo, so the tuner revisiting the incumbent θ gets a free hit.
+    pub fn ingest(&mut self, theta: &[f64], f: f64) {
+        if self.policy == CachePolicy::Quantized {
+            let k = self.key(theta);
+            self.memo.entry(k).or_insert(f);
+        }
+        self.store_hits += 1;
+        self.trace.push(EvalRecord {
+            obs: self.evals_used,
+            model_time: self.elapsed_model_time,
+            theta: theta.to_vec(),
+            f,
+            cached: true,
+            source: ObsSource::Store,
+        });
+        self.note_best(theta, f, ObsSource::Store);
     }
 
     /// Why the budget is spent, or `None` while every axis has room.
@@ -252,6 +356,13 @@ impl<'a> EvalBroker<'a> {
         self.cache_hits
     }
 
+    /// Observations served by the cross-campaign store tier (lookup hits
+    /// plus [`EvalBroker::ingest`]ed seeds). Disjoint from
+    /// [`EvalBroker::cache_hits`], which counts same-trial memo replays.
+    pub fn store_hits(&self) -> u64 {
+        self.store_hits
+    }
+
     /// Modeled wall-clock spent so far, in simulated seconds: per
     /// dispatched wave, the max of its members' simulated durations plus
     /// the dispatch overhead, plus any [`EvalBroker::charge`]d external
@@ -277,6 +388,44 @@ impl<'a> EvalBroker<'a> {
     /// Best observed point so far: (θ, f).
     pub fn best(&self) -> Option<(&[f64], f64)> {
         self.best.as_ref().map(|(t, f)| (t.as_slice(), *f))
+    }
+
+    /// `true` iff the current best-so-far was served by the store tier —
+    /// i.e. its f was measured in an *earlier* campaign under a different
+    /// noise stream and was never beaten (or matched) by a live
+    /// observation in this run. A deployment of this best is noise-frozen.
+    pub fn best_noise_frozen(&self) -> bool {
+        self.best.is_some() && self.best_source == ObsSource::Store
+    }
+
+    /// Best point among **live** observations only (θ, f): the strongest
+    /// claim this run actually verified by measurement. `None` until the
+    /// first live observation lands.
+    pub fn best_live(&self) -> Option<(&[f64], f64)> {
+        self.best_live.as_ref().map(|(t, f)| (t.as_slice(), *f))
+    }
+
+    /// Shared best-so-far update. NaN-hygiene: `f < bf` is already false
+    /// for NaN candidates, but the first observation lands via the None
+    /// arm — a NaN there would poison best-so-far for the whole trial.
+    fn note_best(&mut self, theta: &[f64], f: f64, source: ObsSource) {
+        let better = match &self.best {
+            Some((_, bf)) => f < *bf,
+            None => !f.is_nan(),
+        };
+        if better {
+            self.best = Some((theta.to_vec(), f));
+            self.best_source = source;
+        }
+        if source == ObsSource::Live {
+            let better_live = match &self.best_live {
+                Some((_, bf)) => f < *bf,
+                None => !f.is_nan(),
+            };
+            if better_live {
+                self.best_live = Some((theta.to_vec(), f));
+            }
+        }
     }
 
     /// The uniform convergence trace (every served observation, in order).
@@ -336,6 +485,8 @@ impl<'a> EvalBroker<'a> {
         // where the budget truncates the batch.
         enum Source {
             Memo(f64),
+            /// Served by the cross-campaign store tier (noise-frozen).
+            Store(f64),
             /// Index into the dispatch vector (also covers duplicates of a
             /// not-yet-dispatched point within the same batch).
             Dispatch(usize),
@@ -355,6 +506,17 @@ impl<'a> EvalBroker<'a> {
                 if let Some(&i) = pending.get(&k) {
                     plan.push(Source::Dispatch(i));
                     continue;
+                }
+                // memo miss → the (coarser-celled) cross-campaign tier
+                if !self.store.is_empty() {
+                    let sk: Vec<i64> = theta
+                        .iter()
+                        .map(|t| (t / self.store_quant).round() as i64)
+                        .collect();
+                    if let Some(&f) = self.store.get(&sk) {
+                        plan.push(Source::Store(f));
+                        continue;
+                    }
                 }
             }
             if (dispatch.len() as u64) >= affordable {
@@ -399,16 +561,20 @@ impl<'a> EvalBroker<'a> {
         let mut out = Vec::with_capacity(plan.len());
         let mut dispatched_seen = vec![false; dispatch.len()];
         for (src, theta) in plan.iter().zip(thetas) {
-            let (f, cached) = match src {
-                Source::Memo(f) => (*f, true),
+            let (f, source) = match src {
+                Source::Memo(f) => (*f, ObsSource::Memo),
+                Source::Store(f) => (*f, ObsSource::Store),
                 Source::Dispatch(i) => {
                     let first = !dispatched_seen[*i];
                     dispatched_seen[*i] = true;
-                    (values[*i], !first)
+                    (values[*i], if first { ObsSource::Live } else { ObsSource::Memo })
                 }
             };
-            if cached {
-                self.cache_hits += 1;
+            let cached = source != ObsSource::Live;
+            match source {
+                ObsSource::Memo => self.cache_hits += 1,
+                ObsSource::Store => self.store_hits += 1,
+                ObsSource::Live => {}
             }
             self.trace.push(EvalRecord {
                 obs: self.evals_used,
@@ -416,17 +582,9 @@ impl<'a> EvalBroker<'a> {
                 theta: theta.clone(),
                 f,
                 cached,
+                source,
             });
-            // NaN-hygiene: `f < bf` is already false for NaN candidates,
-            // but the first observation lands via the None arm — a NaN
-            // there would poison best-so-far for the whole trial.
-            let better = match &self.best {
-                Some((_, bf)) => f < *bf,
-                None => !f.is_nan(),
-            };
-            if better {
-                self.best = Some((theta.clone(), f));
-            }
+            self.note_best(theta, f, source);
             out.push(f);
         }
         out
@@ -837,5 +995,98 @@ mod tests {
         assert!(!Budget::obs(10).is_unlimited());
         assert!(!Budget::unlimited().with_batches(5).is_unlimited());
         assert!(!Budget::unlimited().with_model_time(1e6).is_unlimited());
+    }
+
+    #[test]
+    fn store_tier_hits_are_free_flagged_and_coarse() {
+        let mut obj = quad();
+        // store cell 0.1 wide: 0.33 and 0.37 land in different cells,
+        // 0.33 and 0.31 in the same one
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10))
+            .with_cache(CachePolicy::Quantized)
+            .with_store_tier(0.1, &[(vec![0.33, 0.7], 42.0)]);
+        let f = b.try_eval(&[0.31, 0.71]).unwrap();
+        assert_eq!(f, 42.0, "same store cell serves the frozen value");
+        assert_eq!(b.evals_used(), 0, "store hits are free in observations");
+        assert_eq!(b.elapsed_model_time(), 0.0, "…and in model time");
+        assert_eq!(b.store_hits(), 1);
+        assert_eq!(b.cache_hits(), 0, "memo and store metering are disjoint");
+        let r = &b.trace()[0];
+        assert!(r.cached && r.source == ObsSource::Store);
+        // a θ outside every stored cell dispatches live
+        let live = b.try_eval(&[0.9, 0.1]).unwrap();
+        assert_ne!(live, 42.0);
+        assert_eq!(b.evals_used(), 1);
+        assert_eq!(b.trace()[1].source, ObsSource::Live);
+    }
+
+    #[test]
+    fn store_tier_is_inert_under_cache_policy_off() {
+        // SPSA-family contract: with CachePolicy::Off every observation
+        // reaches the objective — the store tier must not intercept.
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10))
+            .with_store_tier(0.1, &[(vec![0.33, 0.7], 42.0)]);
+        let f = b.try_eval(&[0.33, 0.7]).unwrap();
+        assert_ne!(f, 42.0, "Off-policy eval must dispatch live");
+        assert_eq!(b.evals_used(), 1);
+        assert_eq!(b.store_hits(), 0);
+    }
+
+    #[test]
+    fn ingest_seeds_best_without_spending_and_flags_noise_frozen() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        b.ingest(&[0.3, 0.7], 1.0);
+        assert_eq!(b.evals_used(), 0);
+        assert_eq!(b.store_hits(), 1);
+        assert_eq!(b.best().map(|(_, f)| f), Some(1.0));
+        assert!(b.best_noise_frozen(), "store-served incumbent best is frozen");
+        assert!(b.best_live().is_none(), "nothing live-verified yet");
+        let r = &b.trace()[0];
+        assert!(r.cached && r.source == ObsSource::Store && r.obs == 0);
+        // a live observation that beats the incumbent un-freezes the best
+        let f = b.try_eval(&[0.3, 0.7]).unwrap();
+        if f < 1.0 {
+            assert!(!b.best_noise_frozen());
+        }
+        assert_eq!(b.best_live().map(|(_, f)| f), Some(f));
+    }
+
+    #[test]
+    fn ingest_nan_does_not_poison_best() {
+        let mut obj = quad();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10));
+        b.ingest(&[0.5, 0.5], f64::NAN);
+        assert!(b.best().is_none(), "NaN seed must not become the best");
+        let f = b.try_eval(&[0.3, 0.7]).unwrap();
+        assert_eq!(b.best().map(|(_, bf)| bf), Some(f));
+        assert!(!b.best_noise_frozen());
+    }
+
+    #[test]
+    fn live_best_skips_noise_frozen_records() {
+        let rec = |obs: u64, f: f64, source: ObsSource| EvalRecord {
+            obs,
+            model_time: obs as f64,
+            theta: vec![0.5],
+            f,
+            cached: source != ObsSource::Live,
+            source,
+        };
+        // a frozen store record at obs 0 holds the global best; the live
+        // best is worse and lands later — the regression shape of the
+        // "time-to-best 0.0 for a best never measured live" bug
+        let trace = vec![
+            rec(0, 5.0, ObsSource::Store),
+            rec(1, f64::NAN, ObsSource::Live),
+            rec(2, 9.0, ObsSource::Live),
+            rec(2, 6.0, ObsSource::Memo),
+            rec(3, 7.0, ObsSource::Live),
+        ];
+        let lb = live_best(&trace).expect("has live records");
+        assert_eq!((lb.obs, lb.f), (2, 9.0), "first live-verified best");
+        assert!(live_best(&[rec(0, 5.0, ObsSource::Store)]).is_none());
+        assert!(live_best(&[]).is_none());
     }
 }

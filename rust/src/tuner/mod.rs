@@ -13,10 +13,13 @@ pub mod spsa;
 pub mod tpe;
 
 pub use broker::{
-    Budget, BudgetAxis, CachePolicy, EvalBroker, EvalRecord, DEFAULT_DISPATCH_OVERHEAD_S,
+    live_best, Budget, BudgetAxis, CachePolicy, EvalBroker, EvalRecord, ObsSource,
+    DEFAULT_DISPATCH_OVERHEAD_S,
 };
 pub use nelder_mead::{NelderMeadConfig, NelderMeadTuner};
-pub use objective::{Metric, Objective, ObsAgg, QuadraticObjective, SimObjective};
+pub use objective::{
+    FrozenObjective, Metric, Objective, ObsAgg, QuadraticObjective, SimObjective,
+};
 pub use rdsa::RdsaTuner;
 pub use registry::{Tuner, TuneOutcome, TunerContext, TunerEntry, PROFILE_NOISE_SIGMA, TUNERS};
 pub use spsa::{

@@ -414,6 +414,69 @@ impl Objective for QuadraticObjective {
     }
 }
 
+/// Dimension-pruning adapter (Tuneful §3): presents a reduced search
+/// space to the tuner while evaluating on the full one. Frozen
+/// coordinates are pinned to a full-dimensional `template` (typically the
+/// space defaults); the tuner proposes reduced θs over the free
+/// coordinates only, and this wrapper expands each proposal to the full
+/// vector before delegating. Seed derivation is untouched — the inner
+/// objective sees exactly as many observations, in the same order, as it
+/// would for natively full-dimensional proposals.
+pub struct FrozenObjective<'a> {
+    inner: &'a mut dyn Objective,
+    /// Full-dimensional vector supplying the frozen coordinates' values.
+    template: Vec<f64>,
+    /// Indices (into `template`) of the free coordinates, ascending.
+    free: Vec<usize>,
+}
+
+impl<'a> FrozenObjective<'a> {
+    /// Wrap `inner`, freezing every coordinate where `frozen[i]` is true
+    /// at `template[i]`. At least one coordinate must stay free.
+    pub fn new(inner: &'a mut dyn Objective, template: Vec<f64>, frozen: &[bool]) -> Self {
+        assert_eq!(template.len(), frozen.len(), "template/frozen length mismatch");
+        assert_eq!(template.len(), inner.dim(), "template must be full-dimensional");
+        let free: Vec<usize> =
+            (0..frozen.len()).filter(|&i| !frozen[i]).collect();
+        assert!(!free.is_empty(), "cannot freeze every dimension");
+        FrozenObjective { inner, template, free }
+    }
+
+    /// Expand a reduced θ (one entry per free coordinate, in index order)
+    /// to the full-dimensional vector the inner objective evaluates.
+    pub fn expand(&self, reduced: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(reduced.len(), self.free.len());
+        let mut full = self.template.clone();
+        for (slot, &v) in self.free.iter().zip(reduced) {
+            full[*slot] = v;
+        }
+        full
+    }
+}
+
+impl Objective for FrozenObjective<'_> {
+    fn dim(&self) -> usize {
+        self.free.len()
+    }
+
+    fn eval(&mut self, theta: &[f64]) -> f64 {
+        self.inner.eval(&self.expand(theta))
+    }
+
+    fn eval_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        let full: Vec<Vec<f64>> = thetas.iter().map(|t| self.expand(t)).collect();
+        self.inner.eval_batch(&full)
+    }
+
+    fn evals(&self) -> u64 {
+        self.inner.evals()
+    }
+
+    fn last_durations(&self) -> Option<Vec<f64>> {
+        self.inner.last_durations()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -726,5 +789,23 @@ mod tests {
         let away = o.eval(&[0.9, 0.1]);
         assert!(at_target < away);
         assert!((at_target - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frozen_objective_matches_hand_expanded_evals() {
+        // freezing dims 0 and 2 of a 3-dim quadratic at the template:
+        // the reduced view must replay the exact observation stream of
+        // hand-expanded full-dim proposals (same rng draws, same order)
+        let template = vec![0.1, 0.5, 0.9];
+        let frozen = [true, false, true];
+        let mut a = QuadraticObjective::new(vec![0.3, 0.7, 0.2], 0.05, 7);
+        let mut b = QuadraticObjective::new(vec![0.3, 0.7, 0.2], 0.05, 7);
+        let mut fo = FrozenObjective::new(&mut a, template.clone(), &frozen);
+        assert_eq!(fo.dim(), 1);
+        assert_eq!(fo.expand(&[0.4]), vec![0.1, 0.4, 0.9]);
+        let got = fo.eval_batch(&[vec![0.4], vec![0.6]]);
+        let want = b.eval_batch(&[vec![0.1, 0.4, 0.9], vec![0.1, 0.6, 0.9]]);
+        assert_eq!(got, want);
+        assert_eq!(fo.evals(), b.evals());
     }
 }

@@ -67,6 +67,15 @@ pub struct TuneOutcome {
     pub model_evals: u64,
     /// Simulated seconds spent profiling (Starfish/PPABS; 0 for SPSA).
     pub profiling_overhead_s: f64,
+    /// `true` when `best_f` replays a value observed in an *earlier*
+    /// campaign (served by the cross-campaign store, [`ObsSource::Store`])
+    /// and never re-measured live in this run — the deployment is
+    /// noise-frozen and its reported f is not a fresh measurement.
+    /// Always `false` for a tuner's own result; the service layer sets it
+    /// when a warm-started incumbent beats everything the tuner found.
+    ///
+    /// [`ObsSource::Store`]: crate::tuner::broker::ObsSource
+    pub noise_frozen: bool,
 }
 
 impl TuneOutcome {
@@ -77,6 +86,7 @@ impl TuneOutcome {
             history: Vec::new(),
             model_evals: 0,
             profiling_overhead_s: 0.0,
+            noise_frozen: false,
         }
     }
 }
@@ -164,6 +174,7 @@ impl Tuner for SpsaTuner {
             history: res.history,
             model_evals: 0,
             profiling_overhead_s: 0.0,
+            noise_frozen: false,
         }
     }
 }
@@ -214,6 +225,7 @@ impl Tuner for SurrogateSpsaTuner {
             history: res.history,
             model_evals: res.observations,
             profiling_overhead_s: 0.0,
+            noise_frozen: false,
         }
     }
 }
@@ -259,6 +271,7 @@ impl Tuner for StarfishTuner {
             history: Vec::new(),
             model_evals: res.model_evals,
             profiling_overhead_s: res.profiling_overhead_s,
+            noise_frozen: false,
         }
     }
 }
@@ -306,6 +319,7 @@ impl Tuner for PpabsTuner {
             history: Vec::new(),
             model_evals: ppabs.model_evals,
             profiling_overhead_s: ppabs.profiling_overhead_s,
+            noise_frozen: false,
         }
     }
 }

@@ -702,6 +702,80 @@ fn wordcount_total_is_partition_invariant() {
 }
 
 #[test]
+fn fingerprint_affinity_is_reflexive_and_scale_monotone() {
+    // The service matching algebra, for ANY fingerprint: a job matches
+    // itself at exactly 1.0, and growing only the input size (identical
+    // shape) strictly and monotonically lowers the affinity — a 2× input
+    // of the same shape always scores below the identical job.
+    use hadoop_spsa::coordinator::Fingerprint;
+    forall("fingerprint reflexive + scale monotone", 200, |g| {
+        let n = g.usize_in(1, 24);
+        let a = Fingerprint {
+            log2_input: g.f64_in(20.0, 40.0),
+            shape: (0..n).map(|_| g.f64_in(0.0, 5.0)).collect(),
+        };
+        assert_that(a.affinity(&a) == 1.0, "reflexive: identical job scores exactly 1")?;
+        let (d1, d2) = (g.f64_in(0.1, 3.0), g.f64_in(3.0, 10.0));
+        let mut near = a.clone();
+        near.log2_input += d1;
+        let mut far = a.clone();
+        far.log2_input += d2;
+        assert_that(
+            a.affinity(&near) < 1.0,
+            "a larger input of the same shape scores strictly below self",
+        )?;
+        assert_that(
+            a.affinity(&far) < a.affinity(&near),
+            format!(
+                "affinity not monotone in size distance: +{d2} doublings scored {} vs +{d1} at {}",
+                a.affinity(&far),
+                a.affinity(&near)
+            ),
+        )?;
+        assert_that(
+            a.affinity(&near) == near.affinity(&a),
+            "affinity is symmetric",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn pruning_never_freezes_a_parameter_with_observed_effect() {
+    // The Tuneful-pruning safety property, for ANY record set built from
+    // a known generative model: a dimension that demonstrably moves f
+    // across (essentially) the whole observed range must never be frozen
+    // to its default, at any significance threshold the service would
+    // actually use.
+    use hadoop_spsa::coordinator::prune_mask;
+    forall("pruning spares significant dims", 150, |g| {
+        let dim = g.usize_in(2, 8);
+        let hot = g.usize_in(0, dim - 1);
+        let amp = g.f64_in(10.0, 1000.0);
+        let threshold = g.f64_in(0.01, 0.2);
+        // f = 100 + amp·θ_hot + tiny noise; every other dim is inert
+        let records: Vec<(Vec<f64>, f64)> = (0..32)
+            .map(|_| {
+                let theta = g.unit_vec(dim);
+                let f = 100.0 + amp * theta[hot] + g.f64_in(-0.005, 0.005) * amp;
+                (theta, f)
+            })
+            .collect();
+        let mask = prune_mask(&records, dim, threshold);
+        assert_that(mask.len() == dim, "mask covers every dimension")?;
+        assert_that(
+            !mask[hot],
+            format!("dim {hot} moves f by the full observed range yet was frozen"),
+        )?;
+        assert_that(
+            !mask.iter().all(|&fz| fz),
+            "pruning must never freeze the whole space",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
 fn terasort_preserves_every_record() {
     forall("terasort record preservation", 20, |g| {
         let mut rng = Rng::seeded(g.u64_in(1, 1 << 40));
