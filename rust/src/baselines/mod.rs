@@ -17,6 +17,8 @@ pub use evaluator::{CostEvaluator, CostObjective, RustWhatIf};
 pub use hill_climbing::{hill_climb, HillClimbConfig, HillClimbResult};
 pub use kmeans::{kmeans, nearest, KmeansResult};
 pub use ppabs::{training_corpus, Ppabs};
-pub use random_search::{random_search, RandomSearchResult};
+pub use random_search::{
+    random_search, random_search_resumable, RandomSearchResult, RandomSearchState,
+};
 pub use rrs::{rrs, RrsConfig, RrsResult};
 pub use starfish::{starfish_tune, StarfishResult};

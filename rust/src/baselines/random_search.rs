@@ -10,6 +10,7 @@
 //! loop (the broker dispatches uncached points in order).
 
 use crate::tuner::broker::EvalBroker;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Candidates per dispatch round (bounds memory for huge budgets while
@@ -79,6 +80,147 @@ pub fn random_search(
     }
 }
 
+/// Serializable state of a checkpointed random search: how many random
+/// candidates have been drawn (the candidate stream is positional in the
+/// seed's RNG, so resuming fast-forwards `drawn × dim` draws), the
+/// remaining intrinsic cap, and the incumbent.
+#[derive(Clone, Debug)]
+pub struct RandomSearchState {
+    /// Whether θ₀ has been evaluated yet (it is the first observation of
+    /// a fresh run; a zero-budget first segment may checkpoint before it).
+    pub theta0_done: bool,
+    pub drawn: u64,
+    /// Remaining intrinsic candidate cap (`u64::MAX` = none — the broker
+    /// is the only limit).
+    pub cap: u64,
+    pub best_theta: Vec<f64>,
+    pub best_f: f64,
+}
+
+impl RandomSearchState {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        // u64s as strings: Json numbers are f64 and lossy above 2^53
+        j.set("theta0_done", Json::Bool(self.theta0_done))
+            .set("drawn", Json::Str(self.drawn.to_string()))
+            .set("cap", Json::Str(self.cap.to_string()))
+            .set("best_theta", Json::from_f64_slice(&self.best_theta))
+            .set("best_f", Json::Num(self.best_f));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let u = |k: &str| -> Result<u64, String> {
+            j.get(k)
+                .and_then(|x| x.as_str())
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("missing/invalid {k}"))
+        };
+        Ok(RandomSearchState {
+            theta0_done: j
+                .get("theta0_done")
+                .and_then(|x| x.as_bool())
+                .ok_or("missing theta0_done")?,
+            drawn: u("drawn")?,
+            cap: u("cap")?,
+            best_theta: j
+                .get("best_theta")
+                .and_then(|x| x.to_f64_vec())
+                .ok_or("missing best_theta")?,
+            best_f: j.get("best_f").and_then(|x| x.as_f64()).unwrap_or(f64::INFINITY),
+        })
+    }
+}
+
+/// Checkpointable [`random_search`]: run until the broker cannot afford a
+/// whole chunk, returning the state to continue from (`None` = the
+/// intrinsic cap is spent — finished for good).
+///
+/// Unlike the plain search, this variant only dispatches **whole chunks**
+/// (`CHUNK.min(cap)` candidates): a budget boundary mid-chunk stops the
+/// segment *before* the partial wave, so a resumed run's wave grid — and
+/// hence its modeled wall-clock charges — aligns exactly with an
+/// uninterrupted run's. Resuming requires a broker carrying the prior
+/// spend and an objective fast-forwarded past the prior observations; the
+/// candidate stream itself is realigned here by burning `drawn × dim`
+/// draws.
+pub fn random_search_resumable(
+    broker: &mut EvalBroker,
+    theta0: Vec<f64>,
+    seed: u64,
+    resume: Option<RandomSearchState>,
+) -> (RandomSearchResult, Option<RandomSearchState>) {
+    let n = broker.dim();
+    let start_evals = broker.evals_used();
+    let mut rng = Rng::seeded(seed);
+    let mut st = match resume {
+        Some(st) => {
+            for _ in 0..st.drawn.saturating_mul(n as u64) {
+                rng.f64();
+            }
+            st
+        }
+        None => RandomSearchState {
+            theta0_done: false,
+            drawn: 0,
+            cap: if broker.budget().is_unlimited() { UNLIMITED_FALLBACK_OBS } else { u64::MAX },
+            best_theta: theta0,
+            best_f: f64::INFINITY,
+        },
+    };
+    if !st.theta0_done {
+        let Some(f0) = broker.try_eval(&st.best_theta) else {
+            // nothing affordable: checkpoint the virgin state
+            let res = RandomSearchResult {
+                best_theta: st.best_theta.clone(),
+                best_f: st.best_f,
+                observations: 0,
+            };
+            return (res, Some(st));
+        };
+        st.theta0_done = true;
+        st.best_f = f0;
+        st.cap = st.cap.saturating_sub(1);
+    }
+    let RandomSearchState { mut drawn, mut cap, mut best_theta, mut best_f, .. } = st;
+
+    let done = loop {
+        if cap == 0 {
+            break true;
+        }
+        let k = CHUNK.min(cap);
+        if broker.remaining() < k {
+            // budget boundary: stop on the chunk grid (see the doc above)
+            break false;
+        }
+        let cands: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..n).map(|_| rng.f64()).collect()).collect();
+        let fs = broker.try_eval_batch(&cands);
+        // remaining() ≥ k was checked pre-wave, so the chunk is whole
+        debug_assert_eq!(fs.len() as u64, k);
+        drawn += k;
+        cap -= k;
+        for (cand, &f) in cands.iter().zip(&fs) {
+            if f < best_f {
+                best_f = f;
+                best_theta = cand.clone();
+            }
+        }
+    };
+
+    let result = RandomSearchResult {
+        best_theta: best_theta.clone(),
+        best_f,
+        observations: broker.evals_used() - start_evals,
+    };
+    let state = if done {
+        None
+    } else {
+        Some(RandomSearchState { theta0_done: true, drawn, cap, best_theta, best_f })
+    };
+    (result, state)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +264,49 @@ mod tests {
             res.observations > UNLIMITED_FALLBACK_OBS,
             "only {} obs — the fallback cap fired under a time budget",
             res.observations
+        );
+    }
+
+    #[test]
+    fn resumable_split_matches_straight_run_including_model_time() {
+        // The checkpoint contract: seg1 at a smaller budget + resume at the
+        // full budget ≡ one straight resumable run at the full budget —
+        // same best, same observations, same wave grid (bit-equal elapsed
+        // modeled time), with the second segment spending only the
+        // increment.
+        use crate::tuner::Objective;
+        let mk = || QuadraticObjective::new(vec![0.4, 0.6, 0.2], 0.1, 8);
+
+        let mut obj_s = mk();
+        let mut straight = EvalBroker::new(&mut obj_s, Budget::obs(150));
+        let (full, full_st) = random_search_resumable(&mut straight, vec![0.5; 3], 11, None);
+        assert_eq!(full.observations, 129, "theta0 + two whole 64-chunks");
+        assert!(full_st.is_some(), "obs budget left: still resumable");
+
+        let mut obj_1 = mk();
+        let mut seg1 = EvalBroker::new(&mut obj_1, Budget::obs(80));
+        let (r1, st1) = random_search_resumable(&mut seg1, vec![0.5; 3], 11, None);
+        assert_eq!(r1.observations, 65, "theta0 + one whole chunk");
+        let st1 = st1.expect("resumable");
+        let st1 = RandomSearchState::from_json(&st1.to_json()).unwrap();
+
+        let mut obj_2 = mk();
+        assert!(obj_2.advance_evals(seg1.evals_used()));
+        let mut seg2 = EvalBroker::new(&mut obj_2, Budget::obs(150)).with_prior_spend(
+            seg1.evals_used(),
+            seg1.batches_used(),
+            seg1.elapsed_model_time(),
+        );
+        let (r2, _) = random_search_resumable(&mut seg2, vec![0.5; 3], 11, Some(st1));
+        assert_eq!(r2.observations, 64, "extension spends only the increment");
+        assert_eq!(r2.best_theta, full.best_theta);
+        assert_eq!(r2.best_f.to_bits(), full.best_f.to_bits());
+        assert_eq!(seg2.evals_used(), straight.evals_used());
+        assert_eq!(seg2.batches_used(), straight.batches_used());
+        assert_eq!(
+            seg2.elapsed_model_time().to_bits(),
+            straight.elapsed_model_time().to_bits(),
+            "wave grids must align: prior waves charged once, never replayed"
         );
     }
 

@@ -14,7 +14,8 @@ use crate::config::{HadoopVersion, ParameterSpace};
 use crate::sim::{simulate_batch_auto, ScenarioSpec, SimJob, SimOptions};
 use crate::tuner::registry::{self, TunerContext};
 use crate::tuner::{
-    Budget, EvalBroker, EvalRecord, FrozenObjective, IterRecord, SimObjective,
+    Budget, CachePolicy, EvalBroker, EvalRecord, FrozenObjective, IterRecord, Objective,
+    SimObjective,
 };
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, stddev};
@@ -501,6 +502,118 @@ pub enum SchedulerPolicy {
     /// **unspent** allocation flows back into the pool the remaining
     /// rungs share — reinvested in the survivors.
     SuccessiveHalving,
+    /// Hyperband-style bracketed halving: the budget splits equally over
+    /// `min(3, ⌈log₂ n⌉)` brackets; each bracket runs a full halving
+    /// schedule, and every non-terminal tuner — including tuners culled in
+    /// an earlier bracket — is revived at the next bracket and *extended*
+    /// from its checkpoint, so an early aggressive cull is a deferral, not
+    /// a death sentence. Leftover bracket time rolls forward.
+    Hyperband,
+    /// UCB bandit over tuners: the budget is cut into fixed slices
+    /// (4 per tuner); each slice goes to the tuner maximizing
+    /// `mean-reward / max-mean + √(2·ln t / pulls)`, where a pull's reward
+    /// is the relative improvement of its best observed f per modeled
+    /// second charged. Ties (and the one-pull-each warmup) resolve in
+    /// registry order.
+    Bandit,
+}
+
+impl SchedulerPolicy {
+    /// CLI / table name (round-trips through [`SchedulerPolicy::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerPolicy::Equal => "equal",
+            SchedulerPolicy::SuccessiveHalving => "halving",
+            SchedulerPolicy::Hyperband => "hyperband",
+            SchedulerPolicy::Bandit => "bandit",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SchedulerPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "equal" => Some(SchedulerPolicy::Equal),
+            "halving" | "successive-halving" | "sh" => Some(SchedulerPolicy::SuccessiveHalving),
+            "hyperband" | "hb" => Some(SchedulerPolicy::Hyperband),
+            "bandit" | "ucb" => Some(SchedulerPolicy::Bandit),
+            _ => None,
+        }
+    }
+}
+
+/// What one [`RungEvent`] row records the scheduler doing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RungAction {
+    /// First segment of this tuner (fresh start).
+    Ran,
+    /// Extension resumed from a checkpoint — O(increment) observations.
+    Resumed,
+    /// Extension by deterministic replay (non-checkpointable tuner); the
+    /// replayed prefix is re-simulated but charged zero — only the
+    /// increment is billed.
+    Replayed,
+    /// The tuner's checkpoint channel reported terminal completion (or a
+    /// replay made no progress on a larger grant); unspent time reclaimed.
+    Finished,
+    /// Culled by a halving rung; unspent time reclaimed into the pool.
+    Culled,
+}
+
+impl RungAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RungAction::Ran => "ran",
+            RungAction::Resumed => "resumed",
+            RungAction::Replayed => "replayed",
+            RungAction::Finished => "finished",
+            RungAction::Culled => "culled",
+        }
+    }
+}
+
+/// One row of the scheduler's allocation audit trail: every grant,
+/// extension, cull and completion, in execution order. This is the table
+/// the `scheduler-gauntlet` CI job diffs against its committed fixture.
+#[derive(Clone, Debug)]
+pub struct RungEvent {
+    pub policy: SchedulerPolicy,
+    /// Hyperband bracket (0 outside Hyperband).
+    pub bracket: u32,
+    /// Rung within the bracket (for `Bandit`: the slice ordinal).
+    pub rung: u32,
+    pub algo: Algo,
+    /// Cumulative modeled seconds granted to this tuner after this event.
+    pub allocated_s: f64,
+    /// Cumulative modeled seconds charged after this event — with
+    /// checkpointed extension this grows by exactly the increment.
+    pub charged_s: f64,
+    /// Cumulative live observations after this event.
+    pub observations: u64,
+    /// Best observed f so far (∞ if the tuner never observed live).
+    pub best_f: f64,
+    pub action: RungAction,
+}
+
+impl RungEvent {
+    /// Tab-separated row (see [`RungEvent::tsv_header`]); floats use fixed
+    /// 3-decimal formatting so the fixture diff is byte-stable.
+    pub fn tsv_row(&self) -> String {
+        format!(
+            "{}\t{}\t{}\t{}\t{:.3}\t{:.3}\t{}\t{}\t{}",
+            self.policy.name(),
+            self.bracket,
+            self.rung,
+            self.algo.name(),
+            self.allocated_s,
+            self.charged_s,
+            self.observations,
+            if self.best_f.is_finite() { format!("{:.6}", self.best_f) } else { "inf".into() },
+            self.action.name(),
+        )
+    }
+
+    pub fn tsv_header() -> &'static str {
+        "policy\tbracket\trung\ttuner\talloc_s\tcharged_s\tobs\tbest_f\taction"
+    }
 }
 
 /// Per-tuner observation guard of the scheduler: the time axis is the
@@ -517,6 +630,12 @@ pub struct SchedulerOutcome {
     /// Modeled seconds actually spent (time is checked pre-dispatch, so
     /// this exceeds `allocated_s` by at most `max_wave_s`).
     pub elapsed_s: f64,
+    /// Modeled seconds actually *charged* across every segment of this
+    /// tuner's run. Rung extension bills only the increment — resumed
+    /// checkpoints spend nothing on the prefix, and replay-fallback
+    /// extensions re-simulate the prefix but charge it zero — so this
+    /// equals `elapsed_s` up to float association, never a multiple of it.
+    pub charged_s: f64,
     /// Costliest single wave of the run — the overshoot bound.
     pub max_wave_s: f64,
     pub observations: u64,
@@ -545,16 +664,23 @@ pub struct SchedulerOutcome {
 /// per-tuner time by [`SchedulerPolicy`] and recording per-tuner
 /// time-to-best curves. This is the comparison frame of the successor
 /// literature (Tuneful, Bao et al.): *time-to-good-configuration*, where
-/// a 64-probe wave costs one wave, not 64 observations.
+/// a k-probe wave on an m-slot cluster costs ⌈k/m⌉ sub-waves of modeled
+/// time (the brokers run with the paper cluster's slot count), not k
+/// observations and not one flat wave.
 ///
-/// **Resume by replay.** Tuners expose no pause/resume across the
-/// registry, but every one of them is deterministic given (seed,
-/// objective seed stream): re-running with a *larger* time budget
-/// reproduces the same trajectory prefix bit-exactly and extends it
-/// (tested). `SuccessiveHalving` therefore extends a survivor's run by
-/// re-running it at its cumulative allocation; the campaign charges each
-/// tuner's **final** elapsed time — the replay is a simulation
-/// bookkeeping trick, never double-billed.
+/// **Rung extension.** Checkpointable tuners (the noisy-gradient family,
+/// random search, Nelder–Mead, TPE — [`Tuner::checkpointable`]) are
+/// extended O(increment): each segment resumes from the previous
+/// segment's checkpoint on a broker preloaded with the prior spend
+/// (`with_prior_spend`) over an objective fast-forwarded to the prior
+/// observation count (`advance_evals`), producing a trajectory
+/// bit-identical to one uninterrupted run while spending — and charging —
+/// only the new waves. Tuners without a checkpoint channel fall back to
+/// resume-by-replay: deterministic rerun at the cumulative allocation,
+/// with only the elapsed-time *increment* charged (the replayed prefix is
+/// simulation bookkeeping, never billed twice).
+///
+/// [`Tuner::checkpointable`]: crate::tuner::Tuner::checkpointable
 #[derive(Clone)]
 pub struct CampaignScheduler {
     pub benchmark: Benchmark,
@@ -610,29 +736,56 @@ impl CampaignScheduler {
         self
     }
 
-    /// Number of allocation rounds: 1 for `Equal`; for halving, ⌈log₂ n⌉
-    /// rungs — culls fire after every rung but the last, so the final
-    /// rung is run by TWO finalists (n → … → 3 → 2), never a walkover:
-    /// the last cull decision is itself made on fully-funded runs.
-    fn rungs(&self) -> usize {
-        match self.policy {
-            SchedulerPolicy::Equal => 1,
-            SchedulerPolicy::SuccessiveHalving => {
-                let (mut r, mut k) = (0, self.algos.len());
-                while k > 1 {
-                    r += 1;
-                    k = k.div_ceil(2);
-                }
-                r.max(1)
-            }
+    /// Number of halving rungs for `k` starters: ⌈log₂ k⌉ — culls fire
+    /// after every rung but the last, so the final rung is run by TWO
+    /// finalists (k → … → 3 → 2), never a walkover: the last cull
+    /// decision is itself made on fully-funded runs.
+    fn rungs_for(k: usize) -> usize {
+        let (mut r, mut kk) = (0, k);
+        while kk > 1 {
+            r += 1;
+            kk = kk.div_ceil(2);
+        }
+        r.max(1)
+    }
+
+    /// Hyperband bracket count: min(3, ⌈log₂ n⌉), at least 1.
+    fn brackets(&self) -> u32 {
+        (Self::rungs_for(self.algos.len()) as u32).clamp(1, 3)
+    }
+
+    fn fresh_state(&self, algo: Algo) -> ResumeState {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = profile_for(self.benchmark, 1000);
+        let ctx = TunerContext { version: self.version, cluster, workload: w };
+        let tuner = registry::create(algo.name(), &ctx)
+            .expect("every Algo maps to a registry entry");
+        ResumeState {
+            algo,
+            checkpointable: tuner.checkpointable(),
+            checkpoint: None,
+            started: false,
+            done: false,
+            obs: 0,
+            batches: 0,
+            elapsed_s: 0.0,
+            charged_s: 0.0,
+            max_wave_s: 0.0,
+            trace: Vec::new(),
+            best_theta: ParameterSpace::for_version(self.version).default_theta(),
         }
     }
 
-    /// One tuner at one cumulative time allocation, from scratch (the
-    /// replay primitive). Same plumbing as [`run_trial`], but the budget
-    /// is wall-clock-first: unlimited-ish observations, `alloc_s` modeled
-    /// seconds.
-    fn run_one(&self, algo: Algo, alloc_s: f64) -> SchedulerOutcome {
+    /// Run (or extend) one tuner to a cumulative allocation of `alloc_s`
+    /// modeled seconds. Checkpointable tuners resume from their previous
+    /// segment's checkpoint and spend only the increment; the rest replay
+    /// from scratch, with only the elapsed increment charged. All brokers
+    /// carry the paper cluster's slot count, so a k-probe wave is billed
+    /// ⌈k/slots⌉ sub-waves of contended time.
+    fn run_segment(&self, st: &mut ResumeState, alloc_s: f64) {
+        if st.done {
+            return;
+        }
         let space = ParameterSpace::for_version(self.version);
         let cluster = ClusterSpec::paper_cluster();
         let w = profile_for(self.benchmark, 1000);
@@ -641,55 +794,185 @@ impl CampaignScheduler {
             cluster: cluster.clone(),
             workload: w.clone(),
         };
-        let tuner = registry::create(algo.name(), &ctx)
+        let tuner = registry::create(st.algo.name(), &ctx)
             .expect("every Algo maps to a registry entry");
+        let slots = cluster.workers() as usize;
         let mut obj = SimObjective::new(space.clone(), cluster, w, self.seed)
             .with_scenario(self.scenario.clone());
         let budget = Budget::obs(self.max_obs_per_tuner).with_model_time(alloc_s);
-        let mut broker = EvalBroker::new(&mut obj, budget).with_cache(tuner.cache_policy());
-        let out = tuner.tune(&mut broker, &space, self.seed);
 
-        let (observations, batches) = (broker.evals_used(), broker.batches_used());
-        let (elapsed_s, max_wave_s) = (broker.elapsed_model_time(), broker.max_batch_cost());
-        let trace = broker.take_trace();
-        let (mut best_f, mut obs_to_best, mut time_to_best) = (f64::INFINITY, 0, 0.0);
-        for r in &trace {
-            if r.f < best_f {
-                best_f = r.f;
-                obs_to_best = r.obs;
-                time_to_best = r.model_time;
-            }
+        if st.checkpointable {
+            // O(increment) extension: fast-forward the positional
+            // observation stream past the prior segments, preload the
+            // broker's meters, resume from the checkpoint. Memo caching
+            // stays OFF — a broker-local cache would not survive the
+            // segment boundary (see the Tuner trait docs).
+            assert!(obj.advance_evals(st.obs), "SimObjective must support stream fast-forward");
+            let mut broker = EvalBroker::new(&mut obj, budget)
+                .with_cache(CachePolicy::Off)
+                .with_slots(slots)
+                .with_prior_spend(st.obs, st.batches, st.elapsed_s);
+            let prior_elapsed = st.elapsed_s;
+            let (out, ck) =
+                tuner.tune_resumable(&mut broker, &space, self.seed, st.checkpoint.as_deref());
+            st.obs = broker.evals_used();
+            st.batches = broker.batches_used();
+            st.elapsed_s = broker.elapsed_model_time();
+            st.charged_s += st.elapsed_s - prior_elapsed;
+            st.max_wave_s = st.max_wave_s.max(broker.max_batch_cost());
+            st.trace.extend(broker.take_trace());
+            st.best_theta = out.best_theta;
+            st.done = ck.is_none();
+            st.checkpoint = ck;
+        } else {
+            // resume by replay: a deterministic rerun at the cumulative
+            // allocation reproduces the prior trajectory bit-exactly and
+            // extends it; the replayed prefix is simulation bookkeeping
+            // and is charged ZERO — only the elapsed increment is billed
+            let mut broker = EvalBroker::new(&mut obj, budget)
+                .with_cache(tuner.cache_policy())
+                .with_slots(slots);
+            let out = tuner.tune(&mut broker, &space, self.seed);
+            let (prev_obs, prev_elapsed) = (st.obs, st.elapsed_s);
+            st.obs = broker.evals_used();
+            st.batches = broker.batches_used();
+            st.elapsed_s = broker.elapsed_model_time();
+            st.charged_s += (st.elapsed_s - prev_elapsed).max(0.0);
+            st.max_wave_s = st.max_wave_s.max(broker.max_batch_cost());
+            st.trace = broker.take_trace();
+            st.best_theta = out.best_theta;
+            // no checkpoint channel: a rerun that makes no progress on a
+            // strictly larger grant is finished for good
+            st.done = st.started && st.obs == prev_obs && st.elapsed_s == prev_elapsed;
         }
-        SchedulerOutcome {
-            algo,
-            allocated_s: alloc_s,
-            elapsed_s,
-            max_wave_s,
-            observations,
-            batches,
-            best_theta: out.best_theta,
-            best_f,
-            obs_to_best,
-            time_to_best,
-            culled_at_rung: None,
-            trace,
+        st.started = true;
+    }
+
+    fn event(
+        &self,
+        bracket: u32,
+        rung: u32,
+        st: &ResumeState,
+        alloc: f64,
+        action: RungAction,
+    ) -> RungEvent {
+        RungEvent {
+            policy: self.policy,
+            bracket,
+            rung,
+            algo: st.algo,
+            allocated_s: alloc,
+            charged_s: st.charged_s,
+            observations: st.obs,
+            best_f: state_best_f(st),
+            action,
         }
     }
 
     /// Run the campaign. Outcomes come back in `algos` order, culled
     /// tuners included (with their partial results and cull rung).
     pub fn run(&self) -> Vec<SchedulerOutcome> {
+        self.run_with_events().0
+    }
+
+    /// [`run`](CampaignScheduler::run), plus the full allocation audit
+    /// trail: one [`RungEvent`] per grant/extension, cull and completion,
+    /// in execution order.
+    pub fn run_with_events(&self) -> (Vec<SchedulerOutcome>, Vec<RungEvent>) {
         let n = self.algos.len();
-        let rungs = self.rungs();
+        let mut states: Vec<ResumeState> =
+            self.algos.iter().map(|&a| self.fresh_state(a)).collect();
         let mut alloc = vec![0.0_f64; n];
         let mut culled: Vec<Option<u32>> = vec![None; n];
-        let mut outcomes: Vec<Option<SchedulerOutcome>> = (0..n).map(|_| None).collect();
-        let mut pool = self.total_model_time;
-        let mut survivors: Vec<usize> = (0..n).collect();
+        let mut events: Vec<RungEvent> = Vec::new();
 
+        match self.policy {
+            SchedulerPolicy::Equal => {
+                self.run_rungs(
+                    0,
+                    false,
+                    self.total_model_time,
+                    &mut states,
+                    &mut alloc,
+                    &mut culled,
+                    &mut events,
+                );
+            }
+            SchedulerPolicy::SuccessiveHalving => {
+                self.run_rungs(
+                    0,
+                    true,
+                    self.total_model_time,
+                    &mut states,
+                    &mut alloc,
+                    &mut culled,
+                    &mut events,
+                );
+            }
+            SchedulerPolicy::Hyperband => {
+                let brackets = self.brackets();
+                let mut carry = 0.0;
+                for b in 0..brackets {
+                    // revive everyone not terminally done: under Hyperband
+                    // an earlier cull is a deferral, not a death sentence —
+                    // checkpoints carry the culled tuner's state across
+                    // the bracket boundary
+                    for c in culled.iter_mut() {
+                        *c = None;
+                    }
+                    let pool = self.total_model_time / brackets as f64 + carry;
+                    carry = self.run_rungs(
+                        b,
+                        true,
+                        pool,
+                        &mut states,
+                        &mut alloc,
+                        &mut culled,
+                        &mut events,
+                    );
+                }
+            }
+            SchedulerPolicy::Bandit => {
+                self.run_bandit(&mut states, &mut alloc, &mut events);
+            }
+        }
+
+        let outcomes = states
+            .into_iter()
+            .zip(alloc)
+            .zip(culled)
+            .map(|((st, a), c)| outcome_of(st, a, c))
+            .collect();
+        (outcomes, events)
+    }
+
+    /// One halving bracket (or a single no-cull rung for `Equal`) over the
+    /// shared pool. Returns the unspent pool remainder (reclaims from
+    /// culled/finished tuners beyond what later rungs redistribute).
+    #[allow(clippy::too_many_arguments)]
+    fn run_rungs(
+        &self,
+        bracket: u32,
+        cull: bool,
+        mut pool: f64,
+        states: &mut [ResumeState],
+        alloc: &mut [f64],
+        culled: &mut [Option<u32>],
+        events: &mut Vec<RungEvent>,
+    ) -> f64 {
+        let mut survivors: Vec<usize> =
+            (0..states.len()).filter(|&i| !states[i].done).collect();
+        if survivors.is_empty() {
+            return pool;
+        }
+        let rungs = if cull { Self::rungs_for(survivors.len()) } else { 1 };
         for rung in 0..rungs {
+            survivors.retain(|&i| !states[i].done);
+            if survivors.is_empty() {
+                return pool; // everyone terminal: the rest of the clock is unused
+            }
             // this rung spends an equal slice of what is left — including
-            // everything reclaimed from earlier culls
+            // everything reclaimed from earlier culls and completions
             let share = pool / (rungs - rung) as f64;
             pool -= share;
             let per = share / survivors.len() as f64;
@@ -697,52 +980,234 @@ impl CampaignScheduler {
                 alloc[i] += per;
             }
 
-            // (re)run every survivor at its cumulative allocation —
-            // resume by replay (see the type docs); independent runs fan
-            // across the worker pool
-            let jobs: Vec<Box<dyn FnOnce() -> SchedulerOutcome + Send>> = survivors
+            let actions: Vec<RungAction> = survivors
+                .iter()
+                .map(|&i| {
+                    let st = &states[i];
+                    if !st.started {
+                        RungAction::Ran
+                    } else if st.checkpointable {
+                        RungAction::Resumed
+                    } else {
+                        RungAction::Replayed
+                    }
+                })
+                .collect();
+
+            // independent segments fan across the worker pool
+            let jobs: Vec<Box<dyn FnOnce() -> ResumeState + Send>> = survivors
                 .iter()
                 .map(|&i| {
                     let sched = self.clone();
-                    let (algo, a) = (self.algos[i], alloc[i]);
-                    Box::new(move || sched.run_one(algo, a)) as _
+                    let mut st = states[i].clone();
+                    let a = alloc[i];
+                    Box::new(move || {
+                        sched.run_segment(&mut st, a);
+                        st
+                    }) as _
                 })
                 .collect();
             let results = run_parallel(jobs, resolve_workers(None));
-            for (&i, out) in survivors.iter().zip(results) {
-                outcomes[i] = Some(out);
+            for (&i, st) in survivors.iter().zip(results) {
+                states[i] = st;
             }
 
-            if rung + 1 < rungs && survivors.len() > 1 {
-                let ranked = rank_by_observed_f(&survivors, |i| {
-                    outcomes[i].as_ref().map_or(f64::INFINITY, |o| o.best_f)
-                });
-                let keep = ranked.len().div_ceil(2);
-                for &i in &ranked[keep..] {
-                    culled[i] = Some(rung as u32);
-                    let spent = outcomes[i].as_ref().expect("ran this rung").elapsed_s;
-                    // reinvest the culled tuner's remaining time: the
-                    // unspent grant moves from its allocation back into
-                    // the pool, so Σ allocations never exceeds the total
-                    // budget (a run may overshoot its allocation by one
-                    // wave — never reclaim a negative remainder)
-                    let unspent = (alloc[i] - spent).max(0.0);
+            for (&i, action) in survivors.iter().zip(actions) {
+                events.push(self.event(bracket, rung as u32, &states[i], alloc[i], action));
+                if states[i].done {
+                    // terminal completion: reclaim the unspent grant
+                    let unspent = (alloc[i] - states[i].elapsed_s).max(0.0);
                     pool += unspent;
                     alloc[i] -= unspent;
+                    events.push(self.event(
+                        bracket,
+                        rung as u32,
+                        &states[i],
+                        alloc[i],
+                        RungAction::Finished,
+                    ));
                 }
-                survivors = ranked[..keep].to_vec();
-                survivors.sort_unstable(); // registry order, deterministic
+            }
+
+            if cull && rung + 1 < rungs {
+                let live: Vec<usize> =
+                    survivors.iter().copied().filter(|&i| !states[i].done).collect();
+                if live.len() > 1 {
+                    let ranked = rank_by_observed_f(&live, |i| state_best_f(&states[i]));
+                    let keep = ranked.len().div_ceil(2);
+                    for &i in &ranked[keep..] {
+                        culled[i] = Some(rung as u32);
+                        // reinvest the culled tuner's remaining time: the
+                        // unspent grant moves back into the pool, so Σ
+                        // allocations never exceeds the total budget (a
+                        // run may overshoot its allocation by one wave —
+                        // never reclaim a negative remainder)
+                        let unspent = (alloc[i] - states[i].elapsed_s).max(0.0);
+                        pool += unspent;
+                        alloc[i] -= unspent;
+                        events.push(self.event(
+                            bracket,
+                            rung as u32,
+                            &states[i],
+                            alloc[i],
+                            RungAction::Culled,
+                        ));
+                    }
+                    survivors = ranked[..keep].to_vec();
+                    survivors.sort_unstable(); // registry order, deterministic
+                } else {
+                    survivors = live;
+                }
             }
         }
+        pool
+    }
 
-        (0..n)
-            .map(|i| {
-                let mut o = outcomes[i].take().expect("every tuner ran at least rung 0");
-                o.culled_at_rung = culled[i];
-                o.allocated_s = alloc[i];
-                o
-            })
-            .collect()
+    /// UCB bandit loop: fixed slices, one tuner extended per slice.
+    fn run_bandit(
+        &self,
+        states: &mut [ResumeState],
+        alloc: &mut [f64],
+        events: &mut Vec<RungEvent>,
+    ) {
+        let n = states.len();
+        let slice = self.total_model_time / (4.0 * n as f64);
+        let mut pool = self.total_model_time;
+        let mut pulls = vec![0u64; n];
+        let mut reward_sum = vec![0.0_f64; n];
+        let mut t: u64 = 0;
+        while pool >= slice * (1.0 - 1e-9) {
+            let live: Vec<usize> = (0..n).filter(|&i| !states[i].done).collect();
+            if live.is_empty() {
+                break;
+            }
+            // warmup pulls one slice per tuner in registry order; after
+            // that, the classic UCB trade-off with the exploitation term
+            // normalized by the best mean so the two scales compare
+            let pick = if let Some(&i) = live.iter().find(|&&i| pulls[i] == 0) {
+                i
+            } else {
+                let mean = |i: usize| reward_sum[i] / pulls[i] as f64;
+                let max_mean = live.iter().map(|&i| mean(i)).fold(0.0_f64, f64::max);
+                let mut best = live[0];
+                let mut best_score = f64::NEG_INFINITY;
+                for &i in &live {
+                    let exploit = if max_mean > 0.0 { mean(i) / max_mean } else { 0.0 };
+                    let explore = (2.0 * (t.max(1) as f64).ln() / pulls[i] as f64).sqrt();
+                    let score = exploit + explore;
+                    // strict > keeps ties in registry order
+                    if score > best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            };
+
+            pool -= slice;
+            alloc[pick] += slice;
+            let action = if !states[pick].started {
+                RungAction::Ran
+            } else if states[pick].checkpointable {
+                RungAction::Resumed
+            } else {
+                RungAction::Replayed
+            };
+            let before_best = state_best_f(&states[pick]);
+            let before_charged = states[pick].charged_s;
+            self.run_segment(&mut states[pick], alloc[pick]);
+            let after_best = state_best_f(&states[pick]);
+            let dt = (states[pick].charged_s - before_charged).max(1e-9);
+            // reward: relative best-f improvement per modeled second; the
+            // first live observation counts as a full relative improvement
+            let rel = if after_best.is_finite() {
+                if before_best.is_finite() {
+                    ((before_best - after_best) / before_best.abs().max(1e-9)).max(0.0)
+                } else {
+                    1.0
+                }
+            } else {
+                0.0
+            };
+            reward_sum[pick] += rel / dt;
+            pulls[pick] += 1;
+            t += 1;
+            events.push(self.event(0, (t - 1) as u32, &states[pick], alloc[pick], action));
+            if states[pick].done {
+                let unspent = (alloc[pick] - states[pick].elapsed_s).max(0.0);
+                pool += unspent;
+                alloc[pick] -= unspent;
+                events.push(self.event(
+                    0,
+                    (t - 1) as u32,
+                    &states[pick],
+                    alloc[pick],
+                    RungAction::Finished,
+                ));
+            }
+        }
+    }
+}
+
+/// Per-tuner resume ledger the scheduler threads between segments: the
+/// tuner's checkpoint (if it has a channel), the cumulative broker meters
+/// a resumed broker is preloaded with, and the concatenated trace.
+#[derive(Clone, Debug)]
+struct ResumeState {
+    algo: Algo,
+    checkpointable: bool,
+    /// Opaque tuner state between segments; `None` before the first
+    /// segment and after terminal completion.
+    checkpoint: Option<Vec<u8>>,
+    started: bool,
+    /// Terminal: the tuner finished for good (checkpoint channel returned
+    /// `None`, or a replay made no progress on a larger grant).
+    done: bool,
+    obs: u64,
+    batches: u64,
+    elapsed_s: f64,
+    /// Σ charged modeled seconds across segments (increments only).
+    charged_s: f64,
+    max_wave_s: f64,
+    trace: Vec<EvalRecord>,
+    best_theta: Vec<f64>,
+}
+
+/// Best observed f across a state's cumulative trace (∞ if none).
+fn state_best_f(st: &ResumeState) -> f64 {
+    let mut best = f64::INFINITY;
+    for r in &st.trace {
+        if r.f < best {
+            best = r.f;
+        }
+    }
+    best
+}
+
+/// Assemble the public outcome from a final resume ledger.
+fn outcome_of(st: ResumeState, allocated_s: f64, culled_at_rung: Option<u32>) -> SchedulerOutcome {
+    let (mut best_f, mut obs_to_best, mut time_to_best) = (f64::INFINITY, 0, 0.0);
+    for r in &st.trace {
+        if r.f < best_f {
+            best_f = r.f;
+            obs_to_best = r.obs;
+            time_to_best = r.model_time;
+        }
+    }
+    SchedulerOutcome {
+        algo: st.algo,
+        allocated_s,
+        elapsed_s: st.elapsed_s,
+        charged_s: st.charged_s,
+        max_wave_s: st.max_wave_s,
+        observations: st.obs,
+        batches: st.batches,
+        best_theta: st.best_theta,
+        best_f,
+        obs_to_best,
+        time_to_best,
+        culled_at_rung,
+        trace: st.trace,
     }
 }
 
@@ -961,6 +1426,122 @@ mod tests {
         // the budget stays a budget: nothing allocated out of thin air
         let granted: f64 = outs.iter().map(|o| o.allocated_s).sum();
         assert!(granted <= total + 1e-6, "allocated {granted} > total {total}");
+    }
+
+    #[test]
+    fn rung_extension_charges_model_time_once_per_increment() {
+        // The satellite bugfix pinned: under SuccessiveHalving a survivor
+        // crosses rungs by checkpoint resume (spsa, random) or by replay
+        // fallback (hillclimb; Default never observes). Either way the
+        // charged model time must equal the final elapsed time — the
+        // replayed/resumed prefix is billed exactly once, so Σ charged
+        // stays a budget, never a multiple of one.
+        let total = 8000.0;
+        let sched = CampaignScheduler::new(Benchmark::Grep, HadoopVersion::V1, 3, total)
+            .with_algos(vec![Algo::Default, Algo::Spsa, Algo::Random, Algo::HillClimb])
+            .with_policy(SchedulerPolicy::SuccessiveHalving);
+        let (outs, events) = sched.run_with_events();
+        for o in &outs {
+            let tol = 1e-9 * o.elapsed_s.max(1.0);
+            assert!(
+                (o.charged_s - o.elapsed_s).abs() <= tol,
+                "{:?}: charged {} vs elapsed {} — a rung extension double-billed its prefix",
+                o.algo,
+                o.charged_s,
+                o.elapsed_s
+            );
+        }
+        // survivors really were extended (two rungs → a Resumed or
+        // Replayed event), and every extension's charge is monotone
+        assert!(
+            events.iter().any(|e| matches!(e.action, RungAction::Resumed | RungAction::Replayed)),
+            "no rung extension happened at all"
+        );
+        let charged: f64 = outs.iter().map(|o| o.charged_s).sum();
+        let slack: f64 = outs.iter().map(|o| o.max_wave_s).sum();
+        assert!(
+            charged <= total + slack + 1e-6,
+            "Σ charged {charged} blew the {total}s budget (wave slack {slack})"
+        );
+    }
+
+    #[test]
+    fn hyperband_revives_culled_tuners_across_brackets() {
+        let total = 12_000.0;
+        let sched = CampaignScheduler::new(Benchmark::Grep, HadoopVersion::V1, 3, total)
+            .with_algos(vec![Algo::Spsa, Algo::Random, Algo::HillClimb, Algo::NelderMead])
+            .with_policy(SchedulerPolicy::Hyperband);
+        let (outs, events) = sched.run_with_events();
+        assert_eq!(outs.len(), 4);
+        let brackets: std::collections::BTreeSet<u32> =
+            events.iter().map(|e| e.bracket).collect();
+        assert!(brackets.len() >= 2, "hyperband must run multiple brackets: {brackets:?}");
+
+        // a tuner culled in bracket 0 must reappear (resumed or replayed)
+        // in a later bracket — the cull was a deferral
+        let culled_b0: Vec<Algo> = events
+            .iter()
+            .filter(|e| e.bracket == 0 && e.action == RungAction::Culled)
+            .map(|e| e.algo)
+            .collect();
+        assert!(!culled_b0.is_empty(), "an aggressive bracket culls someone");
+        for &algo in &culled_b0 {
+            assert!(
+                events.iter().any(|e| e.bracket > 0
+                    && e.algo == algo
+                    && matches!(e.action, RungAction::Resumed | RungAction::Replayed)),
+                "{algo:?} was culled in bracket 0 and never revived"
+            );
+        }
+
+        // cumulative meters only ever grow, and charging stays incremental
+        for o in &outs {
+            let tol = 1e-9 * o.elapsed_s.max(1.0);
+            assert!((o.charged_s - o.elapsed_s).abs() <= tol, "{:?}", o.algo);
+        }
+        let mut seen: std::collections::BTreeMap<Algo, (f64, u64)> = Default::default();
+        for e in &events {
+            let entry = seen.entry(e.algo).or_insert((0.0, 0));
+            assert!(
+                e.charged_s >= entry.0 && e.observations >= entry.1,
+                "{:?}: cumulative meters went backwards",
+                e.algo
+            );
+            *entry = (e.charged_s, e.observations);
+        }
+        let granted: f64 = outs.iter().map(|o| o.allocated_s).sum();
+        assert!(granted <= total + 1e-6, "allocated {granted} > total {total}");
+    }
+
+    #[test]
+    fn bandit_reallocates_toward_observed_improvement() {
+        // Default banks zero reward (it never observes); SPSA improves
+        // every pull. UCB must steer the slices toward SPSA.
+        let total = 9000.0;
+        let sched = CampaignScheduler::new(Benchmark::Grep, HadoopVersion::V1, 3, total)
+            .with_algos(vec![Algo::Default, Algo::Spsa, Algo::Random])
+            .with_policy(SchedulerPolicy::Bandit);
+        let (outs, events) = sched.run_with_events();
+        assert_eq!(outs.len(), 3);
+        let by = |a: Algo| outs.iter().find(|o| o.algo == a).unwrap();
+        let (default_o, spsa_o) = (by(Algo::Default), by(Algo::Spsa));
+        assert!(
+            spsa_o.allocated_s > default_o.allocated_s,
+            "bandit granted SPSA {:.0}s vs Default {:.0}s",
+            spsa_o.allocated_s,
+            default_o.allocated_s
+        );
+        assert!(spsa_o.best_f.is_finite() && spsa_o.observations > 0);
+        // warmup pulls everyone once, in registry order
+        let first_three: Vec<Algo> = events.iter().take(3).map(|e| e.algo).collect();
+        assert_eq!(first_three, vec![Algo::Default, Algo::Spsa, Algo::Random]);
+        let granted: f64 = outs.iter().map(|o| o.allocated_s).sum();
+        assert!(granted <= total + 1e-6);
+        // the audit trail rows render to stable TSV (the gauntlet format)
+        for e in &events {
+            let row = e.tsv_row();
+            assert_eq!(row.split('\t').count(), 9, "{row}");
+        }
     }
 
     #[test]

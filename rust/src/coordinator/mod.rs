@@ -11,8 +11,8 @@ pub mod store;
 
 pub use campaign::{
     evaluate_theta, expand_theta, profile_for, run_campaign, run_trial, run_trial_warmed,
-    Algo, CampaignScheduler, SchedulerOutcome, SchedulerPolicy, TrialOutcome, TrialSpec,
-    WarmStart, DEFAULT_TRIAL_BUDGET, SCHEDULER_OBS_GUARD,
+    Algo, CampaignScheduler, RungAction, RungEvent, SchedulerOutcome, SchedulerPolicy,
+    TrialOutcome, TrialSpec, WarmStart, DEFAULT_TRIAL_BUDGET, SCHEDULER_OBS_GUARD,
 };
 pub use fingerprint::{fingerprint_for, Fingerprint};
 pub use pool::{default_workers, env_workers, in_pool_worker, resolve_workers, run_parallel};

@@ -19,6 +19,7 @@ use crate::sim::{
     simulate_batch, simulate_with_buffers, ScenarioSpec, SimBuffers, SimCounters, SimJob,
     SimOptions,
 };
+use crate::tuner::{Budget, CachePolicy, EvalBroker, SimObjective};
 use crate::util::alloc;
 use crate::util::bench::{bench, black_box};
 use crate::util::json::Json;
@@ -201,6 +202,25 @@ pub fn run_all(quick: bool) -> Vec<CaseResult> {
             m.add(&simulate_with_buffers(&cluster, &config, &w, &opts, &mut wave_bufs).counters);
         }
         m
+    }));
+    // Contended wave: one 12-probe wave through the broker's slot-charging
+    // path (3 slots → 4 sub-waves of duration maxima), the scheduler's
+    // cost-model hot loop. The broker hides the per-job SimCounters, so
+    // the meter counts dispatched observations and ns/event here reads as
+    // ns/observation. Fresh objective + broker per run keeps the
+    // positional obs seeds — and therefore the charge — bit-identical
+    // across iterations.
+    let wave: Vec<Vec<f64>> = (0..12)
+        .map(|i| vec![(i as f64 + 0.5) / 12.0; space.dim()])
+        .collect();
+    out.push(measure("broker/Terasort-contended-wave/3slots", quick, || {
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 777);
+        let mut broker = EvalBroker::new(&mut obj, Budget::obs(64))
+            .with_cache(CachePolicy::Off)
+            .with_slots(3);
+        let fs = broker.try_eval_batch(&wave);
+        black_box(broker.elapsed_model_time());
+        RunMeter { events: fs.len() as u64, cost_evals: 0, warm_hits: 0 }
     }));
     out
 }

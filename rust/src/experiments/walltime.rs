@@ -22,7 +22,13 @@
 //!   decrease vs default;
 //! * `walltime_scheduler`: a `SuccessiveHalving` run on the first
 //!   benchmark — allocations, cull rungs, and where the reclaimed time
-//!   went.
+//!   went;
+//! * `walltime_brackets`: a `Hyperband` run over the checkpointable
+//!   subset with **per-bracket columns** — each bracket's cumulative
+//!   grant, charged model time, observations and standing per tuner
+//!   (culled tuners re-enter the next bracket from their checkpoints);
+//! * `walltime_bandit`: the UCB bandit's slice-by-slice grant sequence
+//!   on the same subset.
 //!
 //! [`charge`]: crate::tuner::EvalBroker::charge
 
@@ -215,6 +221,7 @@ pub fn run(opts: &ExpOptions) -> String {
         "Tuner",
         "Allocated (s)",
         "Spent (s)",
+        "Charged (s)",
         "Obs",
         "Culled at rung",
         "Best observed f (s)",
@@ -224,6 +231,7 @@ pub fn run(opts: &ExpOptions) -> String {
             o.algo.label().to_string(),
             format!("{:.0}", o.allocated_s),
             format!("{:.0}", o.elapsed_s),
+            format!("{:.0}", o.charged_s),
             o.observations.to_string(),
             o.culled_at_rung.map(|r| r.to_string()).unwrap_or_else(|| "survived".into()),
             if o.best_f.is_finite() { format!("{:.0}", o.best_f) } else { "-".into() },
@@ -232,6 +240,89 @@ pub fn run(opts: &ExpOptions) -> String {
     report.push('\n');
     report.push_str(&sha_table.to_ascii());
     opts.persist("walltime_scheduler", &sha_table);
+
+    // Hyperband on the checkpointable subset: per-bracket columns — each
+    // bracket's cumulative grant/charge/obs and standing per tuner, built
+    // from the scheduler's allocation audit trail (culled tuners are
+    // revived and *extended from their checkpoints* at the next bracket)
+    let hb_algos = vec![Algo::Spsa, Algo::Random, Algo::NelderMead, Algo::Tpe];
+    let hb = CampaignScheduler::new(*bench0, version, seed, per_tuner0 * hb_algos.len() as f64)
+        .with_algos(hb_algos.clone())
+        .with_policy(SchedulerPolicy::Hyperband);
+    let (_, hb_events) = hb.run_with_events();
+    let mut hb_table = Table::new(&format!(
+        "walltime scheduler — Hyperband brackets on {}, total clock {:.0} s",
+        bench0.label(),
+        per_tuner0 * hb_algos.len() as f64
+    ))
+    .header(vec![
+        "Bracket",
+        "Tuner",
+        "Allocated (s)",
+        "Charged (s)",
+        "Obs",
+        "Best observed f (s)",
+        "Standing",
+    ]);
+    let max_bracket = hb_events.iter().map(|e| e.bracket).max().unwrap_or(0);
+    for bracket in 0..=max_bracket {
+        for &algo in &hb_algos {
+            // the tuner's last audit row of this bracket is its standing
+            let Some(last) = hb_events
+                .iter()
+                .filter(|e| e.bracket == bracket && e.algo == algo)
+                .next_back()
+            else {
+                continue;
+            };
+            hb_table.row(vec![
+                bracket.to_string(),
+                algo.label().to_string(),
+                format!("{:.0}", last.allocated_s),
+                format!("{:.0}", last.charged_s),
+                last.observations.to_string(),
+                if last.best_f.is_finite() { format!("{:.0}", last.best_f) } else { "-".into() },
+                last.action.name().to_string(),
+            ]);
+        }
+    }
+    report.push('\n');
+    report.push_str(&hb_table.to_ascii());
+    opts.persist("walltime_brackets", &hb_table);
+
+    // UCB bandit on the same subset: the slice-by-slice grant sequence
+    let bd = CampaignScheduler::new(*bench0, version, seed, per_tuner0 * hb_algos.len() as f64)
+        .with_algos(hb_algos.clone())
+        .with_policy(SchedulerPolicy::Bandit);
+    let (_, bd_events) = bd.run_with_events();
+    let mut bd_table = Table::new(&format!(
+        "walltime scheduler — UCB bandit slices on {}, total clock {:.0} s",
+        bench0.label(),
+        per_tuner0 * hb_algos.len() as f64
+    ))
+    .header(vec![
+        "Slice",
+        "Tuner",
+        "Action",
+        "Allocated (s)",
+        "Charged (s)",
+        "Obs",
+        "Best observed f (s)",
+    ]);
+    for e in &bd_events {
+        bd_table.row(vec![
+            e.rung.to_string(),
+            e.algo.label().to_string(),
+            e.action.name().to_string(),
+            format!("{:.0}", e.allocated_s),
+            format!("{:.0}", e.charged_s),
+            e.observations.to_string(),
+            if e.best_f.is_finite() { format!("{:.0}", e.best_f) } else { "-".into() },
+        ]);
+    }
+    report.push('\n');
+    report.push_str(&bd_table.to_ascii());
+    opts.persist("walltime_bandit", &bd_table);
     report
 }
 
@@ -313,6 +404,19 @@ mod tests {
         assert!(summary.contains("Obs to live best"), "summary lost the live-obs column");
         assert!(summary.contains("Live best f (s)"), "summary lost the live-best column");
         assert!(dir.join("walltime_scheduler.csv").exists());
+        let sched = std::fs::read_to_string(dir.join("walltime_scheduler.csv")).unwrap();
+        assert!(sched.contains("Charged (s)"), "scheduler table lost the charged column");
+        // per-bracket columns: the Hyperband table reports every bracket
+        // from 0 to its maximum, and the bandit table logs its slices
+        let brackets = std::fs::read_to_string(dir.join("walltime_brackets.csv")).unwrap();
+        assert!(brackets.contains("Bracket"), "brackets table lost its bracket column");
+        assert!(
+            brackets.lines().skip(1).any(|l| l.starts_with("0,")),
+            "brackets table has no bracket-0 rows"
+        );
+        let bandit = std::fs::read_to_string(dir.join("walltime_bandit.csv")).unwrap();
+        assert!(bandit.contains("Slice"), "bandit table lost its slice column");
+        assert!(bandit.lines().count() > 1, "bandit table has no slice rows");
 
         // the report carries both frames for every tuner
         for algo in Algo::all() {

@@ -286,6 +286,30 @@ fn cmd_tune() -> i32 {
         )
         .flag("seed", Some("7"), "tuner seed")
         .flag("metric", Some("time"), "objective: time|spills|shuffle|reduce-spill (spsa only)")
+        .flag(
+            "policy",
+            Some("single"),
+            "single (one tuner), or a scheduler interleaving many tuners on ONE shared \
+             modeled clock: equal|halving|hyperband|bandit",
+        )
+        .flag(
+            "tuners",
+            Some(""),
+            "comma-separated registry tuners for scheduler policies (default: whole registry)",
+        )
+        .flag(
+            "total-time",
+            Some("6000"),
+            "shared modeled clock for scheduler policies (simulated seconds)",
+        )
+        .flag("rungs-out", None, "write the scheduler's allocation audit trail to this TSV file")
+        .flag(
+            "checkpoint-out",
+            None,
+            "write a resume envelope (JSON) if the budget pauses the tuner before it terminates",
+        )
+        .flag("resume", None, "resume from an envelope written by --checkpoint-out")
+        .flag("out", None, "write the run's deterministic outcome JSON to this file")
         .parse_env(2);
     let p = match parsed {
         Ok(p) => p,
@@ -294,6 +318,10 @@ fn cmd_tune() -> i32 {
             return 2;
         }
     };
+    let policy = p.get_str("policy");
+    if policy != "single" {
+        return tune_scheduled(&p, &policy);
+    }
     let algo = Algo::from_name(&p.get_str("tuner")).unwrap_or_else(|| {
         eprintln!("unknown tuner '{}' (see `repro list`)", p.get_str("tuner"));
         std::process::exit(2);
@@ -316,6 +344,9 @@ fn cmd_tune() -> i32 {
             return 2;
         }
     };
+    if p.get("checkpoint-out").is_some() || p.get("resume").is_some() || p.get("out").is_some() {
+        return tune_checkpointed(&p, algo, budget);
+    }
     let spec = TrialSpec::new(
         parse_benchmark(&p.get_str("benchmark")),
         parse_version(&p.get_str("version")),
@@ -394,6 +425,238 @@ fn cmd_tune() -> i32 {
         ]);
     }
     print!("{}", t.to_ascii());
+    0
+}
+
+/// `repro tune --policy equal|halving|hyperband|bandit`: run a
+/// [`CampaignScheduler`] campaign — many tuners interleaved on one shared
+/// modeled clock with slot-contention charging — and optionally dump the
+/// allocation audit trail (the `scheduler-gauntlet` CI fixture) as TSV.
+fn tune_scheduled(p: &hadoop_spsa::util::cli::Parsed, policy: &str) -> i32 {
+    use hadoop_spsa::coordinator::{CampaignScheduler, RungEvent, SchedulerPolicy};
+
+    let Some(pol) = SchedulerPolicy::from_name(policy) else {
+        eprintln!("unknown policy '{policy}' (want single|equal|halving|hyperband|bandit)");
+        return 2;
+    };
+    let bench = parse_benchmark(&p.get_str("benchmark"));
+    let version = parse_version(&p.get_str("version"));
+    let numbers = (|| -> Result<(u64, f64), String> {
+        Ok((p.get_u64("seed")?, p.get_f64("total-time")?))
+    })();
+    let (seed, total) = match numbers {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if !(total > 0.0) {
+        eprintln!("--total-time must be positive (modeled seconds shared by all tuners)");
+        return 2;
+    }
+    let mut sched = CampaignScheduler::new(bench, version, seed, total).with_policy(pol);
+    let csv = p.get_str("tuners");
+    if !csv.trim().is_empty() {
+        let mut algos = Vec::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match Algo::from_name(name) {
+                Some(a) => algos.push(a),
+                None => {
+                    eprintln!("unknown tuner '{name}' (see `repro list`)");
+                    return 2;
+                }
+            }
+        }
+        sched = sched.with_algos(algos);
+    }
+    let (outs, events) = sched.run_with_events();
+
+    let mut t = Table::new(&format!(
+        "{} on {bench} ({version}) — shared clock {total:.0} s",
+        pol.name()
+    ))
+    .header(vec![
+        "Tuner",
+        "Allocated (s)",
+        "Charged (s)",
+        "Obs",
+        "Culled at rung",
+        "Best observed f (s)",
+    ]);
+    for o in &outs {
+        t.row(vec![
+            o.algo.label().to_string(),
+            format!("{:.0}", o.allocated_s),
+            format!("{:.0}", o.charged_s),
+            o.observations.to_string(),
+            o.culled_at_rung.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            if o.best_f.is_finite() { format!("{:.1}", o.best_f) } else { "-".into() },
+        ]);
+    }
+    print!("{}", t.to_ascii());
+    println!("{} allocation event(s)", events.len());
+    if let Some(path) = p.get("rungs-out") {
+        let mut s = String::from(RungEvent::tsv_header());
+        s.push('\n');
+        for e in &events {
+            s.push_str(&e.tsv_row());
+            s.push('\n');
+        }
+        if let Err(e) = std::fs::write(path, s) {
+            eprintln!("repro tune: writing {path}: {e}");
+            return 2;
+        }
+        println!("allocation audit written to {path}");
+    }
+    0
+}
+
+/// `repro tune --checkpoint-out/--resume/--out`: one checkpointable tuner,
+/// run through its resume channel. A run split across two invocations at a
+/// budget boundary must produce an `--out` JSON byte-identical to the
+/// uninterrupted run at the larger budget — the `resume-equivalence` CI
+/// gate `cmp`s exactly that, at `HSPSA_WORKERS=1` and `4`.
+fn tune_checkpointed(p: &hadoop_spsa::util::cli::Parsed, algo: Algo, budget: Budget) -> i32 {
+    use hadoop_spsa::tuner::registry::{self, TunerContext};
+    use hadoop_spsa::tuner::{CachePolicy, EvalBroker, Objective, SimObjective};
+    use hadoop_spsa::util::json::Json;
+
+    let bench = parse_benchmark(&p.get_str("benchmark"));
+    let version = parse_version(&p.get_str("version"));
+    let seed = p.get_u64("seed").unwrap_or(7);
+    let space = ParameterSpace::for_version(version);
+    let cluster = ClusterSpec::paper_cluster();
+    let w = profile_for(bench, 1000);
+    let ctx = TunerContext { version, cluster: cluster.clone(), workload: w.clone() };
+    let tuner = registry::create(algo.name(), &ctx).expect("Algo maps to a registry entry");
+    if !tuner.checkpointable() {
+        eprintln!(
+            "repro tune: '{}' has no checkpoint channel — checkpointable tuners: {}",
+            algo.name(),
+            registry::names()
+                .into_iter()
+                .filter(|n| registry::create(n, &ctx).is_some_and(|t| t.checkpointable()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        return 2;
+    }
+
+    // the prior segment's meters + tuner state, if resuming
+    let prior = match p.get("resume") {
+        None => None,
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("repro tune: reading {path}: {e}");
+                    return 2;
+                }
+            };
+            let parse = || -> Result<(String, u64, u64, f64, String), String> {
+                let doc = Json::parse(&text)?;
+                let field = |k: &str| doc.get(k).ok_or_else(|| format!("missing '{k}'"));
+                let num =
+                    |k: &str| -> Result<f64, String> { field(k)?.as_f64().ok_or(format!("'{k}' not a number")) };
+                Ok((
+                    field("tuner")?.as_str().ok_or("'tuner' not a string")?.to_string(),
+                    num("obs")? as u64,
+                    num("batches")? as u64,
+                    num("elapsed_s")?,
+                    field("state")?.as_str().ok_or("'state' not a string")?.to_string(),
+                ))
+            };
+            match parse() {
+                Ok(v) => Some(v),
+                Err(e) => {
+                    eprintln!("repro tune: {path}: {e}");
+                    return 2;
+                }
+            }
+        }
+    };
+    if let Some((name, ..)) = &prior {
+        if name != algo.name() {
+            eprintln!("repro tune: checkpoint is for '{name}', not '{}'", algo.name());
+            return 2;
+        }
+    }
+
+    // The memo cache is broker-local and cannot survive a segment
+    // boundary, so checkpointed runs always disable it — straight runs on
+    // this path too, keeping the two invocations' traces comparable.
+    let mut obj = SimObjective::new(space.clone(), cluster, w, seed);
+    let (out, ck, obs, batches, elapsed) = match &prior {
+        Some((_, p_obs, p_batches, p_elapsed, state)) => {
+            if !obj.advance_evals(*p_obs) {
+                eprintln!(
+                    "repro tune: checkpoint claims {p_obs} observations but the objective \
+                     stream refused to fast-forward"
+                );
+                return 2;
+            }
+            let mut broker = EvalBroker::new(&mut obj, budget)
+                .with_cache(CachePolicy::Off)
+                .with_prior_spend(*p_obs, *p_batches, *p_elapsed);
+            let (out, ck) = tuner.tune_resumable(&mut broker, &space, seed, Some(state.as_bytes()));
+            (out, ck, broker.evals_used(), broker.batches_used(), broker.elapsed_model_time())
+        }
+        None => {
+            let mut broker = EvalBroker::new(&mut obj, budget).with_cache(CachePolicy::Off);
+            let (out, ck) = tuner.tune_resumable(&mut broker, &space, seed, None);
+            (out, ck, broker.evals_used(), broker.batches_used(), broker.elapsed_model_time())
+        }
+    };
+    println!(
+        "{} on {bench} ({version}): {obs} observation(s) in {batches} wave(s), {} modeled — \
+         best f {:.3} [{}]",
+        algo.label(),
+        fmt_secs(elapsed),
+        out.best_f,
+        if ck.is_some() { "paused, resumable" } else { "terminal" }
+    );
+
+    if let Some(path) = p.get("checkpoint-out") {
+        match &ck {
+            Some(bytes) => {
+                let state =
+                    String::from_utf8(bytes.clone()).expect("checkpoint envelopes are JSON text");
+                let mut env = Json::obj();
+                env.set("tuner", Json::Str(algo.name().to_string()))
+                    .set("obs", Json::Num(obs as f64))
+                    .set("batches", Json::Num(batches as f64))
+                    .set("elapsed_s", Json::Num(elapsed))
+                    .set("state", Json::Str(state));
+                if let Err(e) = std::fs::write(path, env.to_pretty()) {
+                    eprintln!("repro tune: writing {path}: {e}");
+                    return 2;
+                }
+                println!("checkpoint written to {path}");
+            }
+            None => eprintln!(
+                "repro tune: run reached a terminal stop — nothing to checkpoint, {path} not written"
+            ),
+        }
+    }
+    if let Some(path) = p.get("out") {
+        let mut doc = Json::obj();
+        doc.set("tuner", Json::Str(algo.name().to_string()))
+            .set("benchmark", Json::Str(bench.to_string()))
+            .set("version", Json::Str(version.to_string()))
+            .set("seed", Json::Num(seed as f64))
+            .set("observations", Json::Num(obs as f64))
+            .set("waves", Json::Num(batches as f64))
+            .set("elapsed_model_s", Json::Num(elapsed))
+            .set("best_f", Json::Num(out.best_f))
+            .set("best_theta", Json::from_f64_slice(&out.best_theta))
+            .set("terminal", Json::Bool(ck.is_none()));
+        if let Err(e) = std::fs::write(path, doc.to_pretty()) {
+            eprintln!("repro tune: writing {path}: {e}");
+            return 2;
+        }
+        println!("outcome written to {path}");
+    }
     0
 }
 

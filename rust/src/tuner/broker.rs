@@ -196,6 +196,13 @@ pub struct EvalBroker<'a> {
     cache_hits: u64,
     /// Modeled per-wave dispatch overhead (see [`DEFAULT_DISPATCH_OVERHEAD_S`]).
     dispatch_overhead_s: f64,
+    /// Modeled cluster probe slots: how many batch members can run
+    /// concurrently. 0 (the default) = unlimited — the flat
+    /// `max(durations)` charging every pre-contention test pins. With
+    /// m > 0 a k-probe wave runs in ⌈k/m⌉ sub-waves of at most m probes
+    /// each (dispatch order), and the wave is charged the SUM of the
+    /// sub-wave maxima plus ONE dispatch overhead.
+    slots: usize,
     /// Modeled wall-clock spent so far (simulated seconds).
     elapsed_model_time: f64,
     /// Costliest single wave charged so far — the bound on how far the
@@ -231,6 +238,7 @@ impl<'a> EvalBroker<'a> {
             batches_used: 0,
             cache_hits: 0,
             dispatch_overhead_s: DEFAULT_DISPATCH_OVERHEAD_S,
+            slots: 0,
             elapsed_model_time: 0.0,
             max_batch_cost: 0.0,
             trace: Vec::new(),
@@ -266,6 +274,36 @@ impl<'a> EvalBroker<'a> {
     pub fn with_dispatch_overhead(mut self, seconds: f64) -> Self {
         assert!(seconds >= 0.0, "dispatch overhead must be non-negative");
         self.dispatch_overhead_s = seconds;
+        self
+    }
+
+    /// Model slot contention: the cluster can run at most `slots` probes
+    /// of one wave concurrently, so a k-probe wave is charged in ⌈k/m⌉
+    /// sub-waves (the sum of per-group-of-m duration maxima, dispatch
+    /// order, plus one overhead) instead of one flat max. `slots == 0`
+    /// restores the uncontended default. Charging only — dispatch order,
+    /// batch composition and observation seeds are untouched, so metered
+    /// values stay bit-identical to the flat model's.
+    pub fn with_slots(mut self, slots: usize) -> Self {
+        self.slots = slots;
+        self
+    }
+
+    /// Probe-slot count in effect (0 = uncontended flat charging).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Preload spend recorded by an earlier (checkpointed) segment of the
+    /// same logical run, so budget checks, `remaining()`-derived chunk
+    /// sizes and `EvalRecord` obs/model-time stamps continue exactly where
+    /// the interrupted run stopped. The budget axes still cap the TOTAL —
+    /// prior plus new spend.
+    pub fn with_prior_spend(mut self, obs: u64, batches: u64, elapsed_s: f64) -> Self {
+        assert!(elapsed_s >= 0.0, "prior elapsed time must be non-negative");
+        self.evals_used = obs;
+        self.batches_used = batches;
+        self.elapsed_model_time = elapsed_s;
         self
     }
 
@@ -545,8 +583,20 @@ impl<'a> EvalBroker<'a> {
                 Some(d) if d.len() == vs.len() => d,
                 _ => vs.clone(),
             };
-            let slowest = durations.iter().cloned().fold(0.0_f64, f64::max);
-            let wave_cost = slowest + self.dispatch_overhead_s;
+            // With m > 0 slots, the k probes run in ⌈k/m⌉ sub-waves of at
+            // most m each (dispatch order): the wave takes the SUM of the
+            // sub-wave maxima. m == 0 (or m ≥ k) degenerates to the flat
+            // max — one sub-wave. One overhead either way: it models job
+            // submission latency, paid once per dispatched batch.
+            let runtime: f64 = if self.slots == 0 {
+                durations.iter().cloned().fold(0.0_f64, f64::max)
+            } else {
+                durations
+                    .chunks(self.slots)
+                    .map(|sub| sub.iter().cloned().fold(0.0_f64, f64::max))
+                    .sum()
+            };
+            let wave_cost = runtime + self.dispatch_overhead_s;
             self.elapsed_model_time += wave_cost;
             self.max_batch_cost = self.max_batch_cost.max(wave_cost);
             vs
@@ -958,6 +1008,79 @@ mod tests {
             EvalBroker::new(&mut obj3, Budget::obs(1).with_batches(1).with_model_time(1.0));
         b3.try_eval(&[0.0, 0.0]).unwrap();
         assert_eq!(b3.stop_reason(), Some(BudgetAxis::Observations));
+    }
+
+    #[test]
+    fn slot_contention_charges_sub_wave_sums() {
+        // f(θ) = 1 + θ·θ noise-free ⇒ durations are the values themselves.
+        // 5 probes on a 2-slot cluster: sub-waves [2.0, 1.25], [1.08, 1.5],
+        // [1.0] → max 2.0 + max 1.5 + max 1.0 = 4.5, plus one overhead.
+        let pts = vec![
+            vec![1.0, 0.0], // 2.0
+            vec![0.5, 0.0], // 1.25
+            vec![0.2, 0.2], // 1.08
+            vec![0.5, 0.5], // 1.5
+            vec![0.0, 0.0], // 1.0
+        ];
+        let mut obj = quiet();
+        let mut b = EvalBroker::new(&mut obj, Budget::obs(10))
+            .with_dispatch_overhead(7.0)
+            .with_slots(2);
+        let fs = b.try_eval_batch(&pts);
+        assert_eq!(fs.len(), 5);
+        assert!((b.elapsed_model_time() - (4.5 + 7.0)).abs() < 1e-12, "{}", b.elapsed_model_time());
+        // the contended charge is ≥ the flat max and ≤ the sequential sum
+        let mut flat_obj = quiet();
+        let mut flat = EvalBroker::new(&mut flat_obj, Budget::obs(10)).with_dispatch_overhead(7.0);
+        let flat_fs = flat.try_eval_batch(&pts);
+        assert_eq!(fs, flat_fs, "contention must not perturb observed values");
+        assert!(b.elapsed_model_time() >= flat.elapsed_model_time());
+        let sum: f64 = fs.iter().sum();
+        assert!(b.elapsed_model_time() < sum + 7.0);
+        // m ≥ k and slots == 0 both degenerate to the flat charge
+        for m in [0, 5, 64] {
+            let mut o = quiet();
+            let mut wide = EvalBroker::new(&mut o, Budget::obs(10))
+                .with_dispatch_overhead(7.0)
+                .with_slots(m);
+            wide.try_eval_batch(&pts);
+            assert_eq!(wide.elapsed_model_time(), flat.elapsed_model_time(), "slots {m}");
+        }
+        assert_eq!(b.slots(), 2);
+    }
+
+    #[test]
+    fn prior_spend_continues_budget_and_trace_stamps() {
+        // A resumed broker preloaded with the interrupted segment's spend
+        // must meter exactly like the uninterrupted broker's continuation.
+        let mut full_obj = quiet();
+        let mut full = EvalBroker::new(&mut full_obj, Budget::obs(5)).with_dispatch_overhead(5.0);
+        full.try_eval(&[0.5, 0.0]).unwrap();
+        full.try_eval(&[0.2, 0.2]).unwrap();
+        let (obs, batches, elapsed) =
+            (full.evals_used(), full.batches_used(), full.elapsed_model_time());
+        full.try_eval(&[0.5, 0.5]).unwrap();
+
+        let mut res_obj = quiet();
+        assert!(res_obj.advance_evals(2), "quadratic supports skipping");
+        let mut resumed = EvalBroker::new(&mut res_obj, Budget::obs(5))
+            .with_dispatch_overhead(5.0)
+            .with_prior_spend(obs, batches, elapsed);
+        assert_eq!(resumed.remaining(), 3, "prior spend counts against the budget");
+        let f = resumed.try_eval(&[0.5, 0.5]).unwrap();
+        assert_eq!(f, full.trace()[2].f);
+        assert_eq!(resumed.evals_used(), full.evals_used());
+        assert_eq!(resumed.trace()[0].obs, full.trace()[2].obs, "obs stamp continues");
+        assert_eq!(
+            resumed.trace()[0].model_time,
+            full.trace()[2].model_time,
+            "model-time stamp continues"
+        );
+        // exhausting the rest hits the same ceiling as the straight run
+        resumed.try_eval(&[0.1, 0.1]).unwrap();
+        resumed.try_eval(&[0.3, 0.3]).unwrap();
+        assert!(resumed.exhausted());
+        assert_eq!(resumed.stop_reason(), Some(BudgetAxis::Observations));
     }
 
     #[test]

@@ -20,9 +20,10 @@
 //! only reaches the objective's noise, never the search itself.
 
 use crate::config::ParameterSpace;
+use crate::util::json::Json;
 
 use super::broker::EvalBroker;
-use super::registry::{TuneOutcome, Tuner};
+use super::registry::{decode_checkpoint, encode_checkpoint, TuneOutcome, Tuner};
 
 /// Standard Nelder–Mead coefficients plus the simplex construction step.
 #[derive(Clone, Debug)]
@@ -96,6 +97,290 @@ impl Best {
     }
 }
 
+/// Where inside an iteration a checkpointed run stopped. Every stop sits
+/// immediately BEFORE a broker dispatch, so resuming re-issues exactly the
+/// evaluation the straight run would have issued next — same observation
+/// index, same wave grid.
+#[derive(Clone, Debug, PartialEq)]
+enum NmPhase {
+    /// At an iteration boundary (or before the initial simplex batch when
+    /// the simplex is still empty).
+    Start,
+    /// Reflected point observed and better than the incumbent best; the
+    /// expansion probe is the next dispatch.
+    Expand { xr: Vec<f64>, fr: f64 },
+    /// Reflected point observed and not good enough; the contraction
+    /// probe is the next dispatch. `xc` is recomputed from the (unchanged)
+    /// simplex, so only `fr` needs to survive the checkpoint.
+    Contract { fr: f64 },
+    /// Contraction rejected; the n-point shrink batch is the next dispatch.
+    Shrink,
+}
+
+/// Serializable Nelder–Mead resume state: the simplex (empty until the
+/// initial batch lands), the iteration counter, the best-so-far tracker,
+/// and the intra-iteration phase. Geometry (centroid, reflect/contract
+/// points, shrink targets) is deterministic from the simplex and is
+/// recomputed on resume rather than stored.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NmState {
+    simplex: Vec<(Vec<f64>, f64)>,
+    iters: u64,
+    best_theta: Vec<f64>,
+    best_f: f64,
+    phase: NmPhase,
+}
+
+impl NmState {
+    fn fresh(theta0: Vec<f64>) -> NmState {
+        NmState {
+            simplex: Vec::new(),
+            iters: 0,
+            best_theta: theta0,
+            best_f: f64::INFINITY,
+            phase: NmPhase::Start,
+        }
+    }
+
+    /// Finite-safe f encoding: the virgin state carries best_f = +inf,
+    /// which JSON spells `null`.
+    fn f_to_json(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
+    fn f_from_json(j: Option<&Json>) -> f64 {
+        j.and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let simplex = Json::Arr(
+            self.simplex
+                .iter()
+                .map(|(v, f)| {
+                    Json::obj()
+                        .set("theta", Json::from_f64_slice(v))
+                        .set("f", Self::f_to_json(*f))
+                })
+                .collect(),
+        );
+        let mut js = Json::obj()
+            .set("simplex", simplex)
+            .set("iters", Json::Num(self.iters as f64))
+            .set("best_theta", Json::from_f64_slice(&self.best_theta))
+            .set("best_f", Self::f_to_json(self.best_f));
+        js = match &self.phase {
+            NmPhase::Start => js.set("phase", Json::Str("start".into())),
+            NmPhase::Expand { xr, fr } => js
+                .set("phase", Json::Str("expand".into()))
+                .set("xr", Json::from_f64_slice(xr))
+                .set("fr", Self::f_to_json(*fr)),
+            NmPhase::Contract { fr } => {
+                js.set("phase", Json::Str("contract".into())).set("fr", Self::f_to_json(*fr))
+            }
+            NmPhase::Shrink => js.set("phase", Json::Str("shrink".into())),
+        };
+        js
+    }
+
+    pub fn from_json(js: &Json) -> Result<NmState, String> {
+        let simplex = js
+            .get("simplex")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing simplex")?
+            .iter()
+            .map(|entry| {
+                let theta = entry
+                    .get("theta")
+                    .and_then(|v| v.to_f64_vec())
+                    .ok_or("simplex vertex missing theta")?;
+                let f = Self::f_from_json(entry.get("f"));
+                Ok((theta, f))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let iters = js.get("iters").and_then(|v| v.as_f64()).ok_or("missing iters")? as u64;
+        let best_theta =
+            js.get("best_theta").and_then(|v| v.to_f64_vec()).ok_or("missing best_theta")?;
+        let best_f = Self::f_from_json(js.get("best_f"));
+        let phase = match js.get("phase").and_then(|v| v.as_str()).ok_or("missing phase")? {
+            "start" => NmPhase::Start,
+            "expand" => NmPhase::Expand {
+                xr: js.get("xr").and_then(|v| v.to_f64_vec()).ok_or("expand missing xr")?,
+                fr: Self::f_from_json(js.get("fr")),
+            },
+            "contract" => NmPhase::Contract { fr: Self::f_from_json(js.get("fr")) },
+            "shrink" => NmPhase::Shrink,
+            other => return Err(format!("unknown phase {other:?}")),
+        };
+        Ok(NmState { simplex, iters, best_theta, best_f, phase })
+    }
+}
+
+/// The point `centroid + coef·(centroid − worst)` clamped to [0,1]^n,
+/// where the centroid spans all vertices but the worst. Arithmetic order
+/// matches `tune` exactly so both paths agree bit for bit.
+fn nm_along(simplex: &[(Vec<f64>, f64)], coef: f64) -> Vec<f64> {
+    let n = simplex.len() - 1;
+    let dim = simplex[0].0.len();
+    let mut centroid = vec![0.0; dim];
+    for (v, _) in &simplex[..n] {
+        for (c, x) in centroid.iter_mut().zip(v) {
+            *c += x / n as f64;
+        }
+    }
+    let mut v: Vec<f64> =
+        centroid.iter().zip(&simplex[n].0).map(|(c, w)| c + coef * (c - w)).collect();
+    clamp_unit(&mut v);
+    v
+}
+
+impl NelderMeadTuner {
+    /// Checkpoint-grade search loop: identical moves to `tune`, but every
+    /// broker dispatch is guarded by a whole-step affordability check
+    /// (`remaining() ≥ step size`) instead of dispatching a truncatable
+    /// prefix. A failed guard checkpoints at the current [`NmPhase`] and
+    /// returns `done = false`; tolerance collapse and the iteration cap
+    /// return `done = true` (the search is finished for good). Because
+    /// every segment stops on the same whole-step grid, a split run's
+    /// dispatch sequence — and therefore its wave grid and modeled time —
+    /// is bit-identical to the uninterrupted run's.
+    fn run_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        mut st: NmState,
+    ) -> (NmState, bool) {
+        let cfg = &self.config;
+        let n = space.dim();
+
+        if st.simplex.is_empty() {
+            // initial simplex: all-or-nothing (the plain path's truncated
+            // prefix cannot be resumed without re-observing it)
+            if broker.remaining() < n as u64 + 1 {
+                return (st, false);
+            }
+            let x0 = st.best_theta.clone();
+            let mut points: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+            points.push(x0.clone());
+            for i in 0..n {
+                let mut v = x0.clone();
+                v[i] = if v[i] + cfg.step <= 1.0 { v[i] + cfg.step } else { v[i] - cfg.step };
+                clamp_unit(&mut v);
+                points.push(v);
+            }
+            let fs = broker.try_eval_batch(&points);
+            debug_assert_eq!(fs.len(), points.len(), "guarded init batch must serve whole");
+            let mut best = Best { theta: st.best_theta.clone(), f: st.best_f };
+            for (p, &f) in points.iter().zip(&fs) {
+                best.seen(p, f);
+            }
+            st.best_theta = best.theta;
+            st.best_f = best.f;
+            st.simplex = points.into_iter().zip(fs).collect();
+        }
+
+        let done = loop {
+            match st.phase.clone() {
+                NmPhase::Start => {
+                    if st.iters >= cfg.max_iters {
+                        break true;
+                    }
+                    st.simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
+                    let (fb, fw) = (st.simplex[0].1, st.simplex[n].1);
+                    if fw - fb <= cfg.tol * fb.abs().max(1e-9) {
+                        break true;
+                    }
+                    if broker.remaining() < 1 {
+                        break false;
+                    }
+                    st.iters += 1;
+                    let xr = nm_along(&st.simplex, cfg.alpha);
+                    let fr = broker.try_eval(&xr).expect("guarded reflect eval");
+                    if fr < st.best_f {
+                        st.best_f = fr;
+                        st.best_theta = xr.clone();
+                    }
+                    let f_second_worst = st.simplex[n - 1].1;
+                    if fr < fb {
+                        st.phase = NmPhase::Expand { xr, fr };
+                    } else if fr < f_second_worst {
+                        st.simplex[n] = (xr, fr);
+                    } else {
+                        st.phase = NmPhase::Contract { fr };
+                    }
+                }
+                NmPhase::Expand { xr, fr } => {
+                    if broker.remaining() < 1 {
+                        break false;
+                    }
+                    let xe = nm_along(&st.simplex, cfg.alpha * cfg.gamma);
+                    let fe = broker.try_eval(&xe).expect("guarded expand eval");
+                    if fe < st.best_f {
+                        st.best_f = fe;
+                        st.best_theta = xe.clone();
+                    }
+                    st.simplex[n] = if fe < fr { (xe, fe) } else { (xr, fr) };
+                    st.phase = NmPhase::Start;
+                }
+                NmPhase::Contract { fr } => {
+                    if broker.remaining() < 1 {
+                        break false;
+                    }
+                    let fw = st.simplex[n].1;
+                    let xc = if fr < fw {
+                        nm_along(&st.simplex, cfg.alpha * cfg.rho)
+                    } else {
+                        nm_along(&st.simplex, -cfg.rho)
+                    };
+                    let fc = broker.try_eval(&xc).expect("guarded contract eval");
+                    if fc < st.best_f {
+                        st.best_f = fc;
+                        st.best_theta = xc.clone();
+                    }
+                    if fc < fr.min(fw) {
+                        st.simplex[n] = (xc, fc);
+                        st.phase = NmPhase::Start;
+                    } else {
+                        st.phase = NmPhase::Shrink;
+                    }
+                }
+                NmPhase::Shrink => {
+                    if broker.remaining() < n as u64 {
+                        break false;
+                    }
+                    let targets: Vec<Vec<f64>> = st.simplex[1..]
+                        .iter()
+                        .map(|(v, _)| {
+                            let mut s: Vec<f64> = st.simplex[0]
+                                .0
+                                .iter()
+                                .zip(v)
+                                .map(|(b, x)| b + cfg.sigma * (x - b))
+                                .collect();
+                            clamp_unit(&mut s);
+                            s
+                        })
+                        .collect();
+                    let fs = broker.try_eval_batch(&targets);
+                    debug_assert_eq!(fs.len(), targets.len(), "guarded shrink batch must serve whole");
+                    for (i, (t, f)) in targets.into_iter().zip(fs).enumerate() {
+                        if f < st.best_f {
+                            st.best_f = f;
+                            st.best_theta = t.clone();
+                        }
+                        st.simplex[i + 1] = (t, f);
+                    }
+                    st.phase = NmPhase::Start;
+                }
+            }
+        };
+        (st, done)
+    }
+}
+
 impl Tuner for NelderMeadTuner {
     fn name(&self) -> &'static str {
         "nelder-mead"
@@ -132,6 +417,7 @@ impl Tuner for NelderMeadTuner {
                 history: Vec::new(),
                 model_evals: 0,
                 profiling_overhead_s: 0.0,
+                noise_frozen: false,
             };
         }
         let mut simplex: Vec<(Vec<f64>, f64)> = points.into_iter().zip(fs).collect();
@@ -224,7 +510,41 @@ impl Tuner for NelderMeadTuner {
             history: Vec::new(),
             model_evals: 0,
             profiling_overhead_s: 0.0,
+            noise_frozen: false,
         }
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn tune_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        _seed: u64,
+        resume: Option<&[u8]>,
+    ) -> (TuneOutcome, Option<Vec<u8>>) {
+        let st = match resume {
+            Some(bytes) => {
+                let js = decode_checkpoint(self.name(), bytes)
+                    .unwrap_or_else(|e| panic!("{}: bad checkpoint: {e}", self.name()));
+                NmState::from_json(&js)
+                    .unwrap_or_else(|e| panic!("{}: bad checkpoint state: {e}", self.name()))
+            }
+            None => NmState::fresh(space.default_theta()),
+        };
+        let (st, done) = self.run_resumable(broker, space, st);
+        let out = TuneOutcome {
+            best_theta: st.best_theta.clone(),
+            best_f: st.best_f,
+            history: Vec::new(),
+            model_evals: 0,
+            profiling_overhead_s: 0.0,
+            noise_frozen: false,
+        };
+        let ck = if done { None } else { Some(encode_checkpoint(self.name(), st.to_json())) };
+        (out, ck)
     }
 }
 
@@ -296,6 +616,91 @@ mod tests {
             (out.best_theta, out.best_f, broker.evals_used())
         };
         assert_eq!(run_with(1), run_with(4));
+    }
+
+    #[test]
+    fn resumable_split_matches_straight_run_at_any_cut() {
+        // Checkpoint/resume at assorted budgets — including cuts that land
+        // mid-iteration (after the reflect, before the expand/contract) —
+        // must reproduce the straight run bit for bit, spending only the
+        // incremental observations and charging prior waves exactly once.
+        use crate::cluster::ClusterSpec;
+        use crate::workloads::Benchmark;
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = crate::util::rng::Rng::seeded(31);
+        let w = Benchmark::Wordcount.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let tuner = NelderMeadTuner::new();
+        const FULL: u64 = 60;
+
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 41);
+        let mut broker =
+            EvalBroker::new(&mut obj, Budget::obs(FULL)).with_cache(CachePolicy::Off);
+        let (full, _ck) = tuner.tune_resumable(&mut broker, &space, 41, None);
+        let full_evals = broker.evals_used();
+        let full_elapsed = broker.elapsed_model_time();
+
+        for cut in [13u64, 20, 25, 31] {
+            let mut obj_a = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 41);
+            let mut broker_a =
+                EvalBroker::new(&mut obj_a, Budget::obs(cut)).with_cache(CachePolicy::Off);
+            let (_seg1, ck1) = tuner.tune_resumable(&mut broker_a, &space, 41, None);
+            let ck1 = ck1.expect("cut {cut} exhausts the budget mid-search");
+            let (obs1, batches1, elapsed1) =
+                (broker_a.evals_used(), broker_a.batches_used(), broker_a.elapsed_model_time());
+            assert!(obs1 <= cut, "whole-step guards never overspend");
+
+            // round-trip the checkpoint through its JSON text form
+            let js = crate::tuner::registry::decode_checkpoint("nelder-mead", &ck1).unwrap();
+            let reencoded =
+                crate::tuner::registry::encode_checkpoint("nelder-mead", js);
+
+            let mut obj_b = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 41);
+            assert!(obj_b.advance_evals(obs1));
+            let mut broker_b = EvalBroker::new(&mut obj_b, Budget::obs(FULL))
+                .with_cache(CachePolicy::Off)
+                .with_prior_spend(obs1, batches1, elapsed1);
+            let (seg2, _ck2) = tuner.tune_resumable(&mut broker_b, &space, 41, Some(&reencoded));
+
+            assert_eq!(seg2.best_theta, full.best_theta, "cut {cut}");
+            assert_eq!(seg2.best_f, full.best_f, "cut {cut}");
+            assert_eq!(broker_b.evals_used(), full_evals, "cut {cut}");
+            // evals_used == full_evals with prior_spend(obs1) preloaded
+            // means segment 2 issued exactly full_evals − obs1 live
+            // observations: O(increment), no prefix replay.
+            assert_eq!(
+                broker_b.elapsed_model_time(),
+                full_elapsed,
+                "cut {cut}: prior waves charged once, not replayed"
+            );
+        }
+    }
+
+    #[test]
+    fn nm_state_json_round_trips_every_phase() {
+        let simplex = vec![(vec![0.1, 0.2], 3.5), (vec![0.3, 0.4], 4.5), (vec![0.5, 0.6], 5.5)];
+        for phase in [
+            NmPhase::Start,
+            NmPhase::Expand { xr: vec![0.7, 0.8], fr: 2.25 },
+            NmPhase::Contract { fr: 6.125 },
+            NmPhase::Shrink,
+        ] {
+            let st = NmState {
+                simplex: simplex.clone(),
+                iters: 9,
+                best_theta: vec![0.1, 0.2],
+                best_f: 3.5,
+                phase,
+            };
+            let text = st.to_json().to_string();
+            let back = NmState::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, st);
+        }
+        // the virgin state's infinite best_f survives the null spelling
+        let virgin = NmState::fresh(vec![0.5; 3]);
+        let back =
+            NmState::from_json(&Json::parse(&virgin.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, virgin);
     }
 
     #[test]

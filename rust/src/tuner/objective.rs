@@ -39,6 +39,17 @@ pub trait Objective {
     fn last_durations(&self) -> Option<Vec<f64>> {
         None
     }
+
+    /// Fast-forward the observation stream by `n` observations without
+    /// running them, as if `n` evals had happened. A checkpoint-resumed
+    /// tuner uses this to realign a *fresh* objective with the position an
+    /// interrupted run had reached, so the next observation draws the same
+    /// seed it would have in the uninterrupted run. Returns `false` (the
+    /// default) when the objective cannot skip — resuming on it would fork
+    /// the noise stream, so callers must treat `false` as "not resumable".
+    fn advance_evals(&mut self, _n: u64) -> bool {
+        false
+    }
 }
 
 /// Which job statistic the tuner minimizes. The paper's experiments use
@@ -367,6 +378,14 @@ impl Objective for SimObjective {
     fn last_durations(&self) -> Option<Vec<f64>> {
         Some(self.last_durs.clone())
     }
+
+    /// Seeds are positional (`obs_seed(k)`), so skipping is exact: bump
+    /// the counter and observation k+n draws precisely the seed it would
+    /// have drawn had the first k+n observations actually run.
+    fn advance_evals(&mut self, n: u64) -> bool {
+        self.evals += n;
+        true
+    }
 }
 
 /// Noisy quadratic test objective: f(θ) = Σ wᵢ (θᵢ − θ*ᵢ)² + noise.
@@ -411,6 +430,16 @@ impl Objective for QuadraticObjective {
 
     fn evals(&self) -> u64 {
         self.evals
+    }
+
+    /// The quadratic draws exactly one gaussian per eval, so skipping n
+    /// observations means burning n gaussians from the same stream.
+    fn advance_evals(&mut self, n: u64) -> bool {
+        for _ in 0..n {
+            self.rng.gaussian();
+        }
+        self.evals += n;
+        true
     }
 }
 
@@ -474,6 +503,10 @@ impl Objective for FrozenObjective<'_> {
 
     fn last_durations(&self) -> Option<Vec<f64>> {
         self.inner.last_durations()
+    }
+
+    fn advance_evals(&mut self, n: u64) -> bool {
+        self.inner.advance_evals(n)
     }
 }
 
@@ -627,6 +660,27 @@ mod tests {
         let mut seq = objective().with_workers(1);
         let want: Vec<f64> = thetas.iter().map(|t| seq.eval(t)).collect();
         assert_eq!(vec![a, b, tail[0], tail[1]], want);
+    }
+
+    #[test]
+    fn advance_evals_realigns_the_observation_stream() {
+        // skipping k observations on a fresh objective must reproduce the
+        // continuation of a run that actually made those k observations
+        let thetas = probe_thetas(6);
+        let mut full = objective();
+        let want: Vec<f64> = thetas.iter().map(|t| full.eval(t)).collect();
+        let mut skipped = objective();
+        assert!(skipped.advance_evals(3));
+        let got: Vec<f64> = thetas[3..].iter().map(|t| skipped.eval(t)).collect();
+        assert_eq!(got, want[3..].to_vec());
+        assert_eq!(skipped.evals(), full.evals());
+        // and the quadratic burns its gaussian stream the same way
+        let mut qa = QuadraticObjective::new(vec![0.4, 0.6], 0.3, 9);
+        let qwant: Vec<f64> = (0..5).map(|_| qa.eval(&[0.5, 0.5])).collect();
+        let mut qb = QuadraticObjective::new(vec![0.4, 0.6], 0.3, 9);
+        assert!(qb.advance_evals(2));
+        let qgot: Vec<f64> = (0..3).map(|_| qb.eval(&[0.5, 0.5])).collect();
+        assert_eq!(qgot, qwant[2..].to_vec());
     }
 
     #[test]

@@ -24,7 +24,7 @@
 use crate::config::ParameterSpace;
 
 use super::broker::{CachePolicy, EvalBroker};
-use super::registry::{SpsaTuner, TuneOutcome, Tuner};
+use super::registry::{decode_checkpoint, encode_checkpoint, SpsaTuner, TuneOutcome, Tuner};
 use super::spsa::{SpsaConfig, SpsaVariant};
 
 /// RDSA behind the [`Tuner`] interface: SPSA's machinery with the
@@ -60,6 +60,36 @@ impl Tuner for RdsaTuner {
         // never silently diverge.
         let forced = SpsaConfig { variant: SpsaVariant::Rdsa, ..self.config.clone() };
         SpsaTuner { config: forced }.tune(broker, space, seed)
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn tune_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        seed: u64,
+        resume: Option<&[u8]>,
+    ) -> (TuneOutcome, Option<Vec<u8>>) {
+        // Same delegation as `tune`, but the checkpoint envelope carries
+        // THIS tuner's tag: an rdsa blob must not resume an spsa run (the
+        // state format is shared, the estimator is not).
+        let forced = SpsaConfig { variant: SpsaVariant::Rdsa, ..self.config.clone() };
+        let inner = SpsaTuner { config: forced };
+        let translated = resume.map(|bytes| {
+            let st = decode_checkpoint(self.name(), bytes)
+                .unwrap_or_else(|e| panic!("{}: bad checkpoint: {e}", self.name()));
+            encode_checkpoint(inner.name(), st)
+        });
+        let (out, ck) = inner.tune_resumable(broker, space, seed, translated.as_deref());
+        let ck = ck.map(|bytes| {
+            let st = decode_checkpoint(inner.name(), &bytes)
+                .expect("inner spsa checkpoint must round-trip");
+            encode_checkpoint(self.name(), st)
+        });
+        (out, ck)
     }
 }
 

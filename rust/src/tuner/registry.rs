@@ -107,6 +107,72 @@ pub trait Tuner {
     /// Tune within the broker's budget; exhausting it is a graceful stop
     /// (return the best configuration found so far).
     fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome;
+
+    /// Whether this tuner supports the checkpoint channel: pausing at a
+    /// budget boundary and continuing in a later [`Tuner::tune_resumable`]
+    /// call, bit-identically to one uninterrupted run.
+    fn checkpointable(&self) -> bool {
+        false
+    }
+
+    /// Tune with checkpoint support. `resume` is a blob a previous call of
+    /// the SAME tuner returned; the caller must also hand back a broker
+    /// preloaded with the prior segment's spend
+    /// ([`EvalBroker::with_prior_spend`]) and an objective fast-forwarded
+    /// past the observations that segment consumed
+    /// ([`Objective::advance_evals`]) — then the continued run is
+    /// bit-identical to an uninterrupted run at the combined budget, and
+    /// spends only the incremental observations (O(increment) extension,
+    /// vs resume-by-replay's O(cumulative)).
+    ///
+    /// Returns the outcome plus the checkpoint to continue from; `None`
+    /// means the tuner finished for good (or does not checkpoint — the
+    /// default falls back to a plain [`Tuner::tune`], which callers extend
+    /// by deterministic replay instead).
+    ///
+    /// Checkpointable tuners should run with [`CachePolicy::Off`]: the
+    /// memo cache is broker-local state that no checkpoint carries, so a
+    /// resumed segment would miss hits the uninterrupted run gets.
+    ///
+    /// [`Objective::advance_evals`]: super::objective::Objective::advance_evals
+    fn tune_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        seed: u64,
+        resume: Option<&[u8]>,
+    ) -> (TuneOutcome, Option<Vec<u8>>) {
+        debug_assert!(
+            resume.is_none(),
+            "{}: checkpoint handed to a non-checkpointable tuner",
+            self.name()
+        );
+        (self.tune(broker, space, seed), None)
+    }
+}
+
+/// Wrap a tuner's serialized state in a tagged envelope, so a blob resumed
+/// by the wrong tuner fails loudly instead of silently misparsing.
+pub fn encode_checkpoint(tuner: &str, state: crate::util::json::Json) -> Vec<u8> {
+    use crate::util::json::Json;
+    let mut j = Json::obj();
+    j.set("tuner", Json::Str(tuner.to_string())).set("state", state);
+    j.to_string().into_bytes()
+}
+
+/// Unwrap an [`encode_checkpoint`] envelope, checking the tuner tag.
+pub fn decode_checkpoint(
+    tuner: &str,
+    bytes: &[u8],
+) -> Result<crate::util::json::Json, String> {
+    use crate::util::json::Json;
+    let s = std::str::from_utf8(bytes).map_err(|e| format!("checkpoint not UTF-8: {e}"))?;
+    let j = Json::parse(s)?;
+    let tag = j.get("tuner").and_then(|t| t.as_str()).ok_or("checkpoint missing tuner tag")?;
+    if tag != tuner {
+        return Err(format!("checkpoint belongs to tuner '{tag}', not '{tuner}'"));
+    }
+    j.get("state").cloned().ok_or_else(|| "checkpoint missing state".to_string())
 }
 
 // ---------------------------------------------------------------------------
@@ -142,6 +208,26 @@ impl SpsaTuner {
     }
 }
 
+impl SpsaTuner {
+    /// Budget planning shared by the plain and resumable paths: size
+    /// `max_iters` so the run spends the whole *remaining* budget (on top
+    /// of the `start_iter` iterations a resumed state already holds)
+    /// unless the gradient calms first. The config's own max_iters only
+    /// caps unlimited-budget runs.
+    fn plan(&self, spsa: &mut Spsa, broker: &EvalBroker, start_iter: u64) {
+        if broker.budget().max_obs != u64::MAX {
+            spsa.config.max_iters =
+                start_iter + (broker.remaining() / spsa.obs_per_iter()).max(1);
+        } else if !broker.budget().is_unlimited() {
+            // batch/model-time-limited with unlimited observations: no
+            // whole-iteration plan exists up front — iterate until the
+            // broker truncates (`run_broker` stops the moment the next
+            // iteration is unaffordable) or the gradient calms
+            spsa.config.max_iters = u64::MAX;
+        }
+    }
+}
+
 impl Tuner for SpsaTuner {
     fn name(&self) -> &'static str {
         "spsa"
@@ -153,17 +239,7 @@ impl Tuner for SpsaTuner {
 
     fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
         let mut spsa = Spsa::for_space(SpsaConfig { seed, ..self.config.clone() }, space);
-        if broker.budget().max_obs != u64::MAX {
-            // spend the whole budget unless the gradient calms first; the
-            // config's own max_iters only caps unlimited-budget runs
-            spsa.config.max_iters = (broker.remaining() / spsa.obs_per_iter()).max(1);
-        } else if !broker.budget().is_unlimited() {
-            // batch/model-time-limited with unlimited observations: no
-            // whole-iteration plan exists up front — iterate until the
-            // broker truncates (`run_broker` stops the moment the next
-            // iteration is unaffordable) or the gradient calms
-            spsa.config.max_iters = u64::MAX;
-        }
+        self.plan(&mut spsa, broker, 0);
         let res = spsa.run_broker(broker, space.default_theta());
         TuneOutcome {
             // Deploy the best configuration observed during learning: the
@@ -176,6 +252,50 @@ impl Tuner for SpsaTuner {
             profiling_overhead_s: 0.0,
             noise_frozen: false,
         }
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn tune_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        seed: u64,
+        resume: Option<&[u8]>,
+    ) -> (TuneOutcome, Option<Vec<u8>>) {
+        use super::spsa::SpsaState;
+        let mut spsa = Spsa::for_space(SpsaConfig { seed, ..self.config.clone() }, space);
+        let state = match resume {
+            Some(bytes) => {
+                let j = decode_checkpoint(self.name(), bytes)
+                    .unwrap_or_else(|e| panic!("{}: bad checkpoint: {e}", self.name()));
+                SpsaState::from_json(&j)
+                    .unwrap_or_else(|e| panic!("{}: bad checkpoint state: {e}", self.name()))
+            }
+            None => SpsaState::fresh(space.default_theta()),
+        };
+        // per-iteration reseeding keys off state.iter, so planning from the
+        // resumed iteration reproduces the uninterrupted run's horizon
+        self.plan(&mut spsa, broker, state.iter);
+        let (res, state) = spsa.run_broker_from(broker, state);
+        // GradientCalm is a terminal stop: an uninterrupted run at any
+        // larger budget ends at the same iterate, so there is nothing to
+        // resume — signal "finished for good" instead of a checkpoint.
+        let checkpoint = match res.stop {
+            super::spsa::StopReason::GradientCalm => None,
+            _ => Some(encode_checkpoint(self.name(), state.to_json())),
+        };
+        let outcome = TuneOutcome {
+            best_theta: res.best_theta,
+            best_f: res.best_f,
+            history: res.history,
+            model_evals: 0,
+            profiling_overhead_s: 0.0,
+            noise_frozen: false,
+        };
+        (outcome, checkpoint)
     }
 }
 
@@ -362,6 +482,29 @@ impl Tuner for RandomTuner {
     fn tune(&self, broker: &mut EvalBroker, space: &ParameterSpace, seed: u64) -> TuneOutcome {
         let res = random_search(broker, space.default_theta(), seed);
         TuneOutcome::deploy(res.best_theta, res.best_f)
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn tune_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        seed: u64,
+        resume: Option<&[u8]>,
+    ) -> (TuneOutcome, Option<Vec<u8>>) {
+        use crate::baselines::{random_search_resumable, RandomSearchState};
+        let state = resume.map(|bytes| {
+            let j = decode_checkpoint(self.name(), bytes)
+                .unwrap_or_else(|e| panic!("{}: bad checkpoint: {e}", self.name()));
+            RandomSearchState::from_json(&j)
+                .unwrap_or_else(|e| panic!("{}: bad checkpoint state: {e}", self.name()))
+        });
+        let (res, state) = random_search_resumable(broker, space.default_theta(), seed, state);
+        let checkpoint = state.map(|st| encode_checkpoint(self.name(), st.to_json()));
+        (TuneOutcome::deploy(res.best_theta, res.best_f), checkpoint)
     }
 }
 

@@ -278,7 +278,21 @@ impl Spsa {
         broker: &mut super::broker::EvalBroker,
         theta0: Vec<f64>,
     ) -> TuningResult {
-        let mut state = SpsaState::fresh(theta0);
+        self.run_broker_from(broker, SpsaState::fresh(theta0)).0
+    }
+
+    /// [`Spsa::run_broker`] from an explicit (possibly checkpointed) state,
+    /// returning the post-run state alongside the result so the caller can
+    /// checkpoint it. Because the loop only ever stops at iteration
+    /// boundaries and each iteration reseeds from `state.iter`, resuming
+    /// the returned state against a broker carrying the prior spend (and an
+    /// objective fast-forwarded past the prior observations) continues
+    /// bit-identically to an uninterrupted run.
+    pub fn run_broker_from(
+        &self,
+        broker: &mut super::broker::EvalBroker,
+        mut state: SpsaState,
+    ) -> (TuningResult, SpsaState) {
         let per_iter = self.obs_per_iter();
         let start_evals = broker.evals_used();
         let stop = loop {
@@ -293,7 +307,7 @@ impl Spsa {
                 other => break other,
             }
         };
-        TuningResult {
+        let result = TuningResult {
             final_theta: state.theta.clone(),
             best_theta: state.best_theta.clone(),
             best_f: state.best_f,
@@ -301,8 +315,9 @@ impl Spsa {
             iterations: state.iter,
             // delta, not lifetime total: a reused broker carries prior spend
             observations: broker.evals_used() - start_evals,
-            history: state.history,
-        }
+            history: state.history.clone(),
+        };
+        (result, state)
     }
 
     /// Run (or resume) from an explicit state; `pause_after` optionally
@@ -831,6 +846,62 @@ mod tests {
             assert_eq!(a.grad_norm, b.grad_norm);
             assert_eq!(a.theta, b.theta);
         }
+    }
+
+    #[test]
+    fn broker_resume_from_checkpoint_matches_straight_run() {
+        // The scheduler's rung-extension contract: run to a smaller budget,
+        // checkpoint the state, then resume against a broker carrying the
+        // prior spend and an objective fast-forwarded past the observations
+        // already consumed — bit-identical to one uninterrupted run at the
+        // larger budget, spending only the incremental observations.
+        use crate::tuner::broker::{Budget, EvalBroker};
+        use crate::tuner::objective::Objective;
+        let spsa = quad_spsa(25); // 3 obs/iter
+        let target = vec![0.3, 0.8, 0.5, 0.2];
+
+        let mut obj_full = QuadraticObjective::new(target.clone(), 0.05, 9);
+        let mut full_broker = EvalBroker::new(&mut obj_full, Budget::obs(30));
+        let full = spsa.run_broker(&mut full_broker, vec![0.5; 4]);
+        assert_eq!(full.iterations, 10);
+
+        let mut obj_a = QuadraticObjective::new(target.clone(), 0.05, 9);
+        let mut broker_a = EvalBroker::new(&mut obj_a, Budget::obs(12));
+        let (seg1, st) = spsa.run_broker_from(&mut broker_a, SpsaState::fresh(vec![0.5; 4]));
+        assert_eq!(seg1.stop, StopReason::BudgetExhausted);
+        assert_eq!(seg1.iterations, 4);
+        let (obs1, batches1, elapsed1) =
+            (broker_a.evals_used(), broker_a.batches_used(), broker_a.elapsed_model_time());
+
+        // JSON round-trip, like the real checkpoint channel
+        let st = SpsaState::from_json(&st.to_json()).unwrap();
+        let mut obj_b = QuadraticObjective::new(target, 0.05, 9);
+        assert!(obj_b.advance_evals(obs1));
+        let mut broker_b = EvalBroker::new(&mut obj_b, Budget::obs(30))
+            .with_prior_spend(obs1, batches1, elapsed1);
+        let (seg2, _) = spsa.run_broker_from(&mut broker_b, st);
+
+        assert_eq!(seg2.iterations, full.iterations);
+        assert_eq!(seg2.final_theta, full.final_theta);
+        assert_eq!(seg2.best_theta, full.best_theta);
+        assert_eq!(seg2.best_f.to_bits(), full.best_f.to_bits());
+        assert_eq!(
+            seg2.observations,
+            full.observations - seg1.observations,
+            "extension must spend only the increment"
+        );
+        assert_eq!(seg2.history.len(), full.history.len());
+        for (a, b) in seg2.history.iter().zip(&full.history) {
+            assert_eq!(a.f_theta.to_bits(), b.f_theta.to_bits());
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+            assert_eq!(a.theta, b.theta);
+        }
+        assert_eq!(broker_b.evals_used(), full_broker.evals_used());
+        assert_eq!(
+            broker_b.elapsed_model_time().to_bits(),
+            full_broker.elapsed_model_time().to_bits(),
+            "prior waves must be charged once, not replayed"
+        );
     }
 
     #[test]

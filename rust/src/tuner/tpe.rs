@@ -26,10 +26,11 @@
 //!   until the split has enough mass.
 
 use crate::config::ParameterSpace;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::broker::EvalBroker;
-use super::registry::{TuneOutcome, Tuner};
+use super::registry::{decode_checkpoint, encode_checkpoint, TuneOutcome, Tuner};
 
 /// TPE hyper-parameters.
 #[derive(Clone, Debug)]
@@ -126,6 +127,78 @@ impl Parzen1d {
 /// Quantize θ for duplicate detection (the broker's cache quantum).
 fn quant_key(theta: &[f64], quantum: f64) -> Vec<i64> {
     theta.iter().map(|t| (t / quantum).round() as i64).collect()
+}
+
+/// Serializable TPE resume state. TPE's model is its observation history,
+/// and a resumed broker's trace only covers the new segment — so the
+/// checkpoint carries the full (θ, f) prefix in observation order; a
+/// resumed run models over `observed ++ trace`, which is exactly the
+/// straight run's trace at the same point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TpeState {
+    /// Next proposal round to run (round RNGs are keyed by this index, so
+    /// the pending round replays identically after a resume).
+    round: u64,
+    /// Every (θ, f) observed by prior segments, in observation order.
+    observed: Vec<(Vec<f64>, f64)>,
+    best_theta: Vec<f64>,
+    best_f: f64,
+}
+
+impl TpeState {
+    fn fresh(theta0: Vec<f64>) -> TpeState {
+        TpeState { round: 0, observed: Vec::new(), best_theta: theta0, best_f: f64::INFINITY }
+    }
+
+    fn f_to_json(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null // the virgin state's +inf best_f
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("round", Json::Num(self.round as f64))
+            .set(
+                "observed",
+                Json::Arr(
+                    self.observed
+                        .iter()
+                        .map(|(t, f)| {
+                            Json::obj()
+                                .set("theta", Json::from_f64_slice(t))
+                                .set("f", Self::f_to_json(*f))
+                        })
+                        .collect(),
+                ),
+            )
+            .set("best_theta", Json::from_f64_slice(&self.best_theta))
+            .set("best_f", Self::f_to_json(self.best_f))
+    }
+
+    pub fn from_json(js: &Json) -> Result<TpeState, String> {
+        let round = js.get("round").and_then(|v| v.as_f64()).ok_or("missing round")? as u64;
+        let observed = js
+            .get("observed")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing observed")?
+            .iter()
+            .map(|entry| {
+                let theta = entry
+                    .get("theta")
+                    .and_then(|v| v.to_f64_vec())
+                    .ok_or("observation missing theta")?;
+                let f = entry.get("f").and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY);
+                Ok((theta, f))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let best_theta =
+            js.get("best_theta").and_then(|v| v.to_f64_vec()).ok_or("missing best_theta")?;
+        let best_f = js.get("best_f").and_then(|v| v.as_f64()).unwrap_or(f64::INFINITY);
+        Ok(TpeState { round, observed, best_theta, best_f })
+    }
 }
 
 impl Tuner for TpeTuner {
@@ -249,7 +322,154 @@ impl Tuner for TpeTuner {
             history: Vec::new(),
             model_evals: 0,
             profiling_overhead_s: 0.0,
+            noise_frozen: false,
         }
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn tune_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        seed: u64,
+        resume: Option<&[u8]>,
+    ) -> (TuneOutcome, Option<Vec<u8>>) {
+        let st = match resume {
+            Some(bytes) => {
+                let js = decode_checkpoint(self.name(), bytes)
+                    .unwrap_or_else(|e| panic!("{}: bad checkpoint: {e}", self.name()));
+                TpeState::from_json(&js)
+                    .unwrap_or_else(|e| panic!("{}: bad checkpoint state: {e}", self.name()))
+            }
+            None => TpeState::fresh(space.default_theta()),
+        };
+        let (st, done) = self.run_resumable(broker, space, seed, st);
+        let out = TuneOutcome {
+            best_theta: st.best_theta.clone(),
+            best_f: st.best_f,
+            history: Vec::new(),
+            model_evals: 0,
+            profiling_overhead_s: 0.0,
+            noise_frozen: false,
+        };
+        let ck = if done { None } else { Some(encode_checkpoint(self.name(), st.to_json())) };
+        (out, ck)
+    }
+}
+
+impl TpeTuner {
+    /// Checkpoint-grade proposal loop: the same model and per-round RNG
+    /// streams as `tune`, but rounds are all-or-nothing — a round whose
+    /// proposal batch exceeds `remaining()` checkpoints BEFORE dispatching
+    /// (round index pending), so a resume recomputes that round from the
+    /// identical history and identical round-keyed RNG and dispatches the
+    /// identical batch. Split runs therefore share the straight run's
+    /// dispatch sequence, wave grid, and modeled time bit for bit.
+    /// Convergence (no fresh candidates) and the round cap are terminal.
+    fn run_resumable(
+        &self,
+        broker: &mut EvalBroker,
+        space: &ParameterSpace,
+        seed: u64,
+        mut st: TpeState,
+    ) -> (TpeState, bool) {
+        let cfg = &self.config;
+        let n = space.dim();
+        let quantum = broker.quantization();
+
+        let mut done = true;
+        let mut round = st.round;
+        while round < cfg.max_rounds {
+            // full history: prior segments' prefix + this segment's trace
+            let observed: Vec<(Vec<f64>, f64)> = st
+                .observed
+                .iter()
+                .cloned()
+                .chain(broker.trace().iter().map(|r| (r.theta.clone(), r.f)))
+                .collect();
+            let mut rng = Rng::seeded(seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x7BE5);
+            let mut seen: std::collections::BTreeSet<Vec<i64>> =
+                observed.iter().map(|(t, _)| quant_key(t, quantum)).collect();
+
+            let proposals: Vec<Vec<f64>> = if (observed.len() as u64) < cfg.n_startup.max(2) {
+                // startup round, whole (never capped to remaining())
+                let want = cfg.n_startup.max(2) - observed.len() as u64;
+                let mut pts = Vec::with_capacity(want as usize);
+                if observed.is_empty() {
+                    pts.push(space.default_theta());
+                }
+                while (pts.len() as u64) < want {
+                    pts.push((0..n).map(|_| rng.f64()).collect());
+                }
+                pts
+            } else {
+                let mut sorted = observed;
+                sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
+                let n_good = ((cfg.gamma * sorted.len() as f64).ceil() as usize)
+                    .clamp(1, sorted.len() - 1);
+                let (good, bad) = sorted.split_at(n_good);
+                let fit = |set: &[(Vec<f64>, f64)]| -> Vec<Parzen1d> {
+                    (0..n)
+                        .map(|d| {
+                            Parzen1d::fit(
+                                set.iter().map(|(t, _)| t[d]).collect(),
+                                cfg.bandwidth_floor,
+                            )
+                        })
+                        .collect()
+                };
+                let l = fit(good);
+                let g = fit(bad);
+                let mut scored: Vec<(f64, Vec<f64>)> = (0..cfg.n_candidates)
+                    .map(|_| {
+                        let cand: Vec<f64> = l.iter().map(|p| p.sample(&mut rng)).collect();
+                        let score: f64 = cand
+                            .iter()
+                            .enumerate()
+                            .map(|(d, &x)| {
+                                l[d].density(x).max(1e-300).ln()
+                                    - g[d].density(x).max(1e-300).ln()
+                            })
+                            .sum();
+                        (score, cand)
+                    })
+                    .collect();
+                scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+                let mut pts = Vec::with_capacity(cfg.batch);
+                for (_, cand) in scored {
+                    if pts.len() >= cfg.batch {
+                        break;
+                    }
+                    if seen.insert(quant_key(&cand, quantum)) {
+                        pts.push(cand);
+                    }
+                }
+                pts
+            };
+
+            if proposals.is_empty() {
+                break; // converged: every candidate already observed
+            }
+            if (proposals.len() as u64) > broker.remaining() {
+                done = false; // checkpoint with this round still pending
+                break;
+            }
+            let fs = broker.try_eval_batch(&proposals);
+            debug_assert_eq!(fs.len(), proposals.len(), "guarded round must serve whole");
+            for (t, &f) in proposals.iter().zip(&fs) {
+                if f < st.best_f {
+                    st.best_f = f;
+                    st.best_theta = t.clone();
+                }
+            }
+            round += 1;
+        }
+        st.round = round;
+        st.observed.extend(broker.trace().iter().map(|r| (r.theta.clone(), r.f)));
+        (st, done)
     }
 }
 
@@ -336,6 +556,77 @@ mod tests {
         assert!(out.best_f.is_finite());
         // startup round (10) + ≤ 5 model rounds × batch 8
         assert!(broker.evals_used() <= 10 + 5 * 8, "{} evals", broker.evals_used());
+    }
+
+    #[test]
+    fn resumable_split_matches_straight_run_at_any_cut() {
+        // Cuts below the startup batch (7), exactly at it (10), and on
+        // model-round boundaries (18, 26): a checkpointed split must
+        // reproduce the straight run bit for bit — same best, same eval
+        // count, same modeled time — spending only the increment.
+        use crate::cluster::ClusterSpec;
+        use crate::tuner::objective::Objective;
+        use crate::workloads::Benchmark;
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = crate::util::rng::Rng::seeded(47);
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let tuner = TpeTuner::new();
+        const FULL: u64 = 50;
+
+        let mut obj = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 53);
+        let mut broker =
+            EvalBroker::new(&mut obj, Budget::obs(FULL)).with_cache(CachePolicy::Off);
+        let (full, _ck) = tuner.tune_resumable(&mut broker, &space, 53, None);
+        let full_evals = broker.evals_used();
+        let full_elapsed = broker.elapsed_model_time();
+
+        for cut in [7u64, 10, 18, 26] {
+            let mut obj_a = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 53);
+            let mut broker_a =
+                EvalBroker::new(&mut obj_a, Budget::obs(cut)).with_cache(CachePolicy::Off);
+            let (_seg1, ck1) = tuner.tune_resumable(&mut broker_a, &space, 53, None);
+            let ck1 = ck1.expect("segment 1 must stop on budget, not converge");
+            let (obs1, batches1, elapsed1) =
+                (broker_a.evals_used(), broker_a.batches_used(), broker_a.elapsed_model_time());
+            assert!(obs1 <= cut, "whole-round guard never overspends");
+
+            let js = crate::tuner::registry::decode_checkpoint("tpe", &ck1).unwrap();
+            let reencoded = crate::tuner::registry::encode_checkpoint("tpe", js);
+
+            let mut obj_b = SimObjective::new(space.clone(), cluster.clone(), w.clone(), 53);
+            assert!(obj_b.advance_evals(obs1));
+            let mut broker_b = EvalBroker::new(&mut obj_b, Budget::obs(FULL))
+                .with_cache(CachePolicy::Off)
+                .with_prior_spend(obs1, batches1, elapsed1);
+            let (seg2, _ck2) = tuner.tune_resumable(&mut broker_b, &space, 53, Some(&reencoded));
+
+            assert_eq!(seg2.best_theta, full.best_theta, "cut {cut}");
+            assert_eq!(seg2.best_f, full.best_f, "cut {cut}");
+            assert_eq!(broker_b.evals_used(), full_evals, "cut {cut}");
+            assert_eq!(
+                broker_b.elapsed_model_time(),
+                full_elapsed,
+                "cut {cut}: prior waves charged once, not replayed"
+            );
+        }
+    }
+
+    #[test]
+    fn tpe_state_json_round_trips() {
+        let st = TpeState {
+            round: 3,
+            observed: vec![(vec![0.25, 0.5], 12.5), (vec![0.75, 0.125], 11.25)],
+            best_theta: vec![0.75, 0.125],
+            best_f: 11.25,
+        };
+        let text = st.to_json().to_string();
+        let back = TpeState::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, st);
+        let virgin = TpeState::fresh(vec![0.5; 4]);
+        let back =
+            TpeState::from_json(&Json::parse(&virgin.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, virgin);
     }
 
     #[test]

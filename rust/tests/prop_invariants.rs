@@ -11,8 +11,8 @@ use hadoop_spsa::sim::{
 };
 use hadoop_spsa::tuner::registry::{self, TunerContext};
 use hadoop_spsa::tuner::{
-    Budget, EvalBroker, Objective, QuadraticObjective, SimObjective, Spsa, SpsaConfig,
-    SpsaState,
+    Budget, CachePolicy, EvalBroker, Objective, QuadraticObjective, SimObjective, Spsa,
+    SpsaConfig, SpsaState, Tuner,
 };
 use hadoop_spsa::util::json::Json;
 use hadoop_spsa::util::prop::{assert_close, assert_that, forall};
@@ -677,6 +677,146 @@ fn spsa_state_json_roundtrip_any_state() {
             (None, None) => {}
             _ => return Err("f0 mismatch".into()),
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn checkpointed_tuners_resume_bit_identically_at_any_cut() {
+    // The tentpole checkpoint contract, forall over the checkpointable
+    // registry subset, ANY seed and ANY cut: a run split at an arbitrary
+    // observation budget and resumed at the full budget is bit-identical
+    // to the uninterrupted run — same best θ, bit-equal best f, same
+    // observation and wave counts, bit-equal modeled wall-clock — and the
+    // extension spends only the increment: the resumed broker is preloaded
+    // with segment 1's meters, so matching the straight run's totals
+    // proves segment 2 issued exactly (total − cut) fresh observations
+    // instead of replaying the prefix.
+    forall("checkpoint resume ≡ straight run", 3, |g| {
+        let space = ParameterSpace::v1();
+        let cluster = ClusterSpec::paper_cluster();
+        let mut prof_rng = Rng::seeded(g.u64_in(1, 1 << 32));
+        let w = Benchmark::Grep.profile_scaled(200_000, 1 << 30, &mut prof_rng);
+        let ctx = TunerContext {
+            version: HadoopVersion::V1,
+            cluster: cluster.clone(),
+            workload: w.clone(),
+        };
+        let seed = g.u64_in(1, 1 << 40);
+        let full = g.u64_in(40, 90);
+        let cut = g.u64_in(1, full - 1);
+        for e in registry::TUNERS {
+            let tuner = registry::create(e.name, &ctx).expect("registry entry instantiates");
+            if !tuner.checkpointable() {
+                continue;
+            }
+            // one segment of the logical run: fresh objective fast-forwarded
+            // past the prior observations, broker preloaded with the prior
+            // meters — the checkpoint channel's whole resume contract
+            let run = |budget: u64, resume: Option<&[u8]>, prior: Option<(u64, u64, f64)>| {
+                let mut obj =
+                    SimObjective::new(space.clone(), cluster.clone(), w.clone(), seed);
+                if let Some((p_obs, _, _)) = prior {
+                    assert!(obj.advance_evals(p_obs), "sim objective must fast-forward");
+                }
+                let mut broker =
+                    EvalBroker::new(&mut obj, Budget::obs(budget)).with_cache(CachePolicy::Off);
+                if let Some((p_obs, p_batches, p_elapsed)) = prior {
+                    broker = broker.with_prior_spend(p_obs, p_batches, p_elapsed);
+                }
+                let (out, ck) = tuner.tune_resumable(&mut broker, &space, seed, resume);
+                (out, ck, broker.evals_used(), broker.batches_used(), broker.elapsed_model_time())
+            };
+            let (out_s, ck_s, obs_s, batches_s, elapsed_s) = run(full, None, None);
+            let (out_1, ck_1, obs_1, batches_1, elapsed_1) = run(cut, None, None);
+            let (out_2, ck_2, obs_2, batches_2, elapsed_2) = match &ck_1 {
+                Some(bytes) => run(full, Some(bytes), Some((obs_1, batches_1, elapsed_1))),
+                // terminal before the cut: the straight run stops at the
+                // same intrinsic point, so segment 1 IS the whole run
+                None => (out_1, None, obs_1, batches_1, elapsed_1),
+            };
+            assert_that(
+                obs_2 == obs_s,
+                format!("{}: cut {cut}/{full}: obs {obs_2} != straight {obs_s}", e.name),
+            )?;
+            assert_that(
+                batches_2 == batches_s,
+                format!("{}: cut {cut}/{full}: wave count diverged", e.name),
+            )?;
+            assert_that(
+                elapsed_2.to_bits() == elapsed_s.to_bits(),
+                format!("{}: wave grid diverged: {elapsed_2} vs {elapsed_s}", e.name),
+            )?;
+            assert_that(
+                out_2.best_theta == out_s.best_theta,
+                format!("{}: best θ diverged after resume", e.name),
+            )?;
+            assert_that(
+                out_2.best_f.to_bits() == out_s.best_f.to_bits(),
+                format!("{}: best f diverged: {} vs {}", e.name, out_2.best_f, out_s.best_f),
+            )?;
+            assert_that(
+                ck_2.is_some() == ck_s.is_some(),
+                format!("{}: terminality verdict diverged", e.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn contended_wave_cost_is_chunked_maxima_never_below_flat() {
+    // The broker's slot-contention model, forall k probes on m slots: the
+    // wave is charged ⌈k/m⌉ sub-waves — the sum of per-chunk-of-m duration
+    // maxima in dispatch order plus ONE dispatch overhead. On a noise-free
+    // quadratic the durations are the returned values, so the charge has a
+    // closed form; it is never below the flat (unlimited-slot) charge,
+    // collapses to it bit-exactly when k ≤ m, never exceeds the fully
+    // sequential sum, and must not perturb the observed values.
+    forall("contended wave ≥ flat max", 150, |g| {
+        let n = g.usize_in(1, 6);
+        let k = g.usize_in(1, 40);
+        let m = g.usize_in(1, 8);
+        let overhead = g.f64_in(0.0, 20.0);
+        let pts: Vec<Vec<f64>> = (0..k).map(|_| g.unit_vec(n)).collect();
+
+        let mut obj_flat = QuadraticObjective::new(vec![0.5; n], 0.0, 1);
+        let mut flat = EvalBroker::new(&mut obj_flat, Budget::obs(1000))
+            .with_cache(CachePolicy::Off)
+            .with_dispatch_overhead(overhead);
+        let fs = flat.try_eval_batch(&pts);
+        assert_that(fs.len() == k, "flat broker serves the whole wave")?;
+
+        let mut obj_slots = QuadraticObjective::new(vec![0.5; n], 0.0, 1);
+        let mut slotted = EvalBroker::new(&mut obj_slots, Budget::obs(1000))
+            .with_cache(CachePolicy::Off)
+            .with_dispatch_overhead(overhead)
+            .with_slots(m);
+        let gs = slotted.try_eval_batch(&pts);
+        assert_that(gs == fs, "slot count must not change observed values")?;
+
+        let sum: f64 = fs.iter().sum();
+        let chunked: f64 =
+            fs.chunks(m).map(|c| c.iter().cloned().fold(0.0_f64, f64::max)).sum();
+        assert_close(slotted.elapsed_model_time(), chunked + overhead, 1e-9)?;
+        assert_that(
+            slotted.elapsed_model_time() >= flat.elapsed_model_time() - 1e-9,
+            format!(
+                "contention made the wave cheaper: {} slotted vs {} flat (k={k} m={m})",
+                slotted.elapsed_model_time(),
+                flat.elapsed_model_time()
+            ),
+        )?;
+        if k <= m {
+            assert_that(
+                slotted.elapsed_model_time().to_bits() == flat.elapsed_model_time().to_bits(),
+                "k ≤ m: one sub-wave must charge exactly the flat cost",
+            )?;
+        }
+        assert_that(
+            slotted.elapsed_model_time() <= sum + overhead + 1e-9,
+            "contention exceeded the fully sequential sum",
+        )?;
         Ok(())
     });
 }

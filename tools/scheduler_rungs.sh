@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Regenerate the scheduler-gauntlet allocation audit: one quick Hyperband
+# and one UCB-bandit campaign over the checkpointable registry subset,
+# interleaved on ONE shared modeled clock, concatenated into a single TSV
+# (one header). The model is fully deterministic, so the output is
+# byte-stable across machines — CI diffs it against the committed fixture
+# rust/tests/fixtures/scheduler_rungs.tsv, and the seal-baselines workflow
+# regenerates that fixture with this same script. Keep the recipe here, in
+# ONE place, so the gate and the sealer can never drift apart.
+#
+# Usage: tools/scheduler_rungs.sh [output.tsv]
+set -euo pipefail
+
+out="${1:-scheduler-rungs.tsv}"
+tuners="spsa,random,nelder-mead,tpe"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+cargo run --release -- tune --policy hyperband --tuners "$tuners" \
+  --total-time 3000 --rungs-out "$tmp/hyperband.tsv"
+cargo run --release -- tune --policy bandit --tuners "$tuners" \
+  --total-time 3000 --rungs-out "$tmp/bandit.tsv"
+
+{ cat "$tmp/hyperband.tsv"; tail -n +2 "$tmp/bandit.tsv"; } > "$out"
+echo "wrote $(($(wc -l < "$out") - 1)) audit row(s) to $out"
